@@ -1,0 +1,95 @@
+//! End-to-end driver: an emulated 8-node edge cluster serving ResNet-50.
+//!
+//! This is the repo's full-system validation (see EXPERIMENTS.md): the
+//! edge-profile ResNet-50 is partitioned 8 ways, distributed over REAL TCP
+//! loopback sockets with gigabit-Ethernet link emulation, and serves a
+//! stream of inference requests. It reports throughput, latency
+//! percentiles, per-node energy and wire payloads, and cross-checks the
+//! pipeline output against the Python reference — proving all three layers
+//! (Pallas kernel -> JAX partition HLO -> rust chain) compose.
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --example edge_cluster [frames] [nodes]
+//! ```
+
+use defer::config::DeferConfig;
+use defer::coordinator::baseline::SingleDevice;
+use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
+use defer::runtime::Engine;
+use defer::util::{fmt_bytes, fmt_duration};
+
+fn main() -> defer::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let frames: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let nodes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let mut cfg = DeferConfig::default();
+    cfg.profile = "edge".into();
+    cfg.model = "resnet50".into();
+    cfg.nodes = nodes;
+    cfg.tcp = true;
+    cfg.base_port = 47_800;
+    cfg.link = LinkSpec::gigabit_lan();
+    // Edge-device speed emulation (see DESIGN.md §Substitutions): floor
+    // stage compute to a 50-MFLOPS device, the paper's TF-on-edge-CPU
+    // regime. Deterministic: host contention cannot perturb stage times.
+    cfg.emulated_mflops = 50.0;
+
+    println!("== DEFER edge cluster: {} x ResNet-50/{} over TCP+gigabit ==", nodes, cfg.profile);
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // Baseline first: the whole model on one device (paper's comparison).
+    let mut base_cfg = cfg.clone();
+    base_cfg.tcp = false;
+    let baseline = SingleDevice::with_engine(base_cfg, engine.clone())?;
+    let base = baseline.run_frames(frames)?;
+    println!(
+        "single device : {:.3} cycles/s | {:.5} J/cycle | p50 {}",
+        base.throughput,
+        base.energy_per_node_per_cycle(),
+        fmt_duration(base.latency_p50),
+    );
+
+    // The DEFER chain.
+    let runner = ChainRunner::with_engine(cfg, engine)?;
+    let t0 = std::time::Instant::now();
+    let report = runner.run_frames(frames)?;
+    println!(
+        "DEFER {} nodes : {:.3} cycles/s | {:.5} J/node/cycle | p50 {} | p99 {}",
+        nodes,
+        report.throughput,
+        report.energy_per_node_per_cycle(),
+        fmt_duration(report.latency_p50),
+        fmt_duration(report.latency_p99),
+    );
+    println!(
+        "config step   : {} ({} arch + {} weights on the wire)",
+        fmt_duration(report.config_time),
+        fmt_bytes(report.architecture_bytes),
+        fmt_bytes(report.weights_bytes),
+    );
+    println!(
+        "inference     : {} frames in {} | {} activation traffic",
+        report.cycles,
+        fmt_duration(t0.elapsed()),
+        fmt_bytes(report.data_bytes),
+    );
+    if let Some(err) = report.reference_error {
+        println!("numerics      : max |err| vs python reference {err:.3e}");
+    }
+
+    let speedup = report.throughput / base.throughput;
+    let energy_ratio =
+        report.energy_per_node_per_cycle() / base.energy_per_node_per_cycle();
+    println!(
+        "vs single device: {:.2}x throughput, {:.2}x per-node energy",
+        speedup, energy_ratio
+    );
+    println!(
+        "(paper, 8 nodes, ResNet50: +53% throughput, -63% per-node energy)"
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Pipeline-balance study — the paper's future-work direction
+//! ("heterogeneous model partitions ... for higher inference throughput").
+//!
+//! Runs the chain at several node counts, measures each stage's busy time
+//! (its compute energy divided by TDP), and reports the pipeline imbalance
+//! factor: bottleneck-stage time / mean-stage time. A perfectly balanced
+//! chain scores 1.0; the paper's layer-count-balanced partitioner (which
+//! the artifacts use) leaves measurable imbalance that heterogeneous
+//! FLOPs-aware partitioning would remove — quantified here per node count.
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --example heterogeneous [frames]
+//! ```
+
+use defer::bench::Table;
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::runtime::Engine;
+
+fn main() -> defer::Result<()> {
+    let frames: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let engine = Engine::cpu()?;
+
+    let mut table = Table::new(&[
+        "nodes",
+        "throughput (cycles/s)",
+        "imbalance (max/mean stage busy)",
+        "bottleneck stage",
+        "stage busy times (ms/frame)",
+    ]);
+
+    for nodes in [2usize, 4, 6, 8] {
+        let mut cfg = DeferConfig::default();
+        cfg.profile = "tiny".into();
+        cfg.model = "resnet50".into();
+        cfg.nodes = nodes;
+        // tiny artifacts only ship 1/2/4-way plans; 6/8 exist in edge.
+        if nodes > 4 {
+            cfg.profile = "edge".into();
+        }
+        let runner = match ChainRunner::with_engine(cfg, engine.clone()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {nodes} nodes: {e}");
+                continue;
+            }
+        };
+        let report = runner.run_frames(frames)?;
+        let tdp = defer::energy::DEFAULT_TDP_WATTS;
+        let busy_ms: Vec<f64> = report
+            .node_energy
+            .iter()
+            .map(|e| e.compute_j / tdp / frames as f64 * 1e3)
+            .collect();
+        let mean = busy_ms.iter().sum::<f64>() / busy_ms.len() as f64;
+        let (bottleneck, max) = busy_ms
+            .iter()
+            .enumerate()
+            .fold((0usize, 0.0f64), |acc, (i, v)| {
+                if *v > acc.1 {
+                    (i, *v)
+                } else {
+                    acc
+                }
+            });
+        table.row(&[
+            nodes.to_string(),
+            format!("{:.3}", report.throughput),
+            format!("{:.2}", max / mean.max(1e-9)),
+            format!("p{bottleneck}"),
+            busy_ms
+                .iter()
+                .map(|v| format!("{v:.1}"))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    print!("{}", table.render());
+    println!();
+    println!("imbalance > 1 quantifies the headroom the paper's future-work");
+    println!("heterogeneous partitioning would recover (throughput is set by");
+    println!("the bottleneck stage in a FIFO pipeline).");
+    Ok(())
+}

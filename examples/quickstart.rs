@@ -1,0 +1,51 @@
+//! Quickstart: partition ResNet-50 (tiny profile) across two compute nodes
+//! and run a few inference cycles through the DEFER chain.
+//!
+//! ```text
+//! make artifacts             # once: AOT-compile the partitions
+//! cargo run --release --example quickstart
+//! ```
+
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::util::{fmt_bytes, fmt_duration};
+
+fn main() -> defer::Result<()> {
+    // 1. Configure: tiny-profile ResNet-50, 2 compute nodes, in-process
+    //    transport, the paper's recommended codecs (ZFP+LZ4 for tensors,
+    //    plain JSON for the architecture).
+    let mut cfg = DeferConfig::default();
+    cfg.profile = "tiny".into();
+    cfg.model = "resnet50".into();
+    cfg.nodes = 2;
+
+    // 2. Build the chain: loads the AOT artifacts, spawns a thread per
+    //    compute node, runs DEFER's configuration step (architecture +
+    //    weights distribution over the wire).
+    let runner = ChainRunner::new(cfg)?;
+    println!(
+        "chain ready: {} partitions, {:.1} MFLOPs total",
+        runner.plan().parts.len(),
+        runner.plan().total_flops() as f64 / 1e6
+    );
+
+    // 3. Run 16 inference cycles through the pipeline.
+    let report = runner.run_frames(16)?;
+
+    println!("throughput:   {:.2} cycles/s", report.throughput);
+    println!("latency p50:  {}", fmt_duration(report.latency_p50));
+    println!(
+        "payload:      arch {} | weights {} | data {}",
+        fmt_bytes(report.architecture_bytes),
+        fmt_bytes(report.weights_bytes),
+        fmt_bytes(report.data_bytes)
+    );
+    println!(
+        "energy/node/cycle: {:.6} J",
+        report.energy_per_node_per_cycle()
+    );
+    if let Some(err) = report.reference_error {
+        println!("max |err| vs python reference: {err:.3e}");
+    }
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT lowering: partitions -> HLO text + weights.bin + meta.json.
+
+The compile-path half of the three-layer architecture. Runs once at build
+time (``make artifacts``); the Rust coordinator consumes the outputs and
+Python never appears on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True`` — the rust side unwraps with
+``to_tuple1()``.
+
+Per (model, profile, n-parts) the output layout is::
+
+    artifacts/<profile>/<model>/p<i>of<N>.hlo.txt      partition HLO
+    artifacts/<profile>/<model>/p<i>of<N>.meta.json    shapes + manifest
+    artifacts/<profile>/<model>/p<i>of<N>.weights.bin  raw f32 LE weights
+    artifacts/manifest.json                            index of everything
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --profile tiny --models resnet50 --parts 1,2,4
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import models, partitioner
+
+# Artifact sets keyed by profile. "tiny" feeds unit/integration tests;
+# "edge" feeds the paper benches (Figs 2-3, Tables I-II); "full" is the
+# paper's exact scale, built on demand.
+DEFAULT_SETS: dict[str, dict] = {
+    "tiny": {"models": ["resnet50", "vgg16"], "parts": [1, 2, 4]},
+    "edge": {
+        "models": ["resnet50", "vgg16", "vgg19"],
+        "parts": [1, 4, 6, 8],
+    },
+    "full": {"models": ["resnet50"], "parts": [1, 8]},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_partition(part: partitioner.Partition) -> str:
+    fn = partitioner.partition_fn(part)
+    x_spec = jax.ShapeDtypeStruct(part.input_shape, jnp.float32)
+    w_specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for (_, _, shape) in part.weight_manifest
+    ]
+    lowered = jax.jit(fn).lower(x_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def build_artifacts(
+    out_dir: str,
+    profile: str,
+    model_names: list[str],
+    part_counts: list[int],
+    strategy: str = "layers",
+    seed: int = 0,
+    verbose: bool = True,
+) -> list[dict]:
+    """Build every (model, n_parts) artifact for one profile. Returns index rows."""
+    rows: list[dict] = []
+    for model_name in model_names:
+        g = models.build(model_name, profile)
+        params = partitioner.init_graph_params(g, seed=seed)
+        shapes = partitioner.shape_map(g)
+        model_dir = os.path.join(out_dir, profile, model_name)
+        os.makedirs(model_dir, exist_ok=True)
+        for n in part_counts:
+            parts = partitioner.partition(g, n, strategy=strategy)
+            for part in parts:
+                t0 = time.time()
+                stem = f"p{part.index}of{n}"
+                hlo_path = os.path.join(model_dir, f"{stem}.hlo.txt")
+                meta_path = os.path.join(model_dir, f"{stem}.meta.json")
+                weights_path = os.path.join(model_dir, f"{stem}.weights.bin")
+
+                hlo = lower_partition(part)
+                with open(hlo_path, "w") as f:
+                    f.write(hlo)
+
+                flat = partitioner.flatten_params(part, params)
+                raw = b"".join(
+                    np.asarray(w, dtype="<f4").tobytes(order="C") for w in flat
+                )
+                with open(weights_path, "wb") as f:
+                    f.write(raw)
+
+                meta = {
+                    "model": model_name,
+                    "profile": profile,
+                    "strategy": strategy,
+                    "part_index": part.index,
+                    "part_count": n,
+                    "input_shape": list(part.input_shape),
+                    "output_shape": list(part.output_shape),
+                    "flops": part.flops,
+                    "layers": part.layer_names,
+                    "weights": [
+                        {
+                            "node": node,
+                            "param": pname,
+                            "shape": list(shape),
+                            "elements": int(np.prod(shape)),
+                        }
+                        for (node, pname, shape) in part.weight_manifest
+                    ],
+                    "weights_bytes": len(raw),
+                    "weights_sha256": hashlib.sha256(raw).hexdigest(),
+                    "hlo_file": os.path.basename(hlo_path),
+                    "weights_file": os.path.basename(weights_path),
+                }
+                with open(meta_path, "w") as f:
+                    json.dump(meta, f, indent=1)
+                rows.append(
+                    {
+                        "profile": profile,
+                        "model": model_name,
+                        "part_index": part.index,
+                        "part_count": n,
+                        "dir": os.path.relpath(model_dir, out_dir),
+                        "stem": stem,
+                        "flops": part.flops,
+                        "weights_bytes": len(raw),
+                        "layers": len(part.layer_names),
+                    }
+                )
+                if verbose:
+                    dt = time.time() - t0
+                    print(
+                        f"[aot] {profile}/{model_name}/{stem}: "
+                        f"{len(part.layer_names)} layers, "
+                        f"{part.flops/1e6:.1f} MFLOPs, "
+                        f"{len(raw)/1e6:.2f} MB weights, "
+                        f"{len(hlo)/1e3:.0f} kB HLO ({dt:.1f}s)",
+                        flush=True,
+                    )
+
+        # Reference input/output for the whole model: the rust integration
+        # tests replay this through the chain and require bitwise-close
+        # agreement, proving chain == single-device.
+        ref_key = jax.random.PRNGKey(seed + 1)
+        x = jax.random.normal(ref_key, shapes[g.input_name], jnp.float32)
+        y = partitioner.apply_graph(g, params, x)
+        np.asarray(x, dtype="<f4").tofile(os.path.join(model_dir, "ref_input.bin"))
+        np.asarray(y, dtype="<f4").tofile(os.path.join(model_dir, "ref_output.bin"))
+        with open(os.path.join(model_dir, "ref_meta.json"), "w") as f:
+            json.dump(
+                {
+                    "input_shape": list(x.shape),
+                    "output_shape": list(np.asarray(y).shape),
+                },
+                f,
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="tiny", choices=sorted(models.PROFILES))
+    ap.add_argument("--models", default=None, help="comma list; default per profile")
+    ap.add_argument("--parts", default=None, help="comma list; default per profile")
+    ap.add_argument("--strategy", default="layers", choices=["layers", "flops"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = DEFAULT_SETS[args.profile]
+    model_names = args.models.split(",") if args.models else cfg["models"]
+    part_counts = (
+        [int(p) for p in args.parts.split(",")] if args.parts else cfg["parts"]
+    )
+
+    t0 = time.time()
+    rows = build_artifacts(
+        args.out_dir, args.profile, model_names, part_counts, args.strategy, args.seed
+    )
+
+    # Merge into the global manifest.
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest: dict = {"artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    keep = [
+        r
+        for r in manifest["artifacts"]
+        if not any(
+            r["profile"] == n["profile"]
+            and r["model"] == n["model"]
+            and r["part_count"] == n["part_count"]
+            and r["part_index"] == n["part_index"]
+            for n in rows
+        )
+    ]
+    manifest["artifacts"] = keep + rows
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(rows)} artifacts in {time.time()-t0:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Layer-DAG representation + traversal, mirroring DEFER's Keras-DAG walk.
+
+The paper partitions a Keras model by traversing its layer DAG and emitting
+a new DAG per partition. We keep the same structure: a ``Graph`` is an
+insertion-ordered (and therefore topologically ordered, enforced at add
+time) set of named ``Node``s, each naming its input nodes. The partitioner
+(``partitioner.py``) cuts the graph at *single-tensor frontier* points —
+topological prefixes whose edge cut to the suffix is exactly one activation
+tensor — which is precisely the set of places a sequential DEFER chain can
+be split.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class Node:
+    """One layer in the DAG."""
+
+    name: str
+    op: str
+    attrs: dict[str, Any] = field(default_factory=dict)
+    inputs: list[str] = field(default_factory=list)
+
+
+class Graph:
+    """Insertion-ordered layer DAG with a single input and single output."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.nodes: dict[str, Node] = {}
+        self.output: str | None = None
+
+    def add(self, name: str, op: str, inputs: list[str] | None = None, **attrs) -> str:
+        if name in self.nodes:
+            raise ValueError(f"duplicate node {name!r}")
+        inputs = list(inputs or [])
+        for inp in inputs:
+            if inp not in self.nodes:
+                raise ValueError(
+                    f"node {name!r} references unknown input {inp!r} "
+                    "(nodes must be added in topological order)"
+                )
+        self.nodes[name] = Node(name=name, op=op, attrs=dict(attrs), inputs=inputs)
+        self.output = name
+        return name
+
+    @property
+    def order(self) -> list[str]:
+        """Topological order (== insertion order, by construction)."""
+        return list(self.nodes)
+
+    @property
+    def input_name(self) -> str:
+        first = next(iter(self.nodes.values()))
+        if first.op != "input":
+            raise ValueError("graph does not start with an input node")
+        return first.name
+
+    def consumers(self) -> dict[str, list[str]]:
+        out: dict[str, list[str]] = {n: [] for n in self.nodes}
+        for node in self.nodes.values():
+            for inp in node.inputs:
+                out[inp].append(node.name)
+        return out
+
+    def cut_points(self) -> list[int]:
+        """Indices ``i`` (1 <= i < len) such that splitting the topological
+        order into ``order[:i]`` / ``order[i:]`` crosses exactly ONE tensor:
+        the output of ``order[i-1]``.
+
+        These are the valid DEFER chain boundaries: the predecessor partition
+        ships a single activation to the successor. For plain-sequential
+        models (VGG) every boundary qualifies; for ResNet only the points
+        between residual blocks qualify.
+        """
+        order = self.order
+        index = {n: i for i, n in enumerate(order)}
+        cuts: list[int] = []
+        for i in range(1, len(order)):
+            crossing: set[str] = set()
+            for suffix_name in order[i:]:
+                for inp in self.nodes[suffix_name].inputs:
+                    if index[inp] < i:
+                        crossing.add(inp)
+            if crossing == {order[i - 1]}:
+                cuts.append(i)
+        return cuts
+
+    def subgraph(
+        self, start: int, end: int, input_shape: tuple[int, ...] | None = None
+    ) -> "Graph":
+        """Extract ``order[start:end]`` as a standalone graph.
+
+        ``start`` must be 0 or a valid cut point; the boundary activation
+        becomes the new graph's input node with shape ``input_shape``.
+        """
+        order = self.order
+        sub = Graph(f"{self.name}[{start}:{end}]")
+        if start == 0:
+            mapping: dict[str, str] = {}
+        else:
+            if input_shape is None:
+                raise ValueError("input_shape required when start > 0")
+            boundary = order[start - 1]
+            # Unique name: must not collide with the original graph's
+            # "input" node, or severed-edge detection silently passes.
+            sub.add("_boundary_input", "input", shape=tuple(input_shape))
+            mapping = {boundary: "_boundary_input"}
+        for name in order[start:end]:
+            node = self.nodes[name]
+            if node.op == "input":
+                sub.add(name, "input", **node.attrs)
+                continue
+            inputs = [mapping.get(i, i) for i in node.inputs]
+            for inp in inputs:
+                if inp not in sub.nodes:
+                    raise ValueError(
+                        f"subgraph [{start}:{end}) severs edge {inp} -> {name}; "
+                        "start is not a valid cut point"
+                    )
+            sub.add(name, node.op, inputs, **node.attrs)
+        return sub
+
+    def validate(self) -> None:
+        """Cheap structural invariants used by tests."""
+        if not self.nodes:
+            raise ValueError("empty graph")
+        order = self.order
+        if self.nodes[order[0]].op != "input":
+            raise ValueError("first node must be the input")
+        for i, name in enumerate(order):
+            node = self.nodes[name]
+            if node.op == "input":
+                if i != 0:
+                    raise ValueError("interior input node")
+                continue
+            if not node.inputs:
+                raise ValueError(f"non-input node {name!r} has no inputs")
+        sinks = [n for n, cs in self.consumers().items() if not cs]
+        if sinks != [self.output]:
+            raise ValueError(f"graph must have exactly one sink, got {sinks}")

@@ -1,0 +1,110 @@
+"""L1 Pallas kernels: fused elementwise epilogues.
+
+Two kernels used by the L2 layer library:
+
+- ``scale_shift_act``: inference-mode batch-norm folded to ``y = x*s + t``
+  with optional fused ReLU. ResNet50's BN layers become this after folding
+  (see ``python/compile/ops.py``).
+- ``add_act``: residual merge ``y = act(a + b)`` for ResNet shortcut joins.
+
+Both are row-blocked so the channel vector (scale/shift) stays resident in
+VMEM while row tiles stream through — the TPU analogue of keeping the
+per-channel constants in GPU shared memory. interpret=True as everywhere
+(see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _scale_shift_kernel(x_ref, s_ref, t_ref, o_ref, *, activation: str):
+    y = x_ref[...] * s_ref[...] + t_ref[...]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _add_kernel(a_ref, b_ref, o_ref, *, activation: str):
+    y = a_ref[...] + b_ref[...]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _row_pad(x: jax.Array, block_rows: int) -> jax.Array:
+    rem = (-x.shape[0]) % block_rows
+    if rem == 0:
+        return x
+    return jnp.pad(x, ((0, rem), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_rows"))
+def scale_shift_act(
+    x: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    activation: str = "none",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """``act(x * scale + shift)`` — x: [M, C], scale/shift: [C]."""
+    if x.ndim != 2:
+        raise ValueError(f"expected 2-D input, got {x.shape}")
+    m, c = x.shape
+    if scale.shape != (c,) or shift.shape != (c,):
+        raise ValueError(
+            f"scale/shift must be [{c}], got {scale.shape}/{shift.shape}"
+        )
+    br = min(block_rows, max(1, m))
+    xp = _row_pad(x.astype(jnp.float32), br)
+    grid = (xp.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_scale_shift_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=True,
+    )(xp, scale.reshape(1, c).astype(jnp.float32), shift.reshape(1, c).astype(jnp.float32))
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_rows"))
+def add_act(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "none",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """``act(a + b)`` — a, b: [M, C] (residual merge)."""
+    if a.shape != b.shape or a.ndim != 2:
+        raise ValueError(f"expected matching 2-D inputs, got {a.shape}/{b.shape}")
+    m, c = a.shape
+    br = min(block_rows, max(1, m))
+    ap = _row_pad(a.astype(jnp.float32), br)
+    bp = _row_pad(b.astype(jnp.float32), br)
+    grid = (ap.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_add_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(ap.shape, jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m]

@@ -1,0 +1,180 @@
+"""L1 Pallas kernel: blocked fused matmul (+bias) (+ReLU).
+
+This is the compute hot-spot of DEFER's partitions: every convolution is
+lowered to im2col patches (L2) feeding this kernel, and every dense layer
+calls it directly.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the kernel is tiled for
+a (128, 128) MXU-friendly block shape with accumulation kept resident in the
+output VMEM block across the K grid dimension (the out BlockSpec index map
+ignores `k`, so the same block is revisited for every K step — the Pallas
+revisiting guarantee). Bias add and ReLU are fused into the epilogue on the
+last K step so activations never round-trip HBM between matmul and
+activation.
+
+Lowered with ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+any backend executes. Correctness is pinned against ``ref.py`` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-oriented tile. f32 on CPU-interpret uses the same shapes; on a
+# real TPU these would be the bf16 systolic-array native tiles.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+VALID_ACTIVATIONS = ("none", "relu")
+
+
+def _matmul_kernel(x_ref, w_ref, *rest, nk: int, has_bias: bool, activation: str):
+    """Grid = (M/bm, N/bn, K/bk); K is the minor (sequential) dimension."""
+    if has_bias:
+        b_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, multiples):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """``act(x @ w + bias)`` via the blocked Pallas kernel.
+
+    x: [M, K] f32, w: [K, N] f32, bias: [N] f32 or None.
+    Shapes that do not divide the block sizes are zero-padded (zero K padding
+    is exact for matmul; M/N padding is sliced off the result).
+    """
+    if activation not in VALID_ACTIVATIONS:
+        raise ValueError(f"activation must be one of {VALID_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if bias is not None and bias.shape != (n,):
+        raise ValueError(f"bias shape {bias.shape} != ({n},)")
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+
+    xp = _pad_to(x.astype(jnp.float32), (bm, bk))
+    wp = _pad_to(w.astype(jnp.float32), (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    inputs = [xp, wp]
+    if bias is not None:
+        bp = _pad_to(bias.astype(jnp.float32).reshape(1, n), (1, bn))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        inputs.append(bp)
+
+    kernel = functools.partial(
+        _matmul_kernel,
+        nk=grid[2],
+        has_bias=bias is not None,
+        activation=activation,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*inputs)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    has_bias: bool = True,
+    dtype_bytes: int = 4,
+) -> int:
+    """Estimated VMEM residency for one grid step (operand tiles + out tile).
+
+    Used by the §Perf analysis — interpret mode gives no hardware signal, so
+    block-shape tuning is driven by this estimate + MXU utilization.
+    """
+    tiles = block_m * block_k + block_k * block_n + block_m * block_n
+    if has_bias:
+        tiles += block_n
+    return tiles * dtype_bytes
+
+
+def mxu_utilization_estimate(
+    m: int,
+    n: int,
+    k: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    mxu: int = 128,
+) -> float:
+    """Fraction of MXU lanes doing useful work, accounting for padding.
+
+    A (128x128) systolic array is fully utilized only when the padded tile
+    is a multiple of the MXU edge; ragged edges waste lanes.
+    """
+
+    def _eff(dim: int, block: int) -> float:
+        b = min(block, max(8, dim))
+        padded = ((dim + b - 1) // b) * b
+        hw = ((padded + mxu - 1) // mxu) * mxu if padded % mxu else padded
+        return dim / max(hw, 1)
+
+    return _eff(m, block_m) * _eff(n, block_n) * _eff(k, block_k)

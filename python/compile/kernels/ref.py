@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is pinned against the function of the same
+name here, by python/tests/test_kernel.py, before it is allowed into an AOT
+artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x: jax.Array, activation: str) -> jax.Array:
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "none":
+        return x
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    activation: str = "none",
+) -> jax.Array:
+    out = jnp.matmul(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return _act(out, activation)
+
+
+def scale_shift_act(
+    x: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    activation: str = "none",
+) -> jax.Array:
+    return _act(x.astype(jnp.float32) * scale + shift, activation)
+
+
+def add_act(a: jax.Array, b: jax.Array, *, activation: str = "none") -> jax.Array:
+    return _act(a.astype(jnp.float32) + b.astype(jnp.float32), activation)

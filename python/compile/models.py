@@ -1,0 +1,193 @@
+"""Model zoo: VGG16, VGG19, ResNet50 as layer DAGs (NHWC, inference mode).
+
+Architectures follow the originals (Simonyan & Zisserman 2014; He et al.
+2016) structurally — conv stacks / bottleneck residual blocks, same depths,
+same stride placement — with two scale knobs used by the reproduction
+profiles (see DESIGN.md §Model fidelity):
+
+- ``input_size``:  spatial resolution of the (1, S, S, 3) input
+- ``width_mult``:  multiplier on every channel/unit count
+
+``width_mult=1.0, input_size=224`` is the paper's exact configuration.
+Batch norm is inference-folded (scale/shift), as a deployed edge pipeline
+would run it.
+"""
+
+from __future__ import annotations
+
+from .graph import Graph
+
+PROFILES: dict[str, dict] = {
+    "tiny": {"input_size": 32, "width_mult": 0.125},
+    "edge": {"input_size": 64, "width_mult": 0.25},
+    "full": {"input_size": 224, "width_mult": 1.0},
+}
+
+
+def _w(width_mult: float, ch: int) -> int:
+    return max(8, int(round(ch * width_mult)))
+
+
+# ------------------------------------------------------------------ VGG
+
+
+def _build_vgg(name: str, conv_plan: list[list[int]], input_size: int, width_mult: float) -> Graph:
+    g = Graph(name)
+    prev = g.add("input", "input", shape=(1, input_size, input_size, 3))
+    for bi, block in enumerate(conv_plan, start=1):
+        for ci, ch in enumerate(block, start=1):
+            prev = g.add(
+                f"block{bi}_conv{ci}",
+                "conv",
+                [prev],
+                filters=_w(width_mult, ch),
+                kernel=(3, 3),
+                stride=1,
+                padding="same",
+                activation="relu",
+            )
+        prev = g.add(f"block{bi}_pool", "maxpool", [prev], pool=2, stride=2)
+    prev = g.add("flatten", "flatten", [prev])
+    for i in (1, 2):
+        prev = g.add(
+            f"fc{i}",
+            "dense",
+            [prev],
+            units=_w(width_mult, 4096),
+            activation="relu",
+        )
+    g.add("predictions", "dense", [prev], units=_w(width_mult, 1000), activation="none")
+    g.validate()
+    return g
+
+
+def build_vgg16(input_size: int = 224, width_mult: float = 1.0) -> Graph:
+    plan = [[64, 64], [128, 128], [256, 256, 256], [512, 512, 512], [512, 512, 512]]
+    return _build_vgg("vgg16", plan, input_size, width_mult)
+
+
+def build_vgg19(input_size: int = 224, width_mult: float = 1.0) -> Graph:
+    plan = [
+        [64, 64],
+        [128, 128],
+        [256, 256, 256, 256],
+        [512, 512, 512, 512],
+        [512, 512, 512, 512],
+    ]
+    return _build_vgg("vgg19", plan, input_size, width_mult)
+
+
+# ------------------------------------------------------------------ ResNet50
+
+
+def _bottleneck(
+    g: Graph,
+    prev: str,
+    name: str,
+    filters: int,
+    stride: int,
+    project: bool,
+) -> str:
+    """He-style bottleneck: 1x1 reduce -> 3x3 -> 1x1 expand, + shortcut."""
+    expanded = filters * 4
+    shortcut = prev
+    if project:
+        shortcut = g.add(
+            f"{name}_proj_conv",
+            "conv",
+            [prev],
+            filters=expanded,
+            kernel=(1, 1),
+            stride=stride,
+            padding="same",
+            activation="none",
+        )
+        shortcut = g.add(f"{name}_proj_bn", "bn", [shortcut], activation="none")
+    x = g.add(
+        f"{name}_conv1",
+        "conv",
+        [prev],
+        filters=filters,
+        kernel=(1, 1),
+        stride=1,
+        padding="same",
+        activation="none",
+    )
+    x = g.add(f"{name}_bn1", "bn", [x], activation="relu")
+    x = g.add(
+        f"{name}_conv2",
+        "conv",
+        [x],
+        filters=filters,
+        kernel=(3, 3),
+        stride=stride,
+        padding="same",
+        activation="none",
+    )
+    x = g.add(f"{name}_bn2", "bn", [x], activation="relu")
+    x = g.add(
+        f"{name}_conv3",
+        "conv",
+        [x],
+        filters=expanded,
+        kernel=(1, 1),
+        stride=1,
+        padding="same",
+        activation="none",
+    )
+    x = g.add(f"{name}_bn3", "bn", [x], activation="none")
+    return g.add(f"{name}_add", "add", [x, shortcut], activation="relu")
+
+
+def build_resnet50(input_size: int = 224, width_mult: float = 1.0) -> Graph:
+    g = Graph("resnet50")
+    prev = g.add("input", "input", shape=(1, input_size, input_size, 3))
+    prev = g.add(
+        "conv1",
+        "conv",
+        [prev],
+        filters=_w(width_mult, 64),
+        kernel=(7, 7),
+        stride=2,
+        padding="same",
+        activation="none",
+    )
+    prev = g.add("conv1_bn", "bn", [prev], activation="relu")
+    prev = g.add("pool1", "maxpool", [prev], pool=2, stride=2)
+
+    stage_plan = [  # (blocks, filters, first-stride) — canonical ResNet50
+        (3, 64, 1),
+        (4, 128, 2),
+        (6, 256, 2),
+        (3, 512, 2),
+    ]
+    for si, (blocks, filters, stride) in enumerate(stage_plan, start=2):
+        f = _w(width_mult, filters)
+        for b in range(1, blocks + 1):
+            prev = _bottleneck(
+                g,
+                prev,
+                f"stage{si}_block{b}",
+                f,
+                stride=stride if b == 1 else 1,
+                project=(b == 1),
+            )
+    prev = g.add("avg_pool", "gap", [prev])
+    g.add("predictions", "dense", [prev], units=_w(width_mult, 1000), activation="none")
+    g.validate()
+    return g
+
+
+BUILDERS = {
+    "vgg16": build_vgg16,
+    "vgg19": build_vgg19,
+    "resnet50": build_resnet50,
+}
+
+
+def build(model: str, profile: str = "edge") -> Graph:
+    if model not in BUILDERS:
+        raise ValueError(f"unknown model {model!r}; have {sorted(BUILDERS)}")
+    if profile not in PROFILES:
+        raise ValueError(f"unknown profile {profile!r}; have {sorted(PROFILES)}")
+    return BUILDERS[model](**PROFILES[profile])

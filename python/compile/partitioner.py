@@ -1,0 +1,217 @@
+"""Model partitioner: split a layer DAG into N sequential sub-networks.
+
+Implements the paper's Model Partitioning Step (§III-A): traverse the DAG,
+pick N-1 cut points, and emit one sub-graph per partition such that the
+chain  dispatcher -> p0 -> p1 -> ... -> p{N-1} -> dispatcher  computes the
+original model exactly (bit-identical up to XLA scheduling).
+
+Two balancing strategies:
+- ``layers``: equalize layer counts per partition (what the paper describes:
+  "partitioning layers were selected based on what would split the model up
+  into a similar number of layers for each partition").
+- ``flops``:  equalize estimated FLOPs per partition (better pipeline
+  balance; used by the heterogeneous-nodes extension, examples/heterogeneous).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+from . import ops
+from .graph import Graph
+
+
+@dataclass
+class Partition:
+    """One chain stage: a sub-graph plus its boundary shapes + param manifest."""
+
+    index: int
+    count: int
+    graph: Graph
+    input_shape: tuple[int, ...]
+    output_shape: tuple[int, ...]
+    # (node_name, param_name, shape) in deterministic apply order
+    weight_manifest: list[tuple[str, str, tuple[int, ...]]] = field(default_factory=list)
+    flops: int = 0
+    layer_names: list[str] = field(default_factory=list)
+
+
+def shape_map(g: Graph) -> dict[str, tuple[int, ...]]:
+    """Forward shape inference over the DAG."""
+    shapes: dict[str, tuple[int, ...]] = {}
+    for name in g.order:
+        node = g.nodes[name]
+        in_shapes = [shapes[i] for i in node.inputs]
+        shapes[name] = ops.infer_shape(node.op, node.attrs, in_shapes)
+    return shapes
+
+
+def graph_flops(g: Graph) -> dict[str, int]:
+    shapes = shape_map(g)
+    out: dict[str, int] = {}
+    for name in g.order:
+        node = g.nodes[name]
+        in_shapes = [shapes[i] for i in node.inputs]
+        out[name] = ops.flops(node.op, node.attrs, in_shapes)
+    return out
+
+
+def init_graph_params(g: Graph, seed: int = 0) -> dict[str, dict[str, jax.Array]]:
+    """Deterministic (seeded) parameter init for every node, keyed by name.
+
+    The fold-in by position keeps parameters identical regardless of how the
+    graph is later partitioned — crucial for chain == single-device
+    equivalence tests.
+    """
+    shapes = shape_map(g)
+    key = jax.random.PRNGKey(seed)
+    params: dict[str, dict[str, jax.Array]] = {}
+    for pos, name in enumerate(g.order):
+        node = g.nodes[name]
+        in_shapes = [shapes[i] for i in node.inputs]
+        node_key = jax.random.fold_in(key, pos)
+        p = ops.init_params(node.op, node.attrs, in_shapes, node_key)
+        if p:
+            params[name] = p
+    return params
+
+
+def apply_graph(
+    g: Graph,
+    params: dict[str, dict[str, jax.Array]],
+    x: jax.Array,
+) -> jax.Array:
+    """Execute the DAG with an activation cache (the paper's inference walk)."""
+    acts: dict[str, jax.Array] = {g.input_name: x}
+    for name in g.order:
+        node = g.nodes[name]
+        if node.op == "input":
+            continue
+        xs = [acts[i] for i in node.inputs]
+        acts[name] = ops.apply_op(node.op, node.attrs, params.get(name, {}), xs)
+        # Free activations with no remaining consumers? Build-time only; skip.
+    return acts[g.output]
+
+
+def choose_cuts(g: Graph, n_parts: int, strategy: str = "layers") -> list[int]:
+    """Pick ``n_parts - 1`` cut indices from ``g.cut_points()``.
+
+    Greedy walk: aim each boundary at the ideal cumulative weight
+    (layers or FLOPs) and take the closest available cut point.
+    """
+    if n_parts < 1:
+        raise ValueError("n_parts must be >= 1")
+    if n_parts == 1:
+        return []
+    cuts_avail = g.cut_points()
+    if len(cuts_avail) < n_parts - 1:
+        raise ValueError(
+            f"{g.name}: only {len(cuts_avail)} cut points; cannot make {n_parts} partitions"
+        )
+    order = g.order
+    if strategy == "layers":
+        weights = {name: 1.0 for name in order}
+    elif strategy == "flops":
+        fl = graph_flops(g)
+        # Floor at 1 so zero-FLOP layers still carry positional weight.
+        weights = {name: float(max(fl[name], 1)) for name in order}
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    prefix = []
+    total = 0.0
+    for name in order:
+        total += weights[name]
+        prefix.append(total)
+
+    chosen: list[int] = []
+    remaining = sorted(cuts_avail)
+    for part in range(1, n_parts):
+        target = total * part / n_parts
+        # Candidates strictly after the previous cut, leaving enough cut
+        # points for the partitions still to come.
+        lo = chosen[-1] if chosen else 0
+        cands = [c for c in remaining if c > lo]
+        needed_after = n_parts - 1 - part
+        if needed_after:
+            cands = cands[: len(cands) - needed_after] or cands[:1]
+        if not cands:
+            raise ValueError(f"{g.name}: ran out of cut points at partition {part}")
+        best = min(cands, key=lambda c: abs(prefix[c - 1] - target))
+        chosen.append(best)
+    return chosen
+
+
+def partition(g: Graph, n_parts: int, strategy: str = "layers") -> list[Partition]:
+    """Split ``g`` into ``n_parts`` chain stages."""
+    shapes = shape_map(g)
+    fl = graph_flops(g)
+    cuts = choose_cuts(g, n_parts, strategy)
+    bounds = [0] + cuts + [len(g.order)]
+    order = g.order
+    parts: list[Partition] = []
+    for i in range(n_parts):
+        start, end = bounds[i], bounds[i + 1]
+        in_shape = shapes[g.input_name] if start == 0 else shapes[order[start - 1]]
+        sub = g.subgraph(start, end, input_shape=None if start == 0 else in_shape)
+        out_shape = shapes[order[end - 1]]
+        manifest: list[tuple[str, str, tuple[int, ...]]] = []
+        # Weight manifest comes from shape inference (no allocation here).
+        sub_shapes = shape_map(sub)
+        key = jax.random.PRNGKey(0)  # shapes only; values discarded
+        for name in sub.order:
+            node = sub.nodes[name]
+            if node.op == "input":
+                continue
+            in_shapes = [sub_shapes[x] for x in node.inputs]
+            p = ops.init_params(node.op, node.attrs, in_shapes, key)
+            for pname, arr in p.items():
+                manifest.append((name, pname, tuple(arr.shape)))
+        parts.append(
+            Partition(
+                index=i,
+                count=n_parts,
+                graph=sub,
+                input_shape=tuple(in_shape),
+                output_shape=tuple(out_shape),
+                weight_manifest=manifest,
+                flops=sum(fl[n] for n in order[start:end]),
+                layer_names=list(order[start:end]),
+            )
+        )
+    return parts
+
+
+def partition_fn(part: Partition):
+    """Build ``fn(x, *weights) -> (y,)`` for AOT lowering.
+
+    Weights are *arguments* (HLO parameters), matching DEFER's configuration
+    step where the dispatcher ships weights separately from the architecture.
+    """
+    g = part.graph
+    manifest = part.weight_manifest
+
+    def fn(x, *weights):
+        if len(weights) != len(manifest):
+            raise ValueError(f"expected {len(manifest)} weights, got {len(weights)}")
+        params: dict[str, dict[str, jax.Array]] = {}
+        for (node, pname, _), w in zip(manifest, weights):
+            params.setdefault(node, {})[pname] = w
+        return (apply_graph(g, params, x),)
+
+    return fn
+
+
+def flatten_params(
+    part: Partition, params: dict[str, dict[str, jax.Array]]
+) -> list[jax.Array]:
+    """Order a node->params dict per the partition's weight manifest."""
+    out = []
+    for node, pname, shape in part.weight_manifest:
+        arr = params[node][pname]
+        if tuple(arr.shape) != shape:
+            raise ValueError(f"{node}.{pname}: shape {arr.shape} != manifest {shape}")
+        out.append(arr)
+    return out

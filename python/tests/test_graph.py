@@ -1,0 +1,89 @@
+"""Graph DAG invariants: construction, cut points, subgraph extraction."""
+
+import pytest
+
+from compile.graph import Graph
+from compile import models
+
+
+def _linear_graph(n=5):
+    g = Graph("lin")
+    prev = g.add("input", "input", shape=(1, 8, 8, 3))
+    for i in range(n):
+        prev = g.add(f"conv{i}", "conv", [prev], filters=8, kernel=(3, 3), stride=1, padding="same")
+    g.validate()
+    return g
+
+
+def test_insertion_requires_topological_order():
+    g = Graph("bad")
+    g.add("input", "input", shape=(1, 4, 4, 3))
+    with pytest.raises(ValueError):
+        g.add("a", "relu", ["nonexistent"])
+
+
+def test_duplicate_node_rejected():
+    g = Graph("dup")
+    g.add("input", "input", shape=(1, 4, 4, 3))
+    with pytest.raises(ValueError):
+        g.add("input", "relu", ["input"])
+
+
+def test_linear_graph_all_boundaries_are_cuts():
+    g = _linear_graph(5)
+    assert g.cut_points() == [1, 2, 3, 4, 5]
+
+
+def test_residual_graph_cuts_only_between_blocks():
+    g = Graph("res")
+    prev = g.add("input", "input", shape=(1, 8, 8, 16))
+    a = g.add("conv_a", "conv", [prev], filters=16, kernel=(3, 3), stride=1, padding="same")
+    merged = g.add("add", "add", [a, prev])
+    g.add("tail", "relu", [merged])
+    g.validate()
+    # Cutting between conv_a and add would sever the skip edge input->add.
+    # Valid cuts: after input (only the input tensor crosses) and after the
+    # residual merge.
+    assert g.cut_points() == [1, 3]
+
+
+def test_subgraph_severed_edge_rejected():
+    g = Graph("res")
+    prev = g.add("input", "input", shape=(1, 8, 8, 16))
+    a = g.add("conv_a", "conv", [prev], filters=16, kernel=(3, 3), stride=1, padding="same")
+    g.add("add", "add", [a, prev])
+    with pytest.raises(ValueError):
+        g.subgraph(2, 3, input_shape=(1, 8, 8, 16))
+
+
+def test_subgraph_prefix_and_suffix():
+    g = _linear_graph(4)
+    pre = g.subgraph(0, 3)
+    pre.validate()
+    assert pre.order[0] == "input"
+    suf = g.subgraph(3, 5, input_shape=(1, 8, 8, 8))
+    suf.validate()
+    assert suf.nodes[suf.input_name].attrs["shape"] == (1, 8, 8, 8)
+    assert len(suf.order) == 3  # new input + 2 convs
+
+
+def test_subgraph_requires_shape_for_interior_start():
+    g = _linear_graph(3)
+    with pytest.raises(ValueError):
+        g.subgraph(1, 3)
+
+
+def test_validate_rejects_multi_sink():
+    g = Graph("multi")
+    prev = g.add("input", "input", shape=(1, 4, 4, 3))
+    g.add("a", "relu", [prev])
+    g.add("b", "relu", [prev])
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_model_graphs_validate():
+    for name in ("vgg16", "vgg19", "resnet50"):
+        g = models.build(name, "tiny")
+        g.validate()
+        assert len(g.cut_points()) >= 7, f"{name} must support 8-way partitioning"

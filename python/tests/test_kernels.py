@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, block sizes, bias-presence and activations; the
+kernels must match the oracle within blocked-accumulation float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementwise, matmul, ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    bias=st.booleans(),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_matmul_matches_ref(m, k, n, bias, act):
+    x = _rand(m * 7 + 1, (m, k))
+    w = _rand(k * 13 + 2, (k, n))
+    b = _rand(n * 17 + 3, (n,)) if bias else None
+    got = matmul.matmul_bias_act(x, w, b, activation=act)
+    want = ref.matmul_bias_act(x, w, b, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """The result must not depend on the tiling."""
+    x = _rand(1, (96, 80))
+    w = _rand(2, (80, 72))
+    b = _rand(3, (72,))
+    got = matmul.matmul_bias_act(
+        x, w, b, activation="relu", block_m=bm, block_n=bn, block_k=bk
+    )
+    want = ref.matmul_bias_act(x, w, b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_matmul_exact_block_multiple():
+    x = _rand(4, (256, 128))
+    w = _rand(5, (128, 256))
+    got = matmul.matmul_bias_act(x, w, None)
+    want = ref.matmul_bias_act(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = _rand(6, (4, 5))
+    w = _rand(7, (6, 3))
+    with pytest.raises(Exception):
+        matmul.matmul_bias_act(x, w, None)
+
+
+def test_matmul_rejects_bad_activation():
+    x = _rand(8, (4, 4))
+    with pytest.raises(Exception):
+        matmul.matmul_bias_act(x, x, None, activation="gelu")
+
+
+def test_matmul_relu_clamps():
+    x = -jnp.ones((16, 16), jnp.float32)
+    w = jnp.eye(16, dtype=jnp.float32)
+    out = matmul.matmul_bias_act(x, w, None, activation="relu")
+    assert float(np.asarray(out).max()) == 0.0
+
+
+# ------------------------------------------------------------- elementwise
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 500),
+    c=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_scale_shift_matches_ref(m, c, act):
+    x = _rand(m + 11, (m, c))
+    s = _rand(c + 12, (c,))
+    t = _rand(c + 13, (c,))
+    got = elementwise.scale_shift_act(x, s, t, activation=act)
+    want = ref.scale_shift_act(x, s, t, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 500),
+    c=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_add_matches_ref(m, c, act):
+    a = _rand(m + 21, (m, c))
+    b = _rand(m + 22, (m, c))
+    got = elementwise.add_act(a, b, activation=act)
+    want = ref.add_act(a, b, activation=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_elementwise_shape_errors():
+    a = _rand(1, (4, 4))
+    b = _rand(2, (5, 4))
+    with pytest.raises(Exception):
+        elementwise.add_act(a, b)
+    with pytest.raises(Exception):
+        elementwise.scale_shift_act(a, _rand(3, (5,)), _rand(4, (4,)))
+
+
+# ------------------------------------------------------------- perf estimators
+
+
+def test_vmem_footprint_fits_budget():
+    """Default tile must fit comfortably in a 16 MiB VMEM."""
+    fp = matmul.vmem_footprint_bytes()
+    assert fp < 16 * 1024 * 1024 / 4  # <25% of VMEM: double-buffer headroom
+
+
+def test_mxu_utilization_bounds():
+    full = matmul.mxu_utilization_estimate(1024, 1024, 1024)
+    ragged = matmul.mxu_utilization_estimate(129, 129, 129)
+    tiny = matmul.mxu_utilization_estimate(1, 1, 1)
+    assert full == pytest.approx(1.0)
+    assert 0.0 < ragged < full
+    assert 0.0 < tiny < 0.01

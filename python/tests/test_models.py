@@ -1,0 +1,71 @@
+"""Model zoo structure checks: depths, shapes, profiles."""
+
+import pytest
+
+from compile import models, partitioner
+
+
+def _count(g, op):
+    return sum(1 for n in g.nodes.values() if n.op == op)
+
+
+def test_vgg16_depth():
+    g = models.build("vgg16", "tiny")
+    assert _count(g, "conv") == 13
+    assert _count(g, "dense") == 3
+    assert _count(g, "maxpool") == 5
+
+
+def test_vgg19_depth():
+    g = models.build("vgg19", "tiny")
+    assert _count(g, "conv") == 16
+    assert _count(g, "dense") == 3
+
+
+def test_resnet50_depth():
+    g = models.build("resnet50", "tiny")
+    # 1 stem + 3*3 + 4*3 + 6*3 + 3*3 bottleneck convs + 4 projections = 53
+    assert _count(g, "conv") == 53
+    assert _count(g, "dense") == 1
+    assert _count(g, "add") == 16
+
+
+@pytest.mark.parametrize("model", ["vgg16", "vgg19", "resnet50"])
+@pytest.mark.parametrize("profile", ["tiny", "edge"])
+def test_output_is_classifier_head(model, profile):
+    g = models.build(model, profile)
+    shapes = partitioner.shape_map(g)
+    out = shapes[g.output]
+    assert len(out) == 2 and out[0] == 1
+    cfg = models.PROFILES[profile]
+    assert out[1] == max(8, round(1000 * cfg["width_mult"]))
+
+
+def test_full_profile_matches_paper_scale():
+    g = models.build("resnet50", "full")
+    shapes = partitioner.shape_map(g)
+    assert shapes[g.input_name] == (1, 224, 224, 3)
+    assert shapes[g.output] == (1, 1000)
+    # ~25.5M params at width 1.0
+    n_params = sum(
+        e["elements"] if isinstance(e, dict) else 0 for e in []
+    )  # placeholder: counted below via manifest
+    (p,) = partitioner.partition(g, 1)
+    total = sum(
+        int(__import__("math").prod(shape)) for (_, _, shape) in p.weight_manifest
+    )
+    assert 20_000_000 < total < 30_000_000
+
+
+def test_resnet_flops_dominated_by_conv():
+    g = models.build("resnet50", "edge")
+    fl = partitioner.graph_flops(g)
+    conv_fl = sum(v for k, v in fl.items() if g.nodes[k].op == "conv")
+    assert conv_fl > 0.9 * sum(fl.values())
+
+
+def test_unknown_model_and_profile():
+    with pytest.raises(ValueError):
+        models.build("alexnet", "tiny")
+    with pytest.raises(ValueError):
+        models.build("vgg16", "huge")

@@ -1,0 +1,111 @@
+"""L2 op correctness: conv vs lax.conv, pooling, bn, shape/flops inference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ops
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    hw=st.integers(4, 16),
+    c=st.integers(1, 8),
+    f=st.integers(1, 12),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["same", "valid"]),
+)
+def test_conv_matches_lax_conv(hw, c, f, k, stride, padding):
+    """Our im2col+Pallas conv == XLA's native convolution."""
+    attrs = {
+        "filters": f,
+        "kernel": (k, k),
+        "stride": stride,
+        "padding": padding,
+        "activation": "none",
+    }
+    x = _rand(1, (1, hw, hw, c))
+    params = ops.init_params("conv", attrs, [x.shape], jax.random.PRNGKey(7))
+    got = ops.apply_op("conv", attrs, params, [x])
+    # Patch features are (C, KH, KW)-major: w[C*KH*KW, F] -> HWIO.
+    w_hwio = params["w"].reshape(c, k, k, f).transpose(1, 2, 0, 3)
+    want = (
+        jax.lax.conv_general_dilated(
+            x,
+            w_hwio,
+            (stride, stride),
+            padding.upper(),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        + params["b"]
+    )
+    assert got.shape == tuple(ops.infer_shape("conv", attrs, [x.shape]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_conv_relu_fused():
+    attrs = {
+        "filters": 4,
+        "kernel": (3, 3),
+        "stride": 1,
+        "padding": "same",
+        "activation": "relu",
+    }
+    x = _rand(2, (1, 6, 6, 3))
+    params = ops.init_params("conv", attrs, [x.shape], jax.random.PRNGKey(8))
+    out = ops.apply_op("conv", attrs, params, [x])
+    assert float(np.asarray(out).min()) >= 0.0
+
+
+def test_maxpool_matches_manual():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    attrs = {"pool": 2, "stride": 2}
+    out = ops.apply_op("maxpool", attrs, {}, [x])
+    want = np.array([[5, 7], [13, 15]], dtype=np.float32).reshape(1, 2, 2, 1)
+    np.testing.assert_array_equal(np.asarray(out), want)
+    assert ops.infer_shape("maxpool", attrs, [(1, 4, 4, 1)]) == (1, 2, 2, 1)
+
+
+def test_gap_matches_mean():
+    x = _rand(3, (1, 5, 5, 7))
+    out = ops.apply_op("gap", {}, {}, [x])
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(x).mean(axis=(1, 2)), rtol=1e-6
+    )
+
+
+def test_bn_folded_inference():
+    x = _rand(4, (1, 4, 4, 6))
+    params = ops.init_params("bn", {}, [x.shape], jax.random.PRNGKey(9))
+    out = ops.apply_op("bn", {"activation": "none"}, params, [x])
+    want = np.asarray(x) * np.asarray(params["scale"]) + np.asarray(params["shift"])
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-5)
+
+
+def test_add_shape_mismatch_rejected():
+    with pytest.raises(ValueError):
+        ops.infer_shape("add", {}, [(1, 2, 2, 3), (1, 2, 2, 4)])
+
+
+def test_dense_shapes_and_flops():
+    attrs = {"units": 10}
+    assert ops.infer_shape("dense", attrs, [(1, 32)]) == (1, 10)
+    assert ops.flops("dense", attrs, [(1, 32)]) == 2 * 32 * 10
+
+
+def test_conv_flops_formula():
+    attrs = {"filters": 8, "kernel": (3, 3), "stride": 1, "padding": "same"}
+    # 2 * OH*OW * KH*KW*C * F
+    assert ops.flops("conv", attrs, [(1, 4, 4, 3)]) == 2 * 16 * 9 * 3 * 8
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError):
+        ops.infer_shape("attention", {}, [(1, 2)])

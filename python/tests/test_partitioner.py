@@ -1,0 +1,102 @@
+"""Partitioner invariants: chain equivalence, manifests, balancing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import models, partitioner
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _run_chain(g, params, parts, x):
+    act = x
+    for p in parts:
+        fn = partitioner.partition_fn(p)
+        ws = partitioner.flatten_params(
+            p, {n: params[n] for n in p.layer_names if n in params}
+        )
+        (act,) = fn(act, *ws)
+    return act
+
+
+@pytest.mark.parametrize("model", ["vgg16", "resnet50"])
+@pytest.mark.parametrize("n", [1, 2, 4])
+def test_chain_equals_single_device(model, n):
+    """The headline invariant: DEFER preserves the exact model output."""
+    g = models.build(model, "tiny")
+    params = partitioner.init_graph_params(g)
+    shapes = partitioner.shape_map(g)
+    x = jax.random.normal(jax.random.PRNGKey(9), shapes[g.input_name], jnp.float32)
+    want = partitioner.apply_graph(g, params, x)
+    parts = partitioner.partition(g, n)
+    got = _run_chain(g, params, parts, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(1, 8), strategy=st.sampled_from(["layers", "flops"]))
+def test_partition_structure_invariants(n, strategy):
+    g = models.build("resnet50", "tiny")
+    parts = partitioner.partition(g, n, strategy=strategy)
+    assert len(parts) == n
+    # Partitions tile the layer list exactly, in order.
+    names = [nm for p in parts for nm in p.layer_names]
+    assert names == g.order
+    # Boundary shapes chain.
+    for a, b in zip(parts, parts[1:]):
+        assert a.output_shape == b.input_shape
+    # FLOPs conserved.
+    assert sum(p.flops for p in parts) == sum(partitioner.graph_flops(g).values())
+
+
+def test_flops_strategy_balances_better_than_worst_case():
+    g = models.build("resnet50", "tiny")
+    parts = partitioner.partition(g, 4, strategy="flops")
+    fl = [p.flops for p in parts]
+    total = sum(fl)
+    assert max(fl) < 0.6 * total, f"flops balancing failed: {fl}"
+
+
+def test_too_many_partitions_rejected():
+    g = models.build("vgg16", "tiny")
+    with pytest.raises(ValueError):
+        partitioner.partition(g, 100)
+
+
+def test_weight_manifest_matches_params():
+    g = models.build("resnet50", "tiny")
+    params = partitioner.init_graph_params(g)
+    for p in partitioner.partition(g, 3):
+        flat = partitioner.flatten_params(
+            p, {n: params[n] for n in p.layer_names if n in params}
+        )
+        assert len(flat) == len(p.weight_manifest)
+        for arr, (_, _, shape) in zip(flat, p.weight_manifest):
+            assert tuple(arr.shape) == shape
+
+
+def test_flatten_params_shape_mismatch_rejected():
+    g = models.build("vgg16", "tiny")
+    params = partitioner.init_graph_params(g)
+    (p,) = partitioner.partition(g, 1)
+    bad = {n: dict(v) for n, v in params.items()}
+    first = p.weight_manifest[0]
+    bad[first[0]][first[1]] = jnp.zeros((1, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        partitioner.flatten_params(p, bad)
+
+
+def test_params_independent_of_partitioning():
+    """Seeded init must not depend on how the graph is later cut."""
+    g1 = models.build("resnet50", "tiny")
+    g2 = models.build("resnet50", "tiny")
+    p1 = partitioner.init_graph_params(g1, seed=3)
+    p2 = partitioner.init_graph_params(g2, seed=3)
+    for node in p1:
+        for name in p1[node]:
+            np.testing.assert_array_equal(
+                np.asarray(p1[node][name]), np.asarray(p2[node][name])
+            )

@@ -1,0 +1,98 @@
+//! Fig. 2 — Inference throughput for different models and numbers of
+//! compute nodes (VGG16, VGG19, ResNet50 x {single-device, 4, 6, 8}).
+//!
+//! Regenerates the paper's figure as a table. Absolute cycles/s differ from
+//! the paper's testbed; the claims under test are the *shapes*:
+//!   (1) ResNet50 throughput grows with node count; DEFER@8 > single device
+//!       (paper: +53%).
+//!   (2) "there is a limit to an increase in throughput from utilizing
+//!       additional compute nodes" for the VGGs (paper §V): VGG16 stops
+//!       gaining by 8 nodes (plateau/decline, its huge early activations
+//!       make extra hops expensive) while ResNet50 is still gaining.
+//!
+//! Env: DEFER_FRAMES (default 16), DEFER_PROFILE (default edge),
+//!      DEFER_MODELS (default vgg16,vgg19,resnet50),
+//!      DEFER_EMULATED_MFLOPS (default 50 — deterministic device-speed
+//!      emulation matching the paper's TF-on-edge-CPU
+//!      compute:communication ratio; see DESIGN.md §Substitutions).
+
+use defer::bench::Table;
+use defer::config::DeferConfig;
+use defer::coordinator::baseline::SingleDevice;
+use defer::coordinator::chain::ChainRunner;
+use defer::runtime::Engine;
+
+fn main() {
+    let frames: u64 = std::env::var("DEFER_FRAMES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let profile = std::env::var("DEFER_PROFILE").unwrap_or_else(|_| "edge".into());
+    let models = std::env::var("DEFER_MODELS")
+        .unwrap_or_else(|_| "vgg16,vgg19,resnet50".into());
+    let mflops: f64 = std::env::var("DEFER_EMULATED_MFLOPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50.0);
+    let engine = Engine::cpu().expect("PJRT cpu client");
+
+    println!(
+        "# Fig. 2: inference throughput (cycles/s), profile={profile}, frames={frames}, emulated device = {mflops} MFLOPS"
+    );
+    let mut table = Table::new(&["model", "single", "4 nodes", "6 nodes", "8 nodes"]);
+    let mut resnet_ok = None;
+    let mut vgg_decreasing = None;
+
+    for model in models.split(',') {
+        let mut row = vec![model.to_string()];
+        let mut tputs = Vec::new();
+        for nodes in [1usize, 4, 6, 8] {
+            let mut cfg = DeferConfig::default();
+            cfg.profile = profile.clone();
+            cfg.model = model.to_string();
+            cfg.nodes = nodes;
+            cfg.emulated_mflops = mflops;
+            let tput = if nodes == 1 {
+                SingleDevice::with_engine(cfg, engine.clone())
+                    .and_then(|r| r.run_frames(frames))
+                    .map(|r| r.throughput)
+            } else {
+                ChainRunner::with_engine(cfg, engine.clone())
+                    .and_then(|r| r.run_frames(frames))
+                    .map(|r| r.throughput)
+            };
+            match tput {
+                Ok(t) => {
+                    row.push(format!("{t:.3}"));
+                    tputs.push(t);
+                }
+                Err(e) => {
+                    row.push(format!("n/a ({e})"));
+                    tputs.push(f64::NAN);
+                }
+            }
+        }
+        if model == "resnet50" && tputs.len() == 4 && tputs[3].is_finite() {
+            resnet_ok = Some(tputs[3] > tputs[0]);
+            println!(
+                "resnet50: DEFER@8 / single = {:.2}x (paper: 1.53x)",
+                tputs[3] / tputs[0]
+            );
+        }
+        if model == "vgg16" && tputs.len() == 4 && tputs.iter().all(|t| t.is_finite()) {
+            // Relative gain from 6 -> 8 nodes must have dried up (<5%).
+            vgg_decreasing = Some(tputs[3] <= tputs[2] * 1.05);
+        }
+        table.row(&row);
+    }
+    print!("{}", table.render());
+    if let Some(ok) = resnet_ok {
+        println!("claim (1) ResNet50 DEFER@8 beats single device: {}", if ok { "HOLDS" } else { "FAILS" });
+    }
+    if let Some(ok) = vgg_decreasing {
+        println!(
+            "claim (2) VGG16 gains dry up by 8 nodes (ResNet50 still gaining): {}",
+            if ok { "HOLDS" } else { "FAILS" }
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! Fig. 3 — Energy consumption per node per inference cycle, ResNet50,
+//! DEFER x {4, 6, 8} nodes vs single-device inference.
+//!
+//! Energy model per the paper: TDP x busy time for compute/serialization,
+//! 10 pJ/bit for network transmission. Claims under test:
+//!   (1) per-node energy decreases as node count grows (each node runs a
+//!       smaller partition per cycle);
+//!   (2) DEFER drops below single-device energy at >= 6 nodes
+//!       (paper: -63% at 8 nodes).
+//!
+//! Env: DEFER_FRAMES (default 12), DEFER_PROFILE (default edge),
+//!      DEFER_EMULATED_MFLOPS (default 50 — deterministic device-speed
+//!      emulation, see DESIGN.md §Substitutions).
+
+use defer::bench::Table;
+use defer::config::DeferConfig;
+use defer::coordinator::baseline::SingleDevice;
+use defer::coordinator::chain::ChainRunner;
+use defer::runtime::Engine;
+
+fn main() {
+    let frames: u64 = std::env::var("DEFER_FRAMES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let profile = std::env::var("DEFER_PROFILE").unwrap_or_else(|_| "edge".into());
+    let mflops: f64 = std::env::var("DEFER_EMULATED_MFLOPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50.0);
+    let engine = Engine::cpu().expect("PJRT cpu client");
+
+    println!(
+        "# Fig. 3: per-node energy per cycle (J), ResNet50, profile={profile}, emulated device = {mflops} MFLOPS"
+    );
+    let mut table = Table::new(&[
+        "config",
+        "energy/node/cycle (J)",
+        "compute (J)",
+        "codec (J)",
+        "network (J)",
+    ]);
+
+    let mut series = Vec::new();
+    let mut single = f64::NAN;
+    for nodes in [1usize, 4, 6, 8] {
+        let mut cfg = DeferConfig::default();
+        cfg.profile = profile.clone();
+        cfg.model = "resnet50".into();
+        cfg.nodes = nodes;
+        cfg.emulated_mflops = mflops;
+        let report = if nodes == 1 {
+            SingleDevice::with_engine(cfg, engine.clone())
+                .and_then(|r| r.run_frames(frames))
+        } else {
+            ChainRunner::with_engine(cfg, engine.clone()).and_then(|r| r.run_frames(frames))
+        };
+        match report {
+            Ok(r) => {
+                let per = r.energy_per_node_per_cycle();
+                let n = r.node_energy.len() as f64 * r.cycles as f64;
+                let compute: f64 = r.node_energy.iter().map(|e| e.compute_j).sum::<f64>() / n;
+                let codec: f64 = r.node_energy.iter().map(|e| e.codec_j).sum::<f64>() / n;
+                let net: f64 = r.node_energy.iter().map(|e| e.network_j).sum::<f64>() / n;
+                table.row(&[
+                    if nodes == 1 { "single device".into() } else { format!("DEFER {nodes} nodes") },
+                    format!("{per:.6}"),
+                    format!("{compute:.6}"),
+                    format!("{codec:.6}"),
+                    format!("{net:.8}"),
+                ]);
+                if nodes == 1 {
+                    single = per;
+                } else {
+                    series.push((nodes, per));
+                }
+            }
+            Err(e) => table.row(&[
+                format!("DEFER {nodes} nodes"),
+                format!("n/a ({e})"),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]),
+        }
+    }
+    print!("{}", table.render());
+    let decreasing = series.windows(2).all(|w| w[1].1 <= w[0].1 * 1.05);
+    println!("claim (1) per-node energy falls with node count: {}", if decreasing { "HOLDS" } else { "FAILS" });
+    if let Some((_, at8)) = series.iter().find(|(n, _)| *n == 8) {
+        println!(
+            "claim (2) DEFER@8 vs single device: {:.2}x (paper: 0.37x)",
+            at8 / single
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Substrate microbenchmarks: codec throughput (LZ4, ZFP, JSON, binary),
+//! wire framing, and netem shaper fidelity. These feed the §Perf iteration
+//! log in EXPERIMENTS.md — the paper-table benches sit on top of them.
+//!
+//! Env: DEFER_MICRO_N (payload elements, default 262144 = 1 MiB of f32).
+
+use defer::bench::{bench, Stats, Table};
+use defer::compress::{lz4, Compression};
+use defer::metrics::ByteCounter;
+use defer::netem::Link;
+use defer::serial::{json, zfp, Codec, Serialization};
+use defer::util::prng::Rng;
+use defer::wire::{read_message, write_message, Message, MessageType};
+
+fn row(table: &mut Table, name: &str, stats: Stats, bytes: usize) {
+    table.row(&[
+        name.into(),
+        format!("{:.3} ms", stats.mean.as_secs_f64() * 1e3),
+        format!("{:.1}", stats.mb_per_sec(bytes)),
+        format!("{:.1}", stats.stddev.as_secs_f64() * 1e6),
+    ]);
+}
+
+fn main() {
+    let n: usize = std::env::var("DEFER_MICRO_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(262_144);
+    let mut rng = Rng::new(77);
+    let floats: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let float_bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let text_bytes = rng.compressible_bytes(n * 4);
+    let raw_mb = n * 4;
+
+    println!("# substrate microbenches, payload = {} f32 ({} bytes)", n, raw_mb);
+    let mut table = Table::new(&["op", "mean", "MB/s", "stddev (us)"]);
+
+    // LZ4.
+    let c_floats = lz4::compress(&float_bytes);
+    let c_text = lz4::compress(&text_bytes);
+    row(&mut table, "lz4 compress (f32 noise)", bench(2, 8, || lz4::compress(&float_bytes)), raw_mb);
+    row(&mut table, "lz4 compress (motif text)", bench(2, 8, || lz4::compress(&text_bytes)), raw_mb);
+    row(&mut table, "lz4 decompress (f32 noise)", bench(2, 8, || lz4::decompress(&c_floats, float_bytes.len()).unwrap()), raw_mb);
+    row(&mut table, "lz4 decompress (motif text)", bench(2, 8, || lz4::decompress(&c_text, text_bytes.len()).unwrap()), raw_mb);
+    println!(
+        "lz4 ratios: f32 noise {:.3}, motif text {:.3}",
+        c_floats.len() as f64 / float_bytes.len() as f64,
+        c_text.len() as f64 / text_bytes.len() as f64
+    );
+
+    // ZFP.
+    for rate in [16u8, 24, 32] {
+        let enc = zfp::encode(&floats, zfp::ZfpRate(rate)).unwrap();
+        row(&mut table, &format!("zfp encode (rate {rate})"), bench(1, 5, || zfp::encode(&floats, zfp::ZfpRate(rate)).unwrap()), raw_mb);
+        row(&mut table, &format!("zfp decode (rate {rate})"), bench(1, 5, || zfp::decode(&enc).unwrap()), raw_mb);
+    }
+
+    // JSON float arrays.
+    let jenc = json::encode_f32s(&floats);
+    row(&mut table, "json encode f32s", bench(1, 5, || json::encode_f32s(&floats)), raw_mb);
+    row(&mut table, "json decode f32s", bench(1, 5, || json::decode_f32s(&jenc).unwrap()), raw_mb);
+
+    // Full codec stacks (what the chain hot path runs per frame).
+    for codec in Codec::paper_sweep().into_iter().chain([Codec::new(Serialization::Binary, Compression::None)]) {
+        let (wire, mid) = codec.encode_f32s(&floats, None);
+        row(&mut table, &format!("codec encode {}", codec.label()), bench(1, 5, || codec.encode_f32s(&floats, None)), raw_mb);
+        row(&mut table, &format!("codec decode {}", codec.label()), bench(1, 5, || codec.decode_f32s(&wire, mid, n, None).unwrap()), raw_mb);
+    }
+
+    // Wire framing (512 kB chunks) through an ideal link.
+    let msg = Message {
+        msg_type: MessageType::Data,
+        frame: 1,
+        serialized_len: float_bytes.len() as u64,
+        count: n as u64,
+        payload: float_bytes.clone(),
+    };
+    let link = Link::ideal();
+    let counter = ByteCounter::new();
+    let mut buf: Vec<u8> = Vec::with_capacity(float_bytes.len() + 64);
+    row(&mut table, "wire write_message", bench(2, 8, || {
+        buf.clear();
+        write_message(&mut buf, &msg, &link, &counter).unwrap();
+    }), raw_mb);
+    let mut encoded = Vec::new();
+    write_message(&mut encoded, &msg, &link, &counter).unwrap();
+    row(&mut table, "wire read_message", bench(2, 8, || {
+        read_message(&mut encoded.as_slice(), &counter).unwrap()
+    }), raw_mb);
+
+    print!("{}", table.render());
+}

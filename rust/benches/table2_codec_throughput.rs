@@ -1,0 +1,75 @@
+//! Table II — Inference throughput for different serialization and
+//! compression configurations (ResNet50, 4 compute nodes).
+//!
+//! Paper values: JSON+LZ4 0.477, JSON 0.493, ZFP+LZ4 0.673, ZFP 0.5
+//! cycles/s. Claim under test: ZFP+LZ4 yields the highest throughput —
+//! "communication demands become increasingly important, and using ZFP with
+//! LZ4 minimizes the amount of data sent over the network ... despite the
+//! additional computational cost". The crossover only appears when links
+//! are bandwidth-bound, so this bench runs on an emulated 100 Mbit edge
+//! link (env DEFER_LINK to override: ideal|gigabit|edge|wifi).
+//!
+//! Env: DEFER_FRAMES (default 10), DEFER_PROFILE (default edge),
+//!      DEFER_LINK (default wifi — constrained wireless edge),
+//!      DEFER_EMULATED_MFLOPS (default 400 — light device emulation so
+//!      codec costs stay visible against compute, as in the paper's regime).
+
+use defer::bench::Table;
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
+use defer::runtime::Engine;
+use defer::serial::Codec;
+
+fn main() {
+    let frames: u64 = std::env::var("DEFER_FRAMES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let profile = std::env::var("DEFER_PROFILE").unwrap_or_else(|_| "edge".into());
+    let link = LinkSpec::parse(&std::env::var("DEFER_LINK").unwrap_or_else(|_| "wifi".into()))
+        .expect("link spec");
+    let engine = Engine::cpu().expect("PJRT cpu client");
+
+    println!(
+        "# Table II: inference throughput per codec (ResNet50, 4 nodes, profile={profile}, link={:?})",
+        std::env::var("DEFER_LINK").unwrap_or_else(|_| "wifi".into())
+    );
+    let mut table = Table::new(&["Serialization", "Compression", "Throughput (cycles/s)", "paper"]);
+    let paper = [0.477, 0.493, 0.673, 0.5];
+    let mut measured = Vec::new();
+    for (codec, paper_val) in Codec::paper_sweep().into_iter().zip(paper) {
+        let mut cfg = DeferConfig::default();
+        cfg.profile = profile.clone();
+        cfg.model = "resnet50".into();
+        cfg.nodes = 4;
+        cfg.link = link;
+        cfg.emulated_mflops = std::env::var("DEFER_EMULATED_MFLOPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(400.0);
+        cfg.codecs.data = codec;
+        cfg.codecs.weights = codec;
+        let report = ChainRunner::with_engine(cfg, engine.clone())
+            .expect("artifacts present (make artifacts)")
+            .run_frames(frames)
+            .expect("chain run");
+        table.row(&[
+            codec.serialization.name().into(),
+            codec.compression.name().into(),
+            format!("{:.3}", report.throughput),
+            format!("{paper_val}"),
+        ]);
+        measured.push((codec.label(), report.throughput));
+    }
+    print!("{}", table.render());
+    let best = measured
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    println!(
+        "claim: ZFP+LZ4 has the highest throughput -> best here: {} ({})",
+        best.0,
+        if best.0 == "ZFP+LZ4" { "HOLDS" } else { "differs (see EXPERIMENTS.md discussion)" }
+    );
+}

@@ -1,0 +1,197 @@
+//! Measurement harness (criterion substitute, offline environment).
+//!
+//! Provides warmup + repeated timing with mean/stddev/min/max, and an
+//! aligned table printer used by every paper-table bench so that
+//! `cargo bench` regenerates the rows of Tables I/II and the series of
+//! Figs 2/3 in a stable, diffable format.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[Duration]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().map(Duration::as_secs_f64).sum::<f64>() / n;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        Stats {
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: *samples.iter().min().unwrap(),
+            max: *samples.iter().max().unwrap(),
+            iters: samples.len(),
+        }
+    }
+
+    /// Throughput in ops/sec for one op per iteration.
+    pub fn ops_per_sec(&self) -> f64 {
+        let s = self.mean.as_secs_f64();
+        if s > 0.0 {
+            1.0 / s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// MB/s for `bytes` processed per iteration.
+    pub fn mb_per_sec(&self, bytes: usize) -> f64 {
+        bytes as f64 / 1e6 / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup; returns stats over `iters` measured runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Run `f` repeatedly for at least `budget`; returns (runs, elapsed) — the
+/// paper's throughput methodology ("set a fixed time of execution ... and
+/// record how many inference cycles could be done in that fixed time").
+pub fn bench_for<T>(budget: Duration, mut f: impl FnMut() -> T) -> (u64, Duration) {
+    let t0 = Instant::now();
+    let mut runs = 0u64;
+    while t0.elapsed() < budget {
+        std::hint::black_box(f());
+        runs += 1;
+    }
+    (runs, t0.elapsed())
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("-+-"),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(&[
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ]);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert!((s.ops_per_sec() - 50.0).abs() < 1.0);
+        assert!((s.mb_per_sec(20_000) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let mut count = 0u64;
+        let s = bench(2, 5, || {
+            count += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn bench_for_respects_budget() {
+        let (runs, elapsed) = bench_for(Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(runs >= 5, "runs {runs}");
+        assert!(elapsed >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Model", "Nodes", "Throughput"]);
+        t.row(&["resnet50".into(), "8".into(), "0.673".into()]);
+        t.row(&["vgg16".into(), "4".into(), "12.5".into()]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Model"));
+        assert!(lines[2].contains("resnet50"));
+        // All rows equal width.
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

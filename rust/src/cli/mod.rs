@@ -1,0 +1,131 @@
+//! Argument parser substrate (clap substitute): subcommands + `--key value`
+//! flags + `--switch` booleans, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DeferError, Result};
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (without argv[0]). `switch_names` lists
+    /// value-less flags; everything else starting with `--` takes a value.
+    pub fn parse(raw: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = it.next().ok_or_else(|| {
+                        DeferError::Cli(format!("--{name} requires a value"))
+                    })?;
+                    out.opts.insert(name.to_string(), val.clone());
+                }
+            } else if out.command.is_none() && out.positionals.is_empty() {
+                out.command = Some(arg.clone());
+            } else {
+                out.positionals.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| DeferError::Cli(format!("--{key} wants an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| DeferError::Cli(format!("--{key} wants a number, got {v:?}"))),
+        }
+    }
+
+    /// Comma-separated list of integers (`--parts 4,6,8`).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        DeferError::Cli(format!("--{key}: bad integer {p:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        let raw: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+        Args::parse(&raw, &["verbose", "tcp"]).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "--model", "resnet50", "--nodes", "8", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("resnet50"));
+        assert_eq!(a.get_usize("nodes", 1).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("tcp"));
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = parse(&["bench", "--parts", "4,6,8"]);
+        assert_eq!(a.get_or("model", "vgg16"), "vgg16");
+        assert_eq!(a.get_usize_list("parts", &[1]).unwrap(), vec![4, 6, 8]);
+        assert_eq!(a.get_usize_list("missing", &[1, 2]).unwrap(), vec![1, 2]);
+        assert_eq!(a.get_f64("tdp", 15.0).unwrap(), 15.0);
+    }
+
+    #[test]
+    fn errors() {
+        let raw = vec!["run".to_string(), "--model".to_string()];
+        assert!(Args::parse(&raw, &[]).is_err());
+        let a = parse(&["run", "--nodes", "eight"]);
+        assert!(a.get_usize("nodes", 1).is_err());
+        let a = parse(&["run", "--parts", "4,x"]);
+        assert!(a.get_usize_list("parts", &[]).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["run", "pos1", "pos2"]);
+        assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+}

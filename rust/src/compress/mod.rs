@@ -1,0 +1,74 @@
+//! Compression substrate.
+//!
+//! The paper compresses every socket payload (architecture, weights,
+//! intermediate activations) optionally with LZ4; `lz4.rs` implements the
+//! LZ4 *block format* from scratch (no external codec crates offline).
+
+pub mod lz4;
+
+use crate::error::Result;
+
+/// Compression scheme for one socket, as swept by Tables I/II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Compression {
+    /// No compression (paper's "Uncompressed").
+    None,
+    /// LZ4 block format.
+    Lz4,
+}
+
+impl Compression {
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "Uncompressed",
+            Compression::Lz4 => "LZ4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "uncompressed" => Ok(Compression::None),
+            "lz4" => Ok(Compression::Lz4),
+            other => Err(crate::error::DeferError::Config(format!(
+                "unknown compression {other:?} (want none|lz4)"
+            ))),
+        }
+    }
+
+    /// Compress a buffer. `None` is the identity.
+    pub fn compress(self, data: &[u8]) -> Vec<u8> {
+        match self {
+            Compression::None => data.to_vec(),
+            Compression::Lz4 => lz4::compress(data),
+        }
+    }
+
+    /// Decompress; `expected` is the known decompressed size for LZ4
+    /// (travels in the wire header).
+    pub fn decompress(self, data: &[u8], expected: usize) -> Result<Vec<u8>> {
+        match self {
+            Compression::None => Ok(data.to_vec()),
+            Compression::Lz4 => lz4::decompress(data, expected),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Compression::parse("lz4").unwrap(), Compression::Lz4);
+        assert_eq!(Compression::parse("None").unwrap(), Compression::None);
+        assert!(Compression::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let data = b"hello world".to_vec();
+        let c = Compression::None.compress(&data);
+        assert_eq!(c, data);
+        assert_eq!(Compression::None.decompress(&c, data.len()).unwrap(), data);
+    }
+}

@@ -1,0 +1,116 @@
+//! Single-device inference baseline — the paper's comparison point.
+//!
+//! The whole model (the 1-partition artifact) runs on one node; no sockets,
+//! no serialization, no network energy. Fig. 2 plots its throughput as the
+//! dashed line, Fig. 3 its per-cycle energy.
+
+use std::time::Instant;
+
+use crate::config::DeferConfig;
+use crate::coordinator::RunReport;
+use crate::energy::{EnergyMeter, EnergyReport};
+use crate::error::Result;
+use crate::model::{PartitionPlan, ReferenceVectors};
+use crate::runtime::{Engine, Executable};
+use crate::tensor::Tensor;
+
+/// Single-device runner.
+pub struct SingleDevice {
+    cfg: DeferConfig,
+    exe: Executable,
+    reference: Option<ReferenceVectors>,
+    /// Whole-model FLOPs (drives the emulated-device compute floor).
+    flops: u64,
+}
+
+impl SingleDevice {
+    pub fn new(cfg: DeferConfig) -> Result<Self> {
+        let engine = Engine::cpu()?;
+        Self::with_engine(cfg, engine)
+    }
+
+    pub fn with_engine(cfg: DeferConfig, engine: Engine) -> Result<Self> {
+        let mut cfg = cfg;
+        cfg.nodes = 1;
+        cfg.validate()?;
+        let plan = PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, 1)?;
+        let exe = Executable::load(&engine, &plan.parts[0])?;
+        let reference =
+            ReferenceVectors::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model).ok();
+        let flops = plan.total_flops();
+        Ok(SingleDevice {
+            cfg,
+            exe,
+            reference,
+            flops,
+        })
+    }
+
+    /// Run `frames` sequential inference cycles.
+    pub fn run_frames(&self, frames: u64) -> Result<RunReport> {
+        let meter = EnergyMeter::new(self.cfg.energy);
+        let input = match &self.reference {
+            Some(r) => r.input.clone(),
+            None => Tensor::random(self.exe.input_shape().to_vec(), 7),
+        };
+        let latency = crate::metrics::Histogram::new();
+        self.exe.exec_timer.reset();
+        // Same device-speed emulation as the chain nodes (see compute_node).
+        let flops_floor = if self.cfg.emulated_mflops > 0.0 {
+            Some(std::time::Duration::from_secs_f64(
+                self.flops as f64 / (self.cfg.emulated_mflops * 1e6),
+            ))
+        } else {
+            None
+        };
+        let mut emulated_busy = std::time::Duration::ZERO;
+        let t0 = Instant::now();
+        let mut reference_error: Option<f32> = None;
+        for _ in 0..frames {
+            let f0 = Instant::now();
+            let out = self.exe.run(&input)?;
+            if let Some(floor) = flops_floor {
+                let elapsed = f0.elapsed();
+                if elapsed < floor {
+                    std::thread::sleep(floor - elapsed);
+                }
+                emulated_busy += elapsed.max(floor);
+            } else if self.cfg.compute_slowdown > 1.0 {
+                std::thread::sleep(f0.elapsed().mul_f64(self.cfg.compute_slowdown - 1.0));
+            }
+            latency.record(f0.elapsed());
+            if let Some(r) = &self.reference {
+                let err = out.max_abs_diff(&r.output)?;
+                reference_error = Some(reference_error.unwrap_or(0.0).max(err));
+            }
+        }
+        let elapsed = t0.elapsed();
+        if flops_floor.is_some() {
+            meter.compute.add(emulated_busy);
+        } else {
+            meter
+                .compute
+                .add(self.exe.exec_timer.total().mul_f64(self.cfg.compute_slowdown));
+        }
+        Ok(RunReport {
+            model: self.cfg.model.clone(),
+            profile: self.cfg.profile.clone(),
+            nodes: 1,
+            cycles: frames,
+            elapsed,
+            throughput: frames as f64 / elapsed.as_secs_f64(),
+            latency_mean: latency.mean(),
+            latency_p50: latency.quantile(0.5),
+            latency_p99: latency.quantile(0.99),
+            node_energy: vec![meter.report()],
+            dispatcher_energy: EnergyReport::default(),
+            architecture_bytes: 0,
+            weights_bytes: 0,
+            data_bytes: 0,
+            config_overhead: std::time::Duration::ZERO,
+            data_overhead: std::time::Duration::ZERO,
+            config_time: self.exe.compile_time(),
+            reference_error,
+        })
+    }
+}

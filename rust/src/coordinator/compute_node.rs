@@ -1,0 +1,330 @@
+//! Compute node runtime — the paper's Algorithm 2.
+//!
+//! A node first serves the configuration step: it receives the serialized
+//! model architecture on one connection and the weights array on another,
+//! instantiates its partition executable, then acknowledges `Ready`.
+//!
+//! The inference loop then runs as two threads connected by a bounded pipe
+//! (the paper's THREAD-1 / THREAD-2 "to avoid inference bottleneck"):
+//! the reader thread pulls framed activations off the incoming socket and
+//! pipes them to the compute thread, which deserializes + decompresses,
+//! runs the partition, re-serializes + compresses, and relays to the next
+//! hop. FIFO order is preserved end to end.
+
+use std::sync::Arc;
+
+use crate::config::CodecConfig;
+use crate::energy::{EnergyMeter, EnergyModel};
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::model::PartitionSpec;
+use crate::netem::Link;
+use crate::runtime::{Engine, Executable};
+use crate::serial::json;
+use crate::tensor::Tensor;
+use crate::threadpool::{pipe, WorkerPool};
+use crate::wire::{Message, MessageType};
+
+use super::transport::Conn;
+
+/// Encode the architecture payload: `[meta_len u32le][meta json][hlo text]`.
+pub fn encode_architecture(spec: &PartitionSpec, next_hop: &str, hlo: &str) -> Vec<u8> {
+    let meta = json::to_string(&spec.to_config_json(next_hop));
+    let mut out = Vec::with_capacity(4 + meta.len() + hlo.len());
+    out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    out.extend_from_slice(meta.as_bytes());
+    out.extend_from_slice(hlo.as_bytes());
+    out
+}
+
+/// Decode the architecture payload into (spec, next_hop, hlo_text).
+pub fn decode_architecture(payload: &[u8]) -> Result<(PartitionSpec, String, String)> {
+    if payload.len() < 4 {
+        return Err(DeferError::Coordinator("architecture payload truncated".into()));
+    }
+    let meta_len = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    if payload.len() < 4 + meta_len {
+        return Err(DeferError::Coordinator("architecture meta truncated".into()));
+    }
+    let meta_text = std::str::from_utf8(&payload[4..4 + meta_len])
+        .map_err(|e| DeferError::Coordinator(format!("meta not utf8: {e}")))?;
+    let (spec, next) = PartitionSpec::from_config_json(&json::parse(meta_text)?)?;
+    let hlo = std::str::from_utf8(&payload[4 + meta_len..])
+        .map_err(|e| DeferError::Coordinator(format!("hlo not utf8: {e}")))?
+        .to_string();
+    Ok((spec, next, hlo))
+}
+
+/// Split a flat weights vector into per-manifest arrays.
+pub fn split_weights(spec: &PartitionSpec, flat: Vec<f32>) -> Result<Vec<Vec<f32>>> {
+    let expected: usize = spec.weights.iter().map(|w| w.elements).sum();
+    if flat.len() != expected {
+        return Err(DeferError::Coordinator(format!(
+            "weights vector has {} elements, manifest wants {expected}",
+            flat.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(spec.weights.len());
+    let mut off = 0;
+    for w in &spec.weights {
+        out.push(flat[off..off + w.elements].to_vec());
+        off += w.elements;
+    }
+    Ok(out)
+}
+
+/// Per-node instrumentation shared with the chain runner.
+pub struct NodeStats {
+    pub meter: EnergyMeter,
+    /// Bytes this node pushed onto its outgoing data socket.
+    pub data_tx: ByteCounter,
+    pub frames: ByteCounter,
+}
+
+impl NodeStats {
+    pub fn new(model: EnergyModel) -> Self {
+        NodeStats {
+            meter: EnergyMeter::new(model),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+        }
+    }
+}
+
+/// Run one compute node to completion (configuration + inference phases).
+///
+/// * `config_conn` — receives `ModelConfig`, replies `Ready`.
+/// * `weights_conn` — receives `Weights`.
+/// * `in_conn` / `out_conn` — the chain data path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_compute_node(
+    node_index: usize,
+    engine: Engine,
+    mut config_conn: Conn,
+    mut weights_conn: Conn,
+    in_conn: Conn,
+    mut out_conn: Conn,
+    codecs: CodecConfig,
+    out_link: Arc<Link>,
+    stats: Arc<NodeStats>,
+    pipe_depth: usize,
+    compute_slowdown: f64,
+    emulated_mflops: f64,
+) -> Result<()> {
+    // ---------------- configuration step ----------------
+    let rx_counter = ByteCounter::new(); // inbound bytes are counted by the sender side
+    let cfg_msg = config_conn.recv(&rx_counter)?;
+    if cfg_msg.msg_type != MessageType::ModelConfig {
+        return Err(DeferError::Coordinator(format!(
+            "node {node_index}: expected ModelConfig, got {:?}",
+            cfg_msg.msg_type
+        )));
+    }
+    let raw = codecs.architecture.compression.decompress(
+        &cfg_msg.payload,
+        cfg_msg.serialized_len as usize,
+    )?;
+    let (spec, _next, hlo) = decode_architecture(&raw)?;
+
+    let w_msg = weights_conn.recv(&rx_counter)?;
+    if w_msg.msg_type != MessageType::Weights {
+        return Err(DeferError::Coordinator(format!(
+            "node {node_index}: expected Weights, got {:?}",
+            w_msg.msg_type
+        )));
+    }
+    let flat = codecs.weights.decode_f32s(
+        &w_msg.payload,
+        w_msg.serialized_len as usize,
+        w_msg.count as usize,
+        Some(&stats.meter.codec),
+    )?;
+    let weight_arrays = split_weights(&spec, flat)?;
+    let exe = Executable::from_parts(&engine, &hlo, &spec, weight_arrays)?;
+    // The executable's timer *is* the node's compute-energy clock.
+    let exe = Arc::new(exe);
+    let compute_timer = exe.exec_timer.clone();
+    let stats_for_energy = Arc::clone(&stats);
+    // Wire the shared timer into the meter by accumulation at the end; we
+    // read compute time directly from the executable below instead.
+
+    config_conn.send(
+        &Message::control(MessageType::Ready),
+        &Link::ideal(),
+        &ByteCounter::new(),
+    )?;
+    drop(config_conn);
+    drop(weights_conn);
+
+    // ---------------- distributed inference step ----------------
+    // THREAD-1: socket reader -> pipe; THREAD-2 (this thread): compute+send.
+    let (tx, rx) = pipe::<Message>(pipe_depth);
+    let mut pool = WorkerPool::new();
+    let mut in_conn = in_conn;
+    pool.spawn(&format!("node{node_index}-reader"), move || loop {
+        let msg = in_conn.recv(&ByteCounter::new())?;
+        let stop = msg.msg_type == MessageType::Shutdown;
+        tx.send(msg)
+            .map_err(|_| DeferError::ChannelClosed("node reader pipe"))?;
+        if stop {
+            return Ok(());
+        }
+    });
+
+    let in_shape = spec.input_shape.clone();
+    // Deterministic device emulation: floor each frame's compute to the
+    // emulated device's FLOP time (constant of the plan, immune to host
+    // contention). Tracks total emulated busy time for the energy model.
+    let flops_floor = if emulated_mflops > 0.0 {
+        Some(std::time::Duration::from_secs_f64(
+            spec.flops as f64 / (emulated_mflops * 1e6),
+        ))
+    } else {
+        None
+    };
+    let mut emulated_busy = std::time::Duration::ZERO;
+    let result: Result<()> = (|| {
+        while let Some(msg) = rx.recv() {
+            match msg.msg_type {
+                MessageType::Shutdown => {
+                    // Relay shutdown so downstream stages drain too.
+                    out_conn.send(&msg, &out_link, &stats.data_tx)?;
+                    break;
+                }
+                MessageType::Data => {
+                    let values = codecs.data.decode_f32s(
+                        &msg.payload,
+                        msg.serialized_len as usize,
+                        msg.count as usize,
+                        Some(&stats.meter.codec),
+                    )?;
+                    let input = Tensor::new(in_shape.clone(), values)?;
+                    let t_run = std::time::Instant::now();
+                    let output = exe.run(&input)?;
+                    if let Some(floor) = flops_floor {
+                        let elapsed = t_run.elapsed();
+                        if elapsed < floor {
+                            std::thread::sleep(floor - elapsed);
+                        }
+                        emulated_busy += elapsed.max(floor);
+                    } else if compute_slowdown > 1.0 {
+                        // Legacy multiplicative emulation (noise-amplifying;
+                        // prefer emulated_mflops).
+                        std::thread::sleep(t_run.elapsed().mul_f64(compute_slowdown - 1.0));
+                    }
+                    let (wire, mid) = codecs
+                        .data
+                        .encode_f32s(output.data(), Some(&stats.meter.codec));
+                    let out_msg = Message {
+                        msg_type: MessageType::Data,
+                        frame: msg.frame,
+                        serialized_len: mid as u64,
+                        count: output.len() as u64,
+                        payload: wire,
+                    };
+                    out_conn.send(&out_msg, &out_link, &stats.data_tx)?;
+                    stats.frames.add(1);
+                }
+                other => {
+                    return Err(DeferError::Coordinator(format!(
+                        "node {node_index}: unexpected {other:?} in inference phase"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    })();
+
+    // Fold the on-device time into the node energy meter, under whichever
+    // device-speed emulation is active (the emulated device is busy for
+    // the stretched duration).
+    if flops_floor.is_some() {
+        stats_for_energy.meter.compute.add(emulated_busy);
+    } else {
+        stats_for_energy
+            .meter
+            .compute
+            .add(compute_timer.total().mul_f64(compute_slowdown));
+    }
+    // Outgoing bytes drive network energy.
+    stats_for_energy.meter.tx_bytes.add(stats.data_tx.total());
+
+    if result.is_err() {
+        // Do not wait for the reader: it may be blocked on the incoming
+        // socket, which only closes when the peer tears down. Detach it —
+        // it exits when its connection drops — and surface the real error.
+        pool.detach();
+        return result;
+    }
+    pool.join()?;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_spec() -> PartitionSpec {
+        PartitionSpec {
+            model: "m".into(),
+            profile: "tiny".into(),
+            part_index: 1,
+            part_count: 4,
+            input_shape: vec![1, 8],
+            output_shape: vec![1, 4],
+            flops: 64,
+            layers: vec!["dense1".into()],
+            weights: vec![
+                crate::model::WeightSpec {
+                    node: "dense1".into(),
+                    param: "w".into(),
+                    shape: vec![8, 4],
+                    elements: 32,
+                },
+                crate::model::WeightSpec {
+                    node: "dense1".into(),
+                    param: "b".into(),
+                    shape: vec![4],
+                    elements: 4,
+                },
+            ],
+            weights_bytes: 36 * 4,
+            hlo_path: std::path::PathBuf::new(),
+            weights_path: std::path::PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn architecture_payload_round_trip() {
+        let spec = fake_spec();
+        let hlo = "HloModule fake\nENTRY main { ... }";
+        let payload = encode_architecture(&spec, "127.0.0.1:9999", hlo);
+        let (spec2, next, hlo2) = decode_architecture(&payload).unwrap();
+        assert_eq!(spec2.model, spec.model);
+        assert_eq!(spec2.part_index, 1);
+        assert_eq!(spec2.weights.len(), 2);
+        assert_eq!(spec2.input_shape, vec![1, 8]);
+        assert_eq!(next, "127.0.0.1:9999");
+        assert_eq!(hlo2, hlo);
+    }
+
+    #[test]
+    fn architecture_payload_corrupt_rejected() {
+        assert!(decode_architecture(&[1, 2]).is_err());
+        let spec = fake_spec();
+        let payload = encode_architecture(&spec, "next", "HLO");
+        // Truncate inside the JSON.
+        assert!(decode_architecture(&payload[..10]).is_err());
+    }
+
+    #[test]
+    fn split_weights_checks_totals() {
+        let spec = fake_spec();
+        let flat: Vec<f32> = (0..36).map(|i| i as f32).collect();
+        let parts = split_weights(&spec, flat).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), 32);
+        assert_eq!(parts[1], vec![32.0, 33.0, 34.0, 35.0]);
+        assert!(split_weights(&spec, vec![0.0; 35]).is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! Dispatcher node — the paper's Algorithm 1.
+//!
+//! Configuration step: for each compute node, open two connections and send
+//! (a) the serialized model architecture (meta JSON + HLO text) together
+//! with the next hop in the chain, and (b) the serialized + compressed
+//! weights array. Wait for every node's `Ready`.
+//!
+//! Distributed inference step: pump serialized input frames to the first
+//! node and collect results from the last node, FIFO. Sender and receiver
+//! run on separate threads so the pipeline stays full (the chain applies
+//! backpressure through its bounded links).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::CodecConfig;
+use crate::energy::{EnergyMeter, EnergyModel};
+use crate::error::{DeferError, Result};
+use crate::metrics::{ByteCounter, Histogram, ThroughputClock};
+use crate::model::{PartitionPlan, PartitionSpec};
+use crate::netem::Link;
+use crate::tensor::Tensor;
+use crate::threadpool::WorkerPool;
+use crate::wire::{Message, MessageType};
+
+use super::compute_node::encode_architecture;
+use super::transport::Conn;
+
+/// Dispatcher-side instrumentation.
+pub struct DispatcherStats {
+    pub meter: EnergyMeter,
+    pub architecture_tx: ByteCounter,
+    pub weights_tx: ByteCounter,
+    pub data_tx: ByteCounter,
+    pub latency: Arc<Histogram>,
+    pub clock: ThroughputClock,
+    pub config_time: Mutex<Duration>,
+    /// Max |err| vs expected output, when an expectation is provided.
+    pub reference_error: Mutex<Option<f32>>,
+}
+
+impl DispatcherStats {
+    pub fn new(model: EnergyModel) -> Self {
+        DispatcherStats {
+            meter: EnergyMeter::new(model),
+            architecture_tx: ByteCounter::new(),
+            weights_tx: ByteCounter::new(),
+            data_tx: ByteCounter::new(),
+            latency: Arc::new(Histogram::new()),
+            clock: ThroughputClock::new(),
+            config_time: Mutex::new(Duration::ZERO),
+            reference_error: Mutex::new(None),
+        }
+    }
+}
+
+/// Send the configuration step to every node: architecture + weights.
+///
+/// `conns[i]` is the (config, weights) connection pair for node `i`;
+/// `next_hops[i]` names node `i`'s successor ("dispatcher" for the last).
+pub fn configure_nodes(
+    plan: &PartitionPlan,
+    conns: &mut [(Conn, Conn)],
+    next_hops: &[String],
+    codecs: &CodecConfig,
+    link: &Link,
+    stats: &DispatcherStats,
+) -> Result<()> {
+    let t0 = Instant::now();
+    if conns.len() != plan.parts.len() {
+        return Err(DeferError::Coordinator(format!(
+            "{} connection pairs for {} partitions",
+            conns.len(),
+            plan.parts.len()
+        )));
+    }
+    for (i, ((config_conn, weights_conn), spec)) in
+        conns.iter_mut().zip(&plan.parts).enumerate()
+    {
+        send_architecture(spec, &next_hops[i], config_conn, codecs, link, stats)?;
+        send_weights(spec, weights_conn, codecs, link, stats)?;
+    }
+    // Wait for every node to instantiate its model (paper: the model socket
+    // waits for weights, then builds the TensorFlow model).
+    for (config_conn, _) in conns.iter_mut() {
+        let ready = config_conn.recv(&ByteCounter::new())?;
+        if ready.msg_type != MessageType::Ready {
+            return Err(DeferError::Coordinator(format!(
+                "expected Ready, got {:?}",
+                ready.msg_type
+            )));
+        }
+    }
+    *stats.config_time.lock().unwrap() = t0.elapsed();
+    Ok(())
+}
+
+fn send_architecture(
+    spec: &PartitionSpec,
+    next_hop: &str,
+    conn: &mut Conn,
+    codecs: &CodecConfig,
+    link: &Link,
+    stats: &DispatcherStats,
+) -> Result<()> {
+    let hlo = spec.read_hlo()?;
+    let (payload, mid) = stats.meter.codec.time(|| {
+        let raw = encode_architecture(spec, next_hop, &hlo);
+        let mid = raw.len();
+        (codecs.architecture.compression.compress(&raw), mid)
+    });
+    let msg = Message {
+        msg_type: MessageType::ModelConfig,
+        frame: 0,
+        serialized_len: mid as u64,
+        count: 0,
+        payload,
+    };
+    conn.send(&msg, link, &stats.architecture_tx)?;
+    stats.meter.tx_bytes.add(msg.wire_size());
+    Ok(())
+}
+
+fn send_weights(
+    spec: &PartitionSpec,
+    conn: &mut Conn,
+    codecs: &CodecConfig,
+    link: &Link,
+    stats: &DispatcherStats,
+) -> Result<()> {
+    let arrays = spec.read_weights()?;
+    let flat: Vec<f32> = arrays.into_iter().flatten().collect();
+    let (payload, mid) = codecs.weights.encode_f32s(&flat, Some(&stats.meter.codec));
+    let msg = Message {
+        msg_type: MessageType::Weights,
+        frame: 0,
+        serialized_len: mid as u64,
+        count: flat.len() as u64,
+        payload,
+    };
+    conn.send(&msg, link, &stats.weights_tx)?;
+    stats.meter.tx_bytes.add(msg.wire_size());
+    Ok(())
+}
+
+/// Pump `frames` input tensors into the chain and collect all results.
+///
+/// Returns when every frame's result has come back. If `expected` is given,
+/// each result is compared against it and the max abs error recorded.
+#[allow(clippy::too_many_arguments)]
+pub fn run_inference(
+    input: Tensor,
+    frames: u64,
+    mut to_first: Conn,
+    mut from_last: Conn,
+    codecs: CodecConfig,
+    link: Arc<Link>,
+    stats: Arc<DispatcherStats>,
+    expected: Option<Tensor>,
+    output_shape: Vec<usize>,
+) -> Result<()> {
+    let send_times: Arc<Mutex<HashMap<u64, Instant>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+
+    let mut pool = WorkerPool::new();
+    {
+        let stats = Arc::clone(&stats);
+        let send_times = Arc::clone(&send_times);
+        let link = Arc::clone(&link);
+        pool.spawn("dispatcher-sender", move || {
+            for frame in 0..frames {
+                let (payload, mid) = codecs
+                    .data
+                    .encode_f32s(input.data(), Some(&stats.meter.codec));
+                let msg = Message {
+                    msg_type: MessageType::Data,
+                    frame,
+                    serialized_len: mid as u64,
+                    count: input.len() as u64,
+                    payload,
+                };
+                send_times.lock().unwrap().insert(frame, Instant::now());
+                to_first.send(&msg, &link, &stats.data_tx)?;
+                stats.meter.tx_bytes.add(msg.wire_size());
+            }
+            // FIFO: shutdown travels behind the last frame.
+            to_first.send(
+                &Message::control(MessageType::Shutdown),
+                &link,
+                &stats.data_tx,
+            )?;
+            Ok(())
+        });
+    }
+
+    {
+        let stats = Arc::clone(&stats);
+        pool.spawn("dispatcher-receiver", move || {
+            let mut received = 0u64;
+            while received < frames {
+                let msg = from_last.recv(&ByteCounter::new())?;
+                match msg.msg_type {
+                    MessageType::Data | MessageType::ResultMsg => {
+                        let t_sent = send_times.lock().unwrap().remove(&msg.frame);
+                        let values = codecs.data.decode_f32s(
+                            &msg.payload,
+                            msg.serialized_len as usize,
+                            msg.count as usize,
+                            Some(&stats.meter.codec),
+                        )?;
+                        let result = Tensor::new(output_shape.clone(), values)?;
+                        if let Some(exp) = &expected {
+                            let err = result.max_abs_diff(exp)?;
+                            let mut slot = stats.reference_error.lock().unwrap();
+                            *slot = Some(slot.unwrap_or(0.0).max(err));
+                        }
+                        if let Some(t) = t_sent {
+                            stats.latency.record(t.elapsed());
+                        }
+                        stats.clock.record_cycle();
+                        received += 1;
+                    }
+                    MessageType::Shutdown => break,
+                    other => {
+                        return Err(DeferError::Coordinator(format!(
+                            "dispatcher: unexpected {other:?}"
+                        )))
+                    }
+                }
+            }
+            // Drain the trailing shutdown if the chain relays it.
+            if received == frames {
+                let _ = from_last.recv(&ByteCounter::new());
+            }
+            Ok(())
+        });
+    }
+
+    pool.join()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_initialize_clean() {
+        let s = DispatcherStats::new(EnergyModel::default());
+        assert_eq!(s.architecture_tx.total(), 0);
+        assert_eq!(s.clock.cycles(), 0);
+        assert!(s.reference_error.lock().unwrap().is_none());
+    }
+}

@@ -1,0 +1,77 @@
+//! L3 coordinator: DEFER's dispatcher + compute-node chain.
+//!
+//! Implements the paper's three phases:
+//!
+//! 1. **Model partitioning** happened at build time (Python `partitioner`);
+//!    the artifacts are the partitioned model.
+//! 2. **Configuration step** ([`dispatcher`]): the dispatcher opens two
+//!    connections per compute node — one for the serialized model
+//!    architecture (meta JSON + HLO text) and one for the weights array —
+//!    and tells each node who its successor in the chain is.
+//! 3. **Distributed inference step** ([`compute_node`]): nodes relay
+//!    intermediate activations in FIFO order, each running its partition,
+//!    so the chain acts as a pipeline and throughput exceeds one device
+//!    running the whole model.
+//!
+//! [`chain::ChainRunner`] assembles everything (in-process pipes or real
+//! TCP loopback sockets, both through the [`crate::netem`] link shaper),
+//! and [`baseline`] is the paper's single-device comparison.
+
+pub mod baseline;
+pub mod chain;
+pub mod compute_node;
+pub mod dispatcher;
+pub mod transport;
+
+pub use transport::Conn;
+
+use crate::energy::EnergyReport;
+use std::time::Duration;
+
+/// Everything a run produces — the inputs to every paper table/figure.
+pub struct RunReport {
+    pub model: String,
+    pub profile: String,
+    pub nodes: usize,
+    /// Inference cycles completed.
+    pub cycles: u64,
+    /// Wall-clock duration of the inference phase.
+    pub elapsed: Duration,
+    /// Cycles per second (paper Fig. 2 / Table II).
+    pub throughput: f64,
+    /// End-to-end per-frame latency stats.
+    pub latency_mean: Duration,
+    pub latency_p50: Duration,
+    pub latency_p99: Duration,
+    /// Per-node energy for the inference phase (paper Fig. 3).
+    pub node_energy: Vec<EnergyReport>,
+    /// Dispatcher-side energy (serialization + tx).
+    pub dispatcher_energy: EnergyReport,
+    /// Bytes on the wire by traffic class (paper Table I "Network Payload").
+    pub architecture_bytes: u64,
+    pub weights_bytes: u64,
+    pub data_bytes: u64,
+    /// Time spent formatting data for the network (paper Table I "Overhead").
+    pub config_overhead: Duration,
+    pub data_overhead: Duration,
+    /// Configuration-step wall time (model + weights distribution).
+    pub config_time: Duration,
+    /// Max |err| of the final frame vs the Python reference (None if the
+    /// run never checked).
+    pub reference_error: Option<f32>,
+}
+
+impl RunReport {
+    /// Mean per-node energy per inference cycle — the paper's Fig. 3 metric.
+    pub fn energy_per_node_per_cycle(&self) -> f64 {
+        if self.node_energy.is_empty() || self.cycles == 0 {
+            return 0.0;
+        }
+        let total: f64 = self.node_energy.iter().map(EnergyReport::total).sum();
+        total / self.node_energy.len() as f64 / self.cycles as f64
+    }
+
+    pub fn total_payload_bytes(&self) -> u64 {
+        self.architecture_bytes + self.weights_bytes + self.data_bytes
+    }
+}

@@ -1,0 +1,160 @@
+//! Energy model — the paper's §IV "Energy Consumption" methodology:
+//!
+//! * compute/codec energy = busy wall-time x TDP (Thermal Design Power)
+//! * network energy       = transmitted bits x per-bit cost
+//!   (10 pJ/bit for Ethernet, after W. Jiang, "Energy to transmit one bit")
+//!
+//! An [`EnergyMeter`] is attached to each node (and to the dispatcher);
+//! readers pull a [`EnergyReport`] per inference cycle or per run.
+
+use std::time::Duration;
+
+/// Ethernet per-bit transmit energy used by the paper: 10 pJ/bit.
+pub const ETHERNET_JOULES_PER_BIT: f64 = 10e-12;
+
+/// Default TDP: 15 W, a Raspberry-Pi-4-class edge board under load
+/// (the paper does not name its per-node TDP; this is configurable).
+pub const DEFAULT_TDP_WATTS: f64 = 15.0;
+
+/// Static parameters of the energy model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    pub tdp_watts: f64,
+    pub joules_per_bit: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            tdp_watts: DEFAULT_TDP_WATTS,
+            joules_per_bit: ETHERNET_JOULES_PER_BIT,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy for `busy` seconds of compute at TDP.
+    pub fn compute_energy(&self, busy: Duration) -> f64 {
+        busy.as_secs_f64() * self.tdp_watts
+    }
+
+    /// Energy to push `bytes` over the network medium.
+    pub fn network_energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.joules_per_bit
+    }
+}
+
+/// A per-node energy accounting snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    /// Joules spent running inference (model execute time x TDP).
+    pub compute_j: f64,
+    /// Joules spent serializing/compressing (overhead time x TDP).
+    pub codec_j: f64,
+    /// Joules spent transmitting bytes.
+    pub network_j: f64,
+}
+
+impl EnergyReport {
+    pub fn total(&self) -> f64 {
+        self.compute_j + self.codec_j + self.network_j
+    }
+
+    /// Average over `cycles` inference cycles.
+    pub fn per_cycle(&self, cycles: u64) -> EnergyReport {
+        if cycles == 0 {
+            return EnergyReport::default();
+        }
+        let c = cycles as f64;
+        EnergyReport {
+            compute_j: self.compute_j / c,
+            codec_j: self.codec_j / c,
+            network_j: self.network_j / c,
+        }
+    }
+
+    pub fn add(&mut self, other: &EnergyReport) {
+        self.compute_j += other.compute_j;
+        self.codec_j += other.codec_j;
+        self.network_j += other.network_j;
+    }
+}
+
+/// Live meter combining the model with a node's timers and counters.
+pub struct EnergyMeter {
+    pub model: EnergyModel,
+    /// Inference busy time.
+    pub compute: crate::util::timer::SharedTimer,
+    /// Serialization/compression time.
+    pub codec: crate::util::timer::SharedTimer,
+    /// Bytes sent by this node.
+    pub tx_bytes: crate::metrics::ByteCounter,
+}
+
+impl EnergyMeter {
+    pub fn new(model: EnergyModel) -> Self {
+        EnergyMeter {
+            model,
+            compute: crate::util::timer::SharedTimer::new(),
+            codec: crate::util::timer::SharedTimer::new(),
+            tx_bytes: crate::metrics::ByteCounter::new(),
+        }
+    }
+
+    pub fn report(&self) -> EnergyReport {
+        EnergyReport {
+            compute_j: self.model.compute_energy(self.compute.total()),
+            codec_j: self.model.compute_energy(self.codec.total()),
+            network_j: self.model.network_energy(self.tx_bytes.total()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_network_energy_formula() {
+        let m = EnergyModel::default();
+        // 1 MB at 10 pJ/bit = 8e6 bits * 1e-11 J = 8e-5 J.
+        let e = m.network_energy(1_000_000);
+        assert!((e - 8e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_energy_scales_with_tdp() {
+        let m = EnergyModel {
+            tdp_watts: 30.0,
+            ..Default::default()
+        };
+        assert!((m.compute_energy(Duration::from_millis(500)) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_totals_and_per_cycle() {
+        let mut r = EnergyReport {
+            compute_j: 4.0,
+            codec_j: 1.0,
+            network_j: 0.5,
+        };
+        assert!((r.total() - 5.5).abs() < 1e-12);
+        let pc = r.per_cycle(10);
+        assert!((pc.compute_j - 0.4).abs() < 1e-12);
+        assert_eq!(EnergyReport::default().per_cycle(0), EnergyReport::default());
+        r.add(&pc);
+        assert!((r.compute_j - 4.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meter_integrates_timers_and_bytes() {
+        let meter = EnergyMeter::new(EnergyModel::default());
+        meter.compute.add(Duration::from_secs(1));
+        meter.codec.add(Duration::from_millis(100));
+        meter.tx_bytes.add(1_000_000);
+        let r = meter.report();
+        assert!((r.compute_j - 15.0).abs() < 1e-9);
+        assert!((r.codec_j - 1.5).abs() < 1e-9);
+        assert!((r.network_j - 8e-5).abs() < 1e-12);
+    }
+}

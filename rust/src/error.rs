@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+//!
+//! One enum covering every subsystem so the coordinator's hot path can
+//! propagate failures without boxing; `thiserror` derives the displays.
+
+use thiserror::Error;
+
+/// Errors produced anywhere in the DEFER stack.
+#[derive(Error, Debug)]
+pub enum DeferError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json: {0}")]
+    Json(String),
+
+    #[error("codec: {0}")]
+    Codec(String),
+
+    #[error("wire protocol: {0}")]
+    Wire(String),
+
+    #[error("tensor: {0}")]
+    Tensor(String),
+
+    #[error("model registry: {0}")]
+    Model(String),
+
+    #[error("runtime (PJRT): {0}")]
+    Runtime(String),
+
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    #[error("config: {0}")]
+    Config(String),
+
+    #[error("cli: {0}")]
+    Cli(String),
+
+    #[error("channel closed: {0}")]
+    ChannelClosed(&'static str),
+}
+
+impl From<xla::Error> for DeferError {
+    fn from(e: xla::Error) -> Self {
+        DeferError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DeferError>;

@@ -1,0 +1,40 @@
+//! # DEFER: Distributed Edge Inference for Deep Neural Networks
+//!
+//! Rust + JAX + Pallas reproduction of Parthasarathy & Krishnamachari,
+//! COMSNETS 2022 (DOI 10.1109/COMSNETS53615.2022.9668515).
+//!
+//! DEFER partitions a DNN layer-wise into sequential sub-networks and
+//! pipelines inference through a chain of compute nodes coordinated by a
+//! dispatcher. This crate is Layer 3 of the three-layer architecture:
+//!
+//! * **L1/L2 (build time, Python)** — `python/compile/` holds the Pallas
+//!   kernels and JAX models; `make artifacts` AOT-lowers every model
+//!   partition to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — loads the artifacts via the PJRT C API
+//!   ([`runtime`]), distributes partitions and weights to compute nodes
+//!   ([`coordinator::dispatcher`]), and pipelines frames through the chain
+//!   ([`coordinator`]) with the paper's serialization/compression sweep
+//!   ([`serial`], [`compress`]), network emulation ([`netem`]), energy
+//!   model ([`energy`]) and metrics ([`metrics`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `defer` binary is self-contained.
+
+pub mod bench;
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod error;
+pub mod metrics;
+pub mod model;
+pub mod netem;
+pub mod runtime;
+pub mod serial;
+pub mod tensor;
+pub mod threadpool;
+pub mod util;
+pub mod wire;
+
+pub use error::{DeferError, Result};

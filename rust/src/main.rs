@@ -1,0 +1,225 @@
+//! `defer` — DEFER launcher CLI.
+//!
+//! Subcommands:
+//! * `run`      — run a DEFER chain (or the single-device baseline with
+//!                `--nodes 1 --baseline`) and print the run report.
+//! * `sweep`    — Fig. 2-style sweep over node counts for one model.
+//! * `codecs`   — Table I/II-style codec sweep.
+//! * `info`     — show available artifacts and PJRT platform info.
+//!
+//! Examples:
+//! ```text
+//! defer run --model resnet50 --profile edge --nodes 8 --frames 32
+//! defer run --model resnet50 --nodes 4 --tcp --link gigabit
+//! defer sweep --model vgg16 --parts 1,4,6,8 --frames 16
+//! defer info
+//! ```
+
+use defer::bench::Table;
+use defer::cli::Args;
+use defer::config::DeferConfig;
+use defer::coordinator::baseline::SingleDevice;
+use defer::coordinator::chain::ChainRunner;
+use defer::coordinator::RunReport;
+use defer::error::Result;
+use defer::runtime::Engine;
+use defer::util::{fmt_bytes, fmt_duration};
+
+const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help"];
+
+fn usage() -> &'static str {
+    "defer — Distributed Edge Inference (COMSNETS 2022 reproduction)
+
+USAGE:
+  defer <run|sweep|codecs|info> [options]
+
+COMMON OPTIONS:
+  --artifacts DIR          artifact root (default: artifacts)
+  --profile tiny|edge|full scale profile (default: edge)
+  --model NAME             resnet50|vgg16|vgg19 (default: resnet50)
+  --config FILE            JSON config file (CLI flags override it)
+
+RUN OPTIONS:
+  --nodes N                compute nodes (default: 4)
+  --frames N               inference cycles (default: 16)
+  --baseline               single-device run (ignores --nodes)
+  --tcp                    real TCP loopback sockets
+  --link ideal|gigabit|edge|wifi
+  --pipe-depth N           chain backpressure window (default: 4)
+  --emulated-mflops R      deterministic edge-device emulation: floor each
+                           stage's compute to stage_flops/R us (0 = off)
+  --slowdown F             legacy multiplicative compute emulation (>=1)
+  --tdp W                  node TDP for the energy model (default: 15)
+  --data-serialization json|zfp[:RATE]|binary
+  --data-compression  none|lz4
+  --weights-serialization / --weights-compression  (same values)
+
+SWEEP OPTIONS:
+  --parts 1,4,6,8          node counts to sweep
+"
+}
+
+fn load_config(args: &Args) -> Result<DeferConfig> {
+    let base = match args.get("config") {
+        Some(path) => DeferConfig::from_file(std::path::Path::new(path))?,
+        None => DeferConfig::default(),
+    };
+    base.apply_args(args)
+}
+
+fn print_report(r: &RunReport) {
+    println!("== {} / {} / {} node(s) ==", r.model, r.profile, r.nodes);
+    println!("  cycles:            {}", r.cycles);
+    println!("  elapsed:           {}", fmt_duration(r.elapsed));
+    println!("  throughput:        {:.4} cycles/s", r.throughput);
+    println!(
+        "  latency mean/p50/p99: {} / {} / {}",
+        fmt_duration(r.latency_mean),
+        fmt_duration(r.latency_p50),
+        fmt_duration(r.latency_p99)
+    );
+    println!("  config time:       {}", fmt_duration(r.config_time));
+    println!(
+        "  payload (arch/weights/data): {} / {} / {}",
+        fmt_bytes(r.architecture_bytes),
+        fmt_bytes(r.weights_bytes),
+        fmt_bytes(r.data_bytes)
+    );
+    println!(
+        "  overhead (config/data): {} / {}",
+        fmt_duration(r.config_overhead),
+        fmt_duration(r.data_overhead)
+    );
+    println!(
+        "  energy/node/cycle: {:.6} J",
+        r.energy_per_node_per_cycle()
+    );
+    if let Some(err) = r.reference_error {
+        println!("  max |err| vs python reference: {err:.3e}");
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let frames = args.get_usize("frames", 16)? as u64;
+    let report = if args.has("baseline") {
+        SingleDevice::new(cfg)?.run_frames(frames)?
+    } else {
+        ChainRunner::new(cfg)?.run_frames(frames)?
+    };
+    print_report(&report);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let frames = args.get_usize("frames", 16)? as u64;
+    let parts = args.get_usize_list("parts", &[1, 4, 6, 8])?;
+    let engine = Engine::cpu()?;
+    let mut table = Table::new(&[
+        "model",
+        "nodes",
+        "throughput (cycles/s)",
+        "energy/node/cycle (J)",
+        "p50 latency",
+    ]);
+    for n in parts {
+        let mut c = cfg.clone();
+        c.nodes = n.max(1);
+        let report = if n <= 1 {
+            SingleDevice::with_engine(c, engine.clone())?.run_frames(frames)?
+        } else {
+            ChainRunner::with_engine(c, engine.clone())?.run_frames(frames)?
+        };
+        table.row(&[
+            report.model.clone(),
+            if n <= 1 { "1 (single)".into() } else { n.to_string() },
+            format!("{:.4}", report.throughput),
+            format!("{:.6}", report.energy_per_node_per_cycle()),
+            fmt_duration(report.latency_p50),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_codecs(args: &Args) -> Result<()> {
+    use defer::serial::Codec;
+    let cfg = load_config(args)?;
+    let frames = args.get_usize("frames", 8)? as u64;
+    let engine = Engine::cpu()?;
+    let mut table = Table::new(&[
+        "serialization",
+        "compression",
+        "throughput (cycles/s)",
+        "data payload",
+        "data overhead",
+    ]);
+    for codec in Codec::paper_sweep() {
+        let mut c = cfg.clone();
+        c.codecs.data = codec;
+        c.codecs.weights = codec;
+        let report = ChainRunner::with_engine(c, engine.clone())?.run_frames(frames)?;
+        table.row(&[
+            codec.serialization.name().to_string(),
+            codec.compression.name().to_string(),
+            format!("{:.4}", report.throughput),
+            fmt_bytes(report.data_bytes),
+            fmt_duration(report.data_overhead),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let engine = Engine::cpu()?;
+    println!(
+        "PJRT platform: {} ({} device(s))",
+        engine.platform(),
+        engine.device_count()
+    );
+    for profile in ["tiny", "edge", "full"] {
+        match defer::model::available_configs(&cfg.artifacts_dir, profile) {
+            Ok(configs) if !configs.is_empty() => {
+                println!("profile {profile}:");
+                for (model, n) in configs {
+                    println!("  {model} x {n} partitions");
+                }
+            }
+            _ => println!("profile {profile}: (not built)"),
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, SWITCHES) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.command.is_none() {
+        print!("{}", usage());
+        return;
+    }
+    let result = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("codecs") => cmd_codecs(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+        None => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,294 @@
+//! Metrics substrate: byte counters (the `nload` role), cycle counters,
+//! latency histograms and throughput clocks feeding every paper metric.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Monotonic byte counter, shared across threads — measures network payload
+/// at the wire layer exactly where the paper pointed `nload`.
+#[derive(Clone, Default, Debug)]
+pub struct ByteCounter {
+    bytes: Arc<AtomicU64>,
+}
+
+impl ByteCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / 1e6
+    }
+
+    pub fn reset(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Latency histogram with fixed log-spaced buckets (1 us .. 100 s) plus
+/// exact min/max/sum — enough for p50/p95/p99 on chain latencies.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    bounds: Vec<f64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    min_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 56 log-spaced bucket upper bounds from 1 us to 100 s.
+        let mut bounds = Vec::new();
+        let mut b = 1e-6f64;
+        while b <= 100.0 {
+            bounds.push(b);
+            b *= 1.4;
+        }
+        let n = bounds.len() + 1; // +overflow
+        Histogram {
+            buckets: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            bounds,
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            min_nanos: AtomicU64::new(u64::MAX),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let secs = d.as_secs_f64();
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| secs <= *b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let nanos = d.as_nanos() as u64;
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.min_nanos.fetch_min(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_nanos.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn min(&self) -> Duration {
+        let v = self.min_nanos.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(v)
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket upper bounds (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                let secs = self.bounds.get(i).copied().unwrap_or(100.0);
+                return Duration::from_secs_f64(secs);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Throughput clock: counts completed inference cycles over a wall-clock
+/// window — the paper's "inference cycles per second".
+#[derive(Clone)]
+pub struct ThroughputClock {
+    start: Instant,
+    cycles: Arc<AtomicU64>,
+}
+
+impl Default for ThroughputClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputClock {
+    pub fn new() -> Self {
+        ThroughputClock {
+            start: Instant::now(),
+            cycles: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record_cycle(&self) {
+        self.cycles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Cycles per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.cycles() as f64 / secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_counter_shared() {
+        let c = ByteCounter::new();
+        let c2 = c.clone();
+        c.add(100);
+        c2.add(50);
+        assert_eq!(c.total(), 150);
+        assert!((c.total_mb() - 0.00015).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c2.total(), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean(), Duration::from_millis(22));
+        assert_eq!(h.min(), Duration::from_millis(1));
+        assert_eq!(h.max(), Duration::from_millis(100));
+        // p50 should land near 3 ms (log buckets: within 40%).
+        let p50 = h.quantile(0.5).as_secs_f64();
+        assert!((0.002..0.006).contains(&p50), "p50 {p50}");
+        // p100 near max.
+        assert!(h.quantile(1.0) >= Duration::from_millis(70));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.min(), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_clock() {
+        let t = ThroughputClock::new();
+        for _ in 0..10 {
+            t.record_cycle();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(t.cycles(), 10);
+        let tput = t.throughput();
+        assert!(tput > 0.0 && tput < 500.0, "{tput}");
+    }
+}
+
+/// A labelled set of per-socket byte counters (tx per message class), used
+/// by the Table I payload breakdown.
+#[derive(Clone, Default)]
+pub struct TrafficBreakdown {
+    pub architecture: ByteCounter,
+    pub weights: ByteCounter,
+    pub data: ByteCounter,
+}
+
+impl TrafficBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.architecture.total() + self.weights.total() + self.data.total()
+    }
+
+    /// Shared guard for rows printed by the benches.
+    pub fn row(&self, class: &str) -> u64 {
+        match class {
+            "architecture" => self.architecture.total(),
+            "weights" => self.weights.total(),
+            "data" => self.data.total(),
+            _ => 0,
+        }
+    }
+}
+
+/// Aggregated per-run metrics snapshot used by examples and benches.
+pub struct RunMetrics {
+    pub clock: ThroughputClock,
+    pub latency: Arc<Histogram>,
+    pub traffic: TrafficBreakdown,
+    /// Serialization/deserialization time (paper's "overhead").
+    pub overhead: crate::util::timer::SharedTimer,
+    /// Results that failed integrity/shape checks.
+    pub errors: Arc<Mutex<Vec<String>>>,
+}
+
+impl Default for RunMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        RunMetrics {
+            clock: ThroughputClock::new(),
+            latency: Arc::new(Histogram::new()),
+            traffic: TrafficBreakdown::new(),
+            overhead: crate::util::timer::SharedTimer::new(),
+            errors: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn push_error(&self, msg: String) {
+        self.errors.lock().unwrap().push(msg);
+    }
+}

@@ -1,0 +1,434 @@
+//! Artifact registry: locate and parse the AOT outputs of `make artifacts`.
+//!
+//! Per (profile, model, n-parts) the Python compile path emits, for each
+//! partition `i`, a `p<i>of<N>.hlo.txt` (partition compute graph with
+//! weights as HLO parameters), `p<i>of<N>.meta.json` (boundary shapes +
+//! weight manifest), and `p<i>of<N>.weights.bin` (raw f32 LE). This module
+//! loads those into [`PartitionSpec`]s — the "model architecture" payload
+//! the dispatcher ships during the configuration step.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{DeferError, Result};
+use crate::serial::json::{self, Json};
+
+/// One weight array in a partition's manifest (apply order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightSpec {
+    pub node: String,
+    pub param: String,
+    pub shape: Vec<usize>,
+    pub elements: usize,
+}
+
+/// Parsed partition metadata + artifact paths.
+#[derive(Clone, Debug)]
+pub struct PartitionSpec {
+    pub model: String,
+    pub profile: String,
+    pub part_index: usize,
+    pub part_count: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops: u64,
+    pub layers: Vec<String>,
+    pub weights: Vec<WeightSpec>,
+    pub weights_bytes: usize,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+}
+
+impl PartitionSpec {
+    /// Parse a `p<i>of<N>.meta.json` file.
+    pub fn from_meta_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| DeferError::Model(format!("{}: {e}", path.display())))?;
+        let v = json::parse(&text)?;
+        let dir = path
+            .parent()
+            .ok_or_else(|| DeferError::Model("meta file has no parent dir".into()))?;
+        let weights = v
+            .get("weights")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    node: w.get("node")?.as_str()?.to_string(),
+                    param: w.get("param")?.as_str()?.to_string(),
+                    shape: w.get_usize_vec("shape")?,
+                    elements: w.get("elements")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| Ok(l.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let spec = PartitionSpec {
+            model: v.get("model")?.as_str()?.to_string(),
+            profile: v.get("profile")?.as_str()?.to_string(),
+            part_index: v.get("part_index")?.as_usize()?,
+            part_count: v.get("part_count")?.as_usize()?,
+            input_shape: v.get_usize_vec("input_shape")?,
+            output_shape: v.get_usize_vec("output_shape")?,
+            flops: v.get("flops")?.as_f64()? as u64,
+            layers,
+            weights,
+            weights_bytes: v.get("weights_bytes")?.as_usize()?,
+            hlo_path: dir.join(v.get("hlo_file")?.as_str()?),
+            weights_path: dir.join(v.get("weights_file")?.as_str()?),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let manifest_elems: usize = self.weights.iter().map(|w| w.elements).sum();
+        if manifest_elems * 4 != self.weights_bytes {
+            return Err(DeferError::Model(format!(
+                "weights manifest ({} elements) disagrees with weights_bytes {}",
+                manifest_elems, self.weights_bytes
+            )));
+        }
+        for w in &self.weights {
+            let n: usize = w.shape.iter().product();
+            if n != w.elements {
+                return Err(DeferError::Model(format!(
+                    "{}.{}: shape {:?} != elements {}",
+                    w.node, w.param, w.shape, w.elements
+                )));
+            }
+        }
+        if self.part_index >= self.part_count {
+            return Err(DeferError::Model("part_index >= part_count".into()));
+        }
+        Ok(())
+    }
+
+    /// Total f32 element count of the input activation.
+    pub fn input_elements(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_elements(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Read the HLO text.
+    pub fn read_hlo(&self) -> Result<String> {
+        std::fs::read_to_string(&self.hlo_path)
+            .map_err(|e| DeferError::Model(format!("{}: {e}", self.hlo_path.display())))
+    }
+
+    /// Read the raw weights, split per manifest entry.
+    pub fn read_weights(&self) -> Result<Vec<Vec<f32>>> {
+        let raw = std::fs::read(&self.weights_path)
+            .map_err(|e| DeferError::Model(format!("{}: {e}", self.weights_path.display())))?;
+        if raw.len() != self.weights_bytes {
+            return Err(DeferError::Model(format!(
+                "{}: {} bytes on disk, manifest says {}",
+                self.weights_path.display(),
+                raw.len(),
+                self.weights_bytes
+            )));
+        }
+        let mut out = Vec::with_capacity(self.weights.len());
+        let mut off = 0usize;
+        for w in &self.weights {
+            let bytes = &raw[off..off + w.elements * 4];
+            out.push(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+            off += w.elements * 4;
+        }
+        Ok(out)
+    }
+}
+
+impl PartitionSpec {
+    /// Serialize for the configuration-step architecture socket (no local
+    /// file paths — the receiving node reconstructs everything from this).
+    pub fn to_config_json(&self, next_hop: &str) -> Json {
+        use std::collections::BTreeMap;
+        let mut obj = BTreeMap::new();
+        obj.insert("model".into(), Json::Str(self.model.clone()));
+        obj.insert("profile".into(), Json::Str(self.profile.clone()));
+        obj.insert("part_index".into(), Json::Num(self.part_index as f64));
+        obj.insert("part_count".into(), Json::Num(self.part_count as f64));
+        obj.insert(
+            "input_shape".into(),
+            Json::Arr(self.input_shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+        );
+        obj.insert(
+            "output_shape".into(),
+            Json::Arr(self.output_shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+        );
+        obj.insert("flops".into(), Json::Num(self.flops as f64));
+        obj.insert(
+            "layers".into(),
+            Json::Arr(self.layers.iter().map(|l| Json::Str(l.clone())).collect()),
+        );
+        obj.insert(
+            "weights".into(),
+            Json::Arr(
+                self.weights
+                    .iter()
+                    .map(|w| {
+                        let mut wo = BTreeMap::new();
+                        wo.insert("node".into(), Json::Str(w.node.clone()));
+                        wo.insert("param".into(), Json::Str(w.param.clone()));
+                        wo.insert(
+                            "shape".into(),
+                            Json::Arr(w.shape.iter().map(|d| Json::Num(*d as f64)).collect()),
+                        );
+                        wo.insert("elements".into(), Json::Num(w.elements as f64));
+                        Json::Obj(wo)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert("weights_bytes".into(), Json::Num(self.weights_bytes as f64));
+        obj.insert("next".into(), Json::Str(next_hop.to_string()));
+        Json::Obj(obj)
+    }
+
+    /// Parse the architecture-socket JSON back into a spec (paths empty).
+    /// Returns (spec, next_hop).
+    pub fn from_config_json(v: &Json) -> Result<(Self, String)> {
+        let weights = v
+            .get("weights")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    node: w.get("node")?.as_str()?.to_string(),
+                    param: w.get("param")?.as_str()?.to_string(),
+                    shape: w.get_usize_vec("shape")?,
+                    elements: w.get("elements")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| Ok(l.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let spec = PartitionSpec {
+            model: v.get("model")?.as_str()?.to_string(),
+            profile: v.get("profile")?.as_str()?.to_string(),
+            part_index: v.get("part_index")?.as_usize()?,
+            part_count: v.get("part_count")?.as_usize()?,
+            input_shape: v.get_usize_vec("input_shape")?,
+            output_shape: v.get_usize_vec("output_shape")?,
+            flops: v.get("flops")?.as_f64()? as u64,
+            layers,
+            weights,
+            weights_bytes: v.get("weights_bytes")?.as_usize()?,
+            hlo_path: PathBuf::new(),
+            weights_path: PathBuf::new(),
+        };
+        spec.validate()?;
+        let next = v.get("next")?.as_str()?.to_string();
+        Ok((spec, next))
+    }
+}
+
+/// A full partition plan: all N stages of one (profile, model, N) config.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub parts: Vec<PartitionSpec>,
+}
+
+impl PartitionPlan {
+    /// Load `p0ofN .. p{N-1}ofN` from `artifacts/<profile>/<model>/`.
+    pub fn load(artifacts: &Path, profile: &str, model: &str, n: usize) -> Result<Self> {
+        let dir = artifacts.join(profile).join(model);
+        let mut parts = Vec::with_capacity(n);
+        for i in 0..n {
+            let meta = dir.join(format!("p{i}of{n}.meta.json"));
+            if !meta.exists() {
+                return Err(DeferError::Model(format!(
+                    "missing artifact {} — run `make artifacts` (profile {profile})",
+                    meta.display()
+                )));
+            }
+            parts.push(PartitionSpec::from_meta_file(&meta)?);
+        }
+        let plan = PartitionPlan { parts };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Boundary shapes must chain and indices must be consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.parts.is_empty() {
+            return Err(DeferError::Model("empty plan".into()));
+        }
+        let n = self.parts[0].part_count;
+        if self.parts.len() != n {
+            return Err(DeferError::Model(format!(
+                "plan has {} parts, metadata says {n}",
+                self.parts.len()
+            )));
+        }
+        for (i, p) in self.parts.iter().enumerate() {
+            if p.part_index != i || p.part_count != n {
+                return Err(DeferError::Model(format!(
+                    "partition {i} has index {}/{}",
+                    p.part_index, p.part_count
+                )));
+            }
+        }
+        for (a, b) in self.parts.iter().zip(self.parts.iter().skip(1)) {
+            if a.output_shape != b.input_shape {
+                return Err(DeferError::Model(format!(
+                    "boundary mismatch p{}: {:?} -> p{}: {:?}",
+                    a.part_index, a.output_shape, b.part_index, b.input_shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.parts[0].input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.parts[self.parts.len() - 1].output_shape
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.parts.iter().map(|p| p.flops).sum()
+    }
+}
+
+/// Reference vectors (`ref_input.bin`, `ref_output.bin`) for end-to-end
+/// numerical validation of a chain against the Python ground truth.
+pub struct ReferenceVectors {
+    pub input: crate::tensor::Tensor,
+    pub output: crate::tensor::Tensor,
+}
+
+impl ReferenceVectors {
+    pub fn load(artifacts: &Path, profile: &str, model: &str) -> Result<Self> {
+        let dir = artifacts.join(profile).join(model);
+        let meta = json::parse(&std::fs::read_to_string(dir.join("ref_meta.json"))?)?;
+        let in_shape = meta.get_usize_vec("input_shape")?;
+        let out_shape = meta.get_usize_vec("output_shape")?;
+        let input = crate::tensor::Tensor::from_le_bytes(
+            in_shape,
+            &std::fs::read(dir.join("ref_input.bin"))?,
+        )?;
+        let output = crate::tensor::Tensor::from_le_bytes(
+            out_shape,
+            &std::fs::read(dir.join("ref_output.bin"))?,
+        )?;
+        Ok(ReferenceVectors { input, output })
+    }
+}
+
+/// List (model, part_count) combos available under a profile, from
+/// `manifest.json` — used by the bench harnesses to discover sweeps.
+pub fn available_configs(artifacts: &Path, profile: &str) -> Result<Vec<(String, usize)>> {
+    let manifest = json::parse(&std::fs::read_to_string(artifacts.join("manifest.json"))?)?;
+    let mut out = Vec::new();
+    for row in manifest.get("artifacts")?.as_arr()? {
+        if row.get("profile")?.as_str()? != profile {
+            continue;
+        }
+        let model = row.get("model")?.as_str()?.to_string();
+        let n = row.get("part_count")?.as_usize()?;
+        if !out.contains(&(model.clone(), n)) {
+            out.push((model, n));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn meta_json_parse_error_paths() {
+        // Synthetic meta with inconsistent byte count must be rejected.
+        let dir = std::env::temp_dir().join(format!("defer_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta = dir.join("bad.meta.json");
+        std::fs::write(
+            &meta,
+            r#"{"model":"m","profile":"tiny","part_index":0,"part_count":1,
+               "input_shape":[1,4],"output_shape":[1,2],"flops":10,
+               "layers":["a"],"weights":[{"node":"a","param":"w","shape":[4,2],"elements":8}],
+               "weights_bytes":999,"hlo_file":"x.hlo.txt","weights_file":"x.weights.bin"}"#,
+        )
+        .unwrap();
+        assert!(PartitionSpec::from_meta_file(&meta).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_tiny_resnet_plan() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        for n in [1usize, 2, 4] {
+            let plan = PartitionPlan::load(&artifacts_dir(), "tiny", "resnet50", n).unwrap();
+            assert_eq!(plan.parts.len(), n);
+            assert_eq!(plan.input_shape(), &[1, 32, 32, 3]);
+            assert!(plan.total_flops() > 0);
+            // Weight files load and match manifests.
+            let w = plan.parts[0].read_weights().unwrap();
+            assert_eq!(w.len(), plan.parts[0].weights.len());
+            for (arr, spec) in w.iter().zip(&plan.parts[0].weights) {
+                assert_eq!(arr.len(), spec.elements);
+            }
+            // HLO loads and looks like HLO.
+            assert!(plan.parts[0].read_hlo().unwrap().starts_with("HloModule"));
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_explained() {
+        let err = PartitionPlan::load(Path::new("/nonexistent"), "tiny", "resnet50", 2)
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn reference_vectors_load() {
+        if !have_artifacts() {
+            return;
+        }
+        let rv = ReferenceVectors::load(&artifacts_dir(), "tiny", "resnet50").unwrap();
+        assert_eq!(rv.input.shape(), &[1, 32, 32, 3]);
+        assert!(rv.output.len() > 0);
+    }
+
+    #[test]
+    fn available_configs_lists_tiny() {
+        if !have_artifacts() {
+            return;
+        }
+        let configs = available_configs(&artifacts_dir(), "tiny").unwrap();
+        assert!(configs.contains(&("resnet50".to_string(), 4)));
+    }
+}

@@ -1,0 +1,202 @@
+//! Network emulation: the CORE-emulator substitute.
+//!
+//! The paper ran DEFER inside the CORE network emulator, which shapes
+//! loopback traffic with per-link bandwidth/latency disciplines. This
+//! module reproduces that: a [`Link`] is a token-bucket rate limiter plus
+//! a fixed one-way latency and optional jitter, applied to every wire
+//! chunk at the framing layer (see `wire::write_message`). It works
+//! identically for in-process channels and real TCP sockets on loopback.
+//!
+//! `Link::ideal()` is the paper's "close-to-zero latency environment";
+//! `LinkSpec` presets model typical edge networks for the ablations.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::prng::Rng;
+
+/// Declarative link parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Bandwidth in bits/second; `None` = unlimited.
+    pub bandwidth_bps: Option<u64>,
+    /// One-way latency added per message chunk train.
+    pub latency: Duration,
+    /// Uniform jitter in `[0, jitter]` added to the latency.
+    pub jitter: Duration,
+}
+
+impl LinkSpec {
+    /// The paper's evaluation setting: local, close-to-zero latency.
+    pub const fn ideal() -> Self {
+        LinkSpec {
+            bandwidth_bps: None,
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+        }
+    }
+
+    /// Gigabit Ethernet LAN (the paper's energy model assumes Ethernet).
+    pub const fn gigabit_lan() -> Self {
+        LinkSpec {
+            bandwidth_bps: Some(1_000_000_000),
+            latency: Duration::from_micros(200),
+            jitter: Duration::ZERO,
+        }
+    }
+
+    /// 100 Mbit edge/fog link.
+    pub const fn fast_edge() -> Self {
+        LinkSpec {
+            bandwidth_bps: Some(100_000_000),
+            latency: Duration::from_millis(1),
+            jitter: Duration::from_micros(200),
+        }
+    }
+
+    /// Constrained wireless edge (802.11-ish).
+    pub const fn wifi() -> Self {
+        LinkSpec {
+            bandwidth_bps: Some(50_000_000),
+            latency: Duration::from_millis(3),
+            jitter: Duration::from_millis(1),
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ideal" | "core" => Ok(Self::ideal()),
+            "gigabit" | "lan" => Ok(Self::gigabit_lan()),
+            "edge" | "100mbit" => Ok(Self::fast_edge()),
+            "wifi" => Ok(Self::wifi()),
+            other => Err(crate::error::DeferError::Config(format!(
+                "unknown link spec {other:?} (want ideal|gigabit|edge|wifi)"
+            ))),
+        }
+    }
+}
+
+struct Bucket {
+    /// Time when the link becomes free again (virtual clock).
+    free_at: Instant,
+    rng: Rng,
+}
+
+/// A shaped link. Cloneable handles share the same bucket.
+pub struct Link {
+    spec: LinkSpec,
+    bucket: Mutex<Bucket>,
+}
+
+impl Link {
+    pub fn new(spec: LinkSpec) -> Self {
+        Link {
+            spec,
+            bucket: Mutex::new(Bucket {
+                free_at: Instant::now(),
+                rng: Rng::new(0xDEFE),
+            }),
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Link::new(LinkSpec::ideal())
+    }
+
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+
+    /// Block the caller as the emulated link would for `bytes` more bytes.
+    ///
+    /// Serialization delay = bytes * 8 / bandwidth, accumulated on a virtual
+    /// clock so back-to-back chunks queue correctly; propagation delay =
+    /// latency + jitter per call.
+    pub fn shape(&self, bytes: usize) {
+        if self.spec.bandwidth_bps.is_none()
+            && self.spec.latency.is_zero()
+            && self.spec.jitter.is_zero()
+        {
+            return; // ideal link: free
+        }
+        let mut sleep_until = None;
+        {
+            let mut b = self.bucket.lock().unwrap();
+            let now = Instant::now();
+            let mut delay = self.spec.latency;
+            if !self.spec.jitter.is_zero() {
+                let j = b.rng.f32() as f64 * self.spec.jitter.as_secs_f64();
+                delay += Duration::from_secs_f64(j);
+            }
+            if let Some(bps) = self.spec.bandwidth_bps {
+                let tx = Duration::from_secs_f64((bytes as f64 * 8.0) / bps as f64);
+                let start = b.free_at.max(now);
+                b.free_at = start + tx;
+                sleep_until = Some(b.free_at + delay);
+            } else if !delay.is_zero() {
+                sleep_until = Some(now + delay);
+            }
+        }
+        if let Some(t) = sleep_until {
+            let now = Instant::now();
+            if t > now {
+                std::thread::sleep(t - now);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_link_is_free() {
+        let link = Link::ideal();
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            link.shape(512 * 1024);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn bandwidth_limit_enforced() {
+        // 8 Mbit/s -> 1 MB takes ~1 s; send 200 kB and expect ~200 ms.
+        let link = Link::new(LinkSpec {
+            bandwidth_bps: Some(8_000_000),
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            link.shape(50_000);
+        }
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(180), "too fast: {dt:?}");
+        assert!(dt < Duration::from_millis(500), "too slow: {dt:?}");
+    }
+
+    #[test]
+    fn latency_applied_per_call() {
+        let link = Link::new(LinkSpec {
+            bandwidth_bps: None,
+            latency: Duration::from_millis(5),
+            jitter: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            link.shape(100);
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn presets_parse() {
+        assert_eq!(LinkSpec::parse("ideal").unwrap(), LinkSpec::ideal());
+        assert_eq!(LinkSpec::parse("gigabit").unwrap(), LinkSpec::gigabit_lan());
+        assert_eq!(LinkSpec::parse("edge").unwrap(), LinkSpec::fast_edge());
+        assert_eq!(LinkSpec::parse("wifi").unwrap(), LinkSpec::wifi());
+        assert!(LinkSpec::parse("5g").is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT engine + compiled partition executables.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{DeferError, Result};
+use crate::model::PartitionSpec;
+use crate::tensor::Tensor;
+use crate::util::timer::SharedTimer;
+
+// The `xla` crate wraps raw PJRT pointers without Send/Sync markers. The
+// PJRT C API is documented thread-safe: clients may compile/execute from
+// multiple threads, literals are plain host buffers. Each `Executable` is
+// owned and used by exactly one chain-node thread; the client is shared
+// behind an Arc. These wrappers make that contract explicit.
+struct ClientHandle(xla::PjRtClient);
+// SAFETY: PJRT CPU client operations (compile, execute, buffer transfer)
+// are internally synchronized; see PJRT C API docs.
+unsafe impl Send for ClientHandle {}
+unsafe impl Sync for ClientHandle {}
+
+struct ExeHandle(xla::PjRtLoadedExecutable);
+// SAFETY: executables are immutable after compilation; PJRT execution is
+// thread-safe. We additionally confine each ExeHandle to one thread.
+unsafe impl Send for ExeHandle {}
+unsafe impl Sync for ExeHandle {}
+
+struct LiteralHandle(xla::Literal);
+// SAFETY: a Literal is an owned host-memory buffer; moving it between
+// threads is moving a heap allocation.
+unsafe impl Send for LiteralHandle {}
+unsafe impl Sync for LiteralHandle {}
+
+/// Process-wide PJRT client handle (CPU plugin). Cheap to clone.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<ClientHandle>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client: Arc::new(ClientHandle(client)),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.0.device_count()
+    }
+
+    /// Compile HLO text into an executable.
+    pub fn compile_hlo_text(&self, hlo: &str, name: &str) -> Result<CompiledHlo> {
+        // The xla crate only exposes a file-based text parser; stage through
+        // a temp file. Compile happens once per partition at configuration
+        // time, never on the per-frame path.
+        let tmp = std::env::temp_dir().join(format!(
+            "defer_hlo_{}_{}_{}.txt",
+            std::process::id(),
+            name,
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::write(&tmp, hlo)?;
+        let result = self.compile_hlo_file(&tmp);
+        std::fs::remove_file(&tmp).ok();
+        result
+    }
+
+    /// Compile an HLO text file into an executable.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<CompiledHlo> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| DeferError::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.0.compile(&comp)?;
+        Ok(CompiledHlo {
+            exe: ExeHandle(exe),
+            compile_time: t0.elapsed(),
+        })
+    }
+}
+
+/// A compiled HLO module (not yet bound to partition metadata).
+pub struct CompiledHlo {
+    exe: ExeHandle,
+    pub compile_time: std::time::Duration,
+}
+
+/// A ready-to-run model partition: compiled HLO + resident weight literals.
+///
+/// Weights live on-device (CPU PJRT: host memory) from configuration time;
+/// per frame only the activation tensor crosses into PJRT.
+pub struct Executable {
+    compiled: CompiledHlo,
+    weights: Vec<LiteralHandle>,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+    /// Accumulated on-device execute time (drives compute energy).
+    pub exec_timer: SharedTimer,
+    name: String,
+}
+
+fn literal_from_f32s(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&dims)?)
+}
+
+impl Executable {
+    /// Build from a partition spec, reading HLO + weights from artifacts.
+    pub fn load(engine: &Engine, spec: &PartitionSpec) -> Result<Self> {
+        let hlo_compiled = engine.compile_hlo_file(&spec.hlo_path)?;
+        let weight_arrays = spec.read_weights()?;
+        Self::assemble(hlo_compiled, spec, weight_arrays)
+    }
+
+    /// Build from already-transferred architecture + weights (the compute
+    /// node side of the configuration step, where both arrived by socket).
+    pub fn from_parts(
+        engine: &Engine,
+        hlo_text: &str,
+        spec: &PartitionSpec,
+        weight_arrays: Vec<Vec<f32>>,
+    ) -> Result<Self> {
+        let compiled = engine.compile_hlo_text(
+            hlo_text,
+            &format!("{}_p{}", spec.model, spec.part_index),
+        )?;
+        Self::assemble(compiled, spec, weight_arrays)
+    }
+
+    fn assemble(
+        compiled: CompiledHlo,
+        spec: &PartitionSpec,
+        weight_arrays: Vec<Vec<f32>>,
+    ) -> Result<Self> {
+        if weight_arrays.len() != spec.weights.len() {
+            return Err(DeferError::Runtime(format!(
+                "{} weight arrays for {} manifest entries",
+                weight_arrays.len(),
+                spec.weights.len()
+            )));
+        }
+        let mut weights = Vec::with_capacity(weight_arrays.len());
+        for (arr, wspec) in weight_arrays.iter().zip(&spec.weights) {
+            if arr.len() != wspec.elements {
+                return Err(DeferError::Runtime(format!(
+                    "{}.{}: got {} elements, manifest says {}",
+                    wspec.node,
+                    wspec.param,
+                    arr.len(),
+                    wspec.elements
+                )));
+            }
+            weights.push(LiteralHandle(literal_from_f32s(arr, &wspec.shape)?));
+        }
+        Ok(Executable {
+            compiled,
+            weights,
+            input_shape: spec.input_shape.clone(),
+            output_shape: spec.output_shape.clone(),
+            exec_timer: SharedTimer::new(),
+            name: format!("{}/p{}of{}", spec.model, spec.part_index, spec.part_count),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    pub fn compile_time(&self) -> std::time::Duration {
+        self.compiled.compile_time
+    }
+
+    /// Run one frame through this partition.
+    pub fn run(&self, input: &Tensor) -> Result<Tensor> {
+        if input.shape() != self.input_shape.as_slice() {
+            return Err(DeferError::Runtime(format!(
+                "{}: input shape {:?}, expected {:?}",
+                self.name,
+                input.shape(),
+                self.input_shape
+            )));
+        }
+        let t0 = Instant::now();
+        let x = literal_from_f32s(input.data(), input.shape())?;
+        // Arguments: activation first, then weights in manifest order —
+        // matching the `fn(x, *weights)` lowering.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&x);
+        args.extend(self.weights.iter().map(|w| &w.0));
+        let result = self.compiled.exe.0.execute(&args)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        self.exec_timer.add(t0.elapsed());
+        Tensor::new(self.output_shape.clone(), values)
+    }
+}

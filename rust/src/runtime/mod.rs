@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin). The interchange format
+//! is HLO *text* — jax >= 0.5 serialized protos use 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! One [`Engine`] per process; one [`Executable`] per model partition. The
+//! partition functions were lowered as `fn(x, *weights) -> (y,)`
+//! (`return_tuple=True`), so execution passes the input activation followed
+//! by every weight literal in manifest order and unwraps a 1-tuple.
+
+pub mod engine;
+
+pub use engine::{Engine, Executable};

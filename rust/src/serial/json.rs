@@ -1,0 +1,445 @@
+//! JSON substrate: value model, recursive-descent parser, writer.
+//!
+//! Fills two roles (no serde in the offline environment):
+//! 1. Parsing artifact metadata (`*.meta.json`, `manifest.json`).
+//! 2. The paper's "JSON serialization of NumPy arrays" codec arm —
+//!    `encode_f32s` / `decode_f32s` produce the same `[1.0, 2.5, ...]`
+//!    wire format the reference implementation got from `json.dumps`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::error::{DeferError, Result};
+
+/// A JSON value. Numbers are f64 (JSON's native model).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            other => Err(DeferError::Json(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 {
+            return Err(DeferError::Json(format!("expected usize, got {v}")));
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => Err(DeferError::Json(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            other => Err(DeferError::Json(format!("expected array, got {other:?}"))),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Ok(o),
+            other => Err(DeferError::Json(format!("expected object, got {other:?}"))),
+        }
+    }
+
+    /// Fetch a required object field.
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| DeferError::Json(format!("missing field {key:?}")))
+    }
+
+    /// Shape-style field: array of usize.
+    pub fn get_usize_vec(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?.as_arr()?.iter().map(Json::as_usize).collect()
+    }
+}
+
+// ------------------------------------------------------------- parser
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> DeferError {
+        DeferError::Json(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let c = self.peek().ok_or_else(|| self.err("unexpected end"))?;
+        self.pos += 1;
+        Ok(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.skip_ws();
+        if self.bump()? != c {
+            return Err(self.err(&format!("expected {:?}", c as char)));
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'n' => self.literal("null", Json::Null),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()?;
+                            code = code * 16
+                                + (c as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| self.err("bad \\u escape"))?;
+                        }
+                        // Surrogate pairs: join if a low surrogate follows.
+                        let ch = if (0xD800..0xDC00).contains(&code) {
+                            if self.bump()? != b'\\' || self.bump()? != b'u' {
+                                return Err(self.err("lone high surrogate"));
+                            }
+                            let mut low = 0u32;
+                            for _ in 0..4 {
+                                let c = self.bump()?;
+                                low = low * 16
+                                    + (c as char)
+                                        .to_digit(16)
+                                        .ok_or_else(|| self.err("bad \\u escape"))?;
+                            }
+                            0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
+                        } else {
+                            code
+                        };
+                        out.push(
+                            char::from_u32(ch).ok_or_else(|| self.err("bad codepoint"))?,
+                        );
+                    }
+                    _ => return Err(self.err("bad escape")),
+                },
+                c if c < 0x20 => return Err(self.err("control char in string")),
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // Re-decode UTF-8 multibyte sequence.
+                    let start = self.pos - 1;
+                    let width = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(self.err("bad utf8")),
+                    };
+                    self.pos = start + width;
+                    let s = std::str::from_utf8(&self.b[start..self.pos])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Json::Arr(out)),
+                _ => return Err(self.err("expected , or ]")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Json::Obj(out)),
+                _ => return Err(self.err("expected , or }")),
+            }
+        }
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser {
+        b: text.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+// ------------------------------------------------------------- writer
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Serialize a value to compact JSON text.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(&mut out, v);
+    out
+}
+
+fn write_value(out: &mut String, v: &Json) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => write_escaped(out, s),
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(out, item);
+            }
+            out.push(']');
+        }
+        Json::Obj(o) => {
+            out.push('{');
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_escaped(out, k);
+                out.push(':');
+                write_value(out, val);
+            }
+            out.push('}');
+        }
+    }
+}
+
+// ------------------------------------------------- float-array codec arm
+
+/// Encode an f32 slice as a JSON array — the paper's JSON serialization of
+/// NumPy arrays. Uses shortest round-trip formatting (Rust's float Display),
+/// giving the same ~2-3x inflation over raw binary that `json.dumps` shows.
+pub fn encode_f32s(data: &[f32]) -> Vec<u8> {
+    let mut out = String::with_capacity(data.len() * 12 + 2);
+    out.push('[');
+    for (i, v) in data.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if v.fract() == 0.0 && v.abs() < 1e15 {
+            let _ = write!(out, "{}.0", *v as i64);
+        } else {
+            let _ = write!(out, "{v}");
+        }
+    }
+    out.push(']');
+    out.into_bytes()
+}
+
+/// Decode the JSON array form back to f32s.
+pub fn decode_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| DeferError::Json(format!("not utf8: {e}")))?;
+    let v = parse(text)?;
+    v.as_arr()?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("-2.5e3").unwrap(), Json::Num(-2500.0));
+        assert_eq!(parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1 2", "\"\\q\""] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_round_trip() {
+        let v = parse(r#""café 😀 ü""#).unwrap();
+        assert_eq!(v, Json::Str("café 😀 ü".into()));
+        let text = to_string(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn writer_round_trip() {
+        let src = r#"{"meta": {"shape": [1, 32, 32, 3], "flops": 12345}, "ok": true}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn get_usize_vec() {
+        let v = parse(r#"{"shape": [1, 8, 8, 16]}"#).unwrap();
+        assert_eq!(v.get_usize_vec("shape").unwrap(), vec![1, 8, 8, 16]);
+        assert!(v.get_usize_vec("missing").is_err());
+    }
+
+    #[test]
+    fn f32_array_round_trip_exact() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..2000).map(|_| rng.normal_f32() * 100.0).collect();
+        let enc = encode_f32s(&data);
+        let dec = decode_f32s(&enc).unwrap();
+        assert_eq!(data, dec, "shortest round-trip must be exact");
+    }
+
+    #[test]
+    fn f32_array_special_values() {
+        let data = [0.0f32, -0.0, 1.0, -1.5, f32::MIN_POSITIVE, 3.4e38];
+        let dec = decode_f32s(&encode_f32s(&data)).unwrap();
+        assert_eq!(&data[..], &dec[..]);
+    }
+
+    #[test]
+    fn json_inflation_factor_matches_paper_regime() {
+        // Paper Table I: JSON weights are ~2-3x the binary size. Sanity-pin
+        // the inflation factor of our encoder into that band.
+        let mut rng = Rng::new(6);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.normal_f32()).collect();
+        let enc = encode_f32s(&data);
+        let ratio = enc.len() as f64 / (data.len() * 4) as f64;
+        assert!((1.8..4.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Serialization substrate: the paper's JSON vs ZFP arms, plus raw binary.
+//!
+//! A [`Codec`] bundles a serialization scheme and a compression scheme for
+//! one socket, mirroring the paper's per-socket configuration (architecture
+//! socket, weights socket, inference-data socket). `encode_tensor_data` /
+//! `decode_tensor_data` are what the chain hot path calls per frame.
+
+pub mod bits;
+pub mod json;
+pub mod zfp;
+
+use crate::compress::Compression;
+use crate::error::{DeferError, Result};
+use crate::util::timer::SharedTimer;
+
+/// How f32 payloads are serialized before (optional) compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Serialization {
+    /// JSON array of numbers — the paper's `json.dumps(np.ndarray)` arm.
+    Json,
+    /// Fixed-rate ZFP (bits per value).
+    Zfp(zfp::ZfpRate),
+    /// Raw little-endian f32 — lossless baseline (not in the paper's sweep,
+    /// used by tests and as the weights ground truth).
+    Binary,
+}
+
+impl Serialization {
+    pub fn name(self) -> &'static str {
+        match self {
+            Serialization::Json => "JSON",
+            Serialization::Zfp(_) => "ZFP",
+            Serialization::Binary => "Binary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "json" {
+            return Ok(Serialization::Json);
+        }
+        if lower == "binary" || lower == "bin" {
+            return Ok(Serialization::Binary);
+        }
+        if let Some(rate) = lower.strip_prefix("zfp") {
+            let rate = if rate.is_empty() {
+                DEFAULT_ZFP_RATE
+            } else {
+                rate.trim_start_matches(':').parse::<u8>().map_err(|_| {
+                    DeferError::Config(format!("bad zfp rate in {s:?}"))
+                })?
+            };
+            return Ok(Serialization::Zfp(zfp::ZfpRate(rate).validate()?));
+        }
+        Err(DeferError::Config(format!(
+            "unknown serialization {s:?} (want json|zfp[:RATE]|binary)"
+        )))
+    }
+
+    /// Whether decode(encode(x)) == x bitwise. ZFP is lossy at every fixed
+    /// rate (even 32 bits/value only bounds the error near 1e-6 of the
+    /// block max).
+    pub fn is_lossless(self) -> bool {
+        !matches!(self, Serialization::Zfp(_))
+    }
+}
+
+/// Default ZFP rate: near-lossless, still 20%+ smaller than raw f32 wire
+/// (and far smaller than JSON), preserving the paper's codec ranking.
+pub const DEFAULT_ZFP_RATE: u8 = 24;
+
+/// A per-socket codec: serialization + compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Codec {
+    pub serialization: Serialization,
+    pub compression: Compression,
+}
+
+impl Codec {
+    pub const fn new(serialization: Serialization, compression: Compression) -> Self {
+        Codec {
+            serialization,
+            compression,
+        }
+    }
+
+    /// The four configurations swept by Tables I and II.
+    pub fn paper_sweep() -> Vec<Codec> {
+        vec![
+            Codec::new(Serialization::Json, Compression::Lz4),
+            Codec::new(Serialization::Json, Compression::None),
+            Codec::new(
+                Serialization::Zfp(zfp::ZfpRate(DEFAULT_ZFP_RATE)),
+                Compression::Lz4,
+            ),
+            Codec::new(
+                Serialization::Zfp(zfp::ZfpRate(DEFAULT_ZFP_RATE)),
+                Compression::None,
+            ),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}+{}", self.serialization.name(), self.compression.name())
+    }
+
+    /// Serialize + compress an f32 payload. Returns the wire bytes and the
+    /// intermediate (serialized, uncompressed) size for payload accounting.
+    /// `overhead` accumulates formatting time (paper's "Overhead" metric).
+    pub fn encode_f32s(
+        &self,
+        data: &[f32],
+        overhead: Option<&SharedTimer>,
+    ) -> (Vec<u8>, usize) {
+        let work = || {
+            let serialized = match self.serialization {
+                Serialization::Json => json::encode_f32s(data),
+                Serialization::Zfp(rate) => {
+                    zfp::encode(data, rate).expect("validated rate")
+                }
+                Serialization::Binary => {
+                    let mut out = Vec::with_capacity(data.len() * 4);
+                    for v in data {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                    out
+                }
+            };
+            let mid = serialized.len();
+            (self.compression.compress(&serialized), mid)
+        };
+        match overhead {
+            Some(t) => t.time(work),
+            None => work(),
+        }
+    }
+
+    /// Inverse of [`Codec::encode_f32s`]. `serialized_len` is the
+    /// uncompressed-serialized size from the wire header; `count` the
+    /// element count.
+    pub fn decode_f32s(
+        &self,
+        wire: &[u8],
+        serialized_len: usize,
+        count: usize,
+        overhead: Option<&SharedTimer>,
+    ) -> Result<Vec<f32>> {
+        let work = || -> Result<Vec<f32>> {
+            let serialized = self.compression.decompress(wire, serialized_len)?;
+            let out = match self.serialization {
+                Serialization::Json => json::decode_f32s(&serialized)?,
+                Serialization::Zfp(_) => zfp::decode(&serialized)?,
+                Serialization::Binary => {
+                    if serialized.len() % 4 != 0 {
+                        return Err(DeferError::Codec("binary: ragged length".into()));
+                    }
+                    serialized
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                }
+            };
+            if out.len() != count {
+                return Err(DeferError::Codec(format!(
+                    "decoded {} values, expected {count}",
+                    out.len()
+                )));
+            }
+            Ok(out)
+        };
+        match overhead {
+            Some(t) => t.time(work),
+            None => work(),
+        }
+    }
+}
+
+impl Default for Codec {
+    /// The paper's winning configuration: ZFP + LZ4.
+    fn default() -> Self {
+        Codec::new(
+            Serialization::Zfp(zfp::ZfpRate(DEFAULT_ZFP_RATE)),
+            Compression::Lz4,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn payload(n: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(n)
+    }
+
+    #[test]
+    fn all_codecs_round_trip() {
+        let data = payload(4097, 41);
+        let mut codecs = Codec::paper_sweep();
+        codecs.push(Codec::new(Serialization::Binary, Compression::Lz4));
+        codecs.push(Codec::new(Serialization::Binary, Compression::None));
+        for codec in codecs {
+            let (wire, mid) = codec.encode_f32s(&data, None);
+            let dec = codec.decode_f32s(&wire, mid, data.len(), None).unwrap();
+            assert_eq!(dec.len(), data.len());
+            if codec.serialization.is_lossless() {
+                assert_eq!(dec, data, "{}", codec.label());
+            } else {
+                // Lossy arm: zfp rate 24 keeps ~2^-14 of the block max.
+                for (a, b) in data.iter().zip(&dec) {
+                    assert!((a - b).abs() < 2e-3, "{}: {a} vs {b}", codec.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_codec_strings() {
+        assert_eq!(Serialization::parse("json").unwrap(), Serialization::Json);
+        assert_eq!(
+            Serialization::parse("zfp:16").unwrap(),
+            Serialization::Zfp(zfp::ZfpRate(16))
+        );
+        assert_eq!(
+            Serialization::parse("ZFP").unwrap(),
+            Serialization::Zfp(zfp::ZfpRate(DEFAULT_ZFP_RATE))
+        );
+        assert_eq!(Serialization::parse("binary").unwrap(), Serialization::Binary);
+        assert!(Serialization::parse("zfp:77").is_err());
+        assert!(Serialization::parse("protobuf").is_err());
+    }
+
+    #[test]
+    fn zfp_beats_json_on_payload() {
+        // Paper Table I row ordering: ZFP serialized weights are smaller
+        // than JSON serialized weights.
+        let data = payload(50_000, 42);
+        let json = Codec::new(Serialization::Json, Compression::None);
+        let zfpc = Codec::new(
+            Serialization::Zfp(zfp::ZfpRate(DEFAULT_ZFP_RATE)),
+            Compression::None,
+        );
+        let (jw, _) = json.encode_f32s(&data, None);
+        let (zw, _) = zfpc.encode_f32s(&data, None);
+        assert!(
+            (zw.len() as f64) < 0.5 * jw.len() as f64,
+            "zfp {} vs json {}",
+            zw.len(),
+            jw.len()
+        );
+    }
+
+    #[test]
+    fn lz4_reduces_json_payload() {
+        // JSON text is highly compressible; LZ4 must shrink it.
+        let data = payload(20_000, 43);
+        let plain = Codec::new(Serialization::Json, Compression::None);
+        let lz = Codec::new(Serialization::Json, Compression::Lz4);
+        let (pw, _) = plain.encode_f32s(&data, None);
+        let (lw, _) = lz.encode_f32s(&data, None);
+        assert!(lw.len() < pw.len());
+    }
+
+    #[test]
+    fn overhead_timer_accumulates() {
+        let t = SharedTimer::new();
+        let data = payload(10_000, 44);
+        let codec = Codec::default();
+        let (wire, mid) = codec.encode_f32s(&data, Some(&t));
+        let _ = codec.decode_f32s(&wire, mid, data.len(), Some(&t)).unwrap();
+        assert!(t.total() > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn decode_count_mismatch_rejected() {
+        let data = payload(64, 45);
+        let codec = Codec::new(Serialization::Binary, Compression::None);
+        let (wire, mid) = codec.encode_f32s(&data, None);
+        assert!(codec.decode_f32s(&wire, mid, 63, None).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Dense f32 tensor: the unit of data moving through the DEFER chain.
+//!
+//! Activations and weights are always f32 row-major (matching the
+//! `<f4`-LE `weights.bin` artifacts and the NHWC layout of the L2 models).
+
+use crate::error::{DeferError, Result};
+
+/// A shape-checked, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; the element count must match.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(DeferError::Tensor(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Deterministic synthetic tensor (for workload generation).
+    pub fn random(shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::util::prng::Rng::new(seed);
+        Tensor {
+            shape,
+            data: rng.normal_vec(n),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size of the raw payload in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn into_parts(self) -> (Vec<usize>, Vec<f32>) {
+        (self.shape, self.data)
+    }
+
+    /// Serialize data to little-endian bytes (shape travels in metadata).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse from little-endian bytes with a known shape.
+    pub fn from_le_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() % 4 != 0 {
+            return Err(DeferError::Tensor(format!(
+                "byte length {} not a multiple of 4",
+                bytes.len()
+            )));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Max absolute difference against another tensor (same shape required).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(DeferError::Tensor(format!(
+                "shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Relative L2 error vs a reference (0 when identical).
+    pub fn rel_l2_error(&self, reference: &Tensor) -> Result<f32> {
+        if self.shape != reference.shape {
+            return Err(DeferError::Tensor("shape mismatch".into()));
+        }
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = reference.data.iter().map(|b| b * b).sum();
+        Ok((num / den.max(1e-30)).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_round_trip() {
+        let t = Tensor::random(vec![3, 4, 5], 42);
+        let bytes = t.to_le_bytes();
+        assert_eq!(bytes.len(), t.byte_len());
+        let back = Tensor::from_le_bytes(vec![3, 4, 5], &bytes).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn from_le_bytes_rejects_ragged() {
+        assert!(Tensor::from_le_bytes(vec![1], &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+        assert_eq!(a.max_abs_diff(&a).unwrap(), 0.0);
+        assert!(a.rel_l2_error(&a).unwrap() < 1e-12);
+        let c = Tensor::new(vec![3], vec![0.0; 3]).unwrap();
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Tensor::random(vec![16], 9), Tensor::random(vec![16], 9));
+    }
+}

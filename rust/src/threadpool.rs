@@ -1,0 +1,279 @@
+//! Minimal worker thread pool + bounded SPSC-style pipe.
+//!
+//! No tokio in the offline environment; DEFER's runtime model is threads +
+//! blocking sockets anyway (the paper's Algorithms 1-2 are literally
+//! "spawn THREAD-1 / THREAD-2 ... pipe data -> THREAD-2"). `Pipe` is that
+//! pipe: a bounded MPSC channel with blocking send (backpressure) built on
+//! Mutex + Condvar.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{DeferError, Result};
+
+// ------------------------------------------------------------------ Pipe
+
+struct PipeState<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+struct PipeShared<T> {
+    state: Mutex<PipeState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Sending half of a bounded pipe.
+pub struct PipeSender<T> {
+    shared: Arc<PipeShared<T>>,
+}
+
+/// Receiving half of a bounded pipe.
+pub struct PipeReceiver<T> {
+    shared: Arc<PipeShared<T>>,
+}
+
+impl<T> Clone for PipeSender<T> {
+    fn clone(&self) -> Self {
+        PipeSender {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+/// Create a bounded pipe with the given capacity (>= 1).
+pub fn pipe<T>(capacity: usize) -> (PipeSender<T>, PipeReceiver<T>) {
+    let shared = Arc::new(PipeShared {
+        state: Mutex::new(PipeState {
+            queue: VecDeque::new(),
+            closed: false,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity: capacity.max(1),
+    });
+    (
+        PipeSender {
+            shared: Arc::clone(&shared),
+        },
+        PipeReceiver { shared },
+    )
+}
+
+impl<T> PipeSender<T> {
+    /// Blocking send; applies backpressure when the pipe is full.
+    pub fn send(&self, item: T) -> Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.queue.len() >= self.shared.capacity && !st.closed {
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(DeferError::ChannelClosed("pipe send"));
+        }
+        st.queue.push_back(item);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the pipe; receivers drain whatever remains, then get `None`.
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl<T> Drop for PipeSender<T> {
+    fn drop(&mut self) {
+        // Last sender closes the pipe (receiver holds one reference).
+        if Arc::strong_count(&self.shared) <= 2 {
+            self.close();
+        }
+    }
+}
+
+impl<T> PipeReceiver<T> {
+    /// Blocking receive; `None` after close + drain.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Current depth (for pipeline-balance diagnostics).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ------------------------------------------------------------- WorkerPool
+
+/// A set of named worker threads joined on drop; panics propagate as errors.
+pub struct WorkerPool {
+    handles: Vec<(String, JoinHandle<Result<()>>)>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool {
+            handles: Vec::new(),
+        }
+    }
+
+    /// Spawn a named worker returning `Result<()>`.
+    pub fn spawn<F>(&mut self, name: &str, f: F)
+    where
+        F: FnOnce() -> Result<()> + Send + 'static,
+    {
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("spawn worker");
+        self.handles.push((name.to_string(), handle));
+    }
+
+    /// Drop all handles without joining — used on error paths where a
+    /// worker may be blocked on I/O that only unblocks once the caller
+    /// releases its side of the connection.
+    pub fn detach(mut self) {
+        self.handles.clear();
+    }
+
+    /// Join all workers, collecting the first error (if any).
+    pub fn join(self) -> Result<()> {
+        let mut first_err = None;
+        for (name, h) in self.handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(DeferError::Coordinator(format!(
+                            "worker {name} panicked"
+                        )));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn pipe_fifo_order() {
+        let (tx, rx) = pipe::<u32>(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        tx.close();
+        let got: Vec<u32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pipe_backpressure_blocks_sender() {
+        let (tx, rx) = pipe::<u32>(2);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = Arc::clone(&sent);
+        let h = std::thread::spawn(move || {
+            for i in 0..10 {
+                tx.send(i).unwrap();
+                sent2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // Sender must be stuck near the capacity.
+        assert!(sent.load(Ordering::SeqCst) <= 3);
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            got.push(rx.recv().unwrap());
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipe_close_drains_then_none() {
+        let (tx, rx) = pipe::<u32>(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.close();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        assert!(tx.send(3).is_err());
+    }
+
+    #[test]
+    fn sender_drop_closes() {
+        let (tx, rx) = pipe::<u32>(8);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn pool_joins_and_propagates_errors() {
+        let mut pool = WorkerPool::new();
+        pool.spawn("ok", || Ok(()));
+        pool.spawn("bad", || {
+            Err(DeferError::Coordinator("intentional".into()))
+        });
+        assert!(pool.join().is_err());
+
+        let mut pool = WorkerPool::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            let hits = Arc::clone(&hits);
+            pool.spawn("w", move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            });
+        }
+        pool.join().unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn pool_reports_panic() {
+        let mut pool = WorkerPool::new();
+        pool.spawn("panics", || panic!("boom"));
+        assert!(pool.join().is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! Small shared utilities: seeded PRNG, byte formatting, timing helpers.
+
+pub mod prng;
+pub mod timer;
+
+/// Format a byte count as a human-readable string (`12.3 MB`).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "kB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in engineering units (`1.23 ms`).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(42), "42 B");
+        assert_eq!(fmt_bytes(1500), "1.50 kB");
+        assert_eq!(fmt_bytes(2_500_000), "2.50 MB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(std::time::Duration::from_millis(1500)), "1.500 s");
+        assert_eq!(fmt_duration(std::time::Duration::from_micros(1500)), "1.500 ms");
+        assert_eq!(fmt_duration(std::time::Duration::from_nanos(1500)), "1.5 us");
+    }
+}

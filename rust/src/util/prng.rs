@@ -1,0 +1,182 @@
+//! Deterministic PRNG (splitmix64 + xoshiro256**) for tests, benches and
+//! the property-test harness. No external `rand` crate is available in the
+//! offline environment, so this is the crate's randomness substrate.
+
+/// splitmix64 — used for seeding and as a simple standalone generator.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, deterministic.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded generator; any seed (including 0) is valid.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be > 0.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Lemire's multiply-shift rejection method.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let l = m as u64;
+            if l >= bound || l >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard-normal-ish f32 via sum of uniforms (Irwin–Hall, k=12).
+    /// Adequate for synthetic tensors; exact normality is irrelevant here.
+    pub fn normal_f32(&mut self) -> f32 {
+        let mut acc = 0.0f32;
+        for _ in 0..12 {
+            acc += self.f32();
+        }
+        acc - 6.0
+    }
+
+    /// Vector of synthetic activations.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    /// Random bytes (for codec fuzzing).
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let v = self.next_u64().to_le_bytes();
+            let take = (n - out.len()).min(8);
+            out.extend_from_slice(&v[..take]);
+        }
+        out
+    }
+
+    /// Compressible byte stream: runs + repeated motifs + noise, used to
+    /// exercise LZ4 match finding.
+    pub fn compressible_bytes(&mut self, n: usize) -> Vec<u8> {
+        let motif: Vec<u8> = (0..self.range(4, 64)).map(|_| self.next_u64() as u8).collect();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.below(3) {
+                0 => {
+                    let b = self.next_u64() as u8;
+                    let run = self.range(1, 128).min(n - out.len());
+                    out.extend(std::iter::repeat(b).take(run));
+                }
+                1 => {
+                    let take = motif.len().min(n - out.len());
+                    out.extend_from_slice(&motif[..take]);
+                }
+                _ => {
+                    let run = self.range(1, 32).min(n - out.len());
+                    for _ in 0..run {
+                        out.push(self.next_u64() as u8);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(1);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2] {
+            for _ in 0..50 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(3);
+        let xs = r.normal_vec(20_000);
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn bytes_len_exact() {
+        let mut r = Rng::new(4);
+        for n in [0, 1, 7, 8, 9, 1000] {
+            assert_eq!(r.bytes(n).len(), n);
+            assert_eq!(r.compressible_bytes(n.max(1)).len(), n.max(1));
+        }
+    }
+}

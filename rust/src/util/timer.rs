@@ -1,0 +1,65 @@
+//! Scoped timers feeding the overhead accounting (paper §IV "Overhead":
+//! time spent formatting data to be sent over the network).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonically accumulating nanosecond counter, shareable across threads.
+#[derive(Clone, Default, Debug)]
+pub struct SharedTimer {
+    nanos: Arc<AtomicU64>,
+}
+
+impl SharedTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, accumulating its duration.
+    #[inline]
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Add an externally measured duration.
+    #[inline]
+    pub fn add(&self, d: std::time::Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
+    }
+
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let t = SharedTimer::new();
+        t.time(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        t.add(std::time::Duration::from_millis(5));
+        assert!(t.total() >= std::time::Duration::from_millis(10));
+        t.reset();
+        assert_eq!(t.total(), std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let t = SharedTimer::new();
+        let t2 = t.clone();
+        t2.add(std::time::Duration::from_secs(1));
+        assert_eq!(t.total(), std::time::Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,91 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), slicing-by-8.
+//! Integrity check for every wire payload; §Perf upgraded the classic
+//! byte-at-a-time loop (~0.4 GB/s) to slicing-by-8 (~2-3 GB/s) since the
+//! wire layer was CRC-bound.
+
+use std::sync::OnceLock;
+
+fn tables() -> &'static [[u32; 256]; 8] {
+    static TABLES: OnceLock<[[u32; 256]; 8]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut t = [[0u32; 256]; 8];
+        for i in 0..256usize {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            t[0][i] = c;
+        }
+        for k in 1..8 {
+            for i in 0..256usize {
+                let prev = t[k - 1][i];
+                t[k][i] = t[0][(prev & 0xFF) as usize] ^ (prev >> 8);
+            }
+        }
+        t
+    })
+}
+
+fn table() -> &'static [u32; 256] {
+    &tables()[0]
+}
+
+/// CRC-32 of a buffer.
+pub fn crc32(data: &[u8]) -> u32 {
+    finish(update(init(), data))
+}
+
+/// Streaming API: `init() -> update()* -> finish()`. Lets the wire layer
+/// checksum header + payload without concatenating them (§Perf: saves a
+/// full payload copy per message).
+#[inline]
+pub fn init() -> u32 {
+    0xFFFF_FFFF
+}
+
+pub fn update(mut state: u32, data: &[u8]) -> u32 {
+    let t8 = tables();
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ state;
+        let hi = u32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+        state = t8[7][(lo & 0xFF) as usize]
+            ^ t8[6][((lo >> 8) & 0xFF) as usize]
+            ^ t8[5][((lo >> 16) & 0xFF) as usize]
+            ^ t8[4][(lo >> 24) as usize]
+            ^ t8[3][(hi & 0xFF) as usize]
+            ^ t8[2][((hi >> 8) & 0xFF) as usize]
+            ^ t8[1][((hi >> 16) & 0xFF) as usize]
+            ^ t8[0][(hi >> 24) as usize];
+    }
+    let t = table();
+    for &b in chunks.remainder() {
+        state = t[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+#[inline]
+pub fn finish(state: u32) -> u32 {
+    state ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard test vectors for CRC-32/IEEE.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = crc32(b"hello world");
+        let b = crc32(b"hello worle");
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,286 @@
+//! Wire protocol: typed, length-prefixed, CRC-checked messages with the
+//! paper's 512 kB chunked transfer.
+//!
+//! DEFER's sockets carry four kinds of traffic: the model architecture
+//! (meta JSON + HLO text), the weights array, intermediate inference
+//! results, and control messages (chain wiring, shutdown). One header
+//! layout covers all of them:
+//!
+//! ```text
+//! magic   u32le  0x44454652 ("DEFR")
+//! type    u8     MessageType
+//! _pad    u8[3]
+//! frame   u64le  frame id (inference cycle number; 0 for config traffic)
+//! wire    u64le  payload length on the wire (post-compression)
+//! serial  u64le  serialized length (pre-compression, for decompressor)
+//! count   u64le  f32 element count (0 for non-tensor payloads)
+//! crc     u32le  CRC-32 over header bytes [0..40) + the wire payload
+//! ```
+//!
+//! The payload follows in chunks of at most [`CHUNK_SIZE`] bytes — the
+//! paper's "chunked data transfer (with a default size of 512kB per chunk)".
+//! Chunking is observable by the link model: every chunk passes through the
+//! configured [`crate::netem::Link`] shaper and the per-socket byte
+//! counters, which is exactly where `nload` measured the paper's payloads.
+
+pub mod crc32;
+
+use std::io::{Read, Write};
+
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::netem::Link;
+
+/// Paper's default chunk size: 512 kB.
+pub const CHUNK_SIZE: usize = 512 * 1024;
+pub const MAGIC: u32 = 0x4445_4652; // "DEFR"
+/// Refuse absurd payloads (corrupt headers) before allocating.
+pub const MAX_PAYLOAD: u64 = 8 * 1024 * 1024 * 1024;
+
+/// Message discriminants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MessageType {
+    /// Model architecture: meta JSON + HLO text (configuration step).
+    ModelConfig = 1,
+    /// Weights array (configuration step).
+    Weights = 2,
+    /// Intermediate activation (distributed inference step).
+    Data = 3,
+    /// Final result returning to the dispatcher.
+    ResultMsg = 4,
+    /// Orderly shutdown of the chain.
+    Shutdown = 5,
+    /// Configuration acknowledged; node is ready.
+    Ready = 6,
+}
+
+impl MessageType {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => MessageType::ModelConfig,
+            2 => MessageType::Weights,
+            3 => MessageType::Data,
+            4 => MessageType::ResultMsg,
+            5 => MessageType::Shutdown,
+            6 => MessageType::Ready,
+            other => return Err(DeferError::Wire(format!("bad message type {other}"))),
+        })
+    }
+}
+
+/// A framed message (header + owned payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    pub msg_type: MessageType,
+    pub frame: u64,
+    /// Pre-compression serialized size (decompressor input).
+    pub serialized_len: u64,
+    /// f32 element count for tensor payloads.
+    pub count: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Message {
+    pub fn control(msg_type: MessageType) -> Self {
+        Message {
+            msg_type,
+            frame: 0,
+            serialized_len: 0,
+            count: 0,
+            payload: Vec::new(),
+        }
+    }
+
+    /// Header + payload size on the wire (what nload would count).
+    pub fn wire_size(&self) -> u64 {
+        HEADER_SIZE as u64 + self.payload.len() as u64
+    }
+}
+
+pub const HEADER_SIZE: usize = 4 + 1 + 3 + 8 + 8 + 8 + 8 + 4;
+
+fn encode_header(msg: &Message) -> [u8; HEADER_SIZE] {
+    let mut h = [0u8; HEADER_SIZE];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4] = msg.msg_type as u8;
+    h[8..16].copy_from_slice(&msg.frame.to_le_bytes());
+    h[16..24].copy_from_slice(&(msg.payload.len() as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&msg.serialized_len.to_le_bytes());
+    h[32..40].copy_from_slice(&msg.count.to_le_bytes());
+    // CRC covers the header fields too — a flipped frame id or length must
+    // not pass silently (frame ids order the FIFO results). Streamed, so
+    // header + payload are never concatenated (§Perf).
+    let crc = crc32::finish(crc32::update(
+        crc32::update(crc32::init(), &h[0..40]),
+        &msg.payload,
+    ));
+    h[40..44].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Write one message: header, then the payload in <=512 kB chunks, each
+/// chunk passing through the link shaper and byte counter.
+pub fn write_message(
+    w: &mut impl Write,
+    msg: &Message,
+    link: &Link,
+    counter: &ByteCounter,
+) -> Result<()> {
+    let header = encode_header(msg);
+    link.shape(header.len());
+    w.write_all(&header)?;
+    counter.add(header.len() as u64);
+    for chunk in msg.payload.chunks(CHUNK_SIZE.max(1)) {
+        link.shape(chunk.len());
+        w.write_all(chunk)?;
+        counter.add(chunk.len() as u64);
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one message written by [`write_message`]. Validates magic, type,
+/// size sanity and CRC.
+pub fn read_message(r: &mut impl Read, counter: &ByteCounter) -> Result<Message> {
+    let mut header = [0u8; HEADER_SIZE];
+    r.read_exact(&mut header)?;
+    counter.add(HEADER_SIZE as u64);
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(DeferError::Wire(format!("bad magic {magic:#x}")));
+    }
+    let msg_type = MessageType::from_u8(header[4])?;
+    let frame = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let wire_len = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let serialized_len = u64::from_le_bytes(header[24..32].try_into().unwrap());
+    let count = u64::from_le_bytes(header[32..40].try_into().unwrap());
+    let crc_expect = u32::from_le_bytes(header[40..44].try_into().unwrap());
+    if wire_len > MAX_PAYLOAD {
+        return Err(DeferError::Wire(format!("payload {wire_len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; wire_len as usize];
+    r.read_exact(&mut payload)?;
+    counter.add(wire_len);
+    let crc_actual = crc32::finish(crc32::update(
+        crc32::update(crc32::init(), &header[0..40]),
+        &payload,
+    ));
+    if crc_actual != crc_expect {
+        return Err(DeferError::Wire(format!(
+            "crc mismatch: {crc_actual:#x} != {crc_expect:#x}"
+        )));
+    }
+    Ok(Message {
+        msg_type,
+        frame,
+        serialized_len,
+        count,
+        payload,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn round_trip(msg: &Message) -> Message {
+        let mut buf = Vec::new();
+        let link = Link::ideal();
+        let tx = ByteCounter::new();
+        write_message(&mut buf, msg, &link, &tx).unwrap();
+        assert_eq!(tx.total(), msg.wire_size());
+        let rx = ByteCounter::new();
+        let got = read_message(&mut buf.as_slice(), &rx).unwrap();
+        assert_eq!(rx.total(), msg.wire_size());
+        got
+    }
+
+    #[test]
+    fn control_message_round_trip() {
+        let msg = Message::control(MessageType::Shutdown);
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn tensor_message_round_trip() {
+        let mut rng = Rng::new(51);
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 1234,
+            serialized_len: 999,
+            count: 250,
+            payload: rng.bytes(1000),
+        };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn multi_chunk_payload() {
+        let mut rng = Rng::new(52);
+        // > 2 chunks of 512 kB
+        let msg = Message {
+            msg_type: MessageType::Weights,
+            frame: 0,
+            serialized_len: 0,
+            count: 0,
+            payload: rng.bytes(CHUNK_SIZE * 2 + 777),
+        };
+        assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 1,
+            serialized_len: 8,
+            count: 2,
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        };
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        let n = buf.len();
+        buf[n - 3] ^= 0xFF; // flip payload byte
+        assert!(read_message(&mut buf.as_slice(), &ByteCounter::new()).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_type_detected() {
+        let msg = Message::control(MessageType::Ready);
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        let mut bad = buf.clone();
+        bad[0] ^= 1;
+        assert!(read_message(&mut bad.as_slice(), &ByteCounter::new()).is_err());
+        let mut bad_type = buf;
+        bad_type[4] = 77;
+        assert!(read_message(&mut bad_type.as_slice(), &ByteCounter::new()).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 1,
+            serialized_len: 0,
+            count: 0,
+            payload: vec![9; 100],
+        };
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_message(&mut buf.as_slice(), &ByteCounter::new()).is_err());
+    }
+
+    #[test]
+    fn oversize_header_rejected_before_alloc() {
+        let msg = Message::control(MessageType::Data);
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        // Forge a huge length field.
+        buf[16..24].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(read_message(&mut buf.as_slice(), &ByteCounter::new()).is_err());
+    }
+}

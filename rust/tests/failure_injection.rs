@@ -1,0 +1,251 @@
+//! Failure injection: the chain must fail loudly and helpfully, never
+//! silently. Exercises the coordinator's error paths against real tiny
+//! artifacts (`make artifacts`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use defer::config::{CodecConfig, DeferConfig};
+use defer::coordinator::compute_node::{
+    encode_architecture, run_compute_node, NodeStats,
+};
+use defer::coordinator::transport::Conn;
+use defer::energy::EnergyModel;
+use defer::metrics::ByteCounter;
+use defer::model::PartitionPlan;
+use defer::netem::Link;
+use defer::runtime::Engine;
+use defer::wire::{Message, MessageType};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+/// Spawn a compute node wired to local pairs; returns (its result handle,
+/// dispatcher-side conns).
+struct Harness {
+    node: std::thread::JoinHandle<defer::Result<()>>,
+    cfg_conn: Conn,
+    w_conn: Conn,
+    data_in: Conn,
+    #[allow(dead_code)]
+    result_out: Conn,
+}
+
+fn spawn_node(engine: Engine) -> Harness {
+    let (cfg_d, cfg_n) = Conn::local_pair(2);
+    let (w_d, w_n) = Conn::local_pair(2);
+    let (din_d, din_n) = Conn::local_pair(2);
+    let (dout_n, dout_d) = Conn::local_pair(2);
+    let stats = Arc::new(NodeStats::new(EnergyModel::default()));
+    let link = Arc::new(Link::ideal());
+    let node = std::thread::spawn(move || {
+        run_compute_node(
+            0,
+            engine,
+            cfg_n,
+            w_n,
+            din_n,
+            dout_n,
+            CodecConfig::default(),
+            link,
+            stats,
+            2,
+            1.0,
+            0.0,
+        )
+    });
+    Harness {
+        node,
+        cfg_conn: cfg_d,
+        w_conn: w_d,
+        data_in: din_d,
+        result_out: dout_d,
+    }
+}
+
+fn send(conn: &mut Conn, msg: &Message) {
+    conn.send(msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+}
+
+#[test]
+fn node_rejects_data_before_config() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut h = spawn_node(engine);
+    // Wrong phase: Data on the config socket.
+    send(
+        &mut h.cfg_conn,
+        &Message {
+            msg_type: MessageType::Data,
+            frame: 0,
+            serialized_len: 0,
+            count: 0,
+            payload: vec![],
+        },
+    );
+    let err = h.node.join().unwrap().unwrap_err();
+    assert!(format!("{err}").contains("expected ModelConfig"), "{err}");
+}
+
+#[test]
+fn node_rejects_truncated_weights() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", 2).unwrap();
+    let spec = &plan.parts[0];
+    let hlo = spec.read_hlo().unwrap();
+    let mut h = spawn_node(engine);
+
+    let arch = encode_architecture(spec, "dispatcher", &hlo);
+    let arch_len = arch.len();
+    send(
+        &mut h.cfg_conn,
+        &Message {
+            msg_type: MessageType::ModelConfig,
+            frame: 0,
+            serialized_len: arch_len as u64,
+            count: 0,
+            payload: arch,
+        },
+    );
+    // Weights with half the elements, binary codec mismatch vs manifest.
+    let n_good: usize = spec.weights.iter().map(|w| w.elements).sum();
+    let flat = vec![0.0f32; n_good / 2];
+    let codec = CodecConfig::default().weights;
+    let (payload, mid) = codec.encode_f32s(&flat, None);
+    send(
+        &mut h.w_conn,
+        &Message {
+            msg_type: MessageType::Weights,
+            frame: 0,
+            serialized_len: mid as u64,
+            count: flat.len() as u64,
+            payload,
+        },
+    );
+    let err = h.node.join().unwrap().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("manifest wants"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn node_rejects_corrupt_architecture_payload() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut h = spawn_node(engine);
+    // Valid frame, garbage payload.
+    send(
+        &mut h.cfg_conn,
+        &Message {
+            msg_type: MessageType::ModelConfig,
+            frame: 0,
+            serialized_len: 8,
+            count: 0,
+            payload: vec![0xFF; 8],
+        },
+    );
+    assert!(h.node.join().unwrap().is_err());
+}
+
+#[test]
+fn node_inference_phase_rejects_config_replay() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", 2).unwrap();
+    let spec = &plan.parts[0];
+    let hlo = spec.read_hlo().unwrap();
+    let mut h = spawn_node(engine);
+    let arch = encode_architecture(spec, "dispatcher", &hlo);
+    let arch_len = arch.len();
+    send(
+        &mut h.cfg_conn,
+        &Message {
+            msg_type: MessageType::ModelConfig,
+            frame: 0,
+            serialized_len: arch_len as u64,
+            count: 0,
+            payload: arch,
+        },
+    );
+    let flat: Vec<f32> = plan.parts[0]
+        .read_weights()
+        .unwrap()
+        .into_iter()
+        .flatten()
+        .collect();
+    let codec = CodecConfig::default().weights;
+    let (payload, mid) = codec.encode_f32s(&flat, None);
+    send(
+        &mut h.w_conn,
+        &Message {
+            msg_type: MessageType::Weights,
+            frame: 0,
+            serialized_len: mid as u64,
+            count: flat.len() as u64,
+            payload,
+        },
+    );
+    // Wait for Ready.
+    let ready = h.cfg_conn.recv(&ByteCounter::new()).unwrap();
+    assert_eq!(ready.msg_type, MessageType::Ready);
+    // Now replay a Weights message on the DATA path: must be rejected.
+    send(
+        &mut h.data_in,
+        &Message {
+            msg_type: MessageType::Weights,
+            frame: 1,
+            serialized_len: 0,
+            count: 0,
+            payload: vec![],
+        },
+    );
+    let err = h.node.join().unwrap().unwrap_err();
+    assert!(format!("{err}").contains("unexpected"), "{err}");
+}
+
+#[test]
+fn chain_missing_artifacts_is_helpful() {
+    let mut cfg = DeferConfig::default();
+    cfg.artifacts_dir = PathBuf::from("/nonexistent");
+    cfg.profile = "tiny".into();
+    let err = defer::coordinator::chain::ChainRunner::new(cfg).err().unwrap();
+    assert!(format!("{err}").contains("make artifacts"));
+}
+
+#[test]
+fn chain_rejects_unbuildable_node_count() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = DeferConfig::default();
+    cfg.artifacts_dir = artifacts();
+    cfg.profile = "tiny".into();
+    cfg.model = "resnet50".into();
+    cfg.nodes = 7; // tiny profile ships 1/2/4 only
+    assert!(defer::coordinator::chain::ChainRunner::new(cfg).is_err());
+}
+
+#[test]
+fn lossy_codec_on_architecture_socket_is_rejected_by_decode() {
+    // The architecture payload is bytes, not floats — feeding it through a
+    // float codec would corrupt it; the node's strict parse catches this.
+    let payload = b"definitely not an architecture".to_vec();
+    assert!(defer::coordinator::compute_node::decode_architecture(&payload).is_err());
+}

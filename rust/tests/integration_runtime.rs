@@ -1,0 +1,117 @@
+//! Runtime integration: AOT artifacts -> PJRT -> numerics vs the Python
+//! reference. Requires `make artifacts` (tiny profile).
+
+use std::path::PathBuf;
+
+use defer::model::{PartitionPlan, ReferenceVectors};
+use defer::runtime::{Engine, Executable};
+use defer::tensor::Tensor;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn single_partition_matches_python_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", 1).unwrap();
+    let exe = Executable::load(&engine, &plan.parts[0]).unwrap();
+    let rv = ReferenceVectors::load(&artifacts(), "tiny", "resnet50").unwrap();
+    let out = exe.run(&rv.input).unwrap();
+    let err = out.max_abs_diff(&rv.output).unwrap();
+    let rel = out.rel_l2_error(&rv.output).unwrap();
+    assert!(
+        rel < 1e-3,
+        "rust PJRT output deviates from python: max {err}, rel l2 {rel}"
+    );
+}
+
+#[test]
+fn partition_chain_composes_to_reference() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    for n in [2usize, 4] {
+        let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", n).unwrap();
+        let exes: Vec<Executable> = plan
+            .parts
+            .iter()
+            .map(|p| Executable::load(&engine, p).unwrap())
+            .collect();
+        let rv = ReferenceVectors::load(&artifacts(), "tiny", "resnet50").unwrap();
+        let mut act = rv.input.clone();
+        for exe in &exes {
+            act = exe.run(&act).unwrap();
+        }
+        let rel = act.rel_l2_error(&rv.output).unwrap();
+        assert!(rel < 1e-3, "{n}-way chain rel l2 {rel}");
+    }
+}
+
+#[test]
+fn vgg16_reference_holds_too() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "vgg16", 2).unwrap();
+    let rv = ReferenceVectors::load(&artifacts(), "tiny", "vgg16").unwrap();
+    let mut act = rv.input.clone();
+    for p in &plan.parts {
+        let exe = Executable::load(&engine, p).unwrap();
+        act = exe.run(&act).unwrap();
+    }
+    assert!(act.rel_l2_error(&rv.output).unwrap() < 1e-3);
+}
+
+#[test]
+fn executable_rejects_wrong_input_shape() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", 1).unwrap();
+    let exe = Executable::load(&engine, &plan.parts[0]).unwrap();
+    let bad = Tensor::zeros(vec![1, 16, 16, 3]);
+    assert!(exe.run(&bad).is_err());
+}
+
+#[test]
+fn executable_rejects_wrong_weight_payload() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "resnet50", 2).unwrap();
+    let spec = &plan.parts[0];
+    let hlo = spec.read_hlo().unwrap();
+    let mut weights = spec.read_weights().unwrap();
+    weights.pop(); // drop one array
+    assert!(Executable::from_parts(&engine, &hlo, spec, weights).is_err());
+}
+
+#[test]
+fn run_is_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let plan = PartitionPlan::load(&artifacts(), "tiny", "vgg16", 1).unwrap();
+    let exe = Executable::load(&engine, &plan.parts[0]).unwrap();
+    let x = Tensor::random(exe.input_shape().to_vec(), 99);
+    let a = exe.run(&x).unwrap();
+    let b = exe.run(&x).unwrap();
+    assert_eq!(a, b, "same input must give bitwise-same output");
+}
