@@ -30,7 +30,8 @@ fn main() -> defer::Result<()> {
     cfg.model = "resnet50".into();
     cfg.nodes = nodes;
     cfg.tcp = true;
-    cfg.base_port = 47_800;
+    // Pin the port range CORE-style; omit for ephemeral binds.
+    cfg.base_port = Some(47_800);
     cfg.link = LinkSpec::gigabit_lan();
     // Edge-device speed emulation (see DESIGN.md §Substitutions): floor
     // stage compute to a 50-MFLOPS device, the paper's TF-on-edge-CPU

@@ -1,12 +1,20 @@
 //! Pipeline-balance study — the paper's future-work direction
 //! ("heterogeneous model partitions ... for higher inference throughput").
 //!
-//! Runs the chain at several node counts, measures each stage's busy time
-//! (its compute energy divided by TDP), and reports the pipeline imbalance
-//! factor: bottleneck-stage time / mean-stage time. A perfectly balanced
-//! chain scores 1.0; the paper's layer-count-balanced partitioner (which
-//! the artifacts use) leaves measurable imbalance that heterogeneous
-//! FLOPs-aware partitioning would remove — quantified here per node count.
+//! Part 1 runs the chain at several node counts, measures each stage's
+//! busy time (its compute energy divided by TDP), and reports the
+//! pipeline imbalance factor: bottleneck-stage time / mean-stage time.
+//! A perfectly balanced chain scores 1.0; the paper's layer-count-
+//! balanced partitioner (which the artifacts use) leaves measurable
+//! imbalance that heterogeneous FLOPs-aware partitioning would remove —
+//! quantified here per node count.
+//!
+//! Part 2 acts on that imbalance with the topology layer (the SEIFER /
+//! placement-paper direction): the cluster gets heterogeneous per-hop
+//! links (wifi dispatcher uplink, gigabit inside) and the bottleneck
+//! stage is replicated across two round-robin workers, lifting pipeline
+//! throughput under deterministic edge-device emulation while results
+//! stay in FIFO order.
 //!
 //! ```text
 //! make artifacts
@@ -16,6 +24,7 @@
 use defer::bench::Table;
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
 use defer::runtime::Engine;
 
 fn main() -> defer::Result<()> {
@@ -84,5 +93,63 @@ fn main() -> defer::Result<()> {
     println!("imbalance > 1 quantifies the headroom the paper's future-work");
     println!("heterogeneous partitioning would recover (throughput is set by");
     println!("the bottleneck stage in a FIFO pipeline).");
+
+    // ---- Part 2: replicate the bottleneck over heterogeneous links ----
+    println!();
+    println!("== replicating the bottleneck stage (wifi uplink, gigabit cluster) ==");
+    let stages = 4usize;
+    let mut base = DeferConfig::default();
+    base.profile = "tiny".into();
+    base.model = "resnet50".into();
+    base.nodes = stages;
+    // Wifi from the dispatcher into the cluster, gigabit between stages
+    // and on the return link.
+    let mut links = vec![LinkSpec::gigabit_lan(); stages + 1];
+    links[0] = LinkSpec::wifi();
+    base.per_hop_links = links;
+    // Deterministic edge-device emulation: stage time is a constant of
+    // the plan, so the replication speedup is reproducible.
+    base.emulated_mflops = 50.0;
+
+    let uniform = match ChainRunner::with_engine(base.clone(), engine.clone()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping part 2: {e}");
+            return Ok(());
+        }
+    };
+    // The FIFO pipeline's rate is set by the stage with the most FLOPs.
+    let (bottleneck, _) = uniform
+        .plan()
+        .parts
+        .iter()
+        .enumerate()
+        .fold((0usize, 0u64), |acc, (i, p)| {
+            if p.flops > acc.1 {
+                (i, p.flops)
+            } else {
+                acc
+            }
+        });
+    let r_uni = uniform.run_frames(frames)?;
+
+    let mut replicated = base;
+    replicated.replicas = vec![1; stages];
+    replicated.replicas[bottleneck] = 2;
+    let r_rep = ChainRunner::with_engine(replicated, engine)?.run_frames(frames)?;
+
+    println!(
+        "uniform chain      : {:.3} cycles/s ({} workers)",
+        r_uni.throughput, r_uni.workers
+    );
+    println!(
+        "stage p{bottleneck} replicated x2: {:.3} cycles/s ({} workers, {:+.0}%)",
+        r_rep.throughput,
+        r_rep.workers,
+        (r_rep.throughput / r_uni.throughput - 1.0) * 100.0
+    );
+    if let Some(err) = r_rep.reference_error {
+        println!("max |err| vs reference (order preserved): {err:.3e}");
+    }
     Ok(())
 }

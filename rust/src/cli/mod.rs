@@ -69,6 +69,13 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of strings (`--links wifi,gigabit,gigabit`);
+    /// `None` when the flag is absent.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
     /// Comma-separated list of integers (`--parts 4,6,8`).
     pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(key) {
@@ -111,6 +118,16 @@ mod tests {
         assert_eq!(a.get_usize_list("parts", &[1]).unwrap(), vec![4, 6, 8]);
         assert_eq!(a.get_usize_list("missing", &[1, 2]).unwrap(), vec![1, 2]);
         assert_eq!(a.get_f64("tdp", 15.0).unwrap(), 15.0);
+    }
+
+    #[test]
+    fn string_lists() {
+        let a = parse(&["run", "--links", "wifi, gigabit,gigabit"]);
+        assert_eq!(
+            a.get_list("links").unwrap(),
+            vec!["wifi".to_string(), "gigabit".to_string(), "gigabit".to_string()]
+        );
+        assert!(a.get_list("missing").is_none());
     }
 
     #[test]

@@ -40,10 +40,20 @@ pub struct DeferConfig {
     pub profile: String,
     /// Model name: resnet50 | vgg16 | vgg19.
     pub model: String,
-    /// Number of compute nodes (1 = single-device baseline).
+    /// Number of chain stages (1 = single-device baseline).
     pub nodes: usize,
+    /// Worker replicas per stage, fed round-robin with FIFO merge
+    /// (empty = 1 per stage, the paper's chain). Length must equal
+    /// `nodes` when set.
+    pub replicas: Vec<usize>,
     pub codecs: CodecConfig,
+    /// Uniform link spec, used for every hop when `per_hop_links` is
+    /// empty.
     pub link: LinkSpec,
+    /// Heterogeneous per-hop links: `nodes + 1` entries (dispatcher
+    /// uplink, inter-stage hops, return link) or a single entry applied
+    /// to all hops. Empty = uniform `link`.
+    pub per_hop_links: Vec<LinkSpec>,
     pub energy: EnergyModel,
     /// Bounded pipe depth between chain stages (backpressure window).
     pub pipe_depth: usize,
@@ -64,8 +74,10 @@ pub struct DeferConfig {
     pub emulated_mflops: f64,
     /// Run the chain over real TCP loopback sockets instead of in-process.
     pub tcp: bool,
-    /// Base TCP port for chain sockets.
-    pub base_port: u16,
+    /// Optional fixed base TCP port for chain sockets (CORE-style
+    /// deployments with predictable ports). `None` = ephemeral binds,
+    /// immune to port collisions across parallel runs.
+    pub base_port: Option<u16>,
 }
 
 impl Default for DeferConfig {
@@ -75,14 +87,16 @@ impl Default for DeferConfig {
             profile: "edge".into(),
             model: "resnet50".into(),
             nodes: 4,
+            replicas: Vec::new(),
             codecs: CodecConfig::default(),
             link: LinkSpec::ideal(),
+            per_hop_links: Vec::new(),
             energy: EnergyModel::default(),
             pipe_depth: 4,
             compute_slowdown: 1.0,
             emulated_mflops: 0.0,
             tcp: false,
-            base_port: 47_000,
+            base_port: None,
         }
     }
 }
@@ -127,8 +141,22 @@ impl DeferConfig {
         if let Some(x) = obj.get("nodes") {
             cfg.nodes = x.as_usize()?;
         }
+        if let Some(x) = obj.get("replicas") {
+            cfg.replicas = x
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+        }
         if let Some(x) = obj.get("link") {
             cfg.link = LinkSpec::parse(x.as_str()?)?;
+        }
+        if let Some(x) = obj.get("per_hop_links") {
+            cfg.per_hop_links = x
+                .as_arr()?
+                .iter()
+                .map(|v| LinkSpec::parse(v.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
         }
         if let Some(x) = obj.get("pipe_depth") {
             cfg.pipe_depth = x.as_usize()?;
@@ -143,7 +171,14 @@ impl DeferConfig {
             cfg.tcp = matches!(x, Json::Bool(true));
         }
         if let Some(x) = obj.get("base_port") {
-            cfg.base_port = x.as_usize()? as u16;
+            let p = x.as_usize()?;
+            if p > u16::MAX as usize {
+                return Err(DeferError::Config(format!(
+                    "base_port {p} out of range (max {})",
+                    u16::MAX
+                )));
+            }
+            cfg.base_port = Some(p as u16);
         }
         if let Some(x) = obj.get("tdp_watts") {
             cfg.energy.tdp_watts = x.as_f64()?;
@@ -176,16 +211,29 @@ impl DeferConfig {
             self.artifacts_dir = PathBuf::from(d);
         }
         self.nodes = args.get_usize("nodes", self.nodes)?;
+        if args.get("replicas").is_some() {
+            self.replicas = args.get_usize_list("replicas", &[])?;
+        }
         self.pipe_depth = args.get_usize("pipe-depth", self.pipe_depth)?;
         self.compute_slowdown = args.get_f64("slowdown", self.compute_slowdown)?;
         self.emulated_mflops = args.get_f64("emulated-mflops", self.emulated_mflops)?;
         if let Some(l) = args.get("link") {
             self.link = LinkSpec::parse(l)?;
         }
+        if let Some(items) = args.get_list("links") {
+            self.per_hop_links = items
+                .iter()
+                .map(|s| LinkSpec::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
         if args.has("tcp") {
             self.tcp = true;
         }
-        self.base_port = args.get_usize("base-port", self.base_port as usize)? as u16;
+        if let Some(p) = args.get("base-port") {
+            self.base_port = Some(p.parse().map_err(|_| {
+                DeferError::Cli(format!("--base-port wants a port number, got {p:?}"))
+            })?);
+        }
         self.energy.tdp_watts = args.get_f64("tdp", self.energy.tdp_watts)?;
         if let Some(s) = args.get("data-serialization") {
             self.codecs.data.serialization = Serialization::parse(s)?;
@@ -206,6 +254,32 @@ impl DeferConfig {
     pub fn validate(&self) -> Result<()> {
         if self.nodes == 0 {
             return Err(DeferError::Config("nodes must be >= 1".into()));
+        }
+        if !self.replicas.is_empty() {
+            if self.replicas.len() != self.nodes {
+                return Err(DeferError::Config(format!(
+                    "replicas lists {} stages for {} nodes",
+                    self.replicas.len(),
+                    self.nodes
+                )));
+            }
+            if let Some(i) = self.replicas.iter().position(|&r| r == 0) {
+                return Err(DeferError::Config(format!(
+                    "stage {i}: replicas must be >= 1"
+                )));
+            }
+        }
+        if !self.per_hop_links.is_empty()
+            && self.per_hop_links.len() != 1
+            && self.per_hop_links.len() != self.nodes + 1
+        {
+            return Err(DeferError::Config(format!(
+                "per_hop_links wants 1 or {} entries ({} stages + dispatcher \
+                 uplink and return), got {}",
+                self.nodes + 1,
+                self.nodes,
+                self.per_hop_links.len()
+            )));
         }
         if self.pipe_depth == 0 {
             return Err(DeferError::Config("pipe_depth must be >= 1".into()));
@@ -274,6 +348,64 @@ mod tests {
         );
         // Unspecified weight compression keeps the default (LZ4).
         assert_eq!(cfg.codecs.weights.compression, Compression::Lz4);
+    }
+
+    #[test]
+    fn topology_surface_round_trip() {
+        let text = r#"{
+            "profile": "tiny",
+            "nodes": 4,
+            "replicas": [1, 2, 1, 1],
+            "per_hop_links": ["wifi", "gigabit", "gigabit", "gigabit", "gigabit"],
+            "base_port": 48000
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert_eq!(cfg.replicas, vec![1, 2, 1, 1]);
+        assert_eq!(cfg.per_hop_links.len(), 5);
+        assert_eq!(cfg.per_hop_links[0], LinkSpec::wifi());
+        assert_eq!(cfg.per_hop_links[1], LinkSpec::gigabit_lan());
+        assert_eq!(cfg.base_port, Some(48_000));
+        // Defaults stay replication-free with ephemeral ports.
+        let d = DeferConfig::default();
+        assert!(d.replicas.is_empty());
+        assert!(d.per_hop_links.is_empty());
+        assert_eq!(d.base_port, None);
+    }
+
+    #[test]
+    fn invalid_topology_rejected() {
+        assert!(DeferConfig::from_json_str(r#"{"base_port": 70000}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"nodes": 2, "replicas": [1, 0]}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"nodes": 2, "replicas": [1, 1, 1]}"#).is_err());
+        // 2 stages need 1 or 3 per-hop entries, not 2.
+        assert!(DeferConfig::from_json_str(
+            r#"{"nodes": 2, "per_hop_links": ["wifi", "gigabit"]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cli_topology_overrides() {
+        let raw: Vec<String> = [
+            "run",
+            "--nodes",
+            "4",
+            "--replicas",
+            "1,2,1,1",
+            "--links",
+            "wifi,gigabit,gigabit,gigabit,gigabit",
+            "--base-port",
+            "48100",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.replicas, vec![1, 2, 1, 1]);
+        assert_eq!(cfg.per_hop_links.len(), 5);
+        assert_eq!(cfg.per_hop_links[0], LinkSpec::wifi());
+        assert_eq!(cfg.base_port, Some(48_100));
     }
 
     #[test]

@@ -96,6 +96,7 @@ impl SingleDevice {
             model: self.cfg.model.clone(),
             profile: self.cfg.profile.clone(),
             nodes: 1,
+            workers: 1,
             cycles: frames,
             elapsed,
             throughput: frames as f64 / elapsed.as_secs_f64(),

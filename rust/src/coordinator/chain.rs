@@ -1,32 +1,43 @@
-//! Chain orchestration: build the dispatcher + N compute nodes topology,
-//! run the configuration step, pump frames, and collect a [`RunReport`].
+//! Chain orchestration, reduced to **plan → wire → spawn → report**.
 //!
-//! Two transports, selected by `DeferConfig::tcp`:
-//! * **in-process** — every hop is a bounded byte pipe (default; fastest to
-//!   stand up, identical wire accounting);
-//! * **TCP loopback** — every hop is a real kernel socket, one listener per
-//!   node, matching the paper's CORE deployment on a single host.
+//! * **plan** — derive the declarative [`Topology`] from the config:
+//!   stage count, per-stage worker replication, per-hop links.
+//! * **wire** — hand the topology to [`crate::topology::wiring`], which
+//!   establishes every connection for either transport (in-process byte
+//!   pipes, or TCP loopback with ephemeral ports — the paper's CORE
+//!   deployment on one host) and spawns deal/merge junctions for
+//!   replicated stage boundaries.
+//! * **spawn** — one thread per worker replica (its own "device"), each
+//!   owning an independent instance of its uplink's [`Link`] shaper
+//!   (replication adds physical links, not shared capacity).
+//! * **report** — run the configuration + inference phases and assemble
+//!   the [`RunReport`].
 //!
-//! Either way each compute node runs on its own thread (its own "device"),
-//! links run through the [`crate::netem`] shaper, and all traffic passes
-//! the same framing/codec stack.
+//! With default config (replicas = 1 per stage, uniform links) the wiring
+//! degenerates to the paper's chain: no junctions, identical wire bytes,
+//! identical `RunReport` byte accounting. One deliberate semantic change
+//! for *shaped* links: every hop now owns an independent token bucket
+//! (each hop is its own physical link, as under CORE), where the old
+//! builder funneled all hops through a single shared bucket. Ideal-link
+//! runs are unaffected; shaped-run timing is now per-hop rather than
+//! shared-medium.
 
-use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::DeferConfig;
-use crate::coordinator::compute_node::{run_compute_node, NodeStats};
-use crate::coordinator::dispatcher::{configure_nodes, run_inference, DispatcherStats};
-use crate::coordinator::transport::Conn;
+use crate::coordinator::compute_node::{run_compute_node, ComputeOptions, NodeStats};
+use crate::coordinator::dispatcher::{
+    configure_nodes, run_inference, DispatcherStats, WorkerAssignment,
+};
 use crate::coordinator::RunReport;
 use crate::error::{DeferError, Result};
-use crate::metrics::ByteCounter;
 use crate::model::{PartitionPlan, ReferenceVectors};
 use crate::netem::Link;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use crate::threadpool::WorkerPool;
+use crate::topology::{wiring, Topology};
 
 /// A ready-to-run DEFER deployment.
 pub struct ChainRunner {
@@ -77,136 +88,69 @@ impl ChainRunner {
 
     /// Run `frames` inference cycles through the chain; returns the report.
     pub fn run_frames(&self, frames: u64) -> Result<RunReport> {
-        let n = self.cfg.nodes;
-        let link = Arc::new(Link::new(self.cfg.link));
+        // ---- plan: declarative topology from config ----
+        let topo = Topology::from_config(&self.cfg)?;
+        if topo.num_stages() != self.plan.parts.len() {
+            return Err(DeferError::Coordinator(format!(
+                "topology has {} stages for {} partitions",
+                topo.num_stages(),
+                self.plan.parts.len()
+            )));
+        }
+        let views = topo.worker_views();
         let dstats = Arc::new(DispatcherStats::new(self.cfg.energy));
-        let node_stats: Vec<Arc<NodeStats>> = (0..n)
+        let node_stats: Vec<Arc<NodeStats>> = views
+            .iter()
             .map(|_| Arc::new(NodeStats::new(self.cfg.energy)))
             .collect();
 
-        // ---- build topology ----
-        let mut node_conns: Vec<(Conn, Conn, Conn, Conn)> = Vec::with_capacity(n);
-        let mut dispatcher_side: Vec<(Conn, Conn)> = Vec::with_capacity(n);
-        let (to_first, from_last);
+        // ---- wire: connection bundles for either transport ----
+        let wiring::Wiring {
+            mut control,
+            to_first,
+            from_last,
+            workers,
+            junctions,
+        } = wiring::build(
+            &topo,
+            &wiring::TransportOptions {
+                tcp: self.cfg.tcp,
+                base_port: self.cfg.base_port,
+                pipe_depth: self.cfg.pipe_depth,
+            },
+        )?;
 
-        if self.cfg.tcp {
-            // One listener per node for (config, weights, data-in) plus a
-            // dispatcher listener for the chain's return link.
-            let base = self.cfg.base_port;
-            let mut listeners = Vec::with_capacity(n * 3);
-            for i in 0..n {
-                for k in 0..3u16 {
-                    let port = base + (i as u16) * 3 + k;
-                    listeners.push(
-                        TcpListener::bind(("127.0.0.1", port)).map_err(|e| {
-                            DeferError::Coordinator(format!("bind 127.0.0.1:{port}: {e}"))
-                        })?,
-                    );
-                }
-            }
-            let ret_port = base + (n as u16) * 3;
-            let ret_listener = TcpListener::bind(("127.0.0.1", ret_port))
-                .map_err(|e| DeferError::Coordinator(format!("bind :{ret_port}: {e}")))?;
-
-            // Dispatcher connects out; each node accepts its three inbound
-            // connections on its own thread later. To avoid accept/connect
-            // deadlock we spawn acceptor threads per node now.
-            let mut acceptors = Vec::with_capacity(n);
-            for i in 0..n {
-                let cfg_l = listeners[i * 3].try_clone()?;
-                let w_l = listeners[i * 3 + 1].try_clone()?;
-                let d_l = listeners[i * 3 + 2].try_clone()?;
-                acceptors.push(std::thread::spawn(move || -> Result<(Conn, Conn, Conn)> {
-                    Ok((
-                        Conn::tcp_accept(&cfg_l)?,
-                        Conn::tcp_accept(&w_l)?,
-                        Conn::tcp_accept(&d_l)?,
-                    ))
-                }));
-            }
-            // Dispatcher-side connections.
-            for i in 0..n {
-                let cfg_c = Conn::tcp_connect(&format!("127.0.0.1:{}", base + (i as u16) * 3))?;
-                let w_c = Conn::tcp_connect(&format!("127.0.0.1:{}", base + (i as u16) * 3 + 1))?;
-                dispatcher_side.push((cfg_c, w_c));
-            }
-            to_first = Conn::tcp_connect(&format!("127.0.0.1:{}", base + 2))?;
-            // Walk the chain in order: node i's acceptor can only finish
-            // once its data-in peer (dispatcher or node i-1) has connected,
-            // so join acceptor i, THEN dial node i's outbound link — which
-            // unblocks acceptor i+1.
-            for (i, a) in acceptors.into_iter().enumerate() {
-                let (cfg_c, w_c, d_in) = a.join().map_err(|_| {
-                    DeferError::Coordinator("acceptor thread panicked".into())
-                })??;
-                let out = if i + 1 < n {
-                    Conn::tcp_connect(&format!("127.0.0.1:{}", base + ((i + 1) as u16) * 3 + 2))?
-                } else {
-                    Conn::tcp_connect(&format!("127.0.0.1:{ret_port}"))?
-                };
-                node_conns.push((cfg_c, w_c, d_in, out));
-            }
-            from_last = Conn::tcp_accept(&ret_listener)?;
-        } else {
-            let depth = self.cfg.pipe_depth;
-            let mut data_in: Vec<Conn> = Vec::with_capacity(n);
-            let (tf, first_in) = Conn::local_pair(depth);
-            to_first = tf;
-            data_in.push(first_in);
-            let mut outs: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
-            for i in 0..n - 1 {
-                let (out, inn) = Conn::local_pair(depth);
-                outs[i] = Some(out);
-                data_in.push(inn);
-            }
-            let (last_out, fl) = Conn::local_pair(depth);
-            outs[n - 1] = Some(last_out);
-            from_last = fl;
-            for (i, d_in) in data_in.into_iter().enumerate() {
-                let (cfg_d, cfg_n) = Conn::local_pair(2);
-                let (w_d, w_n) = Conn::local_pair(2);
-                dispatcher_side.push((cfg_d, w_d));
-                node_conns.push((cfg_n, w_n, d_in, outs[i].take().unwrap()));
-            }
-        }
-
-        // ---- spawn compute nodes ----
+        // ---- spawn one thread per worker replica ----
         let mut pool = WorkerPool::new();
-        for (i, (cfg_c, w_c, d_in, d_out)) in node_conns.into_iter().enumerate() {
+        for (wc, stats) in workers.into_iter().zip(&node_stats) {
             let engine = self.engine.clone();
             let codecs = self.cfg.codecs;
-            let link = Arc::clone(&link);
-            let stats = Arc::clone(&node_stats[i]);
-            let depth = self.cfg.pipe_depth;
-            let slowdown = self.cfg.compute_slowdown;
-            let mflops = self.cfg.emulated_mflops;
-            pool.spawn(&format!("compute-node-{i}"), move || {
-                run_compute_node(
-                    i, engine, cfg_c, w_c, d_in, d_out, codecs, link, stats, depth, slowdown,
-                    mflops,
-                )
+            // Each replica owns an independent instance of its uplink.
+            let out_link = Arc::new(Link::new(topo.hop_link(wc.view.stage + 1)));
+            let stats = Arc::clone(stats);
+            let opts = ComputeOptions {
+                pipe_depth: self.cfg.pipe_depth,
+                compute_slowdown: self.cfg.compute_slowdown,
+                emulated_mflops: self.cfg.emulated_mflops,
+            };
+            pool.spawn(&format!("compute-{}", wc.view.name), move || {
+                run_compute_node(engine, wc, codecs, out_link, stats, opts)
             });
         }
 
         // ---- configuration step ----
-        let next_hops: Vec<String> = (0..n)
-            .map(|i| {
-                if i + 1 < n {
-                    format!("node{}", i + 1)
-                } else {
-                    "dispatcher".to_string()
-                }
+        // Every replica of stage i receives partition i; control-plane
+        // sends to a stage are shaped like its ingress hop.
+        let assignments: Vec<WorkerAssignment> = views
+            .iter()
+            .map(|v| WorkerAssignment {
+                spec_index: v.stage,
+                next_hop: v.successors.join(","),
+                link: Arc::new(Link::new(topo.hop_link(v.stage))),
             })
             .collect();
-        configure_nodes(
-            &self.plan,
-            &mut dispatcher_side,
-            &next_hops,
-            &self.cfg.codecs,
-            &link,
-            &dstats,
-        )?;
-        drop(dispatcher_side);
+        configure_nodes(&self.plan, &mut control, &assignments, &self.cfg.codecs, &dstats)?;
+        drop(control);
 
         // ---- distributed inference step ----
         let input = match &self.reference {
@@ -214,6 +158,7 @@ impl ChainRunner {
             None => Tensor::random(self.plan.input_shape().to_vec(), 7),
         };
         let expected = self.reference.as_ref().map(|r| r.output.clone());
+        let uplink = Arc::new(Link::new(topo.hop_link(0)));
         let t0 = std::time::Instant::now();
         run_inference(
             input,
@@ -221,13 +166,14 @@ impl ChainRunner {
             to_first,
             from_last,
             self.cfg.codecs,
-            Arc::clone(&link),
+            uplink,
             Arc::clone(&dstats),
             expected,
             self.plan.output_shape().to_vec(),
         )?;
         let elapsed = t0.elapsed();
         pool.join()?;
+        junctions.join()?;
 
         // ---- assemble report ----
         let cycles = dstats.clock.cycles();
@@ -241,7 +187,8 @@ impl ChainRunner {
         Ok(RunReport {
             model: self.cfg.model.clone(),
             profile: self.cfg.profile.clone(),
-            nodes: n,
+            nodes: topo.num_stages(),
+            workers: views.len(),
             cycles,
             elapsed,
             throughput: cycles as f64 / elapsed.as_secs_f64(),
@@ -263,9 +210,4 @@ impl ChainRunner {
             reference_error,
         })
     }
-}
-
-/// Count a ByteCounter total as u64 (helper for reports).
-pub fn total(c: &ByteCounter) -> u64 {
-    c.total()
 }

@@ -1,8 +1,11 @@
 //! Compute node runtime — the paper's Algorithm 2.
 //!
-//! A node first serves the configuration step: it receives the serialized
-//! model architecture on one connection and the weights array on another,
-//! instantiates its partition executable, then acknowledges `Ready`.
+//! A node is one worker replica of a topology stage (its
+//! [`StageView`](crate::topology::StageView) says which); sole replicas
+//! behave exactly like the paper's chain nodes. It first serves the
+//! configuration step: it receives the serialized model architecture on
+//! one connection and the weights array on another, instantiates its
+//! partition executable, then acknowledges `Ready`.
 //!
 //! The inference loop then runs as two threads connected by a bounded pipe
 //! (the paper's THREAD-1 / THREAD-2 "to avoid inference bottleneck"):
@@ -23,9 +26,8 @@ use crate::runtime::{Engine, Executable};
 use crate::serial::json;
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
+use crate::topology::wiring::WorkerConns;
 use crate::wire::{Message, MessageType};
-
-use super::transport::Conn;
 
 /// Encode the architecture payload: `[meta_len u32le][meta json][hlo text]`.
 pub fn encode_architecture(spec: &PartitionSpec, next_hop: &str, hlo: &str) -> Vec<u8> {
@@ -91,33 +93,44 @@ impl NodeStats {
     }
 }
 
+/// Runtime knobs for one compute node (shared by every replica).
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeOptions {
+    /// Reader → compute pipe depth (backpressure window).
+    pub pipe_depth: usize,
+    /// Legacy multiplicative device-speed emulation (>= 1.0).
+    pub compute_slowdown: f64,
+    /// Deterministic device-speed emulation in MFLOPS (0 = off).
+    pub emulated_mflops: f64,
+}
+
 /// Run one compute node to completion (configuration + inference phases).
 ///
-/// * `config_conn` — receives `ModelConfig`, replies `Ready`.
-/// * `weights_conn` — receives `Weights`.
-/// * `in_conn` / `out_conn` — the chain data path.
-#[allow(clippy::too_many_arguments)]
+/// `conns` bundles the worker's topology view with its four established
+/// connections: config (receives `ModelConfig`, replies `Ready`),
+/// weights (receives `Weights`), and the data in/out path.
 pub fn run_compute_node(
-    node_index: usize,
     engine: Engine,
-    mut config_conn: Conn,
-    mut weights_conn: Conn,
-    in_conn: Conn,
-    mut out_conn: Conn,
+    conns: WorkerConns,
     codecs: CodecConfig,
     out_link: Arc<Link>,
     stats: Arc<NodeStats>,
-    pipe_depth: usize,
-    compute_slowdown: f64,
-    emulated_mflops: f64,
+    opts: ComputeOptions,
 ) -> Result<()> {
+    let WorkerConns {
+        view,
+        config: mut config_conn,
+        weights: mut weights_conn,
+        data_in: in_conn,
+        data_out: mut out_conn,
+    } = conns;
     // ---------------- configuration step ----------------
     let rx_counter = ByteCounter::new(); // inbound bytes are counted by the sender side
     let cfg_msg = config_conn.recv(&rx_counter)?;
     if cfg_msg.msg_type != MessageType::ModelConfig {
         return Err(DeferError::Coordinator(format!(
-            "node {node_index}: expected ModelConfig, got {:?}",
-            cfg_msg.msg_type
+            "{}: expected ModelConfig, got {:?}",
+            view.name, cfg_msg.msg_type
         )));
     }
     let raw = codecs.architecture.compression.decompress(
@@ -129,8 +142,8 @@ pub fn run_compute_node(
     let w_msg = weights_conn.recv(&rx_counter)?;
     if w_msg.msg_type != MessageType::Weights {
         return Err(DeferError::Coordinator(format!(
-            "node {node_index}: expected Weights, got {:?}",
-            w_msg.msg_type
+            "{}: expected Weights, got {:?}",
+            view.name, w_msg.msg_type
         )));
     }
     let flat = codecs.weights.decode_f32s(
@@ -158,10 +171,10 @@ pub fn run_compute_node(
 
     // ---------------- distributed inference step ----------------
     // THREAD-1: socket reader -> pipe; THREAD-2 (this thread): compute+send.
-    let (tx, rx) = pipe::<Message>(pipe_depth);
+    let (tx, rx) = pipe::<Message>(opts.pipe_depth);
     let mut pool = WorkerPool::new();
     let mut in_conn = in_conn;
-    pool.spawn(&format!("node{node_index}-reader"), move || loop {
+    pool.spawn(&format!("{}-reader", view.name), move || loop {
         let msg = in_conn.recv(&ByteCounter::new())?;
         let stop = msg.msg_type == MessageType::Shutdown;
         tx.send(msg)
@@ -175,9 +188,9 @@ pub fn run_compute_node(
     // Deterministic device emulation: floor each frame's compute to the
     // emulated device's FLOP time (constant of the plan, immune to host
     // contention). Tracks total emulated busy time for the energy model.
-    let flops_floor = if emulated_mflops > 0.0 {
+    let flops_floor = if opts.emulated_mflops > 0.0 {
         Some(std::time::Duration::from_secs_f64(
-            spec.flops as f64 / (emulated_mflops * 1e6),
+            spec.flops as f64 / (opts.emulated_mflops * 1e6),
         ))
     } else {
         None
@@ -207,10 +220,12 @@ pub fn run_compute_node(
                             std::thread::sleep(floor - elapsed);
                         }
                         emulated_busy += elapsed.max(floor);
-                    } else if compute_slowdown > 1.0 {
+                    } else if opts.compute_slowdown > 1.0 {
                         // Legacy multiplicative emulation (noise-amplifying;
                         // prefer emulated_mflops).
-                        std::thread::sleep(t_run.elapsed().mul_f64(compute_slowdown - 1.0));
+                        std::thread::sleep(
+                            t_run.elapsed().mul_f64(opts.compute_slowdown - 1.0),
+                        );
                     }
                     let (wire, mid) = codecs
                         .data
@@ -227,7 +242,8 @@ pub fn run_compute_node(
                 }
                 other => {
                     return Err(DeferError::Coordinator(format!(
-                        "node {node_index}: unexpected {other:?} in inference phase"
+                        "{}: unexpected {other:?} in inference phase",
+                        view.name
                     )))
                 }
             }
@@ -244,7 +260,7 @@ pub fn run_compute_node(
         stats_for_energy
             .meter
             .compute
-            .add(compute_timer.total().mul_f64(compute_slowdown));
+            .add(compute_timer.total().mul_f64(opts.compute_slowdown));
     }
     // Outgoing bytes drive network energy.
     stats_for_energy.meter.tx_bytes.add(stats.data_tx.total());

@@ -1,9 +1,13 @@
-//! Dispatcher node — the paper's Algorithm 1.
+//! Dispatcher node — the paper's Algorithm 1, generalized to a
+//! per-worker view of the topology.
 //!
-//! Configuration step: for each compute node, open two connections and send
-//! (a) the serialized model architecture (meta JSON + HLO text) together
-//! with the next hop in the chain, and (b) the serialized + compressed
-//! weights array. Wait for every node's `Ready`.
+//! Configuration step: for each worker replica, open two connections and
+//! send (a) the serialized model architecture (meta JSON + HLO text)
+//! together with the worker's successor set, and (b) the serialized +
+//! compressed weights array. Wait for every worker's `Ready`. Which
+//! partition a worker receives and how its control-plane link is shaped
+//! come from its [`WorkerAssignment`] — replicated stages simply list
+//! the same partition index more than once.
 //!
 //! Distributed inference step: pump serialized input frames to the first
 //! node and collect results from the last node, FIFO. Sender and receiver
@@ -55,31 +59,44 @@ impl DispatcherStats {
     }
 }
 
-/// Send the configuration step to every node: architecture + weights.
+/// One worker's configuration-step assignment: which partition it
+/// serves, the successor label(s) shipped in its architecture payload,
+/// and the link shaping its control-plane traffic.
+pub struct WorkerAssignment {
+    pub spec_index: usize,
+    pub next_hop: String,
+    pub link: Arc<Link>,
+}
+
+/// Send the configuration step to every worker: architecture + weights.
 ///
-/// `conns[i]` is the (config, weights) connection pair for node `i`;
-/// `next_hops[i]` names node `i`'s successor ("dispatcher" for the last).
+/// `conns[i]` is the (config, weights) connection pair for the worker
+/// described by `assignments[i]` (stage-major order).
 pub fn configure_nodes(
     plan: &PartitionPlan,
     conns: &mut [(Conn, Conn)],
-    next_hops: &[String],
+    assignments: &[WorkerAssignment],
     codecs: &CodecConfig,
-    link: &Link,
     stats: &DispatcherStats,
 ) -> Result<()> {
     let t0 = Instant::now();
-    if conns.len() != plan.parts.len() {
+    if conns.len() != assignments.len() {
         return Err(DeferError::Coordinator(format!(
-            "{} connection pairs for {} partitions",
+            "{} connection pairs for {} worker assignments",
             conns.len(),
-            plan.parts.len()
+            assignments.len()
         )));
     }
-    for (i, ((config_conn, weights_conn), spec)) in
-        conns.iter_mut().zip(&plan.parts).enumerate()
-    {
-        send_architecture(spec, &next_hops[i], config_conn, codecs, link, stats)?;
-        send_weights(spec, weights_conn, codecs, link, stats)?;
+    for ((config_conn, weights_conn), a) in conns.iter_mut().zip(assignments) {
+        let spec = plan.parts.get(a.spec_index).ok_or_else(|| {
+            DeferError::Coordinator(format!(
+                "assignment wants partition {} of {}",
+                a.spec_index,
+                plan.parts.len()
+            ))
+        })?;
+        send_architecture(spec, &a.next_hop, config_conn, codecs, &a.link, stats)?;
+        send_weights(spec, weights_conn, codecs, &a.link, stats)?;
     }
     // Wait for every node to instantiate its model (paper: the model socket
     // waits for weights, then builds the TensorFlow model).

@@ -1,21 +1,28 @@
-//! L3 coordinator: DEFER's dispatcher + compute-node chain.
+//! L3 coordinator: DEFER's dispatcher + compute-node pipeline over a
+//! declarative [`crate::topology::Topology`].
 //!
 //! Implements the paper's three phases:
 //!
 //! 1. **Model partitioning** happened at build time (Python `partitioner`);
 //!    the artifacts are the partitioned model.
 //! 2. **Configuration step** ([`dispatcher`]): the dispatcher opens two
-//!    connections per compute node — one for the serialized model
+//!    connections per worker replica — one for the serialized model
 //!    architecture (meta JSON + HLO text) and one for the weights array —
-//!    and tells each node who its successor in the chain is.
-//! 3. **Distributed inference step** ([`compute_node`]): nodes relay
-//!    intermediate activations in FIFO order, each running its partition,
-//!    so the chain acts as a pipeline and throughput exceeds one device
-//!    running the whole model.
+//!    and tells each worker its successor set in the topology.
+//! 3. **Distributed inference step** ([`compute_node`]): workers relay
+//!    intermediate activations in FIFO order, each running its stage's
+//!    partition, so the deployment acts as a pipeline and throughput
+//!    exceeds one device running the whole model. Replicated stages are
+//!    fed round-robin with an order-preserving merge (see
+//!    [`crate::topology::wiring`]), so results still arrive FIFO.
 //!
-//! [`chain::ChainRunner`] assembles everything (in-process pipes or real
-//! TCP loopback sockets, both through the [`crate::netem`] link shaper),
-//! and [`baseline`] is the paper's single-device comparison.
+//! [`chain::ChainRunner`] is a thin plan → wire → spawn → report driver:
+//! it derives the topology from config (stage replication, per-hop
+//! links), lets [`crate::topology::wiring`] establish every connection
+//! (in-process pipes or real TCP loopback sockets with ephemeral ports,
+//! both through the [`crate::netem`] link shaper), spawns one thread per
+//! worker, and assembles the [`RunReport`]. [`baseline`] is the paper's
+//! single-device comparison.
 
 pub mod baseline;
 pub mod chain;
@@ -32,7 +39,11 @@ use std::time::Duration;
 pub struct RunReport {
     pub model: String,
     pub profile: String,
+    /// Pipeline stages (= partitions).
     pub nodes: usize,
+    /// Worker replicas that served the run (== `nodes` unless stages are
+    /// replicated; `node_energy` has one entry per worker, stage-major).
+    pub workers: usize,
     /// Inference cycles completed.
     pub cycles: u64,
     /// Wall-clock duration of the inference phase.

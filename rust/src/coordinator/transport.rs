@@ -33,10 +33,22 @@ pub enum Conn {
 }
 
 impl Conn {
-    /// Connect to a TCP endpoint (with retry while the listener comes up).
-    pub fn tcp_connect(addr: &str) -> Result<Conn> {
-        let mut last_err = None;
-        for _ in 0..100 {
+    /// Default total deadline for [`Conn::tcp_connect`] retries.
+    pub const CONNECT_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
+
+    /// Connect to a TCP endpoint, retrying with exponential backoff (1 ms
+    /// doubling to 100 ms) until `deadline` elapses. `peer` names the
+    /// remote role/stage (e.g. `node1 data socket`) for the error message.
+    pub fn tcp_connect_with_deadline(
+        addr: &str,
+        peer: &str,
+        deadline: std::time::Duration,
+    ) -> Result<Conn> {
+        let t_end = std::time::Instant::now() + deadline;
+        let mut backoff = std::time::Duration::from_millis(1);
+        let max_backoff = std::time::Duration::from_millis(100);
+        let mut last_err;
+        loop {
             match TcpStream::connect(addr) {
                 Ok(s) => {
                     s.set_nodelay(true).ok();
@@ -46,16 +58,23 @@ impl Conn {
                         reader,
                     });
                 }
-                Err(e) => {
-                    last_err = Some(e);
-                    std::thread::sleep(std::time::Duration::from_millis(10));
-                }
+                Err(e) => last_err = e,
             }
+            let now = std::time::Instant::now();
+            if now >= t_end {
+                return Err(DeferError::Coordinator(format!(
+                    "cannot connect to {peer} at {addr} within {deadline:?}: {last_err}"
+                )));
+            }
+            std::thread::sleep(backoff.min(t_end - now));
+            backoff = (backoff * 2).min(max_backoff);
         }
-        Err(DeferError::Coordinator(format!(
-            "cannot connect to {addr}: {}",
-            last_err.unwrap()
-        )))
+    }
+
+    /// Connect to a TCP endpoint with the default deadline; `peer` names
+    /// the remote role/stage for error reporting.
+    pub fn tcp_connect(addr: &str, peer: &str) -> Result<Conn> {
+        Self::tcp_connect_with_deadline(addr, peer, Self::CONNECT_DEADLINE)
     }
 
     /// Accept one connection from a bound listener.
@@ -176,13 +195,34 @@ mod tests {
             let m = server.recv(&c).unwrap();
             server.send(&m, &Link::ideal(), &c).unwrap();
         });
-        let mut client = Conn::tcp_connect(&addr).unwrap();
+        let mut client = Conn::tcp_connect(&addr, "echo server").unwrap();
         let c = ByteCounter::new();
         let sent = data_msg(42, 1000);
         client.send(&sent, &Link::ideal(), &c).unwrap();
         let echoed = client.recv(&c).unwrap();
         assert_eq!(echoed, sent);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn connect_failure_names_peer_and_respects_deadline() {
+        // Nothing listens on a just-closed ephemeral port; the connect
+        // must back off, hit the deadline, and name the peer role.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = std::time::Instant::now();
+        let err = Conn::tcp_connect_with_deadline(
+            &addr,
+            "node3 weights socket",
+            std::time::Duration::from_millis(120),
+        )
+        .unwrap_err();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        let msg = format!("{err}");
+        assert!(msg.contains("node3 weights socket"), "{msg}");
+        assert!(msg.contains(&addr), "{msg}");
     }
 
     #[test]
@@ -208,7 +248,7 @@ mod tests {
             let mut server = Conn::tcp_accept(&listener).unwrap();
             server.recv(&ByteCounter::new()).unwrap()
         });
-        let mut client = Conn::tcp_connect(&addr).unwrap();
+        let mut client = Conn::tcp_connect(&addr, "byte-count peer").unwrap();
         let c_tcp = ByteCounter::new();
         client.send(&msg2, &Link::ideal(), &c_tcp).unwrap();
         h.join().unwrap();

@@ -11,11 +11,13 @@
 //!   kernels and JAX models; `make artifacts` AOT-lowers every model
 //!   partition to HLO text under `artifacts/`.
 //! * **L3 (this crate)** — loads the artifacts via the PJRT C API
-//!   ([`runtime`]), distributes partitions and weights to compute nodes
-//!   ([`coordinator::dispatcher`]), and pipelines frames through the chain
-//!   ([`coordinator`]) with the paper's serialization/compression sweep
-//!   ([`serial`], [`compress`]), network emulation ([`netem`]), energy
-//!   model ([`energy`]) and metrics ([`metrics`]).
+//!   ([`runtime`]), derives a declarative deployment [`topology`]
+//!   (stages × replicas, per-hop links), distributes partitions and
+//!   weights to worker replicas ([`coordinator::dispatcher`]), and
+//!   pipelines frames through the deployment ([`coordinator`]) with the
+//!   paper's serialization/compression sweep ([`serial`], [`compress`]),
+//!   network emulation ([`netem`]), energy model ([`energy`]) and
+//!   metrics ([`metrics`]).
 //!
 //! Python never runs on the request path; after `make artifacts` the
 //! `defer` binary is self-contained.
@@ -34,6 +36,7 @@ pub mod runtime;
 pub mod serial;
 pub mod tensor;
 pub mod threadpool;
+pub mod topology;
 pub mod util;
 pub mod wire;
 

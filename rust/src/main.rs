@@ -40,11 +40,16 @@ COMMON OPTIONS:
   --config FILE            JSON config file (CLI flags override it)
 
 RUN OPTIONS:
-  --nodes N                compute nodes (default: 4)
+  --nodes N                pipeline stages (default: 4)
+  --replicas R0,R1,...     worker replicas per stage, fed round-robin with
+                           FIFO merge (default: 1 per stage)
   --frames N               inference cycles (default: 16)
   --baseline               single-device run (ignores --nodes)
-  --tcp                    real TCP loopback sockets
-  --link ideal|gigabit|edge|wifi
+  --tcp                    real TCP loopback sockets (ephemeral ports)
+  --base-port P            fixed first TCP port instead of ephemeral binds
+  --link ideal|gigabit|edge|wifi   uniform link for every hop
+  --links L0,L1,...        per-hop links, N+1 entries (dispatcher uplink,
+                           inter-stage hops, return link); one entry = all
   --pipe-depth N           chain backpressure window (default: 4)
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
@@ -69,6 +74,9 @@ fn load_config(args: &Args) -> Result<DeferConfig> {
 
 fn print_report(r: &RunReport) {
     println!("== {} / {} / {} node(s) ==", r.model, r.profile, r.nodes);
+    if r.workers != r.nodes {
+        println!("  workers:           {} ({} stages, replicated)", r.workers, r.nodes);
+    }
     println!("  cycles:            {}", r.cycles);
     println!("  elapsed:           {}", fmt_duration(r.elapsed));
     println!("  throughput:        {:.4} cycles/s", r.throughput);

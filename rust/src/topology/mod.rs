@@ -1,0 +1,278 @@
+//! Declarative deployment topology: named stages, per-stage replication,
+//! and per-hop link specifications.
+//!
+//! The paper's DEFER deployment is a fixed chain — dispatcher → node0 →
+//! node1 → … → dispatcher — with one [`LinkSpec`] shared by every hop.
+//! The authors' follow-up work (SEIFER, arXiv 2210.12218; throughput-
+//! maximizing placement, arXiv 2210.12219) generalizes exactly two
+//! things: links become heterogeneous per hop (e.g. a wifi uplink into
+//! the cluster, gigabit Ethernet inside it), and bottleneck stages are
+//! replicated across R workers. [`Topology`] captures both
+//! declaratively; the [`wiring`] module turns a topology into live
+//! connection bundles for either transport, and the coordinator consumes
+//! the result without knowing how it was wired. A future placement
+//! optimizer is then a pure planning pass that emits a `Topology`.
+//!
+//! Frame ordering with replication: a stage's replicas are dealt frames
+//! round-robin by a junction on the ingress side and merged round-robin
+//! on the egress side. Because every connection is FIFO and the merge
+//! rotation mirrors the deal rotation, global frame order is preserved
+//! end to end regardless of per-replica compute jitter (the merge simply
+//! blocks on the replica that owns the next frame in sequence).
+
+pub mod wiring;
+
+use crate::config::DeferConfig;
+use crate::error::{DeferError, Result};
+use crate::netem::LinkSpec;
+
+/// One pipeline stage: a model partition served by `replicas` workers.
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    /// Stage label; worker labels derive from it (`node1`, `node1.0`).
+    pub name: String,
+    /// Worker replicas serving this stage (>= 1), fed round-robin.
+    pub replicas: usize,
+}
+
+/// A worker's view of its place in the topology: which partition it
+/// serves, which replica it is, and where its output goes. This is what
+/// the dispatcher and compute nodes see instead of "my index in a chain".
+#[derive(Clone, Debug)]
+pub struct StageView {
+    /// Stage (= partition) index this worker serves.
+    pub stage: usize,
+    /// Which replica of the stage this worker is.
+    pub replica: usize,
+    /// Total replicas of this stage.
+    pub replicas: usize,
+    /// Worker label, e.g. `node1` (sole replica) or `node1.0`.
+    pub name: String,
+    /// Labels of the downstream endpoints this worker's output reaches
+    /// (`dispatcher` for the last stage).
+    pub successors: Vec<String>,
+}
+
+impl StageView {
+    /// A 1-replica view for harnesses that drive a single node directly.
+    pub fn standalone(stage: usize) -> StageView {
+        StageView {
+            stage,
+            replica: 0,
+            replicas: 1,
+            name: format!("node{stage}"),
+            successors: vec!["dispatcher".to_string()],
+        }
+    }
+}
+
+/// Declarative chain topology: S stages and S+1 hops.
+///
+/// Hop `h` is the link from stage `h-1` into stage `h`; hop `0` is the
+/// dispatcher uplink into stage 0 and hop `S` the return link from the
+/// last stage back to the dispatcher. Each replica of a stage owns an
+/// independent instance of its hop's link — replication adds physical
+/// links, not shared capacity.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    stages: Vec<StageSpec>,
+    hop_links: Vec<LinkSpec>,
+}
+
+impl Topology {
+    /// Build from per-stage replica counts and exactly `stages + 1`
+    /// per-hop link specs.
+    pub fn new(replicas: &[usize], hop_links: Vec<LinkSpec>) -> Result<Topology> {
+        if replicas.is_empty() {
+            return Err(DeferError::Config("topology needs at least one stage".into()));
+        }
+        if let Some(i) = replicas.iter().position(|&r| r == 0) {
+            return Err(DeferError::Config(format!(
+                "stage {i}: replicas must be >= 1"
+            )));
+        }
+        if hop_links.len() != replicas.len() + 1 {
+            return Err(DeferError::Config(format!(
+                "{} stages need {} hop links, got {}",
+                replicas.len(),
+                replicas.len() + 1,
+                hop_links.len()
+            )));
+        }
+        Ok(Topology {
+            stages: replicas
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| StageSpec {
+                    name: format!("node{i}"),
+                    replicas: r,
+                })
+                .collect(),
+            hop_links,
+        })
+    }
+
+    /// The paper's topology: `stages` single-replica stages, one link
+    /// spec everywhere.
+    pub fn uniform_chain(stages: usize, link: LinkSpec) -> Result<Topology> {
+        Topology::new(&vec![1; stages], vec![link; stages + 1])
+    }
+
+    /// Derive the topology a [`DeferConfig`] describes: `nodes` stages,
+    /// `replicas` (default 1 each), and `per_hop_links` (empty = uniform
+    /// `link`; a single entry is splatted across all hops).
+    pub fn from_config(cfg: &DeferConfig) -> Result<Topology> {
+        let n = cfg.nodes;
+        let replicas: Vec<usize> = if cfg.replicas.is_empty() {
+            vec![1; n]
+        } else {
+            cfg.replicas.clone()
+        };
+        let hop_links: Vec<LinkSpec> = match cfg.per_hop_links.len() {
+            0 => vec![cfg.link; n + 1],
+            1 => vec![cfg.per_hop_links[0]; n + 1],
+            _ => cfg.per_hop_links.clone(),
+        };
+        Topology::new(&replicas, hop_links)
+    }
+
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total worker replicas across all stages.
+    pub fn num_workers(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas).sum()
+    }
+
+    pub fn num_hops(&self) -> usize {
+        self.hop_links.len()
+    }
+
+    pub fn replicas(&self, stage: usize) -> usize {
+        self.stages[stage].replicas
+    }
+
+    pub fn hop_link(&self, hop: usize) -> LinkSpec {
+        self.hop_links[hop]
+    }
+
+    /// True when every stage has exactly one replica (the paper's chain).
+    pub fn is_uniform(&self) -> bool {
+        self.stages.iter().all(|s| s.replicas == 1)
+    }
+
+    /// Worker label. Sole replicas keep the bare stage name so the wire
+    /// payloads of an unreplicated chain are byte-identical to the
+    /// pre-topology coordinator.
+    pub fn worker_name(&self, stage: usize, replica: usize) -> String {
+        let st = &self.stages[stage];
+        if st.replicas == 1 {
+            st.name.clone()
+        } else {
+            format!("{}.{replica}", st.name)
+        }
+    }
+
+    /// Labels of the endpoints downstream of `stage`.
+    pub fn successor_labels(&self, stage: usize) -> Vec<String> {
+        if stage + 1 == self.stages.len() {
+            vec!["dispatcher".to_string()]
+        } else {
+            let s = stage + 1;
+            (0..self.stages[s].replicas)
+                .map(|r| self.worker_name(s, r))
+                .collect()
+        }
+    }
+
+    /// All worker views in canonical (stage-major, then replica) order —
+    /// the order every per-worker collection in the coordinator uses.
+    pub fn worker_views(&self) -> Vec<StageView> {
+        let mut out = Vec::with_capacity(self.num_workers());
+        for (i, st) in self.stages.iter().enumerate() {
+            let successors = self.successor_labels(i);
+            for r in 0..st.replicas {
+                out.push(StageView {
+                    stage: i,
+                    replica: r,
+                    replicas: st.replicas,
+                    name: self.worker_name(i, r),
+                    successors: successors.clone(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_chain_matches_legacy_naming() {
+        let t = Topology::uniform_chain(3, LinkSpec::ideal()).unwrap();
+        assert_eq!(t.num_stages(), 3);
+        assert_eq!(t.num_workers(), 3);
+        assert_eq!(t.num_hops(), 4);
+        assert!(t.is_uniform());
+        let views = t.worker_views();
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[0].name, "node0");
+        assert_eq!(views[0].successors, vec!["node1".to_string()]);
+        assert_eq!(views[2].name, "node2");
+        assert_eq!(views[2].successors, vec!["dispatcher".to_string()]);
+    }
+
+    #[test]
+    fn replicated_stage_views() {
+        let t = Topology::new(&[1, 3, 1], vec![LinkSpec::ideal(); 4]).unwrap();
+        assert_eq!(t.num_workers(), 5);
+        assert!(!t.is_uniform());
+        let views = t.worker_views();
+        assert_eq!(views[0].name, "node0");
+        assert_eq!(
+            views[0].successors,
+            vec!["node1.0".to_string(), "node1.1".to_string(), "node1.2".to_string()]
+        );
+        assert_eq!(views[1].name, "node1.0");
+        assert_eq!(views[1].replica, 0);
+        assert_eq!(views[3].name, "node1.2");
+        assert_eq!(views[3].stage, 1);
+        assert_eq!(views[3].successors, vec!["node2".to_string()]);
+        assert_eq!(views[4].name, "node2");
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        assert!(Topology::new(&[], vec![LinkSpec::ideal()]).is_err());
+        assert!(Topology::new(&[1, 0], vec![LinkSpec::ideal(); 3]).is_err());
+        assert!(Topology::new(&[1, 1], vec![LinkSpec::ideal(); 2]).is_err());
+    }
+
+    #[test]
+    fn from_config_splats_links() {
+        let mut cfg = DeferConfig::default();
+        cfg.nodes = 3;
+        cfg.per_hop_links = vec![LinkSpec::wifi()];
+        let t = Topology::from_config(&cfg).unwrap();
+        assert_eq!(t.num_hops(), 4);
+        for h in 0..4 {
+            assert_eq!(t.hop_link(h), LinkSpec::wifi());
+        }
+        cfg.per_hop_links = vec![
+            LinkSpec::wifi(),
+            LinkSpec::gigabit_lan(),
+            LinkSpec::gigabit_lan(),
+            LinkSpec::gigabit_lan(),
+        ];
+        let t = Topology::from_config(&cfg).unwrap();
+        assert_eq!(t.hop_link(0), LinkSpec::wifi());
+        assert_eq!(t.hop_link(1), LinkSpec::gigabit_lan());
+    }
+}

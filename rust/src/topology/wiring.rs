@@ -1,0 +1,453 @@
+//! Turn a [`Topology`] into live per-node connection bundles.
+//!
+//! This is the connection-establishment layer extracted from the old
+//! inline builder in `coordinator::chain`. It supports both transports:
+//!
+//! * **in-process** — every edge is a bounded byte pipe;
+//! * **TCP loopback** — every edge is a real kernel socket. Listeners
+//!   bind ephemeral ports (`127.0.0.1:0`) by default and the *actual*
+//!   addresses flow through the wiring, so parallel runs never collide;
+//!   `base_port` remains as an optional override for CORE-style
+//!   deployments that need predictable ports (allocated sequentially:
+//!   three ports per worker in stage-major order, then the dispatcher
+//!   return port, then junction ingress ports per replicated boundary).
+//!
+//! Replicated stage boundaries are wired through a **junction**: a relay
+//! thread that merges the upstream endpoints round-robin and deals to
+//! the downstream endpoints round-robin. Merge rotation mirrors deal
+//! rotation over FIFO connections, so global frame order is preserved
+//! (see the module doc of [`crate::topology`]). Boundaries with one
+//! endpoint on each side are connected directly — an unreplicated chain
+//! has zero junctions and is wired exactly like the pre-topology
+//! coordinator.
+//!
+//! Byte accounting: a hop's bytes are counted once, by the original
+//! sender, against its shaped link. Junctions are routing fabric, not
+//! network elements — they relay over an ideal link into a throwaway
+//! counter, so `RunReport` byte totals are replication-invariant per
+//! frame delivered.
+
+use std::net::{SocketAddr, TcpListener};
+
+use crate::coordinator::transport::Conn;
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::netem::Link;
+use crate::threadpool::WorkerPool;
+use crate::topology::{StageView, Topology};
+use crate::wire::{Message, MessageType};
+
+/// How to realize the topology's edges.
+pub struct TransportOptions {
+    /// Real TCP loopback sockets instead of in-process pipes.
+    pub tcp: bool,
+    /// Fixed first port for TCP listeners; `None` = ephemeral binds.
+    pub base_port: Option<u16>,
+    /// Bounded depth of in-process pipes (backpressure window).
+    pub pipe_depth: usize,
+}
+
+/// Everything one worker replica needs: its view plus the four
+/// established connections (config, weights, data-in, data-out).
+pub struct WorkerConns {
+    pub view: StageView,
+    pub config: Conn,
+    pub weights: Conn,
+    pub data_in: Conn,
+    pub data_out: Conn,
+}
+
+/// A fully wired deployment, ready to spawn.
+pub struct Wiring {
+    /// Dispatcher-side (config, weights) pair per worker, in the same
+    /// stage-major order as `workers`.
+    pub control: Vec<(Conn, Conn)>,
+    /// Dispatcher's data uplink into stage 0 (hop 0).
+    pub to_first: Conn,
+    /// Dispatcher's return link from the last stage (hop S).
+    pub from_last: Conn,
+    /// Per-worker bundles, stage-major.
+    pub workers: Vec<WorkerConns>,
+    /// Junction relay threads for replicated boundaries; join after the
+    /// run drains (no-op for uniform chains).
+    pub junctions: WorkerPool,
+}
+
+/// Establish every connection the topology needs, for either transport.
+pub fn build(topo: &Topology, opts: &TransportOptions) -> Result<Wiring> {
+    if opts.tcp {
+        build_tcp(topo, opts.base_port)
+    } else {
+        build_local(topo, opts.pipe_depth)
+    }
+}
+
+/// Round-robin merge + deal relay for one replicated stage boundary.
+///
+/// Reads inputs in rotation (skipping drained ones) and forwards each
+/// frame to the next output in rotation. A `Shutdown` closes its input;
+/// once every input has shut down, `Shutdown` is broadcast downstream.
+/// Exposed for the wiring property tests.
+pub fn run_junction(mut inputs: Vec<Conn>, mut outputs: Vec<Conn>) -> Result<()> {
+    let null = ByteCounter::new(); // hop bytes were counted by the sender
+    let link = Link::ideal();
+    let n_in = inputs.len();
+    let mut open = vec![true; n_in];
+    let mut open_count = n_in;
+    let mut in_idx = 0usize;
+    let mut out_idx = 0usize;
+    while open_count > 0 {
+        if open[in_idx] {
+            let msg = inputs[in_idx].recv(&null)?;
+            if msg.msg_type == MessageType::Shutdown {
+                open[in_idx] = false;
+                open_count -= 1;
+            } else {
+                outputs[out_idx].send(&msg, &link, &null)?;
+                out_idx = (out_idx + 1) % outputs.len();
+            }
+        }
+        in_idx = (in_idx + 1) % n_in;
+    }
+    for out in outputs.iter_mut() {
+        out.send(&Message::control(MessageType::Shutdown), &link, &null)?;
+    }
+    Ok(())
+}
+
+fn spawn_junction(pool: &mut WorkerPool, boundary: usize, inputs: Vec<Conn>, outputs: Vec<Conn>) {
+    pool.spawn(&format!("junction-hop{boundary}"), move || {
+        run_junction(inputs, outputs)
+    });
+}
+
+/// Endpoint counts at boundary `b` of an `s`-stage topology: upstream
+/// (sender) side and downstream (receiver) side. The dispatcher is the
+/// sole endpoint outside the chain.
+fn boundary_fan(topo: &Topology, b: usize) -> (usize, usize) {
+    let s = topo.num_stages();
+    let u = if b == 0 { 1 } else { topo.replicas(b - 1) };
+    let d = if b == s { 1 } else { topo.replicas(b) };
+    (u, d)
+}
+
+// ------------------------------------------------------------ in-process
+
+fn build_local(topo: &Topology, depth: usize) -> Result<Wiring> {
+    let views = topo.worker_views();
+    let s = topo.num_stages();
+    let mut junctions = WorkerPool::new();
+
+    // Per-worker data endpoints, keyed (stage, replica).
+    let mut data_in: Vec<Vec<Option<Conn>>> = topo
+        .stages()
+        .iter()
+        .map(|st| (0..st.replicas).map(|_| None).collect())
+        .collect();
+    let mut data_out: Vec<Vec<Option<Conn>>> = topo
+        .stages()
+        .iter()
+        .map(|st| (0..st.replicas).map(|_| None).collect())
+        .collect();
+    let mut to_first = None;
+    let mut from_last = None;
+
+    for b in 0..=s {
+        let (u, d) = boundary_fan(topo, b);
+        let (outs, ins): (Vec<Conn>, Vec<Conn>) = if u == 1 && d == 1 {
+            let (o, i) = Conn::local_pair(depth);
+            (vec![o], vec![i])
+        } else {
+            let mut outs = Vec::with_capacity(u);
+            let mut jin = Vec::with_capacity(u);
+            for _ in 0..u {
+                let (o, i) = Conn::local_pair(depth);
+                outs.push(o);
+                jin.push(i);
+            }
+            let mut jout = Vec::with_capacity(d);
+            let mut ins = Vec::with_capacity(d);
+            for _ in 0..d {
+                let (o, i) = Conn::local_pair(depth);
+                jout.push(o);
+                ins.push(i);
+            }
+            spawn_junction(&mut junctions, b, jin, jout);
+            (outs, ins)
+        };
+        for (r, o) in outs.into_iter().enumerate() {
+            if b == 0 {
+                to_first = Some(o);
+            } else {
+                data_out[b - 1][r] = Some(o);
+            }
+        }
+        for (r, i) in ins.into_iter().enumerate() {
+            if b == s {
+                from_last = Some(i);
+            } else {
+                data_in[b][r] = Some(i);
+            }
+        }
+    }
+
+    let mut control = Vec::with_capacity(views.len());
+    let mut workers = Vec::with_capacity(views.len());
+    for view in views {
+        let (cfg_d, cfg_n) = Conn::local_pair(2);
+        let (w_d, w_n) = Conn::local_pair(2);
+        control.push((cfg_d, w_d));
+        let din = data_in[view.stage][view.replica]
+            .take()
+            .expect("boundary wiring covered every stage ingress");
+        let dout = data_out[view.stage][view.replica]
+            .take()
+            .expect("boundary wiring covered every stage egress");
+        workers.push(WorkerConns {
+            view,
+            config: cfg_n,
+            weights: w_n,
+            data_in: din,
+            data_out: dout,
+        });
+    }
+
+    Ok(Wiring {
+        control,
+        to_first: to_first.expect("boundary 0 wired"),
+        from_last: from_last.expect("last boundary wired"),
+        workers,
+        junctions,
+    })
+}
+
+// ----------------------------------------------------------- TCP loopback
+
+/// Sequential-or-ephemeral port allocator.
+struct PortAlloc {
+    next: Option<u16>,
+}
+
+impl PortAlloc {
+    fn bind(&mut self) -> Result<(TcpListener, SocketAddr)> {
+        let port = match self.next {
+            Some(p) => {
+                self.next = Some(p.checked_add(1).ok_or_else(|| {
+                    DeferError::Config("base_port allocation overflowed u16".into())
+                })?);
+                p
+            }
+            None => 0,
+        };
+        let l = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| DeferError::Coordinator(format!("bind 127.0.0.1:{port}: {e}")))?;
+        let addr = l.local_addr()?;
+        Ok((l, addr))
+    }
+}
+
+struct WorkerListeners {
+    config: TcpListener,
+    config_addr: SocketAddr,
+    weights: TcpListener,
+    weights_addr: SocketAddr,
+    data: TcpListener,
+    data_addr: SocketAddr,
+}
+
+/// All listeners are bound before any connect, so every `connect` below
+/// completes through the kernel's listen backlog even before the
+/// matching `accept` runs — no acceptor-thread dance, no deadlock, and
+/// each listener serves exactly one inbound connection.
+fn build_tcp(topo: &Topology, base_port: Option<u16>) -> Result<Wiring> {
+    let views = topo.worker_views();
+    let s = topo.num_stages();
+    let mut alloc = PortAlloc { next: base_port };
+    let mut junctions = WorkerPool::new();
+
+    // Worker index offsets per stage (stage-major layout).
+    let mut off = Vec::with_capacity(s);
+    let mut acc = 0usize;
+    for st in topo.stages() {
+        off.push(acc);
+        acc += st.replicas;
+    }
+
+    // Bind everything first.
+    let mut listeners = Vec::with_capacity(views.len());
+    for _ in &views {
+        let (config, config_addr) = alloc.bind()?;
+        let (weights, weights_addr) = alloc.bind()?;
+        let (data, data_addr) = alloc.bind()?;
+        listeners.push(WorkerListeners {
+            config,
+            config_addr,
+            weights,
+            weights_addr,
+            data,
+            data_addr,
+        });
+    }
+    let (ret_listener, ret_addr) = alloc.bind()?;
+
+    // Control plane: dispatcher dials each worker's config + weights.
+    let mut control = Vec::with_capacity(views.len());
+    for (view, l) in views.iter().zip(&listeners) {
+        let c = Conn::tcp_connect(
+            &l.config_addr.to_string(),
+            &format!("{} config socket", view.name),
+        )?;
+        let w = Conn::tcp_connect(
+            &l.weights_addr.to_string(),
+            &format!("{} weights socket", view.name),
+        )?;
+        control.push((c, w));
+    }
+
+    // Data plane, boundary by boundary.
+    let mut data_out: Vec<Option<Conn>> = (0..views.len()).map(|_| None).collect();
+    let mut to_first = None;
+    for b in 0..=s {
+        let (u, d) = boundary_fan(topo, b);
+        // Downstream ingress addresses (+ peer labels for errors).
+        let down: Vec<(String, String)> = if b == s {
+            vec![(ret_addr.to_string(), "dispatcher return socket".to_string())]
+        } else {
+            (0..d)
+                .map(|r| {
+                    let widx = off[b] + r;
+                    (
+                        listeners[widx].data_addr.to_string(),
+                        format!("{} data socket", views[widx].name),
+                    )
+                })
+                .collect()
+        };
+        let outs: Vec<Conn> = if u == 1 && d == 1 {
+            vec![Conn::tcp_connect(&down[0].0, &down[0].1)?]
+        } else {
+            let mut jls = Vec::with_capacity(u);
+            for _ in 0..u {
+                jls.push(alloc.bind()?);
+            }
+            let mut outs = Vec::with_capacity(u);
+            for (r, (_, addr)) in jls.iter().enumerate() {
+                outs.push(Conn::tcp_connect(
+                    &addr.to_string(),
+                    &format!("hop {b} junction input {r}"),
+                )?);
+            }
+            let mut jin = Vec::with_capacity(u);
+            for (l, _) in &jls {
+                jin.push(Conn::tcp_accept(l)?);
+            }
+            let mut jout = Vec::with_capacity(d);
+            for (addr, peer) in &down {
+                jout.push(Conn::tcp_connect(addr, peer)?);
+            }
+            spawn_junction(&mut junctions, b, jin, jout);
+            outs
+        };
+        for (r, o) in outs.into_iter().enumerate() {
+            if b == 0 {
+                to_first = Some(o);
+            } else {
+                data_out[off[b - 1] + r] = Some(o);
+            }
+        }
+    }
+
+    // Every inbound connection is now pending; accept them all.
+    let mut workers = Vec::with_capacity(views.len());
+    for (widx, view) in views.into_iter().enumerate() {
+        let l = &listeners[widx];
+        let config = Conn::tcp_accept(&l.config)?;
+        let weights = Conn::tcp_accept(&l.weights)?;
+        let data_in = Conn::tcp_accept(&l.data)?;
+        let dout = data_out[widx]
+            .take()
+            .expect("boundary wiring covered every stage egress");
+        workers.push(WorkerConns {
+            view,
+            config,
+            weights,
+            data_in,
+            data_out: dout,
+        });
+    }
+    let from_last = Conn::tcp_accept(&ret_listener)?;
+
+    Ok(Wiring {
+        control,
+        to_first: to_first.expect("boundary 0 wired"),
+        from_last,
+        workers,
+        junctions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netem::LinkSpec;
+
+    fn data_msg(frame: u64) -> Message {
+        Message {
+            msg_type: MessageType::Data,
+            frame,
+            serialized_len: 4,
+            count: 0,
+            payload: vec![frame as u8; 4],
+        }
+    }
+
+    #[test]
+    fn junction_restores_round_robin_order() {
+        // Deal 7 frames over 3 inputs by hand, then let the junction
+        // merge them back into one ordered stream.
+        let u = 3;
+        let mut up = Vec::new();
+        let mut jin = Vec::new();
+        for _ in 0..u {
+            let (a, b) = Conn::local_pair(8);
+            up.push(a);
+            jin.push(b);
+        }
+        let (jout, mut down) = Conn::local_pair(16);
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..7u64 {
+            up[(f as usize) % u].send(&data_msg(f), &link, &c).unwrap();
+        }
+        for conn in up.iter_mut() {
+            conn.send(&Message::control(MessageType::Shutdown), &link, &c)
+                .unwrap();
+        }
+        run_junction(jin, vec![jout]).unwrap();
+        for f in 0..7u64 {
+            assert_eq!(down.recv(&c).unwrap().frame, f);
+        }
+        assert_eq!(
+            down.recv(&c).unwrap().msg_type,
+            MessageType::Shutdown
+        );
+    }
+
+    #[test]
+    fn uniform_local_wiring_has_no_junctions() {
+        let topo = Topology::uniform_chain(3, LinkSpec::ideal()).unwrap();
+        let w = build(
+            &topo,
+            &TransportOptions {
+                tcp: false,
+                base_port: None,
+                pipe_depth: 4,
+            },
+        )
+        .unwrap();
+        assert_eq!(w.workers.len(), 3);
+        assert_eq!(w.control.len(), 3);
+        // No replication => relay pool joins immediately.
+        w.junctions.join().unwrap();
+    }
+}

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use defer::config::{CodecConfig, DeferConfig};
 use defer::coordinator::compute_node::{
-    encode_architecture, run_compute_node, NodeStats,
+    encode_architecture, run_compute_node, ComputeOptions, NodeStats,
 };
 use defer::coordinator::transport::Conn;
 use defer::energy::EnergyModel;
@@ -15,6 +15,8 @@ use defer::metrics::ByteCounter;
 use defer::model::PartitionPlan;
 use defer::netem::Link;
 use defer::runtime::Engine;
+use defer::topology::wiring::WorkerConns;
+use defer::topology::StageView;
 use defer::wire::{Message, MessageType};
 
 fn artifacts() -> PathBuf {
@@ -49,18 +51,22 @@ fn spawn_node(engine: Engine) -> Harness {
     let link = Arc::new(Link::ideal());
     let node = std::thread::spawn(move || {
         run_compute_node(
-            0,
             engine,
-            cfg_n,
-            w_n,
-            din_n,
-            dout_n,
+            WorkerConns {
+                view: StageView::standalone(0),
+                config: cfg_n,
+                weights: w_n,
+                data_in: din_n,
+                data_out: dout_n,
+            },
             CodecConfig::default(),
             link,
             stats,
-            2,
-            1.0,
-            0.0,
+            ComputeOptions {
+                pipe_depth: 2,
+                compute_slowdown: 1.0,
+                emulated_mflops: 0.0,
+            },
         )
     });
     Harness {

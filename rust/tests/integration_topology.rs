@@ -1,0 +1,156 @@
+//! Topology-layer integration against real artifacts: heterogeneous
+//! per-hop links over both transports, and replicated bottleneck stages
+//! under deterministic device-speed emulation. Requires `make artifacts`
+//! (tiny profile).
+
+use std::path::PathBuf;
+
+use defer::compress::Compression;
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
+use defer::runtime::Engine;
+use defer::serial::{Codec, Serialization};
+
+fn cfg(nodes: usize) -> DeferConfig {
+    let mut c = DeferConfig::default();
+    c.artifacts_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    c.profile = "tiny".into();
+    c.model = "resnet50".into();
+    c.nodes = nodes;
+    let codec = Codec::new(Serialization::Binary, Compression::Lz4);
+    c.codecs.weights = codec;
+    c.codecs.data = codec;
+    c
+}
+
+fn have_artifacts() -> bool {
+    let ok = cfg(1).artifacts_dir.join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn heterogeneous_links_run_both_transports() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    // Wifi uplink into the cluster, gigabit inside, gigabit return.
+    let links = vec![
+        LinkSpec::wifi(),
+        LinkSpec::gigabit_lan(),
+        LinkSpec::gigabit_lan(),
+    ];
+    let mut reports = Vec::new();
+    for tcp in [false, true] {
+        let mut c = cfg(2);
+        c.per_hop_links = links.clone();
+        c.tcp = tcp;
+        let r = ChainRunner::with_engine(c, engine.clone())
+            .unwrap()
+            .run_frames(3)
+            .unwrap();
+        assert_eq!(r.cycles, 3, "tcp={tcp}");
+        assert!(r.reference_error.unwrap() < 0.05, "tcp={tcp}");
+        // The wifi uplink's 3 ms latency floor must be visible.
+        assert!(r.latency_mean > std::time::Duration::from_millis(3));
+        reports.push(r);
+    }
+    // Byte accounting stays transport-independent with per-hop links.
+    assert_eq!(reports[0].architecture_bytes, reports[1].architecture_bytes);
+    assert_eq!(reports[0].weights_bytes, reports[1].weights_bytes);
+    assert_eq!(reports[0].data_bytes, reports[1].data_bytes);
+}
+
+#[test]
+fn explicit_uniform_topology_accounting_matches_default() {
+    if !have_artifacts() {
+        return;
+    }
+    // replicas=[1,1] and per_hop_links=[ideal;3] must be byte-identical
+    // to the default chain: the topology layer is accounting-neutral.
+    let engine = Engine::cpu().unwrap();
+    let r_default = ChainRunner::with_engine(cfg(2), engine.clone())
+        .unwrap()
+        .run_frames(3)
+        .unwrap();
+    let mut c = cfg(2);
+    c.replicas = vec![1, 1];
+    c.per_hop_links = vec![LinkSpec::ideal(); 3];
+    let r_explicit = ChainRunner::with_engine(c, engine)
+        .unwrap()
+        .run_frames(3)
+        .unwrap();
+    assert_eq!(r_default.architecture_bytes, r_explicit.architecture_bytes);
+    assert_eq!(r_default.weights_bytes, r_explicit.weights_bytes);
+    assert_eq!(r_default.data_bytes, r_explicit.data_bytes);
+    assert_eq!(r_default.workers, 2);
+    assert_eq!(r_explicit.workers, 2);
+}
+
+#[test]
+fn replicated_bottleneck_stage_completes_and_speeds_up() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    // Deterministic device emulation makes compute the bottleneck: each
+    // stage's frame time is floored to stage_flops / 20 MFLOPS, so the
+    // pipeline rate is set by the slowest stage. Replicating a stage
+    // halves its effective service time; throughput must rise.
+    let frames = 8;
+    let mut uni = cfg(2);
+    uni.emulated_mflops = 20.0;
+    let r_uni = ChainRunner::with_engine(uni, engine.clone())
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+
+    // Replicate the stage with more FLOPs (the pipeline bottleneck).
+    let plan = ChainRunner::with_engine(cfg(2), engine.clone()).unwrap();
+    let bottleneck = if plan.plan().parts[0].flops >= plan.plan().parts[1].flops {
+        0
+    } else {
+        1
+    };
+    let mut rep = cfg(2);
+    rep.emulated_mflops = 20.0;
+    rep.replicas = vec![1, 1];
+    rep.replicas[bottleneck] = 2;
+    let r_rep = ChainRunner::with_engine(rep, engine)
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+
+    // All frames complete, in order (reference check would fail on
+    // reordering because latency pairing keys on frame id).
+    assert_eq!(r_rep.cycles, frames);
+    assert!(r_rep.reference_error.unwrap() < 0.05);
+    assert_eq!(r_rep.workers, 3);
+    assert_eq!(r_rep.nodes, 2);
+    assert_eq!(r_rep.node_energy.len(), 3);
+    // Strictly higher throughput than the unreplicated equivalent.
+    assert!(
+        r_rep.throughput > r_uni.throughput,
+        "replication did not help: {} vs {}",
+        r_rep.throughput,
+        r_uni.throughput
+    );
+}
+
+#[test]
+fn replicated_stage_over_tcp() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut c = cfg(2);
+    c.replicas = vec![2, 1];
+    c.tcp = true;
+    let r = ChainRunner::new(c).unwrap().run_frames(4).unwrap();
+    assert_eq!(r.cycles, 4);
+    assert_eq!(r.workers, 3);
+    assert!(r.reference_error.unwrap() < 0.05);
+}
