@@ -16,6 +16,12 @@
 //! throughput under deterministic edge-device emulation while results
 //! stay in FIFO order.
 //!
+//! Part 3 retires the hand-picking: `defer::placement` (the arXiv
+//! 2210.12219-style planner, `--auto-place` on the CLI) derives the
+//! replica counts and per-hop links from stage FLOPs, boundary bytes
+//! and a worker budget, and the chain runs the emitted topology
+//! unchanged.
+//!
 //! ```text
 //! make artifacts
 //! cargo run --release --example heterogeneous [frames]
@@ -133,10 +139,11 @@ fn main() -> defer::Result<()> {
         });
     let r_uni = uniform.run_frames(frames)?;
 
-    let mut replicated = base;
+    let mut replicated = base.clone();
     replicated.replicas = vec![1; stages];
     replicated.replicas[bottleneck] = 2;
-    let r_rep = ChainRunner::with_engine(replicated, engine)?.run_frames(frames)?;
+    let r_rep =
+        ChainRunner::with_engine(replicated, engine.clone())?.run_frames(frames)?;
 
     println!(
         "uniform chain      : {:.3} cycles/s ({} workers)",
@@ -151,5 +158,28 @@ fn main() -> defer::Result<()> {
     if let Some(err) = r_rep.reference_error {
         println!("max |err| vs reference (order preserved): {err:.3e}");
     }
+
+    // ---- Part 3: let the placement planner choose the topology ----
+    // `--auto-place` in example form: instead of hand-picking which
+    // stage to replicate, hand the planner the stage costs (FLOPs +
+    // boundary bytes, already in the partition plan), the device model
+    // (here: the same 50 MFLOP/s emulated edge devices) and a worker
+    // budget, and run whatever Topology it emits.
+    println!();
+    println!("== auto-placement (planner chooses replicas + links) ==");
+    let mut auto = base;
+    auto.auto_place = true;
+    auto.workers_budget = stages + 2;
+    let runner = ChainRunner::with_engine(auto.clone(), engine)?;
+    let problem = defer::placement::PlacementProblem::from_config(&auto, runner.plan())?;
+    let placed = defer::placement::plan(&problem)?;
+    print!("{}", placed.render());
+    let r_auto = runner.run_frames(frames)?;
+    println!(
+        "planned topology   : {:.3} cycles/s ({} workers, {:+.0}% vs uniform)",
+        r_auto.throughput,
+        r_auto.workers,
+        (r_auto.throughput / r_uni.throughput - 1.0) * 100.0
+    );
     Ok(())
 }

@@ -1,0 +1,140 @@
+//! Planned-vs-uniform throughput: what the placement planner buys.
+//!
+//! Part 1 is artifact-free: a synthetic heterogeneous scenario (wifi
+//! uplink, gigabit cluster, one 4x-heavy stage) run through the pure
+//! cost model, reporting the planner's predicted throughput against the
+//! uniform unreplicated chain at several worker budgets. Deterministic:
+//! identical output every run.
+//!
+//! Part 2 (needs `make artifacts`) measures the same comparison on the
+//! real chain: tiny resnet50, deterministic edge-device emulation,
+//! uniform vs `--auto-place` topologies.
+//!
+//! Env: DEFER_FRAMES (default 8), DEFER_EMULATED_MFLOPS (default 20).
+
+use defer::bench::Table;
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
+use defer::placement::{plan, DeviceProfile, PlacementProblem, StageCost};
+use defer::runtime::Engine;
+
+fn synthetic_problem(budget: usize) -> PlacementProblem {
+    PlacementProblem {
+        stages: vec![
+            StageCost {
+                flops: 100_000_000,
+                input_bytes: 12_288,
+                output_bytes: 65_536,
+            },
+            StageCost {
+                flops: 400_000_000,
+                input_bytes: 65_536,
+                output_bytes: 65_536,
+            },
+            StageCost {
+                flops: 100_000_000,
+                input_bytes: 65_536,
+                output_bytes: 4_096,
+            },
+        ],
+        devices: (0..budget)
+            .map(|i| DeviceProfile {
+                name: format!("edge{i}"),
+                mflops: 100.0,
+            })
+            .collect(),
+        worker_budget: budget,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    }
+}
+
+fn main() {
+    println!("# placement planner: planned vs uniform throughput");
+    println!();
+    println!("## part 1: cost model only (synthetic 3-stage scenario, no artifacts)");
+    let uniform = plan(&synthetic_problem(3)).expect("uniform plan");
+    let mut table = Table::new(&[
+        "worker budget",
+        "replicas",
+        "predicted cycles/s",
+        "vs uniform",
+    ]);
+    for budget in [3usize, 4, 5, 6, 8] {
+        let placed = plan(&synthetic_problem(budget)).expect("plan");
+        let reps: Vec<String> = placed
+            .replica_counts()
+            .iter()
+            .map(|r| r.to_string())
+            .collect();
+        table.row(&[
+            budget.to_string(),
+            reps.join(","),
+            format!("{:.3}", placed.predicted_throughput),
+            format!(
+                "{:.2}x",
+                placed.predicted_throughput / uniform.predicted_throughput
+            ),
+        ]);
+    }
+    print!("{}", table.render());
+    println!();
+    print!("{}", plan(&synthetic_problem(6)).expect("plan").render());
+
+    // ---- part 2: measured, needs artifacts ----
+    let frames: u64 = std::env::var("DEFER_FRAMES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let mflops: f64 = std::env::var("DEFER_EMULATED_MFLOPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+    let mut base = DeferConfig::default();
+    base.profile = "tiny".into();
+    base.model = "resnet50".into();
+    base.nodes = 2;
+    base.emulated_mflops = mflops;
+    base.per_hop_links = vec![
+        LinkSpec::wifi(),
+        LinkSpec::gigabit_lan(),
+        LinkSpec::gigabit_lan(),
+    ];
+    println!();
+    println!(
+        "## part 2: measured on tiny resnet50 ({frames} frames, {mflops} MFLOP/s devices)"
+    );
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping: {e}");
+            return;
+        }
+    };
+    let uniform_run = ChainRunner::with_engine(base.clone(), engine.clone())
+        .and_then(|r| r.run_frames(frames));
+    let r_uni = match uniform_run {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut auto = base;
+    auto.auto_place = true;
+    auto.workers_budget = 4;
+    let r_auto = ChainRunner::with_engine(auto, engine)
+        .and_then(|r| r.run_frames(frames))
+        .expect("auto-place run");
+    println!(
+        "uniform chain: {:.3} cycles/s ({} workers)",
+        r_uni.throughput, r_uni.workers
+    );
+    println!(
+        "auto-placed  : {:.3} cycles/s ({} workers, {:.2}x)",
+        r_auto.throughput,
+        r_auto.workers,
+        r_auto.throughput / r_uni.throughput
+    );
+}

@@ -78,6 +78,18 @@ pub struct DeferConfig {
     /// deployments with predictable ports). `None` = ephemeral binds,
     /// immune to port collisions across parallel runs.
     pub base_port: Option<u16>,
+    /// Let the placement planner (`placement::plan`) derive replica
+    /// counts and per-hop links from stage costs instead of taking
+    /// `replicas`/`per_hop_links` verbatim. Needs a device model:
+    /// `device_profile` or `emulated_mflops`.
+    pub auto_place: bool,
+    /// Total worker replicas the planner may place (0 = auto: the
+    /// device-profile size, or `nodes` without a profile).
+    pub workers_budget: usize,
+    /// Path to a device-profile JSON (`{"devices": [{"name", "mflops"}]}`)
+    /// describing the worker pool for auto-placement. `None` = a
+    /// homogeneous pool of `emulated_mflops`-speed devices.
+    pub device_profile: Option<PathBuf>,
 }
 
 impl Default for DeferConfig {
@@ -97,6 +109,9 @@ impl Default for DeferConfig {
             emulated_mflops: 0.0,
             tcp: false,
             base_port: None,
+            auto_place: false,
+            workers_budget: 0,
+            device_profile: None,
         }
     }
 }
@@ -170,6 +185,15 @@ impl DeferConfig {
         if let Some(x) = obj.get("tcp") {
             cfg.tcp = matches!(x, Json::Bool(true));
         }
+        if let Some(x) = obj.get("auto_place") {
+            cfg.auto_place = matches!(x, Json::Bool(true));
+        }
+        if let Some(x) = obj.get("workers_budget") {
+            cfg.workers_budget = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("device_profile") {
+            cfg.device_profile = Some(PathBuf::from(x.as_str()?));
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -229,6 +253,13 @@ impl DeferConfig {
         if args.has("tcp") {
             self.tcp = true;
         }
+        if args.has("auto-place") {
+            self.auto_place = true;
+        }
+        self.workers_budget = args.get_usize("workers-budget", self.workers_budget)?;
+        if let Some(p) = args.get("device-profile") {
+            self.device_profile = Some(PathBuf::from(p));
+        }
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
                 DeferError::Cli(format!("--base-port wants a port number, got {p:?}"))
@@ -283,6 +314,12 @@ impl DeferConfig {
         }
         if self.pipe_depth == 0 {
             return Err(DeferError::Config("pipe_depth must be >= 1".into()));
+        }
+        if self.auto_place && self.workers_budget > 0 && self.workers_budget < self.nodes {
+            return Err(DeferError::Config(format!(
+                "workers_budget {} cannot cover {} stages (one replica each)",
+                self.workers_budget, self.nodes
+            )));
         }
         if !matches!(self.model.as_str(), "resnet50" | "vgg16" | "vgg19") {
             return Err(DeferError::Config(format!("unknown model {:?}", self.model)));
@@ -370,6 +407,49 @@ mod tests {
         assert!(d.replicas.is_empty());
         assert!(d.per_hop_links.is_empty());
         assert_eq!(d.base_port, None);
+    }
+
+    #[test]
+    fn auto_place_surface_round_trip() {
+        let text = r#"{
+            "nodes": 2,
+            "auto_place": true,
+            "workers_budget": 4,
+            "device_profile": "devices.json"
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert!(cfg.auto_place);
+        assert_eq!(cfg.workers_budget, 4);
+        assert_eq!(cfg.device_profile, Some(PathBuf::from("devices.json")));
+        // CLI spelling.
+        let raw: Vec<String> = [
+            "run",
+            "--nodes",
+            "2",
+            "--auto-place",
+            "--workers-budget",
+            "5",
+            "--device-profile",
+            "pool.json",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp", "auto-place"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.auto_place);
+        assert_eq!(cfg.workers_budget, 5);
+        assert_eq!(cfg.device_profile, Some(PathBuf::from("pool.json")));
+        // A budget below one-replica-per-stage is rejected up front
+        // (only when planning is actually on — otherwise the key is
+        // inert and must not block unrelated subcommands).
+        assert!(DeferConfig::from_json_str(
+            r#"{"nodes": 4, "auto_place": true, "workers_budget": 2}"#
+        )
+        .is_err());
+        assert!(DeferConfig::from_json_str(r#"{"nodes": 4, "workers_budget": 2}"#).is_ok());
+        // Defaults keep planning off.
+        assert!(!DeferConfig::default().auto_place);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Chain orchestration, reduced to **plan → wire → spawn → report**.
 //!
 //! * **plan** — derive the declarative [`Topology`] from the config:
-//!   stage count, per-stage worker replication, per-hop links.
+//!   stage count, per-stage worker replication, per-hop links. With
+//!   `auto_place` the [`crate::placement`] planner derives those from
+//!   the partition plan's stage costs and the configured device budgets
+//!   instead; either way the rest of the pipeline consumes the same
+//!   `Topology` and cannot tell who wrote it.
 //! * **wire** — hand the topology to [`crate::topology::wiring`], which
 //!   establishes every connection for either transport (in-process byte
 //!   pipes, or TCP loopback with ephemeral ports — the paper's CORE
@@ -86,10 +90,22 @@ impl ChainRunner {
         &self.engine
     }
 
+    /// The topology this deployment will run: hand-written
+    /// (`replicas`/`per_hop_links`) by default, or emitted by the
+    /// placement planner when `auto_place` is set.
+    pub fn topology(&self) -> Result<Topology> {
+        if self.cfg.auto_place {
+            let problem = crate::placement::PlacementProblem::from_config(&self.cfg, &self.plan)?;
+            crate::placement::plan(&problem)?.topology()
+        } else {
+            Topology::from_config(&self.cfg)
+        }
+    }
+
     /// Run `frames` inference cycles through the chain; returns the report.
     pub fn run_frames(&self, frames: u64) -> Result<RunReport> {
-        // ---- plan: declarative topology from config ----
-        let topo = Topology::from_config(&self.cfg)?;
+        // ---- plan: declarative topology, hand-written or auto-placed ----
+        let topo = self.topology()?;
         if topo.num_stages() != self.plan.parts.len() {
             return Err(DeferError::Coordinator(format!(
                 "topology has {} stages for {} partitions",

@@ -12,7 +12,9 @@
 //!   partition to HLO text under `artifacts/`.
 //! * **L3 (this crate)** — loads the artifacts via the PJRT C API
 //!   ([`runtime`]), derives a declarative deployment [`topology`]
-//!   (stages × replicas, per-hop links), distributes partitions and
+//!   (stages × replicas, per-hop links) — either hand-written or emitted
+//!   by the [`placement`] planner from stage costs and device budgets —
+//!   distributes partitions and
 //!   weights to worker replicas ([`coordinator::dispatcher`]), and
 //!   pipelines frames through the deployment ([`coordinator`]) with the
 //!   paper's serialization/compression sweep ([`serial`], [`compress`]),
@@ -32,6 +34,7 @@ pub mod error;
 pub mod metrics;
 pub mod model;
 pub mod netem;
+pub mod placement;
 pub mod runtime;
 pub mod serial;
 pub mod tensor;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //! * `run`      — run a DEFER chain (or the single-device baseline with
 //!                `--nodes 1 --baseline`) and print the run report.
+//! * `plan`     — print the placement planner's topology for a config
+//!                without running it.
 //! * `sweep`    — Fig. 2-style sweep over node counts for one model.
 //! * `codecs`   — Table I/II-style codec sweep.
 //! * `info`     — show available artifacts and PJRT platform info.
@@ -11,6 +13,8 @@
 //! ```text
 //! defer run --model resnet50 --profile edge --nodes 8 --frames 32
 //! defer run --model resnet50 --nodes 4 --tcp --link gigabit
+//! defer run --nodes 4 --auto-place --workers-budget 6 --emulated-mflops 50
+//! defer plan --nodes 4 --auto-place --workers-budget 6 --emulated-mflops 50
 //! defer sweep --model vgg16 --parts 1,4,6,8 --frames 16
 //! defer info
 //! ```
@@ -25,13 +29,13 @@ use defer::error::Result;
 use defer::runtime::Engine;
 use defer::util::{fmt_bytes, fmt_duration};
 
-const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help"];
+const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help", "auto-place"];
 
 fn usage() -> &'static str {
     "defer — Distributed Edge Inference (COMSNETS 2022 reproduction)
 
 USAGE:
-  defer <run|sweep|codecs|info> [options]
+  defer <run|plan|sweep|codecs|info> [options]
 
 COMMON OPTIONS:
   --artifacts DIR          artifact root (default: artifacts)
@@ -50,6 +54,16 @@ RUN OPTIONS:
   --link ideal|gigabit|edge|wifi   uniform link for every hop
   --links L0,L1,...        per-hop links, N+1 entries (dispatcher uplink,
                            inter-stage hops, return link); one entry = all
+  --auto-place             let the placement planner choose replicas and
+                           per-hop links from stage FLOPs + boundary bytes
+                           (--replicas is ignored; --links feeds the planner:
+                           first entry pins the uplink, the rest are the
+                           interconnect candidates. Needs a device model via
+                           --device-profile or --emulated-mflops)
+  --workers-budget N       max worker replicas auto-place may use
+                           (default: device-profile size, else --nodes)
+  --device-profile FILE    device pool JSON for auto-place:
+                           {\"devices\": [{\"name\": \"jetson\", \"mflops\": 200}]}
   --pipe-depth N           chain backpressure window (default: 4)
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
@@ -113,9 +127,31 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = if args.has("baseline") {
         SingleDevice::new(cfg)?.run_frames(frames)?
     } else {
-        ChainRunner::new(cfg)?.run_frames(frames)?
+        let runner = ChainRunner::new(cfg)?;
+        if runner.cfg.auto_place {
+            // Surface what the planner decided. run_frames plans again
+            // internally; planning is pure and deterministic, so this
+            // matches the deployed topology as long as the device
+            // profile on disk is not edited in between.
+            let problem =
+                defer::placement::PlacementProblem::from_config(&runner.cfg, runner.plan())?;
+            print!("{}", defer::placement::plan(&problem)?.render());
+        }
+        runner.run_frames(frames)?
     };
     print_report(&report);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    use defer::model::PartitionPlan;
+    use defer::placement;
+    let cfg = load_config(args)?;
+    let plan = PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, cfg.nodes)?;
+    let problem = placement::PlacementProblem::from_config(&cfg, &plan)?;
+    let placed = placement::plan(&problem)?;
+    print!("{}", placed.render());
+    println!("(rerun as `defer run --auto-place` with the same flags to deploy it)");
     Ok(())
 }
 
@@ -217,6 +253,7 @@ fn main() {
     }
     let result = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("plan") => cmd_plan(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("codecs") => cmd_codecs(&args),
         Some("info") => cmd_info(&args),

@@ -55,7 +55,8 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        // 56 log-spaced bucket upper bounds from 1 us to 100 s.
+        // Log-spaced (x1.4) bucket upper bounds from 1 us to 100 s,
+        // plus one overflow bucket for anything slower.
         let mut bounds = Vec::new();
         let mut b = 1e-6f64;
         while b <= 100.0 {
@@ -113,7 +114,9 @@ impl Histogram {
         Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed))
     }
 
-    /// Approximate quantile from bucket upper bounds (q in [0, 1]).
+    /// Approximate quantile from bucket upper bounds (q in [0, 1]),
+    /// clamped to the exactly-tracked max so a sample in the overflow
+    /// bucket reports its real magnitude rather than the 100 s bound.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -124,8 +127,13 @@ impl Histogram {
         for (i, bucket) in self.buckets.iter().enumerate() {
             seen += bucket.load(Ordering::Relaxed);
             if seen >= target {
-                let secs = self.bounds.get(i).copied().unwrap_or(100.0);
-                return Duration::from_secs_f64(secs);
+                return match self.bounds.get(i) {
+                    // A bucket's upper bound can exceed every recorded
+                    // sample; never report above the observed max.
+                    Some(secs) => Duration::from_secs_f64(*secs).min(self.max()),
+                    // Overflow bucket: no upper bound, use the max.
+                    None => self.max(),
+                };
             }
         }
         self.max()
@@ -208,6 +216,19 @@ mod tests {
         assert!((0.002..0.006).contains(&p50), "p50 {p50}");
         // p100 near max.
         assert!(h.quantile(1.0) >= Duration::from_millis(70));
+    }
+
+    #[test]
+    fn quantile_clamps_overflow_bucket_to_observed_max() {
+        // A sample beyond the last bucket bound (100 s) used to report a
+        // flat 100 s; it must report the exactly-tracked max instead.
+        let h = Histogram::new();
+        h.record(Duration::from_secs(150));
+        h.record(Duration::from_millis(1));
+        assert_eq!(h.quantile(1.0), Duration::from_secs(150));
+        assert_eq!(h.quantile(0.99), Duration::from_secs(150));
+        // In-range quantiles stay at their bucket bound, <= max.
+        assert!(h.quantile(0.25) <= Duration::from_millis(2));
     }
 
     #[test]

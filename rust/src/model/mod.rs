@@ -116,6 +116,17 @@ impl PartitionSpec {
         self.output_shape.iter().product()
     }
 
+    /// Uncompressed bytes of one input activation frame (f32), the
+    /// boundary cost the placement planner charges to the ingress hop.
+    pub fn input_bytes(&self) -> u64 {
+        (self.input_elements() * 4) as u64
+    }
+
+    /// Uncompressed bytes of one output activation frame (f32).
+    pub fn output_bytes(&self) -> u64 {
+        (self.output_elements() * 4) as u64
+    }
+
     /// Read the HLO text.
     pub fn read_hlo(&self) -> Result<String> {
         std::fs::read_to_string(&self.hlo_path)

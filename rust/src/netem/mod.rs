@@ -63,6 +63,33 @@ impl LinkSpec {
         }
     }
 
+    /// Stable display name: the preset keyword when the spec matches
+    /// one (so `parse(label())` round-trips), a parameter summary
+    /// otherwise. Used by placement-plan rendering.
+    pub fn label(&self) -> String {
+        if *self == Self::ideal() {
+            return "ideal".into();
+        }
+        if *self == Self::gigabit_lan() {
+            return "gigabit".into();
+        }
+        if *self == Self::fast_edge() {
+            return "edge".into();
+        }
+        if *self == Self::wifi() {
+            return "wifi".into();
+        }
+        let bw = match self.bandwidth_bps {
+            Some(bps) => format!("{:.1}Mbps", bps as f64 / 1e6),
+            None => "unlimited".into(),
+        };
+        let mut label = format!("{bw}/{:.1}ms", self.latency.as_secs_f64() * 1e3);
+        if !self.jitter.is_zero() {
+            label.push_str(&format!("~{:.1}ms", self.jitter.as_secs_f64() * 1e3));
+        }
+        label
+    }
+
     pub fn parse(s: &str) -> crate::error::Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "ideal" | "core" => Ok(Self::ideal()),

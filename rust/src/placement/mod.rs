@@ -1,0 +1,619 @@
+//! Placement planning: a pure pass from stage costs to a deployment
+//! [`Topology`].
+//!
+//! PR 1 made deployments declarative — [`Topology`] says how many worker
+//! replicas serve each stage and which [`LinkSpec`] each hop uses — but
+//! left *choosing* those numbers to hand-written `--replicas`/`--links`
+//! flags. This module closes that loop in the spirit of the DEFER
+//! authors' follow-up "Partitioning and Placement of DNNs on Distributed
+//! Edge Devices" (arXiv 2210.12219): given what the partition plan
+//! already knows (per-stage FLOPs and boundary activation sizes) and a
+//! description of the hardware (per-device FLOP/s budgets, candidate
+//! links), it models per-stage service time and emits the
+//! throughput-maximizing topology under a total-worker budget.
+//!
+//! # Cost model
+//!
+//! The coordinator runs each worker replica as one thread that, per
+//! frame, decodes, computes, encodes and then performs a *shaped* write
+//! onto its own instance of the egress hop's link (see
+//! `coordinator::chain`). A stage with `R` replicas is dealt frames
+//! round-robin, so the planner models:
+//!
+//! * per-replica compute time `c_i = flops_i / f_min(devices_i)` — the
+//!   round-robin deal hands every replica the same frame share, so the
+//!   *slowest* device assigned to a stage gates it (a faster co-replica
+//!   idles, it cannot steal work);
+//! * per-replica egress time `e_i = bytes_out_i * 8 / bandwidth +
+//!   latency + jitter/2` on the hop `i+1` link (each replica owns an
+//!   independent physical link, so egress capacity scales with `R_i`);
+//! * stage occupancy `s_i = (c_i + e_i) / R_i` — compute and egress
+//!   serialize inside one replica thread;
+//! * the dispatcher uplink (hop 0) is a *single* shared link whatever
+//!   `R_0` is, so its occupancy `d = bytes_in_0 * 8 / bandwidth +
+//!   latency + jitter/2` does not shrink with replication.
+//!
+//! Pipeline throughput is `1 / max(d, max_i s_i)`. Codec time is not
+//! modeled (it is device-native and identical across placements), and
+//! jitter enters as its expectation so the plan stays deterministic.
+//!
+//! # Algorithm
+//!
+//! 1. **Links.** Hop 0 (and only hop 0) uses the problem's `uplink` —
+//!    the dispatcher's physical medium is not a choice. Every later hop
+//!    picks the candidate `interconnect` link with the smallest modeled
+//!    transfer time for that hop's boundary bytes (first candidate wins
+//!    ties).
+//! 2. **Devices.** Stages ranked by FLOPs (descending, index ascending
+//!    on ties) claim devices from the pool sorted fastest-first (name
+//!    ascending on ties): the heaviest stage gets the fastest devices.
+//! 3. **Replication.** Starting from one replica per stage, repeatedly
+//!    add a replica to the current bottleneck stage while the worker
+//!    budget allows, the stage's own service time strictly shrinks, and
+//!    the overall gate does not worsen (equal co-bottlenecks hold the
+//!    gate steady for a move and are balanced by later iterations); a
+//!    final trim pass returns replicas that bought no throughput. An
+//!    uplink-bound pipeline stops immediately — no amount of worker
+//!    replication shrinks a shared dispatcher link.
+//!
+//! Greedily replicating the bottleneck is exact for homogeneous pools
+//! (only lowering the max stage occupancy can raise throughput); with
+//! heterogeneous devices the fastest-to-heaviest assignment is a
+//! deterministic heuristic, re-evaluated from scratch after every move
+//! so a replica that would drag its stage's `f_min` down (and therefore
+//! not pay for itself) is rejected.
+//!
+//! Everything here is pure and deterministic — no RNG, no clocks, no
+//! artifact reads — so planner output is byte-stable across runs and
+//! goldens-testable from synthetic stage costs alone.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::config::DeferConfig;
+use crate::error::{DeferError, Result};
+use crate::model::PartitionPlan;
+use crate::netem::LinkSpec;
+use crate::serial::json;
+use crate::topology::Topology;
+
+/// One edge device class available to host a worker replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Device label, echoed in the plan's per-stage assignment.
+    pub name: String,
+    /// Sustained compute budget in MFLOP/s.
+    pub mflops: f64,
+}
+
+impl DeviceProfile {
+    fn flops_per_sec(&self) -> f64 {
+        self.mflops * 1e6
+    }
+}
+
+/// Parse a device-profile JSON document:
+/// `{"devices": [{"name": "jetson", "mflops": 200}, ...]}`.
+pub fn parse_device_profiles(text: &str) -> Result<Vec<DeviceProfile>> {
+    let v = json::parse(text)?;
+    let mut out = Vec::new();
+    for d in v.get("devices")?.as_arr()? {
+        let name = d.get("name")?.as_str()?.to_string();
+        let mflops = d.get("mflops")?.as_f64()?;
+        if !(mflops > 0.0) {
+            return Err(DeferError::Config(format!(
+                "device {name:?}: mflops must be > 0, got {mflops}"
+            )));
+        }
+        out.push(DeviceProfile { name, mflops });
+    }
+    if out.is_empty() {
+        return Err(DeferError::Config(
+            "device profile lists no devices".into(),
+        ));
+    }
+    Ok(out)
+}
+
+/// Load a device-profile JSON file (see [`parse_device_profiles`]).
+pub fn load_device_profiles(path: &Path) -> Result<Vec<DeviceProfile>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| DeferError::Config(format!("device profile {}: {e}", path.display())))?;
+    parse_device_profiles(&text)
+}
+
+/// What the planner needs to know about one pipeline stage — exactly the
+/// fields a `PartitionSpec` already carries.
+#[derive(Clone, Debug)]
+pub struct StageCost {
+    /// FLOPs to execute the stage once.
+    pub flops: u64,
+    /// Uncompressed activation bytes entering the stage.
+    pub input_bytes: u64,
+    /// Uncompressed activation bytes leaving the stage.
+    pub output_bytes: u64,
+}
+
+/// A complete placement problem: stage costs, the device pool, the
+/// worker budget, and the link vocabulary.
+#[derive(Clone, Debug)]
+pub struct PlacementProblem {
+    pub stages: Vec<StageCost>,
+    /// Devices available to host worker replicas.
+    pub devices: Vec<DeviceProfile>,
+    /// Max worker replicas to place in total (>= number of stages,
+    /// <= number of devices).
+    pub worker_budget: usize,
+    /// The dispatcher's physical medium — always hop 0.
+    pub uplink: LinkSpec,
+    /// Candidate links for every later hop (inter-stage and return).
+    /// Empty = the uplink is the only medium.
+    pub interconnect: Vec<LinkSpec>,
+}
+
+impl PlacementProblem {
+    /// Build the problem a [`DeferConfig`] + partition plan describe:
+    /// stage costs from the plan's FLOPs and boundary shapes; the device
+    /// pool from `device_profile` (or a homogeneous pool of
+    /// `emulated_mflops`-speed devices when no profile is given); hop 0
+    /// of `per_hop_links` as the uplink and the remaining distinct
+    /// entries as interconnect candidates.
+    pub fn from_config(cfg: &DeferConfig, plan: &PartitionPlan) -> Result<PlacementProblem> {
+        let stages: Vec<StageCost> = plan
+            .parts
+            .iter()
+            .map(|p| StageCost {
+                flops: p.flops,
+                input_bytes: p.input_bytes(),
+                output_bytes: p.output_bytes(),
+            })
+            .collect();
+        let uplink = cfg.per_hop_links.first().copied().unwrap_or(cfg.link);
+        let tail: &[LinkSpec] = match cfg.per_hop_links.len() {
+            0 => std::slice::from_ref(&cfg.link),
+            1 => &cfg.per_hop_links[..],
+            _ => &cfg.per_hop_links[1..],
+        };
+        let mut interconnect: Vec<LinkSpec> = Vec::new();
+        for l in tail {
+            if !interconnect.contains(l) {
+                interconnect.push(*l);
+            }
+        }
+        let (devices, worker_budget) = match &cfg.device_profile {
+            Some(path) => {
+                let devices = load_device_profiles(path)?;
+                let budget = if cfg.workers_budget > 0 {
+                    cfg.workers_budget
+                } else {
+                    devices.len()
+                };
+                if budget > devices.len() {
+                    return Err(DeferError::Config(format!(
+                        "workers budget {budget} exceeds the {} profiled devices",
+                        devices.len()
+                    )));
+                }
+                (devices, budget)
+            }
+            None => {
+                if !(cfg.emulated_mflops > 0.0) {
+                    return Err(DeferError::Config(
+                        "auto-place needs a device model: pass --device-profile FILE \
+                         or --emulated-mflops RATE so stage compute times are defined"
+                            .into(),
+                    ));
+                }
+                let budget = if cfg.workers_budget > 0 {
+                    cfg.workers_budget
+                } else {
+                    cfg.nodes
+                };
+                let devices = (0..budget)
+                    .map(|i| DeviceProfile {
+                        name: format!("edge{i}"),
+                        mflops: cfg.emulated_mflops,
+                    })
+                    .collect();
+                (devices, budget)
+            }
+        };
+        Ok(PlacementProblem {
+            stages,
+            devices,
+            worker_budget,
+            uplink,
+            interconnect,
+        })
+    }
+}
+
+/// What gates the planned pipeline's throughput.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// The shared dispatcher uplink (hop 0) — replication cannot help.
+    Uplink,
+    /// Stage `i`'s per-replica service time.
+    Stage(usize),
+}
+
+/// One stage's slot in the plan, with the modeled times behind it.
+#[derive(Clone, Debug)]
+pub struct StagePlacement {
+    pub replicas: usize,
+    /// Names of the devices hosting this stage's replicas.
+    pub devices: Vec<String>,
+    /// Per-replica compute time per frame (gated by the slowest device).
+    pub compute: Duration,
+    /// Per-replica shaped egress write per frame.
+    pub egress: Duration,
+    /// Effective stage occupancy per frame: `(compute + egress) / R`.
+    pub service: Duration,
+}
+
+/// The planner's output: replica counts, hop links, and the predicted
+/// steady-state throughput they buy. `topology()` turns it into the
+/// same [`Topology`] a hand-written config would produce.
+#[derive(Clone, Debug)]
+pub struct PlacementPlan {
+    pub stages: Vec<StagePlacement>,
+    /// Per-hop links, `stages + 1` entries (hop 0 = uplink).
+    pub hop_links: Vec<LinkSpec>,
+    /// Modeled occupancy of the shared dispatcher uplink per frame.
+    pub uplink_time: Duration,
+    pub bottleneck: Bottleneck,
+    /// Modeled steady-state frames/second.
+    pub predicted_throughput: f64,
+}
+
+impl PlacementPlan {
+    /// Total worker replicas the plan places.
+    pub fn num_workers(&self) -> usize {
+        self.stages.iter().map(|s| s.replicas).sum()
+    }
+
+    /// Replica counts in stage order.
+    pub fn replica_counts(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.replicas).collect()
+    }
+
+    /// The [`Topology`] this plan describes — consumed by the chain
+    /// runner exactly like a hand-written one.
+    pub fn topology(&self) -> Result<Topology> {
+        Topology::new(&self.replica_counts(), self.hop_links.clone())
+    }
+
+    /// Stable human-readable rendering (also the goldens surface: the
+    /// planner is deterministic, so this string is byte-identical across
+    /// runs on the same problem).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "placement plan: {} stage(s), {} worker(s), predicted {:.3} cycles/s\n",
+            self.stages.len(),
+            self.num_workers(),
+            self.predicted_throughput
+        ));
+        out.push_str(&format!(
+            "  hop 0 uplink {} ({:.3} ms/frame{})\n",
+            self.hop_links[0].label(),
+            self.uplink_time.as_secs_f64() * 1e3,
+            if self.bottleneck == Bottleneck::Uplink {
+                ", bottleneck"
+            } else {
+                ""
+            }
+        ));
+        for (i, st) in self.stages.iter().enumerate() {
+            out.push_str(&format!(
+                "  stage {i}: x{} on [{}] via {}, compute {:.3} ms + egress {:.3} ms \
+                 -> service {:.3} ms/frame{}\n",
+                st.replicas,
+                st.devices.join(", "),
+                self.hop_links[i + 1].label(),
+                st.compute.as_secs_f64() * 1e3,
+                st.egress.as_secs_f64() * 1e3,
+                st.service.as_secs_f64() * 1e3,
+                if self.bottleneck == Bottleneck::Stage(i) {
+                    ", bottleneck"
+                } else {
+                    ""
+                }
+            ));
+        }
+        out
+    }
+}
+
+/// Modeled occupancy of one shaped link for `bytes`: serialization at
+/// the link rate plus expected propagation (latency + jitter/2).
+fn transfer_secs(link: &LinkSpec, bytes: u64) -> f64 {
+    let mut t = link.latency.as_secs_f64() + link.jitter.as_secs_f64() / 2.0;
+    if let Some(bps) = link.bandwidth_bps {
+        t += bytes as f64 * 8.0 / bps as f64;
+    }
+    t
+}
+
+struct Eval {
+    stages: Vec<StagePlacement>,
+    /// Seconds per frame at the pipeline gate (1 / throughput).
+    gate: f64,
+    bottleneck: Bottleneck,
+}
+
+/// Model one replica vector: assign devices, compute per-stage service
+/// times, find the gate. Pure function of its inputs.
+fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) -> Eval {
+    let s = p.stages.len();
+    // Heaviest stage claims the fastest devices (deterministic ranks).
+    let mut stage_order: Vec<usize> = (0..s).collect();
+    stage_order.sort_by(|&a, &b| p.stages[b].flops.cmp(&p.stages[a].flops).then(a.cmp(&b)));
+    let mut pool: Vec<&DeviceProfile> = p.devices.iter().collect();
+    pool.sort_by(|a, b| {
+        b.mflops
+            .partial_cmp(&a.mflops)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.name.cmp(&b.name))
+    });
+    let mut assigned: Vec<Vec<&DeviceProfile>> = vec![Vec::new(); s];
+    let mut cursor = 0usize;
+    for &i in &stage_order {
+        assigned[i] = pool[cursor..cursor + replicas[i]].to_vec();
+        cursor += replicas[i];
+    }
+
+    let uplink_secs = transfer_secs(&hop_links[0], p.stages[0].input_bytes);
+    let mut gate = uplink_secs;
+    let mut bottleneck = Bottleneck::Uplink;
+    let mut stages = Vec::with_capacity(s);
+    for i in 0..s {
+        let f_min = assigned[i]
+            .iter()
+            .map(|d| d.flops_per_sec())
+            .fold(f64::INFINITY, f64::min);
+        let compute = p.stages[i].flops as f64 / f_min;
+        let egress = transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
+        let service = (compute + egress) / replicas[i] as f64;
+        if service > gate {
+            gate = service;
+            bottleneck = Bottleneck::Stage(i);
+        }
+        stages.push(StagePlacement {
+            replicas: replicas[i],
+            devices: assigned[i].iter().map(|d| d.name.clone()).collect(),
+            compute: Duration::from_secs_f64(compute),
+            egress: Duration::from_secs_f64(egress),
+            service: Duration::from_secs_f64(service),
+        });
+    }
+    Eval {
+        stages,
+        gate,
+        bottleneck,
+    }
+}
+
+/// Plan the throughput-maximizing topology for `p` (see module docs for
+/// the cost model and algorithm). Deterministic: same problem, same
+/// plan, byte-identical rendering.
+pub fn plan(p: &PlacementProblem) -> Result<PlacementPlan> {
+    let s = p.stages.len();
+    if s == 0 {
+        return Err(DeferError::Config("placement needs at least one stage".into()));
+    }
+    if p.worker_budget < s {
+        return Err(DeferError::Config(format!(
+            "workers budget {} cannot cover {s} stages (one replica each)",
+            p.worker_budget
+        )));
+    }
+    if p.devices.len() < p.worker_budget {
+        return Err(DeferError::Config(format!(
+            "workers budget {} exceeds the {} available devices",
+            p.worker_budget,
+            p.devices.len()
+        )));
+    }
+    if let Some(d) = p.devices.iter().find(|d| !(d.mflops > 0.0)) {
+        return Err(DeferError::Config(format!(
+            "device {:?}: mflops must be > 0, got {}",
+            d.name, d.mflops
+        )));
+    }
+
+    // Hop links: the uplink is physical; later hops pick the candidate
+    // with the least modeled transfer time for their boundary bytes
+    // (min_by keeps the first candidate on ties).
+    let candidates: &[LinkSpec] = if p.interconnect.is_empty() {
+        std::slice::from_ref(&p.uplink)
+    } else {
+        &p.interconnect
+    };
+    let mut hop_links = Vec::with_capacity(s + 1);
+    hop_links.push(p.uplink);
+    for h in 1..=s {
+        let bytes = p.stages[h - 1].output_bytes;
+        let best = *candidates
+            .iter()
+            .min_by(|a, b| {
+                transfer_secs(a, bytes)
+                    .partial_cmp(&transfer_secs(b, bytes))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty candidates");
+        hop_links.push(best);
+    }
+
+    // Greedy replication: grow the bottleneck stage while the budget
+    // allows. A move is accepted when the bottleneck stage's own service
+    // time strictly shrinks without worsening the overall gate — the
+    // gate itself may hold steady when an equally-slow co-bottleneck
+    // remains, which a later iteration then replicates (this is how two
+    // equal stages end up balanced instead of the loop stalling). A
+    // replica that makes its stage *worse* (a slow device dragging the
+    // round-robin f_min down) or shifts a fast device away from a stage
+    // that needed it more is rejected, ending the search.
+    const EPS: f64 = 1e-12;
+    let mut replicas = vec![1usize; s];
+    let mut eval = evaluate(p, &hop_links, &replicas);
+    while replicas.iter().sum::<usize>() < p.worker_budget {
+        let b = match eval.bottleneck {
+            Bottleneck::Stage(i) => i,
+            Bottleneck::Uplink => break,
+        };
+        let mut cand = replicas.clone();
+        cand[b] += 1;
+        let cand_eval = evaluate(p, &hop_links, &cand);
+        let shrinks = cand_eval.stages[b].service.as_secs_f64() + EPS
+            < eval.stages[b].service.as_secs_f64();
+        if shrinks && cand_eval.gate <= eval.gate + EPS {
+            replicas = cand;
+            eval = cand_eval;
+        } else {
+            break;
+        }
+    }
+
+    // Trim replicas that buy nothing: the budget is permission, not an
+    // obligation, and the loop above can overshoot when it runs out
+    // mid-balancing (e.g. two equal stages and one spare worker).
+    for i in 0..s {
+        while replicas[i] > 1 {
+            let mut cand = replicas.clone();
+            cand[i] -= 1;
+            let cand_eval = evaluate(p, &hop_links, &cand);
+            if cand_eval.gate <= eval.gate + EPS {
+                replicas = cand;
+                eval = cand_eval;
+            } else {
+                break;
+            }
+        }
+    }
+
+    Ok(PlacementPlan {
+        stages: eval.stages,
+        hop_links,
+        uplink_time: Duration::from_secs_f64(transfer_secs(&p.uplink, p.stages[0].input_bytes)),
+        bottleneck: eval.bottleneck,
+        predicted_throughput: 1.0 / eval.gate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
+        (0..n)
+            .map(|i| DeviceProfile {
+                name: format!("edge{i}"),
+                mflops,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn device_profile_json_round_trip() {
+        let devs = parse_device_profiles(
+            r#"{"devices": [{"name": "jetson", "mflops": 200},
+                            {"name": "pi", "mflops": 50}]}"#,
+        )
+        .unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].name, "jetson");
+        assert_eq!(devs[1].mflops, 50.0);
+        assert!(parse_device_profiles(r#"{"devices": []}"#).is_err());
+        assert!(parse_device_profiles(
+            r#"{"devices": [{"name": "x", "mflops": 0}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn uplink_bound_pipeline_keeps_one_replica_each() {
+        // Cheap compute, huge input over a slow uplink: the shared
+        // dispatcher link gates the pipeline, so the planner must not
+        // spend budget on replicas that cannot help.
+        let p = PlacementProblem {
+            stages: vec![
+                StageCost {
+                    flops: 1_000,
+                    input_bytes: 50_000_000,
+                    output_bytes: 1_000,
+                },
+                StageCost {
+                    flops: 1_000,
+                    input_bytes: 1_000,
+                    output_bytes: 1_000,
+                },
+            ],
+            devices: homogeneous(6, 1000.0),
+            worker_budget: 6,
+            uplink: LinkSpec::wifi(),
+            interconnect: vec![LinkSpec::gigabit_lan()],
+        };
+        let plan = plan(&p).unwrap();
+        assert_eq!(plan.replica_counts(), vec![1, 1]);
+        assert_eq!(plan.bottleneck, Bottleneck::Uplink);
+    }
+
+    #[test]
+    fn slow_replica_that_would_gate_the_stage_is_rejected() {
+        // One stage, budget 2, devices 200 + 50 MFLOP/s. Round-robin
+        // dealing gates on the slowest replica: 2 replicas at f_min=50
+        // serve a frame every flops/(2*50e6) s, worse than one fast
+        // replica at flops/200e6 s — the planner must keep R=1.
+        let p = PlacementProblem {
+            stages: vec![StageCost {
+                flops: 200_000_000,
+                input_bytes: 1_000,
+                output_bytes: 1_000,
+            }],
+            devices: vec![
+                DeviceProfile {
+                    name: "fast".into(),
+                    mflops: 200.0,
+                },
+                DeviceProfile {
+                    name: "slow".into(),
+                    mflops: 50.0,
+                },
+            ],
+            worker_budget: 2,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+        };
+        let plan = plan(&p).unwrap();
+        assert_eq!(plan.replica_counts(), vec![1]);
+        assert_eq!(plan.stages[0].devices, vec!["fast".to_string()]);
+    }
+
+    #[test]
+    fn budget_and_pool_validated() {
+        let stages = vec![StageCost {
+            flops: 1,
+            input_bytes: 1,
+            output_bytes: 1,
+        }];
+        let err = plan(&PlacementProblem {
+            stages: stages.clone(),
+            devices: homogeneous(1, 100.0),
+            worker_budget: 0,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+        })
+        .unwrap_err();
+        assert!(format!("{err}").contains("budget"));
+        let err = plan(&PlacementProblem {
+            stages,
+            devices: homogeneous(1, 100.0),
+            worker_budget: 3,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+        })
+        .unwrap_err();
+        assert!(format!("{err}").contains("devices"));
+    }
+}

@@ -7,6 +7,7 @@
 //! Mutex + Condvar.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -24,6 +25,11 @@ struct PipeShared<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    /// Live `PipeSender` handles. Tracked explicitly (not via
+    /// `Arc::strong_count`, which also counts the receiver and is racy
+    /// to read before this handle's own decrement): the sender whose
+    /// drop brings this to zero closes the pipe.
+    senders: AtomicUsize,
 }
 
 /// Sending half of a bounded pipe.
@@ -38,6 +44,7 @@ pub struct PipeReceiver<T> {
 
 impl<T> Clone for PipeSender<T> {
     fn clone(&self) -> Self {
+        self.shared.senders.fetch_add(1, Ordering::Relaxed);
         PipeSender {
             shared: Arc::clone(&self.shared),
         }
@@ -54,6 +61,7 @@ pub fn pipe<T>(capacity: usize) -> (PipeSender<T>, PipeReceiver<T>) {
         not_full: Condvar::new(),
         not_empty: Condvar::new(),
         capacity: capacity.max(1),
+        senders: AtomicUsize::new(1),
     });
     (
         PipeSender {
@@ -89,8 +97,12 @@ impl<T> PipeSender<T> {
 
 impl<T> Drop for PipeSender<T> {
     fn drop(&mut self) {
-        // Last sender closes the pipe (receiver holds one reference).
-        if Arc::strong_count(&self.shared) <= 2 {
+        // The decrement itself decides who closes: exactly one dropping
+        // sender observes the count hit zero. (Reading a count *before*
+        // decrementing — the old `Arc::strong_count` scheme — let two
+        // concurrent drops each see "not last" and leave the receiver
+        // blocked forever.)
+        if self.shared.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.close();
         }
     }
@@ -246,6 +258,42 @@ mod tests {
         drop(tx);
         assert_eq!(rx.recv(), Some(7));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn concurrent_sender_drops_always_unblock_receiver() {
+        // Regression test for the drop race: two cloned senders dropping
+        // concurrently could each read a stale count, decide "not last",
+        // and leave the receiver blocked forever. The receiver thread
+        // must observe `None` (close) on every iteration or this test
+        // hangs.
+        for round in 0..150 {
+            let (tx, rx) = pipe::<u32>(8);
+            let senders: Vec<_> = (0..4).map(|_| tx.clone()).collect();
+            drop(tx);
+            let recv = std::thread::spawn(move || {
+                let mut got = 0usize;
+                while rx.recv().is_some() {
+                    got += 1;
+                }
+                got
+            });
+            let drops: Vec<_> = senders
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    std::thread::spawn(move || {
+                        s.send(i as u32).unwrap();
+                        drop(s);
+                    })
+                })
+                .collect();
+            for h in drops {
+                h.join().unwrap();
+            }
+            let got = recv.join().unwrap();
+            assert_eq!(got, 4, "round {round}: receiver saw {got}/4 items");
+        }
     }
 
     #[test]

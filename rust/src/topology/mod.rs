@@ -10,8 +10,9 @@
 //! replicated across R workers. [`Topology`] captures both
 //! declaratively; the [`wiring`] module turns a topology into live
 //! connection bundles for either transport, and the coordinator consumes
-//! the result without knowing how it was wired. A future placement
-//! optimizer is then a pure planning pass that emits a `Topology`.
+//! the result without knowing how it was wired. The placement optimizer
+//! ([`crate::placement`]) is exactly the promised pure planning pass
+//! that emits a `Topology` from stage costs and device budgets.
 //!
 //! Frame ordering with replication: a stage's replicas are dealt frames
 //! round-robin by a junction on the ingress side and merged round-robin
@@ -123,15 +124,33 @@ impl Topology {
     /// `link`; a single entry is splatted across all hops).
     pub fn from_config(cfg: &DeferConfig) -> Result<Topology> {
         let n = cfg.nodes;
+        // Validate shapes against `nodes` up front, naming the offending
+        // config key — handing a wrong-length `replicas` to
+        // `Topology::new` used to surface as a baffling hop-link count
+        // mismatch instead.
         let replicas: Vec<usize> = if cfg.replicas.is_empty() {
             vec![1; n]
         } else {
+            if cfg.replicas.len() != n {
+                return Err(DeferError::Config(format!(
+                    "config key `replicas` lists {} stages but `nodes` is {n}",
+                    cfg.replicas.len()
+                )));
+            }
             cfg.replicas.clone()
         };
         let hop_links: Vec<LinkSpec> = match cfg.per_hop_links.len() {
             0 => vec![cfg.link; n + 1],
             1 => vec![cfg.per_hop_links[0]; n + 1],
-            _ => cfg.per_hop_links.clone(),
+            l if l == n + 1 => cfg.per_hop_links.clone(),
+            l => {
+                return Err(DeferError::Config(format!(
+                    "config key `per_hop_links` has {l} entries; {n} stages need \
+                     {} (dispatcher uplink, inter-stage hops, return) or 1 to \
+                     apply everywhere",
+                    n + 1
+                )))
+            }
         };
         Topology::new(&replicas, hop_links)
     }
@@ -253,6 +272,24 @@ mod tests {
         assert!(Topology::new(&[], vec![LinkSpec::ideal()]).is_err());
         assert!(Topology::new(&[1, 0], vec![LinkSpec::ideal(); 3]).is_err());
         assert!(Topology::new(&[1, 1], vec![LinkSpec::ideal(); 2]).is_err());
+    }
+
+    #[test]
+    fn from_config_names_offending_key() {
+        // A wrong-length `replicas` must be reported as such, not as a
+        // downstream hop-link count mismatch.
+        let mut cfg = DeferConfig::default();
+        cfg.nodes = 3;
+        cfg.replicas = vec![1, 1, 1, 1, 1];
+        let msg = format!("{}", Topology::from_config(&cfg).unwrap_err());
+        assert!(msg.contains("`replicas`"), "bad error: {msg}");
+        assert!(msg.contains("5") && msg.contains("3"), "bad error: {msg}");
+
+        let mut cfg = DeferConfig::default();
+        cfg.nodes = 3;
+        cfg.per_hop_links = vec![LinkSpec::ideal(); 3];
+        let msg = format!("{}", Topology::from_config(&cfg).unwrap_err());
+        assert!(msg.contains("`per_hop_links`"), "bad error: {msg}");
     }
 
     #[test]

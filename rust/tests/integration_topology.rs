@@ -142,6 +142,65 @@ fn replicated_bottleneck_stage_completes_and_speeds_up() {
 }
 
 #[test]
+fn auto_place_beats_uniform_chain() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let frames = 8;
+    // The acceptance scenario: wifi uplink into the cluster, gigabit
+    // inside, deterministic 20 MFLOP/s edge devices making compute the
+    // bottleneck, and a worker budget above the stage count.
+    let mut base = cfg(2);
+    base.emulated_mflops = 20.0;
+    base.per_hop_links = vec![
+        LinkSpec::wifi(),
+        LinkSpec::gigabit_lan(),
+        LinkSpec::gigabit_lan(),
+    ];
+    let r_uni = ChainRunner::with_engine(base.clone(), engine.clone())
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+
+    let mut auto = base;
+    auto.auto_place = true;
+    auto.workers_budget = 4;
+    let runner = ChainRunner::with_engine(auto.clone(), engine).unwrap();
+
+    // The planner is deterministic: repeated plans are byte-identical.
+    let problem =
+        defer::placement::PlacementProblem::from_config(&auto, runner.plan()).unwrap();
+    let p1 = defer::placement::plan(&problem).unwrap();
+    let p2 = defer::placement::plan(&problem).unwrap();
+    assert_eq!(p1.render(), p2.render());
+    // It replicates the bottleneck stage (and only spends budget where
+    // it pays: a 4th worker is trimmed if the FLOPs split makes [2,1]
+    // already optimal).
+    let topo = p1.topology().unwrap();
+    assert_eq!(topo.num_stages(), 2);
+    assert!(topo.num_workers() >= 3, "no stage was replicated");
+    assert!(topo.num_workers() <= 4, "budget exceeded");
+    assert!(topo.stages().iter().any(|s| s.replicas > 1));
+    assert_eq!(topo.hop_link(0), LinkSpec::wifi());
+
+    let r_auto = runner.run_frames(frames).unwrap();
+    assert_eq!(r_auto.cycles, frames);
+    assert!(r_auto.reference_error.unwrap() < 0.05);
+    assert_eq!(r_auto.workers, topo.num_workers());
+    // The replicated bottleneck roughly halves the gate: the measured
+    // speedup over the uniform unreplicated chain must clear 1.3x (the
+    // model predicts ~2x).
+    assert!(
+        r_auto.throughput >= 1.3 * r_uni.throughput,
+        "auto-place speedup only {:.2}x ({:.3} vs {:.3} cycles/s)",
+        r_auto.throughput / r_uni.throughput,
+        r_auto.throughput,
+        r_uni.throughput
+    );
+}
+
+#[test]
 fn replicated_stage_over_tcp() {
     if !have_artifacts() {
         return;

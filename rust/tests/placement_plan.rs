@@ -1,0 +1,217 @@
+//! Placement-planner golden tests: synthetic stage costs in, exact
+//! `Topology` out. No artifacts, no RNG, no clocks — the planner is a
+//! pure function, so these assert its output byte-for-byte.
+
+use defer::netem::LinkSpec;
+use defer::placement::{plan, Bottleneck, DeviceProfile, PlacementProblem, StageCost};
+
+fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
+    (0..n)
+        .map(|i| DeviceProfile {
+            name: format!("edge{i}"),
+            mflops,
+        })
+        .collect()
+}
+
+fn stage(flops: u64, input_bytes: u64, output_bytes: u64) -> StageCost {
+    StageCost {
+        flops,
+        input_bytes,
+        output_bytes,
+    }
+}
+
+/// The acceptance scenario: wifi uplink into the cluster, gigabit
+/// candidates inside, one stage 4x heavier than the rest, budget for
+/// two extra workers. The planner must pour the whole surplus into the
+/// bottleneck stage and route every interior hop over gigabit.
+#[test]
+fn bottleneck_stage_soaks_up_the_worker_budget() {
+    let p = PlacementProblem {
+        stages: vec![
+            stage(100_000_000, 12_288, 65_536),
+            stage(400_000_000, 65_536, 65_536),
+            stage(100_000_000, 65_536, 4_096),
+        ],
+        devices: homogeneous(5, 100.0),
+        worker_budget: 5,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    };
+    let placed = plan(&p).unwrap();
+    assert_eq!(placed.replica_counts(), vec![1, 3, 1]);
+    assert_eq!(placed.num_workers(), 5);
+    // Stage 1 at 4 s/frame over 3 replicas still gates the pipeline
+    // (4/3 s > 1 s for its neighbours).
+    assert_eq!(placed.bottleneck, Bottleneck::Stage(1));
+    let hops: Vec<LinkSpec> = placed.hop_links.clone();
+    assert_eq!(hops[0], LinkSpec::wifi());
+    for h in &hops[1..] {
+        assert_eq!(*h, LinkSpec::gigabit_lan());
+    }
+    // And it materializes as a real Topology, chain-runner ready.
+    let topo = placed.topology().unwrap();
+    assert_eq!(topo.num_stages(), 3);
+    assert_eq!(topo.num_workers(), 5);
+    assert_eq!(topo.replicas(1), 3);
+    assert_eq!(topo.hop_link(0), LinkSpec::wifi());
+    assert_eq!(topo.hop_link(2), LinkSpec::gigabit_lan());
+}
+
+/// Byte-identical output across repeated runs and across device input
+/// orderings: the planner sorts everything it touches.
+#[test]
+fn planner_is_deterministic() {
+    let mk = |device_order_rev: bool| {
+        let mut devices = vec![
+            DeviceProfile {
+                name: "a".into(),
+                mflops: 100.0,
+            },
+            DeviceProfile {
+                name: "b".into(),
+                mflops: 200.0,
+            },
+            DeviceProfile {
+                name: "c".into(),
+                mflops: 100.0,
+            },
+            DeviceProfile {
+                name: "d".into(),
+                mflops: 50.0,
+            },
+        ];
+        if device_order_rev {
+            devices.reverse();
+        }
+        PlacementProblem {
+            stages: vec![
+                stage(150_000_000, 8_192, 32_768),
+                stage(300_000_000, 32_768, 2_048),
+            ],
+            devices,
+            worker_budget: 4,
+            uplink: LinkSpec::wifi(),
+            interconnect: vec![LinkSpec::gigabit_lan(), LinkSpec::fast_edge()],
+        }
+    };
+    let first = plan(&mk(false)).unwrap();
+    for _ in 0..3 {
+        let again = plan(&mk(false)).unwrap();
+        assert_eq!(first.render(), again.render());
+        assert_eq!(first.replica_counts(), again.replica_counts());
+    }
+    // The device *pool* is a set; its listing order must not matter.
+    let reordered = plan(&mk(true)).unwrap();
+    assert_eq!(first.render(), reordered.render());
+}
+
+/// The heaviest stage claims the fastest device, deterministically.
+#[test]
+fn heaviest_stage_gets_fastest_device() {
+    let p = PlacementProblem {
+        stages: vec![stage(100_000_000, 1_000, 1_000), stage(400_000_000, 1_000, 1_000)],
+        devices: vec![
+            DeviceProfile {
+                name: "slow".into(),
+                mflops: 50.0,
+            },
+            DeviceProfile {
+                name: "fast".into(),
+                mflops: 400.0,
+            },
+        ],
+        worker_budget: 2,
+        uplink: LinkSpec::ideal(),
+        interconnect: vec![],
+    };
+    let placed = plan(&p).unwrap();
+    assert_eq!(placed.stages[1].devices, vec!["fast".to_string()]);
+    assert_eq!(placed.stages[0].devices, vec!["slow".to_string()]);
+    // 400 MFLOPs / 400 MFLOP/s = 1 s; 100 MFLOPs / 50 MFLOP/s = 2 s:
+    // after the swap the light stage on the slow device is the gate.
+    assert_eq!(placed.bottleneck, Bottleneck::Stage(0));
+}
+
+/// An uplink-bound pipeline must not burn budget on useless replicas:
+/// hop 0 is one shared physical link however many workers exist.
+#[test]
+fn uplink_bound_pipeline_is_left_unreplicated() {
+    let p = PlacementProblem {
+        stages: vec![
+            stage(1_000_000, 60_000_000, 10_000),
+            stage(1_000_000, 10_000, 10_000),
+        ],
+        devices: homogeneous(8, 500.0),
+        worker_budget: 8,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    };
+    let placed = plan(&p).unwrap();
+    assert_eq!(placed.replica_counts(), vec![1, 1]);
+    assert_eq!(placed.bottleneck, Bottleneck::Uplink);
+    // Predicted throughput = 1 / uplink occupancy.
+    let uplink_secs = placed.uplink_time.as_secs_f64();
+    assert!((placed.predicted_throughput - 1.0 / uplink_secs).abs() < 1e-9);
+}
+
+/// Interior hops pick the candidate with the least modeled transfer
+/// time for that hop's bytes; first candidate wins ties.
+#[test]
+fn interior_hops_pick_fastest_candidate() {
+    let p = PlacementProblem {
+        stages: vec![stage(10_000_000, 4_096, 1_048_576), stage(10_000_000, 1_048_576, 512)],
+        devices: homogeneous(2, 100.0),
+        worker_budget: 2,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::wifi(), LinkSpec::gigabit_lan()],
+    };
+    let placed = plan(&p).unwrap();
+    // 1 MiB over gigabit (~8 ms + 0.2 ms) beats wifi (~168 ms + 3.5 ms).
+    assert_eq!(placed.hop_links[1], LinkSpec::gigabit_lan());
+    assert_eq!(placed.hop_links[2], LinkSpec::gigabit_lan());
+    assert_eq!(placed.hop_links[0], LinkSpec::wifi());
+}
+
+/// Replication stops when the next replica stops paying: with two equal
+/// stages and budget 6, [3, 3] and [2, 2] both beat lopsided splits,
+/// and the greedy lands on the balanced exhaustion of the budget.
+#[test]
+fn budget_spreads_across_equal_bottlenecks() {
+    let p = PlacementProblem {
+        stages: vec![stage(200_000_000, 4_096, 4_096), stage(200_000_000, 4_096, 4_096)],
+        devices: homogeneous(6, 100.0),
+        worker_budget: 6,
+        uplink: LinkSpec::gigabit_lan(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    };
+    let placed = plan(&p).unwrap();
+    assert_eq!(placed.replica_counts(), vec![3, 3]);
+    assert_eq!(placed.num_workers(), 6);
+}
+
+/// Render is the goldens surface: assert the exact bytes for a small
+/// plan so any cost-model or formatting drift is caught loudly.
+#[test]
+fn render_golden() {
+    let p = PlacementProblem {
+        stages: vec![stage(100_000_000, 40_000, 20_000), stage(50_000_000, 20_000, 4_000)],
+        devices: homogeneous(3, 100.0),
+        worker_budget: 3,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    };
+    let placed = plan(&p).unwrap();
+    // wifi uplink: 40 kB * 8 / 50 Mbps = 6.4 ms + 3 ms lat + 0.5 ms E[jitter].
+    // stage 0: 1 s compute + (20 kB*8/1 Gbps + 0.2 ms) egress, x2 -> 500.180 ms.
+    // stage 1: 0.5 s compute + (4 kB*8/1 Gbps + 0.2 ms) egress, x1 -> 500.232 ms,
+    //          which now gates the pipeline: 1/0.500232 s = 1.999 cycles/s.
+    let expected = "placement plan: 2 stage(s), 3 worker(s), predicted 1.999 cycles/s\n\
+                    \x20 hop 0 uplink wifi (9.900 ms/frame)\n\
+                    \x20 stage 0: x2 on [edge0, edge1] via gigabit, compute 1000.000 ms + \
+                    egress 0.360 ms -> service 500.180 ms/frame\n\
+                    \x20 stage 1: x1 on [edge2] via gigabit, compute 500.000 ms + \
+                    egress 0.232 ms -> service 500.232 ms/frame, bottleneck\n";
+    assert_eq!(placed.render(), expected);
+}
