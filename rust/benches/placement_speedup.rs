@@ -17,6 +17,7 @@ use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
 use defer::netem::LinkSpec;
 use defer::placement::{plan, DeviceProfile, PlacementProblem, StageCost};
+use defer::repartition::{self, PartCost, RepartitionProblem};
 use defer::runtime::Engine;
 
 fn synthetic_problem(budget: usize) -> PlacementProblem {
@@ -81,6 +82,70 @@ fn main() {
     print!("{}", table.render());
     println!();
     print!("{}", plan(&synthetic_problem(6)).expect("plan").render());
+
+    // ---- part 1b: joint repartitioning over a finer cut set ----
+    // The same pipeline split into 6 fine partitions: the repartition
+    // planner may now *move* the boundaries (under a per-worker memory
+    // cap of half the model) as well as replicate, reporting what the
+    // extra freedom buys over the fixed 3-stage cuts at each budget.
+    println!();
+    println!("## part 1b: joint repartitioning (6 fine partitions, memory-capped, no artifacts)");
+    let fine_part = |flops: u64, input_bytes: u64, output_bytes: u64| PartCost {
+        flops,
+        input_bytes,
+        output_bytes,
+        weights_bytes: 200_000,
+    };
+    let fine_parts = || {
+        vec![
+            fine_part(50_000_000, 12_288, 32_768),
+            fine_part(50_000_000, 32_768, 65_536),
+            fine_part(200_000_000, 65_536, 65_536),
+            fine_part(200_000_000, 65_536, 65_536),
+            fine_part(50_000_000, 65_536, 16_384),
+            fine_part(50_000_000, 16_384, 4_096),
+        ]
+    };
+    let mut table = Table::new(&[
+        "worker budget",
+        "cuts",
+        "replicas",
+        "predicted cycles/s",
+        "vs fixed 3-stage",
+    ]);
+    for budget in [3usize, 4, 5, 6] {
+        let fixed = plan(&synthetic_problem(budget)).expect("fixed plan");
+        let joint = repartition::plan(&RepartitionProblem {
+            parts: fine_parts(),
+            devices: (0..budget)
+                .map(|i| DeviceProfile {
+                    name: format!("edge{i}"),
+                    mflops: 100.0,
+                })
+                .collect(),
+            worker_budget: budget,
+            device_memory: Some(600_000),
+            uplink: LinkSpec::wifi(),
+            interconnect: vec![LinkSpec::gigabit_lan()],
+        })
+        .expect("joint plan");
+        let reps: Vec<String> = joint
+            .replica_counts()
+            .iter()
+            .map(|r| r.to_string())
+            .collect();
+        table.row(&[
+            budget.to_string(),
+            format!("{:?}", joint.cuts),
+            reps.join(","),
+            format!("{:.3}", joint.predicted_throughput()),
+            format!(
+                "{:.2}x",
+                joint.predicted_throughput() / fixed.predicted_throughput
+            ),
+        ]);
+    }
+    print!("{}", table.render());
 
     // ---- part 2: measured, needs artifacts ----
     let frames: u64 = std::env::var("DEFER_FRAMES")

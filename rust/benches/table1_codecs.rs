@@ -27,7 +27,7 @@ use defer::bench::Table;
 use defer::compress::Compression;
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
-use defer::coordinator::compute_node::encode_architecture;
+use defer::coordinator::compute_node::{encode_architecture, encode_stage_architecture};
 use defer::energy::EnergyModel;
 use defer::model::PartitionPlan;
 use defer::runtime::{Engine, Executable};
@@ -76,6 +76,29 @@ fn main() {
         let overhead = t0.elapsed().as_secs_f64();
         rows.push(Row {
             class: "Architecture",
+            ser: "JSON".into(),
+            comp: compression.name().into(),
+            energy_j: overhead * energy.tdp_watts + energy.network_energy(bytes),
+            overhead_s: overhead,
+            payload_mb: bytes as f64 / 1e6,
+        });
+    }
+
+    // ---- Architecture, fused: the same four partitions shipped as one
+    // multi-partition stage payload (what a fused `--auto-partition`
+    // stage sends) — one exchange, one compression context.
+    let hlos: Vec<String> = plan.parts.iter().map(|p| p.read_hlo().unwrap()).collect();
+    let hlo_refs: Vec<&str> = hlos.iter().map(String::as_str).collect();
+    let fused_raw = encode_stage_architecture(&plan.parts, &hlo_refs, "next");
+    for compression in [Compression::Lz4, Compression::None] {
+        let t0 = Instant::now();
+        let wire = compression.compress(&fused_raw);
+        let bytes = wire.len() as u64 + HEADER_SIZE as u64;
+        let back = compression.decompress(&wire, fused_raw.len()).unwrap();
+        assert_eq!(back.len(), fused_raw.len());
+        let overhead = t0.elapsed().as_secs_f64();
+        rows.push(Row {
+            class: "Arch (fused x4)",
             ser: "JSON".into(),
             comp: compression.name().into(),
             energy_j: overhead * energy.tdp_watts + energy.network_energy(bytes),

@@ -18,8 +18,19 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Summarize a sample set. An empty slice yields zeroed stats with
+    /// `iters == 0` (a bench harness that measured nothing must not
+    /// panic the whole run — callers can see `iters` and skip the row).
     pub fn from_samples(samples: &[Duration]) -> Stats {
-        assert!(!samples.is_empty());
+        if samples.is_empty() {
+            return Stats {
+                mean: Duration::ZERO,
+                stddev: Duration::ZERO,
+                min: Duration::ZERO,
+                max: Duration::ZERO,
+                iters: 0,
+            };
+        }
         let n = samples.len() as f64;
         let mean = samples.iter().map(Duration::as_secs_f64).sum::<f64>() / n;
         let var = samples
@@ -151,6 +162,19 @@ mod tests {
         assert_eq!(s.max, Duration::from_millis(30));
         assert!((s.ops_per_sec() - 50.0).abs() < 1.0);
         assert!((s.mb_per_sec(20_000) - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn empty_samples_yield_zeroed_stats() {
+        // Regression: this used to panic via min()/max().unwrap().
+        let s = Stats::from_samples(&[]);
+        assert_eq!(s.iters, 0);
+        assert_eq!(s.mean, Duration::ZERO);
+        assert_eq!(s.stddev, Duration::ZERO);
+        assert_eq!(s.min, Duration::ZERO);
+        assert_eq!(s.max, Duration::ZERO);
+        // Derived rates stay well-defined (no divide-by-zero panic).
+        assert!(s.ops_per_sec().is_infinite());
     }
 
     #[test]

@@ -28,6 +28,18 @@ impl Args {
                     let val = it.next().ok_or_else(|| {
                         DeferError::Cli(format!("--{name} requires a value"))
                     })?;
+                    // A following `--flag` is almost certainly a typo
+                    // (`--workers-budget --auto-place` would silently
+                    // store "--auto-place" as the budget); reject it,
+                    // naming both flags. Values may still start with a
+                    // single dash (e.g. negative numbers).
+                    if val.starts_with("--") {
+                        return Err(DeferError::Cli(format!(
+                            "--{name} requires a value, but the next argument is \
+                             the flag {val:?} — pass the value after --{name} or \
+                             drop it"
+                        )));
+                    }
                     out.opts.insert(name.to_string(), val.clone());
                 }
             } else if out.command.is_none() && out.positionals.is_empty() {
@@ -138,6 +150,31 @@ mod tests {
         assert!(a.get_usize("nodes", 1).is_err());
         let a = parse(&["run", "--parts", "4,x"]);
         assert!(a.get_usize_list("parts", &[]).is_err());
+    }
+
+    #[test]
+    fn option_refuses_to_swallow_a_following_flag() {
+        // `--workers-budget --auto-place` used to store "--auto-place"
+        // as the budget; it must error, naming both flags.
+        let raw: Vec<String> = ["run", "--workers-budget", "--auto-place"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = Args::parse(&raw, &["auto-place"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--workers-budget"), "bad error: {msg}");
+        assert!(msg.contains("--auto-place"), "bad error: {msg}");
+        // Same when the following flag is an option rather than a switch.
+        let raw: Vec<String> = ["run", "--model", "--nodes", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let err = Args::parse(&raw, &[]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--model") && msg.contains("--nodes"), "{msg}");
+        // Single-dash values (negative numbers) still pass through.
+        let a = parse(&["run", "--tdp", "-1.5"]);
+        assert_eq!(a.get_f64("tdp", 0.0).unwrap(), -1.5);
     }
 
     #[test]

@@ -83,9 +83,21 @@ pub struct DeferConfig {
     /// `replicas`/`per_hop_links` verbatim. Needs a device model:
     /// `device_profile` or `emulated_mflops`.
     pub auto_place: bool,
+    /// Let the repartition planner (`repartition::plan`) choose the
+    /// stage boundaries too: it fuses the *finest-granularity* partition
+    /// set into stages jointly with replica placement, so `nodes` stops
+    /// mattering and `per_hop_links` is read as uplink + interconnect
+    /// candidates (the hop count is a planning output). Needs a device
+    /// model like `auto_place`.
+    pub auto_partition: bool,
     /// Total worker replicas the planner may place (0 = auto: the
     /// device-profile size, or `nodes` without a profile).
     pub workers_budget: usize,
+    /// Max resident weight bytes one worker may host (bounds how much of
+    /// the model `auto_partition` may fuse into one stage). 0 =
+    /// unlimited — the cost model then favors few, wide stages; see
+    /// `repartition` module docs.
+    pub device_memory: u64,
     /// Path to a device-profile JSON (`{"devices": [{"name", "mflops"}]}`)
     /// describing the worker pool for auto-placement. `None` = a
     /// homogeneous pool of `emulated_mflops`-speed devices.
@@ -110,7 +122,9 @@ impl Default for DeferConfig {
             tcp: false,
             base_port: None,
             auto_place: false,
+            auto_partition: false,
             workers_budget: 0,
+            device_memory: 0,
             device_profile: None,
         }
     }
@@ -188,8 +202,14 @@ impl DeferConfig {
         if let Some(x) = obj.get("auto_place") {
             cfg.auto_place = matches!(x, Json::Bool(true));
         }
+        if let Some(x) = obj.get("auto_partition") {
+            cfg.auto_partition = matches!(x, Json::Bool(true));
+        }
         if let Some(x) = obj.get("workers_budget") {
             cfg.workers_budget = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("device_memory") {
+            cfg.device_memory = x.as_usize()? as u64;
         }
         if let Some(x) = obj.get("device_profile") {
             cfg.device_profile = Some(PathBuf::from(x.as_str()?));
@@ -256,7 +276,11 @@ impl DeferConfig {
         if args.has("auto-place") {
             self.auto_place = true;
         }
+        if args.has("auto-partition") {
+            self.auto_partition = true;
+        }
         self.workers_budget = args.get_usize("workers-budget", self.workers_budget)?;
+        self.device_memory = args.get_usize("device-memory", self.device_memory as usize)? as u64;
         if let Some(p) = args.get("device-profile") {
             self.device_profile = Some(PathBuf::from(p));
         }
@@ -300,7 +324,11 @@ impl DeferConfig {
                 )));
             }
         }
-        if !self.per_hop_links.is_empty()
+        // With auto_partition the hop count is a planning output, so
+        // per_hop_links is read as uplink + interconnect candidates and
+        // any non-empty length is legal.
+        if !self.auto_partition
+            && !self.per_hop_links.is_empty()
             && self.per_hop_links.len() != 1
             && self.per_hop_links.len() != self.nodes + 1
         {
@@ -315,7 +343,11 @@ impl DeferConfig {
         if self.pipe_depth == 0 {
             return Err(DeferError::Config("pipe_depth must be >= 1".into()));
         }
-        if self.auto_place && self.workers_budget > 0 && self.workers_budget < self.nodes {
+        if self.auto_place
+            && !self.auto_partition
+            && self.workers_budget > 0
+            && self.workers_budget < self.nodes
+        {
             return Err(DeferError::Config(format!(
                 "workers_budget {} cannot cover {} stages (one replica each)",
                 self.workers_budget, self.nodes
@@ -450,6 +482,54 @@ mod tests {
         assert!(DeferConfig::from_json_str(r#"{"nodes": 4, "workers_budget": 2}"#).is_ok());
         // Defaults keep planning off.
         assert!(!DeferConfig::default().auto_place);
+    }
+
+    #[test]
+    fn auto_partition_surface_round_trip() {
+        let text = r#"{
+            "auto_partition": true,
+            "workers_budget": 4,
+            "device_memory": 250000,
+            "per_hop_links": ["wifi", "gigabit"]
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert!(cfg.auto_partition);
+        assert_eq!(cfg.workers_budget, 4);
+        assert_eq!(cfg.device_memory, 250_000);
+        // Two per-hop entries are rejected for a fixed chain, but under
+        // auto_partition they are uplink + interconnect candidates (the
+        // hop count is a planning output).
+        assert_eq!(cfg.per_hop_links.len(), 2);
+        assert!(DeferConfig::from_json_str(
+            r#"{"nodes": 4, "per_hop_links": ["wifi", "gigabit"]}"#
+        )
+        .is_err());
+        // A budget below `nodes` is fine too: the stage count is planned.
+        assert!(DeferConfig::from_json_str(
+            r#"{"nodes": 4, "auto_place": true, "auto_partition": true,
+                "workers_budget": 2}"#
+        )
+        .is_ok());
+        // CLI spelling.
+        let raw: Vec<String> = [
+            "run",
+            "--auto-partition",
+            "--device-memory",
+            "1000000",
+            "--workers-budget",
+            "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp", "auto-place", "auto-partition"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.auto_partition);
+        assert_eq!(cfg.device_memory, 1_000_000);
+        assert_eq!(cfg.workers_budget, 3);
+        // Defaults keep repartitioning off.
+        assert!(!DeferConfig::default().auto_partition);
+        assert_eq!(DeferConfig::default().device_memory, 0);
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! Chain orchestration, reduced to **plan → wire → spawn → report**.
 //!
-//! * **plan** — derive the declarative [`Topology`] from the config:
-//!   stage count, per-stage worker replication, per-hop links. With
-//!   `auto_place` the [`crate::placement`] planner derives those from
-//!   the partition plan's stage costs and the configured device budgets
-//!   instead; either way the rest of the pipeline consumes the same
-//!   `Topology` and cannot tell who wrote it.
+//! * **plan** — derive the fused stages and the declarative [`Topology`]
+//!   from the config. By default each stage is one partition of the
+//!   `(model, nodes)` artifact and the topology is hand-written
+//!   (`replicas`/`per_hop_links`). With `auto_place` the
+//!   [`crate::placement`] planner derives replica counts and hop links
+//!   from the partition plan's stage costs and the configured device
+//!   budgets. With `auto_partition` the [`crate::repartition`] planner
+//!   goes further: it loads the *finest-granularity* partition set and
+//!   jointly chooses cut points and replica counts, so stages become
+//!   fused runs of partitions ([`crate::model::StageSpec`]) and the
+//!   stage count itself is a planning output. Either way the rest of
+//!   the pipeline consumes the same stages + `Topology` and cannot tell
+//!   who wrote them.
 //! * **wire** — hand the topology to [`crate::topology::wiring`], which
 //!   establishes every connection for either transport (in-process byte
 //!   pipes, or TCP loopback with ephemeral ports — the paper's CORE
@@ -36,7 +43,7 @@ use crate::coordinator::dispatcher::{
 };
 use crate::coordinator::RunReport;
 use crate::error::{DeferError, Result};
-use crate::model::{PartitionPlan, ReferenceVectors};
+use crate::model::{PartitionPlan, ReferenceVectors, StageSpec};
 use crate::netem::Link;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -48,6 +55,13 @@ pub struct ChainRunner {
     pub cfg: DeferConfig,
     engine: Engine,
     plan: PartitionPlan,
+    /// Fused pipeline stages (single-partition unless `auto_partition`
+    /// re-cut the plan); `stages.len() == topo.num_stages()`.
+    stages: Vec<StageSpec>,
+    topo: Topology,
+    /// Rendered planner output when a planner chose the topology
+    /// (`auto_place` / `auto_partition`); the CLI surfaces it.
+    plan_render: Option<String>,
     reference: Option<ReferenceVectors>,
 }
 
@@ -55,29 +69,58 @@ impl ChainRunner {
     /// Load artifacts and prepare the runner. Fails early with a helpful
     /// message if `make artifacts` has not produced this configuration.
     pub fn new(cfg: DeferConfig) -> Result<Self> {
+        // Validate before paying for PJRT initialization, so a bad
+        // config surfaces its own error immediately.
         cfg.validate()?;
         let engine = Engine::cpu()?;
-        let plan = PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, cfg.nodes)?;
-        let reference =
-            ReferenceVectors::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model).ok();
-        Ok(ChainRunner {
-            cfg,
-            engine,
-            plan,
-            reference,
-        })
+        Self::with_engine(cfg, engine)
     }
 
     /// Reuse an existing engine (avoids re-initializing PJRT across sweeps).
     pub fn with_engine(cfg: DeferConfig, engine: Engine) -> Result<Self> {
         cfg.validate()?;
-        let plan = PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, cfg.nodes)?;
+        // Resolve stages + topology once, at construction: planning is
+        // pure, so the deployed topology always matches what the CLI
+        // reports, even if a device profile on disk changes afterwards.
+        let (plan, stages, topo, plan_render) = if cfg.auto_partition {
+            // Stage boundaries are a planning output: fuse the finest
+            // partition set the artifacts provide.
+            let finest = crate::model::finest_part_count(
+                &cfg.artifacts_dir,
+                &cfg.profile,
+                &cfg.model,
+            )?;
+            let plan =
+                PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, finest)?;
+            let rp = crate::repartition::plan_from_config(&cfg, &plan)?;
+            let stages = plan.fuse(&rp.cuts)?;
+            let topo = rp.topology()?;
+            let render = rp.render();
+            (plan, stages, topo, Some(render))
+        } else {
+            let plan =
+                PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, cfg.nodes)?;
+            let stages = plan.singleton_stages();
+            let (topo, render) = if cfg.auto_place {
+                let problem =
+                    crate::placement::PlacementProblem::from_config(&cfg, &plan)?;
+                let placed = crate::placement::plan(&problem)?;
+                let render = placed.render();
+                (placed.topology()?, Some(render))
+            } else {
+                (Topology::from_config(&cfg)?, None)
+            };
+            (plan, stages, topo, render)
+        };
         let reference =
             ReferenceVectors::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model).ok();
         Ok(ChainRunner {
             cfg,
             engine,
             plan,
+            stages,
+            topo,
+            plan_render,
             reference,
         })
     }
@@ -90,27 +133,34 @@ impl ChainRunner {
         &self.engine
     }
 
-    /// The topology this deployment will run: hand-written
-    /// (`replicas`/`per_hop_links`) by default, or emitted by the
-    /// placement planner when `auto_place` is set.
-    pub fn topology(&self) -> Result<Topology> {
-        if self.cfg.auto_place {
-            let problem = crate::placement::PlacementProblem::from_config(&self.cfg, &self.plan)?;
-            crate::placement::plan(&problem)?.topology()
-        } else {
-            Topology::from_config(&self.cfg)
-        }
+    /// The fused pipeline stages this deployment serves.
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    /// The topology this deployment runs: hand-written
+    /// (`replicas`/`per_hop_links`) by default, emitted by the placement
+    /// planner under `auto_place`, or jointly re-cut by the repartition
+    /// planner under `auto_partition`.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The planner's rendered report when one chose the topology
+    /// (byte-stable; `None` for hand-written deployments).
+    pub fn plan_render(&self) -> Option<&str> {
+        self.plan_render.as_deref()
     }
 
     /// Run `frames` inference cycles through the chain; returns the report.
     pub fn run_frames(&self, frames: u64) -> Result<RunReport> {
-        // ---- plan: declarative topology, hand-written or auto-placed ----
-        let topo = self.topology()?;
-        if topo.num_stages() != self.plan.parts.len() {
+        // ---- plan: fused stages + topology, resolved at construction ----
+        let topo = &self.topo;
+        if topo.num_stages() != self.stages.len() {
             return Err(DeferError::Coordinator(format!(
-                "topology has {} stages for {} partitions",
+                "topology has {} stages for {} fused stages",
                 topo.num_stages(),
-                self.plan.parts.len()
+                self.stages.len()
             )));
         }
         let views = topo.worker_views();
@@ -128,7 +178,7 @@ impl ChainRunner {
             workers,
             junctions,
         } = wiring::build(
-            &topo,
+            topo,
             &wiring::TransportOptions {
                 tcp: self.cfg.tcp,
                 base_port: self.cfg.base_port,
@@ -155,17 +205,18 @@ impl ChainRunner {
         }
 
         // ---- configuration step ----
-        // Every replica of stage i receives partition i; control-plane
-        // sends to a stage are shaped like its ingress hop.
+        // Every replica of stage i receives fused stage i (all of its
+        // partitions in one exchange); control-plane sends to a stage
+        // are shaped like its ingress hop.
         let assignments: Vec<WorkerAssignment> = views
             .iter()
             .map(|v| WorkerAssignment {
-                spec_index: v.stage,
+                stage_index: v.stage,
                 next_hop: v.successors.join(","),
                 link: Arc::new(Link::new(topo.hop_link(v.stage))),
             })
             .collect();
-        configure_nodes(&self.plan, &mut control, &assignments, &self.cfg.codecs, &dstats)?;
+        configure_nodes(&self.stages, &mut control, &assignments, &self.cfg.codecs, &dstats)?;
         drop(control);
 
         // ---- distributed inference step ----

@@ -1,18 +1,23 @@
-//! Compute node runtime — the paper's Algorithm 2.
+//! Compute node runtime — the paper's Algorithm 2, generalized to fused
+//! stages.
 //!
 //! A node is one worker replica of a topology stage (its
 //! [`StageView`](crate::topology::StageView) says which); sole replicas
-//! behave exactly like the paper's chain nodes. It first serves the
-//! configuration step: it receives the serialized model architecture on
-//! one connection and the weights array on another, instantiates its
-//! partition executable, then acknowledges `Ready`.
+//! of single-partition stages behave exactly like the paper's chain
+//! nodes. It first serves the configuration step: one connection carries
+//! the serialized stage architecture — *every* partition of the fused
+//! run, metas + HLO texts, in one exchange — and another the stage's
+//! concatenated weights array. The node instantiates one executable per
+//! fused partition, then acknowledges `Ready`.
 //!
 //! The inference loop then runs as two threads connected by a bounded pipe
 //! (the paper's THREAD-1 / THREAD-2 "to avoid inference bottleneck"):
 //! the reader thread pulls framed activations off the incoming socket and
 //! pipes them to the compute thread, which deserializes + decompresses,
-//! runs the partition, re-serializes + compresses, and relays to the next
-//! hop. FIFO order is preserved end to end.
+//! runs the fused partitions back to back in process memory (inner
+//! boundaries never touch a codec or the network), re-serializes +
+//! compresses the final output, and relays to the next hop. FIFO order
+//! is preserved end to end.
 
 use std::sync::Arc;
 
@@ -20,7 +25,7 @@ use crate::config::CodecConfig;
 use crate::energy::{EnergyMeter, EnergyModel};
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
-use crate::model::PartitionSpec;
+use crate::model::{PartitionSpec, StageSpec};
 use crate::netem::Link;
 use crate::runtime::{Engine, Executable};
 use crate::serial::json;
@@ -29,31 +34,104 @@ use crate::threadpool::{pipe, WorkerPool};
 use crate::topology::wiring::WorkerConns;
 use crate::wire::{Message, MessageType};
 
-/// Encode the architecture payload: `[meta_len u32le][meta json][hlo text]`.
-pub fn encode_architecture(spec: &PartitionSpec, next_hop: &str, hlo: &str) -> Vec<u8> {
-    let meta = json::to_string(&spec.to_config_json(next_hop));
-    let mut out = Vec::with_capacity(4 + meta.len() + hlo.len());
-    out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
-    out.extend_from_slice(meta.as_bytes());
-    out.extend_from_slice(hlo.as_bytes());
+/// Encode a fused stage's architecture payload:
+/// `[count u32le]` then, per partition,
+/// `[meta_len u32le][meta json][hlo_len u32le][hlo text]`.
+/// `specs` and `hlos` pair up index-wise; every meta carries the same
+/// `next_hop` (the stage's successor set).
+pub fn encode_stage_architecture(
+    specs: &[PartitionSpec],
+    hlos: &[&str],
+    next_hop: &str,
+) -> Vec<u8> {
+    assert_eq!(specs.len(), hlos.len(), "one HLO text per partition");
+    let mut out = Vec::new();
+    out.extend_from_slice(&(specs.len() as u32).to_le_bytes());
+    for (spec, hlo) in specs.iter().zip(hlos) {
+        let meta = json::to_string(&spec.to_config_json(next_hop));
+        out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        out.extend_from_slice(meta.as_bytes());
+        out.extend_from_slice(&(hlo.len() as u32).to_le_bytes());
+        out.extend_from_slice(hlo.as_bytes());
+    }
     out
 }
 
-/// Decode the architecture payload into (spec, next_hop, hlo_text).
+/// Single-partition convenience over [`encode_stage_architecture`] (the
+/// unfused chain case, and the substrate benches/tests).
+pub fn encode_architecture(spec: &PartitionSpec, next_hop: &str, hlo: &str) -> Vec<u8> {
+    encode_stage_architecture(std::slice::from_ref(spec), &[hlo], next_hop)
+}
+
+fn read_u32(payload: &[u8], off: &mut usize, what: &str) -> Result<usize> {
+    if payload.len() < *off + 4 {
+        return Err(DeferError::Coordinator(format!(
+            "architecture payload truncated in {what}"
+        )));
+    }
+    let v = u32::from_le_bytes(payload[*off..*off + 4].try_into().unwrap()) as usize;
+    *off += 4;
+    Ok(v)
+}
+
+fn read_str<'a>(payload: &'a [u8], off: &mut usize, len: usize, what: &str) -> Result<&'a str> {
+    if payload.len() < *off + len {
+        return Err(DeferError::Coordinator(format!(
+            "architecture payload truncated in {what}"
+        )));
+    }
+    let s = std::str::from_utf8(&payload[*off..*off + len])
+        .map_err(|e| DeferError::Coordinator(format!("{what} not utf8: {e}")))?;
+    *off += len;
+    Ok(s)
+}
+
+/// Decode a fused stage's architecture payload into per-partition
+/// `(spec, hlo_text)` pairs (fusion order) and the stage's next hop.
+pub fn decode_stage_architecture(payload: &[u8]) -> Result<(Vec<(PartitionSpec, String)>, String)> {
+    let mut off = 0usize;
+    let count = read_u32(payload, &mut off, "partition count")?;
+    // Each partition needs at least its two length prefixes; this bounds
+    // `count` before any allocation so garbage input fails cleanly.
+    if count == 0 || count > payload.len() / 8 {
+        return Err(DeferError::Coordinator(format!(
+            "architecture payload corrupt: {count} partition(s) in {} bytes",
+            payload.len()
+        )));
+    }
+    let mut parts = Vec::with_capacity(count);
+    let mut next_hop = String::new();
+    for i in 0..count {
+        let meta_len = read_u32(payload, &mut off, "meta length")?;
+        let meta_text = read_str(payload, &mut off, meta_len, "meta")?;
+        let (spec, next) = PartitionSpec::from_config_json(&json::parse(meta_text)?)?;
+        let hlo_len = read_u32(payload, &mut off, "hlo length")?;
+        let hlo = read_str(payload, &mut off, hlo_len, "hlo")?.to_string();
+        if i == 0 {
+            next_hop = next;
+        }
+        parts.push((spec, hlo));
+    }
+    if off != payload.len() {
+        return Err(DeferError::Coordinator(format!(
+            "architecture payload has {} trailing bytes",
+            payload.len() - off
+        )));
+    }
+    Ok((parts, next_hop))
+}
+
+/// Decode a payload that must hold exactly one partition (the unfused
+/// case). Returns (spec, next_hop, hlo_text).
 pub fn decode_architecture(payload: &[u8]) -> Result<(PartitionSpec, String, String)> {
-    if payload.len() < 4 {
-        return Err(DeferError::Coordinator("architecture payload truncated".into()));
+    let (mut parts, next) = decode_stage_architecture(payload)?;
+    if parts.len() != 1 {
+        return Err(DeferError::Coordinator(format!(
+            "expected a single-partition architecture payload, got {} partitions",
+            parts.len()
+        )));
     }
-    let meta_len = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    if payload.len() < 4 + meta_len {
-        return Err(DeferError::Coordinator("architecture meta truncated".into()));
-    }
-    let meta_text = std::str::from_utf8(&payload[4..4 + meta_len])
-        .map_err(|e| DeferError::Coordinator(format!("meta not utf8: {e}")))?;
-    let (spec, next) = PartitionSpec::from_config_json(&json::parse(meta_text)?)?;
-    let hlo = std::str::from_utf8(&payload[4 + meta_len..])
-        .map_err(|e| DeferError::Coordinator(format!("hlo not utf8: {e}")))?
-        .to_string();
+    let (spec, hlo) = parts.remove(0);
     Ok((spec, next, hlo))
 }
 
@@ -108,7 +186,11 @@ pub struct ComputeOptions {
 ///
 /// `conns` bundles the worker's topology view with its four established
 /// connections: config (receives `ModelConfig`, replies `Ready`),
-/// weights (receives `Weights`), and the data in/out path.
+/// weights (receives `Weights`), and the data in/out path. The
+/// architecture payload may fuse several partitions; the node builds one
+/// executable per partition and runs them back to back per frame, so a
+/// fused stage costs one configuration exchange and zero network traffic
+/// at its inner boundaries.
 pub fn run_compute_node(
     engine: Engine,
     conns: WorkerConns,
@@ -137,7 +219,11 @@ pub fn run_compute_node(
         &cfg_msg.payload,
         cfg_msg.serialized_len as usize,
     )?;
-    let (spec, _next, hlo) = decode_architecture(&raw)?;
+    let (fused, _next) = decode_stage_architecture(&raw)?;
+    let (specs, hlos): (Vec<PartitionSpec>, Vec<String>) = fused.into_iter().unzip();
+    // Re-validate the fused run on the receiving side: contiguous
+    // indices, chained boundary shapes, one artifact set.
+    let stage = StageSpec::fuse(specs)?;
 
     let w_msg = weights_conn.recv(&rx_counter)?;
     if w_msg.msg_type != MessageType::Weights {
@@ -152,14 +238,26 @@ pub fn run_compute_node(
         w_msg.count as usize,
         Some(&stats.meter.codec),
     )?;
-    let weight_arrays = split_weights(&spec, flat)?;
-    let exe = Executable::from_parts(&engine, &hlo, &spec, weight_arrays)?;
-    // The executable's timer *is* the node's compute-energy clock.
-    let exe = Arc::new(exe);
-    let compute_timer = exe.exec_timer.clone();
+    // The stage's weights arrive as one concatenated array, partition
+    // order then manifest order — exactly `StageSpec::weight_manifest`.
+    if flat.len() != stage.weight_elements() {
+        return Err(DeferError::Coordinator(format!(
+            "weights vector has {} elements, stage manifest wants {}",
+            flat.len(),
+            stage.weight_elements()
+        )));
+    }
+    let mut exes = Vec::with_capacity(stage.num_parts());
+    let mut off = 0usize;
+    for (spec, hlo) in stage.parts.iter().zip(&hlos) {
+        let elems: usize = spec.weights.iter().map(|w| w.elements).sum();
+        let weight_arrays = split_weights(spec, flat[off..off + elems].to_vec())?;
+        off += elems;
+        exes.push(Executable::from_parts(&engine, hlo, spec, weight_arrays)?);
+    }
+    // The executables' timers *are* the node's compute-energy clock.
+    let compute_timers: Vec<_> = exes.iter().map(|e| e.exec_timer.clone()).collect();
     let stats_for_energy = Arc::clone(&stats);
-    // Wire the shared timer into the meter by accumulation at the end; we
-    // read compute time directly from the executable below instead.
 
     config_conn.send(
         &Message::control(MessageType::Ready),
@@ -184,13 +282,14 @@ pub fn run_compute_node(
         }
     });
 
-    let in_shape = spec.input_shape.clone();
+    let in_shape = stage.input_shape().to_vec();
     // Deterministic device emulation: floor each frame's compute to the
-    // emulated device's FLOP time (constant of the plan, immune to host
-    // contention). Tracks total emulated busy time for the energy model.
+    // emulated device's FLOP time for the *whole fused run* (constant of
+    // the plan, immune to host contention). Tracks total emulated busy
+    // time for the energy model.
     let flops_floor = if opts.emulated_mflops > 0.0 {
         Some(std::time::Duration::from_secs_f64(
-            spec.flops as f64 / (opts.emulated_mflops * 1e6),
+            stage.flops() as f64 / (opts.emulated_mflops * 1e6),
         ))
     } else {
         None
@@ -211,9 +310,14 @@ pub fn run_compute_node(
                         msg.count as usize,
                         Some(&stats.meter.codec),
                     )?;
-                    let input = Tensor::new(in_shape.clone(), values)?;
                     let t_run = std::time::Instant::now();
-                    let output = exe.run(&input)?;
+                    // Fused partitions run back to back; inner activations
+                    // stay in process memory, no codec, no link.
+                    let mut cur = Tensor::new(in_shape.clone(), values)?;
+                    for exe in &exes {
+                        cur = exe.run(&cur)?;
+                    }
+                    let output = cur;
                     if let Some(floor) = flops_floor {
                         let elapsed = t_run.elapsed();
                         if elapsed < floor {
@@ -257,10 +361,12 @@ pub fn run_compute_node(
     if flops_floor.is_some() {
         stats_for_energy.meter.compute.add(emulated_busy);
     } else {
+        let measured: std::time::Duration =
+            compute_timers.iter().map(|t| t.total()).sum();
         stats_for_energy
             .meter
             .compute
-            .add(compute_timer.total().mul_f64(opts.compute_slowdown));
+            .add(measured.mul_f64(opts.compute_slowdown));
     }
     // Outgoing bytes drive network energy.
     stats_for_energy.meter.tx_bytes.add(stats.data_tx.total());
@@ -310,6 +416,29 @@ mod tests {
         }
     }
 
+    /// The partition downstream of `fake_spec` (boundary-chained).
+    fn fake_spec_next() -> PartitionSpec {
+        PartitionSpec {
+            model: "m".into(),
+            profile: "tiny".into(),
+            part_index: 2,
+            part_count: 4,
+            input_shape: vec![1, 4],
+            output_shape: vec![1, 2],
+            flops: 16,
+            layers: vec!["dense2".into()],
+            weights: vec![crate::model::WeightSpec {
+                node: "dense2".into(),
+                param: "w".into(),
+                shape: vec![4, 2],
+                elements: 8,
+            }],
+            weights_bytes: 8 * 4,
+            hlo_path: std::path::PathBuf::new(),
+            weights_path: std::path::PathBuf::new(),
+        }
+    }
+
     #[test]
     fn architecture_payload_round_trip() {
         let spec = fake_spec();
@@ -325,12 +454,42 @@ mod tests {
     }
 
     #[test]
+    fn fused_architecture_payload_round_trip() {
+        let a = fake_spec();
+        let b = fake_spec_next();
+        let payload = encode_stage_architecture(
+            &[a.clone(), b.clone()],
+            &["HLO A", "HLO B"],
+            "node2",
+        );
+        let (parts, next) = decode_stage_architecture(&payload).unwrap();
+        assert_eq!(next, "node2");
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].0.part_index, 1);
+        assert_eq!(parts[0].1, "HLO A");
+        assert_eq!(parts[1].0.part_index, 2);
+        assert_eq!(parts[1].1, "HLO B");
+        // The decoded run fuses: chained shapes, contiguous indices.
+        let stage =
+            StageSpec::fuse(parts.into_iter().map(|(s, _)| s).collect()).unwrap();
+        assert_eq!(stage.flops(), a.flops + b.flops);
+        assert_eq!(stage.input_shape(), &[1, 8]);
+        assert_eq!(stage.output_shape(), &[1, 2]);
+        // A fused payload is not a legal single-partition payload.
+        assert!(decode_architecture(&payload).is_err());
+    }
+
+    #[test]
     fn architecture_payload_corrupt_rejected() {
         assert!(decode_architecture(&[1, 2]).is_err());
         let spec = fake_spec();
         let payload = encode_architecture(&spec, "next", "HLO");
         // Truncate inside the JSON.
         assert!(decode_architecture(&payload[..10]).is_err());
+        // Trailing garbage is rejected too.
+        let mut noisy = payload.clone();
+        noisy.push(0);
+        assert!(decode_architecture(&noisy).is_err());
     }
 
     #[test]

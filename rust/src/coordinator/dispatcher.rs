@@ -1,13 +1,15 @@
 //! Dispatcher node — the paper's Algorithm 1, generalized to a
-//! per-worker view of the topology.
+//! per-worker view of the topology over fused stages.
 //!
 //! Configuration step: for each worker replica, open two connections and
-//! send (a) the serialized model architecture (meta JSON + HLO text)
-//! together with the worker's successor set, and (b) the serialized +
-//! compressed weights array. Wait for every worker's `Ready`. Which
-//! partition a worker receives and how its control-plane link is shaped
-//! come from its [`WorkerAssignment`] — replicated stages simply list
-//! the same partition index more than once.
+//! send (a) the serialized stage architecture — every fused partition's
+//! meta JSON + HLO text in *one* exchange — together with the worker's
+//! successor set, and (b) the stage's weights arrays concatenated into
+//! one serialized + compressed payload (partition order, then each
+//! partition's manifest order). Wait for every worker's `Ready`. Which
+//! fused stage a worker receives and how its control-plane link is
+//! shaped come from its [`WorkerAssignment`] — replicated stages simply
+//! list the same stage index more than once.
 //!
 //! Distributed inference step: pump serialized input frames to the first
 //! node and collect results from the last node, FIFO. Sender and receiver
@@ -22,13 +24,13 @@ use crate::config::CodecConfig;
 use crate::energy::{EnergyMeter, EnergyModel};
 use crate::error::{DeferError, Result};
 use crate::metrics::{ByteCounter, Histogram, ThroughputClock};
-use crate::model::{PartitionPlan, PartitionSpec};
+use crate::model::StageSpec;
 use crate::netem::Link;
 use crate::tensor::Tensor;
 use crate::threadpool::WorkerPool;
 use crate::wire::{Message, MessageType};
 
-use super::compute_node::encode_architecture;
+use super::compute_node::encode_stage_architecture;
 use super::transport::Conn;
 
 /// Dispatcher-side instrumentation.
@@ -59,21 +61,22 @@ impl DispatcherStats {
     }
 }
 
-/// One worker's configuration-step assignment: which partition it
+/// One worker's configuration-step assignment: which fused stage it
 /// serves, the successor label(s) shipped in its architecture payload,
 /// and the link shaping its control-plane traffic.
 pub struct WorkerAssignment {
-    pub spec_index: usize,
+    pub stage_index: usize,
     pub next_hop: String,
     pub link: Arc<Link>,
 }
 
 /// Send the configuration step to every worker: architecture + weights.
 ///
-/// `conns[i]` is the (config, weights) connection pair for the worker
-/// described by `assignments[i]` (stage-major order).
+/// `stages` are the pipeline's fused stages (single-partition in the
+/// paper's chain); `conns[i]` is the (config, weights) connection pair
+/// for the worker described by `assignments[i]` (stage-major order).
 pub fn configure_nodes(
-    plan: &PartitionPlan,
+    stages: &[StageSpec],
     conns: &mut [(Conn, Conn)],
     assignments: &[WorkerAssignment],
     codecs: &CodecConfig,
@@ -88,15 +91,15 @@ pub fn configure_nodes(
         )));
     }
     for ((config_conn, weights_conn), a) in conns.iter_mut().zip(assignments) {
-        let spec = plan.parts.get(a.spec_index).ok_or_else(|| {
+        let stage = stages.get(a.stage_index).ok_or_else(|| {
             DeferError::Coordinator(format!(
-                "assignment wants partition {} of {}",
-                a.spec_index,
-                plan.parts.len()
+                "assignment wants stage {} of {}",
+                a.stage_index,
+                stages.len()
             ))
         })?;
-        send_architecture(spec, &a.next_hop, config_conn, codecs, &a.link, stats)?;
-        send_weights(spec, weights_conn, codecs, &a.link, stats)?;
+        send_architecture(stage, &a.next_hop, config_conn, codecs, &a.link, stats)?;
+        send_weights(stage, weights_conn, codecs, &a.link, stats)?;
     }
     // Wait for every node to instantiate its model (paper: the model socket
     // waits for weights, then builds the TensorFlow model).
@@ -114,16 +117,21 @@ pub fn configure_nodes(
 }
 
 fn send_architecture(
-    spec: &PartitionSpec,
+    stage: &StageSpec,
     next_hop: &str,
     conn: &mut Conn,
     codecs: &CodecConfig,
     link: &Link,
     stats: &DispatcherStats,
 ) -> Result<()> {
-    let hlo = spec.read_hlo()?;
+    let hlos = stage
+        .parts
+        .iter()
+        .map(|p| p.read_hlo())
+        .collect::<Result<Vec<_>>>()?;
+    let hlo_refs: Vec<&str> = hlos.iter().map(String::as_str).collect();
     let (payload, mid) = stats.meter.codec.time(|| {
-        let raw = encode_architecture(spec, next_hop, &hlo);
+        let raw = encode_stage_architecture(&stage.parts, &hlo_refs, next_hop);
         let mid = raw.len();
         (codecs.architecture.compression.compress(&raw), mid)
     });
@@ -140,14 +148,21 @@ fn send_architecture(
 }
 
 fn send_weights(
-    spec: &PartitionSpec,
+    stage: &StageSpec,
     conn: &mut Conn,
     codecs: &CodecConfig,
     link: &Link,
     stats: &DispatcherStats,
 ) -> Result<()> {
-    let arrays = spec.read_weights()?;
-    let flat: Vec<f32> = arrays.into_iter().flatten().collect();
+    // Concatenate every fused partition's flat weights in partition
+    // order — the layout `StageSpec::weight_manifest` documents and the
+    // compute node's split relies on.
+    let mut flat: Vec<f32> = Vec::with_capacity(stage.weight_elements());
+    for spec in &stage.parts {
+        for arr in spec.read_weights()? {
+            flat.extend(arr);
+        }
+    }
     let (payload, mid) = codecs.weights.encode_f32s(&flat, Some(&stats.meter.codec));
     let msg = Message {
         msg_type: MessageType::Weights,

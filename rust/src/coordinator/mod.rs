@@ -4,10 +4,14 @@
 //! Implements the paper's three phases:
 //!
 //! 1. **Model partitioning** happened at build time (Python `partitioner`);
-//!    the artifacts are the partitioned model.
+//!    the artifacts are the *finest* partitioned model. Stage boundaries,
+//!    however, are no longer pinned to the artifacts: the repartition
+//!    planner ([`crate::repartition`]) may fuse contiguous runs of
+//!    partitions into stages ([`crate::model::StageSpec`]) at plan time.
 //! 2. **Configuration step** ([`dispatcher`]): the dispatcher opens two
-//!    connections per worker replica — one for the serialized model
-//!    architecture (meta JSON + HLO text) and one for the weights array —
+//!    connections per worker replica — one for the serialized stage
+//!    architecture (every fused partition's meta JSON + HLO text, one
+//!    exchange) and one for the stage's concatenated weights array —
 //!    and tells each worker its successor set in the topology.
 //! 3. **Distributed inference step** ([`compute_node`]): workers relay
 //!    intermediate activations in FIFO order, each running its stage's

@@ -12,9 +12,12 @@
 //!   partition to HLO text under `artifacts/`.
 //! * **L3 (this crate)** — loads the artifacts via the PJRT C API
 //!   ([`runtime`]), derives a declarative deployment [`topology`]
-//!   (stages × replicas, per-hop links) — either hand-written or emitted
-//!   by the [`placement`] planner from stage costs and device budgets —
-//!   distributes partitions and
+//!   (stages × replicas, per-hop links) — hand-written, emitted by the
+//!   [`placement`] planner from stage costs and device budgets, or
+//!   jointly re-cut by the [`repartition`] planner, which fuses the
+//!   finest-granularity partition set into balanced
+//!   [`model::StageSpec`] stages and chooses replica counts in the same
+//!   pass — distributes fused stages and
 //!   weights to worker replicas ([`coordinator::dispatcher`]), and
 //!   pipelines frames through the deployment ([`coordinator`]) with the
 //!   paper's serialization/compression sweep ([`serial`], [`compress`]),
@@ -35,6 +38,7 @@ pub mod metrics;
 pub mod model;
 pub mod netem;
 pub mod placement;
+pub mod repartition;
 pub mod runtime;
 pub mod serial;
 pub mod tensor;

@@ -4,7 +4,9 @@
 //! * `run`      — run a DEFER chain (or the single-device baseline with
 //!                `--nodes 1 --baseline`) and print the run report.
 //! * `plan`     — print the placement planner's topology for a config
-//!                without running it.
+//!                without running it; with `--auto-partition` the joint
+//!                repartition plan (chosen stage boundaries + replicas),
+//!                from artifacts or from `--synthetic` stage costs.
 //! * `sweep`    — Fig. 2-style sweep over node counts for one model.
 //! * `codecs`   — Table I/II-style codec sweep.
 //! * `info`     — show available artifacts and PJRT platform info.
@@ -15,6 +17,8 @@
 //! defer run --model resnet50 --nodes 4 --tcp --link gigabit
 //! defer run --nodes 4 --auto-place --workers-budget 6 --emulated-mflops 50
 //! defer plan --nodes 4 --auto-place --workers-budget 6 --emulated-mflops 50
+//! defer plan --auto-partition --synthetic 100,400,100 --workers-budget 5 \
+//!            --emulated-mflops 100 --links wifi,gigabit
 //! defer sweep --model vgg16 --parts 1,4,6,8 --frames 16
 //! defer info
 //! ```
@@ -29,7 +33,7 @@ use defer::error::Result;
 use defer::runtime::Engine;
 use defer::util::{fmt_bytes, fmt_duration};
 
-const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help", "auto-place"];
+const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help", "auto-place", "auto-partition"];
 
 fn usage() -> &'static str {
     "defer — Distributed Edge Inference (COMSNETS 2022 reproduction)
@@ -60,8 +64,16 @@ RUN OPTIONS:
                            first entry pins the uplink, the rest are the
                            interconnect candidates. Needs a device model via
                            --device-profile or --emulated-mflops)
+  --auto-partition         plan the stage *boundaries* too: fuse the finest-
+                           granularity artifact set into balanced stages,
+                           jointly with replica placement (--nodes stops
+                           mattering; --links lists uplink + interconnect
+                           candidates. Needs a device model like --auto-place)
   --workers-budget N       max worker replicas auto-place may use
                            (default: device-profile size, else --nodes)
+  --device-memory BYTES    max resident weight bytes per worker; bounds how
+                           much of the model --auto-partition fuses into one
+                           stage (0 = unlimited, favors few wide stages)
   --device-profile FILE    device pool JSON for auto-place:
                            {\"devices\": [{\"name\": \"jetson\", \"mflops\": 200}]}
   --pipe-depth N           chain backpressure window (default: 4)
@@ -72,6 +84,15 @@ RUN OPTIONS:
   --data-serialization json|zfp[:RATE]|binary
   --data-compression  none|lz4
   --weights-serialization / --weights-compression  (same values)
+
+PLAN OPTIONS (with --auto-partition):
+  --synthetic M0,M1,...    plan from synthetic per-partition MFLOPs instead
+                           of artifacts (no artifact read at all)
+  --synthetic-bytes B0,..,BN  boundary activation bytes, one more entry than
+                           partitions (model input, inner boundaries, model
+                           output; default 4096 each)
+  --synthetic-weights W0,W1,...  per-partition weight bytes (default 0 each;
+                           pair with --device-memory to force multi-stage)
 
 SWEEP OPTIONS:
   --parts 1,4,6,8          node counts to sweep
@@ -128,14 +149,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         SingleDevice::new(cfg)?.run_frames(frames)?
     } else {
         let runner = ChainRunner::new(cfg)?;
-        if runner.cfg.auto_place {
-            // Surface what the planner decided. run_frames plans again
-            // internally; planning is pure and deterministic, so this
-            // matches the deployed topology as long as the device
-            // profile on disk is not edited in between.
-            let problem =
-                defer::placement::PlacementProblem::from_config(&runner.cfg, runner.plan())?;
-            print!("{}", defer::placement::plan(&problem)?.render());
+        // Surface what the planner decided (the runner deploys exactly
+        // this topology — planning happened once, at construction).
+        if let Some(render) = runner.plan_render() {
+            print!("{render}");
         }
         runner.run_frames(frames)?
     };
@@ -143,10 +160,85 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--synthetic*` flags into repartition partition costs.
+fn synthetic_parts(args: &Args) -> Result<Option<Vec<defer::repartition::PartCost>>> {
+    use defer::error::DeferError;
+    let mflops = match args.get_list("synthetic") {
+        None => return Ok(None),
+        Some(items) => items
+            .iter()
+            .map(|s| {
+                let m = s.parse::<f64>().map_err(|_| {
+                    DeferError::Cli(format!("--synthetic: bad MFLOP count {s:?}"))
+                })?;
+                // A finite, positive cost only — `-100`, `nan` or `inf`
+                // would otherwise saturate the u64 cast into a silent
+                // zero-cost partition.
+                if !(m > 0.0 && m.is_finite()) {
+                    return Err(DeferError::Cli(format!(
+                        "--synthetic: MFLOP count must be a positive finite number, got {s:?}"
+                    )));
+                }
+                Ok(m)
+            })
+            .collect::<Result<Vec<f64>>>()?,
+    };
+    let n = mflops.len();
+    let bytes = args.get_usize_list("synthetic-bytes", &vec![4096; n + 1])?;
+    if bytes.len() != n + 1 {
+        return Err(DeferError::Cli(format!(
+            "--synthetic-bytes wants {} entries for {n} partitions (model input, \
+             inner boundaries, model output), got {}",
+            n + 1,
+            bytes.len()
+        )));
+    }
+    let weights = args.get_usize_list("synthetic-weights", &vec![0; n])?;
+    if weights.len() != n {
+        return Err(DeferError::Cli(format!(
+            "--synthetic-weights wants {n} entries, got {}",
+            weights.len()
+        )));
+    }
+    Ok(Some(
+        (0..n)
+            .map(|i| defer::repartition::PartCost {
+                flops: (mflops[i] * 1e6) as u64,
+                input_bytes: bytes[i] as u64,
+                output_bytes: bytes[i + 1] as u64,
+                weights_bytes: weights[i] as u64,
+            })
+            .collect(),
+    ))
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
     use defer::model::PartitionPlan;
     use defer::placement;
+    use defer::repartition;
     let cfg = load_config(args)?;
+    if cfg.auto_partition {
+        let problem = match synthetic_parts(args)? {
+            Some(parts) => repartition::RepartitionProblem::from_parts(&cfg, parts)?,
+            None => {
+                let finest = defer::model::finest_part_count(
+                    &cfg.artifacts_dir,
+                    &cfg.profile,
+                    &cfg.model,
+                )?;
+                let plan = PartitionPlan::load(
+                    &cfg.artifacts_dir,
+                    &cfg.profile,
+                    &cfg.model,
+                    finest,
+                )?;
+                repartition::RepartitionProblem::from_config(&cfg, &plan)?
+            }
+        };
+        print!("{}", repartition::plan(&problem)?.render());
+        println!("(rerun as `defer run --auto-partition` with the same flags to deploy it)");
+        return Ok(());
+    }
     let plan = PartitionPlan::load(&cfg.artifacts_dir, &cfg.profile, &cfg.model, cfg.nodes)?;
     let problem = placement::PlacementProblem::from_config(&cfg, &plan)?;
     let placed = placement::plan(&problem)?;

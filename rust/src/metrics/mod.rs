@@ -240,6 +240,25 @@ mod tests {
     }
 
     #[test]
+    fn error_sink_survives_poisoned_mutex() {
+        // A worker panicking while holding the error-sink lock poisons
+        // it; later pushes from healthy threads must still land instead
+        // of cascading the panic.
+        let m = RunMetrics::new();
+        let errors = Arc::clone(&m.errors);
+        let _ = std::thread::spawn(move || {
+            let _guard = errors.lock().unwrap();
+            panic!("poison the error sink");
+        })
+        .join();
+        assert!(m.errors.lock().is_err(), "mutex should be poisoned");
+        m.push_error("recorded after poisoning".into());
+        let guard = m.errors.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(guard.len(), 1);
+        assert_eq!(guard[0], "recorded after poisoning");
+    }
+
+    #[test]
     fn throughput_clock() {
         let t = ThroughputClock::new();
         for _ in 0..10 {
@@ -309,7 +328,13 @@ impl RunMetrics {
         }
     }
 
+    /// Record a failed-result message. Recovers a poisoned mutex (a
+    /// worker that panicked mid-push during shutdown teardown must not
+    /// cascade the panic into every other thread's error reporting).
     pub fn push_error(&self, msg: String) {
-        self.errors.lock().unwrap().push(msg);
+        self.errors
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(msg);
     }
 }

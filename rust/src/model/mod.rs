@@ -250,6 +250,154 @@ impl PartitionSpec {
     }
 }
 
+/// A fused run of contiguous partitions served by one pipeline stage.
+///
+/// PR 3 makes stage boundaries a *planning output*: the repartition pass
+/// ([`crate::repartition`]) loads the finest-granularity partition set
+/// and fuses contiguous runs into stages. A `StageSpec` is that fused
+/// run — the unit the dispatcher ships in one configuration exchange and
+/// a compute node executes in-process, back to back. Fusion accounting:
+///
+/// * **FLOPs sum** — the stage costs the sum of its partitions' FLOPs;
+/// * **inner boundaries elide** — only the first partition's input and
+///   the last partition's output ever touch the network, the activation
+///   bytes between fused partitions stay in process memory;
+/// * **weights concatenate** — the stage's weights payload is each
+///   partition's flat weights array back to back, in partition order
+///   (the manifest order every split on the receiving side relies on).
+#[derive(Clone, Debug)]
+pub struct StageSpec {
+    /// Contiguous partitions, ascending `part_index`, boundary-chained.
+    pub parts: Vec<PartitionSpec>,
+}
+
+impl StageSpec {
+    /// Fuse a contiguous run of partitions into one stage. Rejects empty
+    /// runs, mixed (model, profile, part_count) artifacts, non-contiguous
+    /// indices and boundary-shape mismatches.
+    pub fn fuse(parts: Vec<PartitionSpec>) -> Result<StageSpec> {
+        let first = parts
+            .first()
+            .ok_or_else(|| DeferError::Model("cannot fuse an empty partition run".into()))?;
+        for p in &parts {
+            if p.model != first.model
+                || p.profile != first.profile
+                || p.part_count != first.part_count
+            {
+                return Err(DeferError::Model(format!(
+                    "cannot fuse across artifact sets: p{} is {}/{} ({} parts), \
+                     p{} is {}/{} ({} parts)",
+                    first.part_index,
+                    first.profile,
+                    first.model,
+                    first.part_count,
+                    p.part_index,
+                    p.profile,
+                    p.model,
+                    p.part_count
+                )));
+            }
+        }
+        for (a, b) in parts.iter().zip(parts.iter().skip(1)) {
+            if b.part_index != a.part_index + 1 {
+                return Err(DeferError::Model(format!(
+                    "fused run is not contiguous: p{} followed by p{}",
+                    a.part_index, b.part_index
+                )));
+            }
+            if a.output_shape != b.input_shape {
+                return Err(DeferError::Model(format!(
+                    "fused boundary mismatch p{}: {:?} -> p{}: {:?}",
+                    a.part_index, a.output_shape, b.part_index, b.input_shape
+                )));
+            }
+        }
+        Ok(StageSpec { parts })
+    }
+
+    /// A single-partition stage (the unfused, paper-chain case).
+    pub fn single(spec: PartitionSpec) -> StageSpec {
+        StageSpec { parts: vec![spec] }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Summed FLOPs of the fused run.
+    pub fn flops(&self) -> u64 {
+        self.parts.iter().map(|p| p.flops).sum()
+    }
+
+    /// The stage's network-visible input: the first partition's input.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.parts[0].input_shape
+    }
+
+    /// The stage's network-visible output: the last partition's output.
+    pub fn output_shape(&self) -> &[usize] {
+        &self.parts[self.parts.len() - 1].output_shape
+    }
+
+    /// Uncompressed bytes of one input activation frame (f32).
+    pub fn input_bytes(&self) -> u64 {
+        self.parts[0].input_bytes()
+    }
+
+    /// Uncompressed bytes of one output activation frame (f32).
+    pub fn output_bytes(&self) -> u64 {
+        self.parts[self.parts.len() - 1].output_bytes()
+    }
+
+    /// Activation bytes of the *inner* boundaries the fusion elides from
+    /// the network (they stay in process memory on the worker).
+    pub fn elided_boundary_bytes(&self) -> u64 {
+        self.parts
+            .iter()
+            .take(self.parts.len() - 1)
+            .map(|p| p.output_bytes())
+            .sum()
+    }
+
+    /// Total resident weights of the fused run in bytes (the memory a
+    /// worker hosting this stage must hold).
+    pub fn weights_bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.weights_bytes).sum()
+    }
+
+    /// Total f32 weight elements across the fused run — the element
+    /// count of the concatenated weights payload.
+    pub fn weight_elements(&self) -> usize {
+        self.parts
+            .iter()
+            .flat_map(|p| p.weights.iter())
+            .map(|w| w.elements)
+            .sum()
+    }
+
+    /// The concatenated weight manifest, in partition order then each
+    /// partition's own manifest order — exactly the layout of the fused
+    /// weights payload on the wire.
+    pub fn weight_manifest(&self) -> Vec<&WeightSpec> {
+        self.parts.iter().flat_map(|p| p.weights.iter()).collect()
+    }
+
+    /// Stable stage label, e.g. `p2of4` or `p1..p3of8`.
+    pub fn label(&self) -> String {
+        let first = &self.parts[0];
+        if self.parts.len() == 1 {
+            format!("p{}of{}", first.part_index, first.part_count)
+        } else {
+            format!(
+                "p{}..p{}of{}",
+                first.part_index,
+                self.parts[self.parts.len() - 1].part_index,
+                first.part_count
+            )
+        }
+    }
+}
+
 /// A full partition plan: all N stages of one (profile, model, N) config.
 #[derive(Clone, Debug)]
 pub struct PartitionPlan {
@@ -318,6 +466,31 @@ impl PartitionPlan {
     pub fn total_flops(&self) -> u64 {
         self.parts.iter().map(|p| p.flops).sum()
     }
+
+    /// Fuse the plan into stages at the given cut points. `cuts` must be
+    /// strictly increasing, start at 0 and end at `parts.len()`; stage
+    /// `s` is the contiguous run `parts[cuts[s]..cuts[s+1]]`.
+    pub fn fuse(&self, cuts: &[usize]) -> Result<Vec<StageSpec>> {
+        let n = self.parts.len();
+        if cuts.len() < 2 || cuts[0] != 0 || *cuts.last().unwrap() != n {
+            return Err(DeferError::Model(format!(
+                "cut points {cuts:?} must run from 0 to {n}"
+            )));
+        }
+        if cuts.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(DeferError::Model(format!(
+                "cut points {cuts:?} are not strictly increasing"
+            )));
+        }
+        cuts.windows(2)
+            .map(|w| StageSpec::fuse(self.parts[w[0]..w[1]].to_vec()))
+            .collect()
+    }
+
+    /// One single-partition stage per plan entry — the paper's chain.
+    pub fn singleton_stages(&self) -> Vec<StageSpec> {
+        self.parts.iter().cloned().map(StageSpec::single).collect()
+    }
 }
 
 /// Reference vectors (`ref_input.bin`, `ref_output.bin`) for end-to-end
@@ -362,6 +535,29 @@ pub fn available_configs(artifacts: &Path, profile: &str) -> Result<Vec<(String,
     }
     out.sort();
     Ok(out)
+}
+
+/// The finest partition granularity built for (profile, model) — the
+/// largest `N` in the artifact manifest. This is the partition set the
+/// repartition planner fuses; stage boundaries then come from planning,
+/// not from which `(model, n)` artifact happened to be requested.
+pub fn finest_part_count(artifacts: &Path, profile: &str, model: &str) -> Result<usize> {
+    let configs = available_configs(artifacts, profile).map_err(|e| {
+        DeferError::Model(format!(
+            "cannot read artifact manifest under {} — run `make artifacts`: {e}",
+            artifacts.display()
+        ))
+    })?;
+    configs
+        .iter()
+        .filter(|(m, _)| m == model)
+        .map(|(_, n)| *n)
+        .max()
+        .ok_or_else(|| {
+            DeferError::Model(format!(
+                "no artifacts for {model:?} under profile {profile:?} — run `make artifacts`"
+            ))
+        })
 }
 
 #[cfg(test)]

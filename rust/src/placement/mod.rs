@@ -168,56 +168,8 @@ impl PlacementProblem {
                 output_bytes: p.output_bytes(),
             })
             .collect();
-        let uplink = cfg.per_hop_links.first().copied().unwrap_or(cfg.link);
-        let tail: &[LinkSpec] = match cfg.per_hop_links.len() {
-            0 => std::slice::from_ref(&cfg.link),
-            1 => &cfg.per_hop_links[..],
-            _ => &cfg.per_hop_links[1..],
-        };
-        let mut interconnect: Vec<LinkSpec> = Vec::new();
-        for l in tail {
-            if !interconnect.contains(l) {
-                interconnect.push(*l);
-            }
-        }
-        let (devices, worker_budget) = match &cfg.device_profile {
-            Some(path) => {
-                let devices = load_device_profiles(path)?;
-                let budget = if cfg.workers_budget > 0 {
-                    cfg.workers_budget
-                } else {
-                    devices.len()
-                };
-                if budget > devices.len() {
-                    return Err(DeferError::Config(format!(
-                        "workers budget {budget} exceeds the {} profiled devices",
-                        devices.len()
-                    )));
-                }
-                (devices, budget)
-            }
-            None => {
-                if !(cfg.emulated_mflops > 0.0) {
-                    return Err(DeferError::Config(
-                        "auto-place needs a device model: pass --device-profile FILE \
-                         or --emulated-mflops RATE so stage compute times are defined"
-                            .into(),
-                    ));
-                }
-                let budget = if cfg.workers_budget > 0 {
-                    cfg.workers_budget
-                } else {
-                    cfg.nodes
-                };
-                let devices = (0..budget)
-                    .map(|i| DeviceProfile {
-                        name: format!("edge{i}"),
-                        mflops: cfg.emulated_mflops,
-                    })
-                    .collect();
-                (devices, budget)
-            }
-        };
+        let (uplink, interconnect) = links_from_config(cfg);
+        let (devices, worker_budget) = device_pool_from_config(cfg)?;
         Ok(PlacementProblem {
             stages,
             devices,
@@ -225,6 +177,74 @@ impl PlacementProblem {
             uplink,
             interconnect,
         })
+    }
+}
+
+/// The link vocabulary a [`DeferConfig`] describes for planning: hop 0 of
+/// `per_hop_links` is the dispatcher uplink (the physical medium, not a
+/// choice) and the remaining *distinct* entries are the interconnect
+/// candidates for interior hops. An empty `per_hop_links` makes the
+/// uniform `link` both. Shared by [`PlacementProblem::from_config`] and
+/// the repartition planner (`crate::repartition`), which cannot take
+/// per-hop lists literally — with `auto_partition` the number of hops is
+/// itself a planning output.
+pub fn links_from_config(cfg: &DeferConfig) -> (LinkSpec, Vec<LinkSpec>) {
+    let uplink = cfg.per_hop_links.first().copied().unwrap_or(cfg.link);
+    let tail: &[LinkSpec] = match cfg.per_hop_links.len() {
+        0 => std::slice::from_ref(&cfg.link),
+        1 => &cfg.per_hop_links[..],
+        _ => &cfg.per_hop_links[1..],
+    };
+    let mut interconnect: Vec<LinkSpec> = Vec::new();
+    for l in tail {
+        if !interconnect.contains(l) {
+            interconnect.push(*l);
+        }
+    }
+    (uplink, interconnect)
+}
+
+/// The worker pool + budget a [`DeferConfig`] describes: the JSON device
+/// profile when given, else a homogeneous pool of `emulated_mflops`-speed
+/// devices sized by `workers_budget` (default `nodes`).
+pub fn device_pool_from_config(cfg: &DeferConfig) -> Result<(Vec<DeviceProfile>, usize)> {
+    match &cfg.device_profile {
+        Some(path) => {
+            let devices = load_device_profiles(path)?;
+            let budget = if cfg.workers_budget > 0 {
+                cfg.workers_budget
+            } else {
+                devices.len()
+            };
+            if budget > devices.len() {
+                return Err(DeferError::Config(format!(
+                    "workers budget {budget} exceeds the {} profiled devices",
+                    devices.len()
+                )));
+            }
+            Ok((devices, budget))
+        }
+        None => {
+            if !(cfg.emulated_mflops > 0.0) {
+                return Err(DeferError::Config(
+                    "planning needs a device model: pass --device-profile FILE \
+                     or --emulated-mflops RATE so stage compute times are defined"
+                        .into(),
+                ));
+            }
+            let budget = if cfg.workers_budget > 0 {
+                cfg.workers_budget
+            } else {
+                cfg.nodes
+            };
+            let devices = (0..budget)
+                .map(|i| DeviceProfile {
+                    name: format!("edge{i}"),
+                    mflops: cfg.emulated_mflops,
+                })
+                .collect();
+            Ok((devices, budget))
+        }
     }
 }
 
@@ -326,13 +346,28 @@ impl PlacementPlan {
 }
 
 /// Modeled occupancy of one shaped link for `bytes`: serialization at
-/// the link rate plus expected propagation (latency + jitter/2).
-fn transfer_secs(link: &LinkSpec, bytes: u64) -> f64 {
+/// the link rate plus expected propagation (latency + jitter/2). Shared
+/// with the repartition planner so both passes price bytes identically.
+pub(crate) fn transfer_secs(link: &LinkSpec, bytes: u64) -> f64 {
     let mut t = link.latency.as_secs_f64() + link.jitter.as_secs_f64() / 2.0;
     if let Some(bps) = link.bandwidth_bps {
         t += bytes as f64 * 8.0 / bps as f64;
     }
     t
+}
+
+/// The interconnect candidate with the least modeled transfer time for
+/// `bytes` (first candidate wins ties) — the interior-hop link rule,
+/// shared with the repartition planner.
+pub(crate) fn best_link_for(candidates: &[LinkSpec], bytes: u64) -> LinkSpec {
+    *candidates
+        .iter()
+        .min_by(|a, b| {
+            transfer_secs(a, bytes)
+                .partial_cmp(&transfer_secs(b, bytes))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("non-empty candidates")
 }
 
 struct Eval {
@@ -433,16 +468,7 @@ pub fn plan(p: &PlacementProblem) -> Result<PlacementPlan> {
     let mut hop_links = Vec::with_capacity(s + 1);
     hop_links.push(p.uplink);
     for h in 1..=s {
-        let bytes = p.stages[h - 1].output_bytes;
-        let best = *candidates
-            .iter()
-            .min_by(|a, b| {
-                transfer_secs(a, bytes)
-                    .partial_cmp(&transfer_secs(b, bytes))
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            })
-            .expect("non-empty candidates");
-        hop_links.push(best);
+        hop_links.push(best_link_for(candidates, p.stages[h - 1].output_bytes));
     }
 
     // Greedy replication: grow the bottleneck stage while the budget

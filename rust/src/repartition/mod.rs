@@ -1,0 +1,558 @@
+//! FLOPs-aware repartitioning: stage boundaries as a planning output.
+//!
+//! PR 2's placement planner ([`crate::placement`]) replicates the stage
+//! boundaries it is handed; this module supplies the other half of the
+//! DEFER authors' follow-up (arXiv 2210.12219, "Partitioning and
+//! Placement of DNNs on Distributed Edge Devices"): *choosing* those
+//! boundaries. It takes the finest-granularity partition set the
+//! artifact registry knows ([`crate::model::finest_part_count`]), treats
+//! every cut between adjacent partitions as optional, and jointly picks
+//! cut points and per-stage replica counts to minimize the modeled
+//! pipeline bottleneck under a total-worker budget. Fused runs of
+//! partitions become [`crate::model::StageSpec`] stages: their FLOPs
+//! sum, their inner activation boundaries never touch the network, and
+//! their weight payloads concatenate into one configuration exchange.
+//!
+//! # Cost model
+//!
+//! Exactly [`crate::placement`]'s (same `transfer_secs` pricing, same
+//! interior-link rule, same round-robin replica semantics):
+//!
+//! * a stage fusing parts `j..i` with `r` replicas serves a frame every
+//!   `(flops(j..i) / f + egress(i)) / r` seconds, where `egress(i)` is
+//!   the best interconnect candidate's transfer time for partition
+//!   `i-1`'s output bytes;
+//! * the dispatcher uplink is one shared, unreplicable link whose
+//!   occupancy is a constant of the model input — no cut choice moves
+//!   hop 0, so the search ignores it and the final placement pass
+//!   reports it as the bottleneck when it gates;
+//! * `f` is the *slowest* pooled device's FLOP rate — conservative for
+//!   heterogeneous pools (the placement pass then assigns fast devices
+//!   to heavy stages and re-evaluates exactly).
+//!
+//! # Memory, and why it exists
+//!
+//! Under this cost model alone, one fully-fused stage replicated across
+//! the whole budget weakly dominates every pipeline (a stage's service
+//! is a max over per-replica means; fusing everything turns the max
+//! into the mean). The reason DEFER pipelines at all is that edge
+//! devices cannot hold the whole model: [`RepartitionProblem`] therefore
+//! carries an optional per-device weight-residency cap
+//! (`device_memory`), and a fused run whose summed `weights_bytes`
+//! exceeds it is not a legal stage. With no cap the planner honestly
+//! collapses toward few, wide stages — pass `--device-memory` to model
+//! real devices.
+//!
+//! # Algorithm
+//!
+//! A dynamic program over `(partitions consumed, workers spent)`:
+//! `dp[i][w]` is the least achievable max-stage-service covering the
+//! first `i` partitions with at most `w` workers, with transitions over
+//! the last stage's start `j` and replica count `r`. `O(n² · W²)` for
+//! `n` fine partitions and budget `W` — both small. Ties break toward
+//! the earliest split point and the fewest replicas, and the final
+//! worker count is the smallest that achieves the optimum, so output is
+//! canonical. The chosen cuts are then re-priced by
+//! [`crate::placement::plan`] against the *real* device pool, which
+//! assigns devices, picks hop links, replicates and trims — the emitted
+//! [`PlacementPlan`] (and its `Topology`) is what the chain runner
+//! deploys.
+//!
+//! Everything here is pure and deterministic — no RNG, no clocks, no
+//! artifact reads — so `render()` is byte-identical across runs and
+//! goldens-testable from synthetic partition costs alone.
+
+use crate::config::DeferConfig;
+use crate::error::{DeferError, Result};
+use crate::model::PartitionPlan;
+use crate::netem::LinkSpec;
+use crate::placement::{
+    self, best_link_for, transfer_secs, DeviceProfile, PlacementPlan, PlacementProblem,
+    StageCost,
+};
+use crate::topology::Topology;
+
+/// What the planner needs to know about one finest-granularity
+/// partition — a [`StageCost`] plus the resident weight bytes that
+/// drive the memory cap.
+#[derive(Clone, Debug)]
+pub struct PartCost {
+    /// FLOPs to execute the partition once.
+    pub flops: u64,
+    /// Uncompressed activation bytes entering the partition.
+    pub input_bytes: u64,
+    /// Uncompressed activation bytes leaving the partition.
+    pub output_bytes: u64,
+    /// Resident weight bytes a hosting worker must hold.
+    pub weights_bytes: u64,
+}
+
+/// A complete repartitioning problem: finest-granularity partition
+/// costs, the device pool, the worker budget, the per-device memory
+/// cap, and the link vocabulary.
+#[derive(Clone, Debug)]
+pub struct RepartitionProblem {
+    pub parts: Vec<PartCost>,
+    /// Devices available to host worker replicas.
+    pub devices: Vec<DeviceProfile>,
+    /// Max worker replicas across all stages (>= 1, <= devices).
+    pub worker_budget: usize,
+    /// Max summed `weights_bytes` one worker may host (a fused run
+    /// exceeding this is not a legal stage). `None` = unlimited, under
+    /// which the cost model favors few, wide stages — see module docs.
+    pub device_memory: Option<u64>,
+    /// The dispatcher's physical medium — always hop 0.
+    pub uplink: LinkSpec,
+    /// Candidate links for every later hop. Empty = uplink everywhere.
+    pub interconnect: Vec<LinkSpec>,
+}
+
+impl RepartitionProblem {
+    /// Build the problem a [`DeferConfig`] + finest partition plan
+    /// describe. Links and the device pool are derived exactly as for
+    /// [`PlacementProblem::from_config`].
+    pub fn from_config(cfg: &DeferConfig, plan: &PartitionPlan) -> Result<RepartitionProblem> {
+        let parts = plan
+            .parts
+            .iter()
+            .map(|q| PartCost {
+                flops: q.flops,
+                input_bytes: q.input_bytes(),
+                output_bytes: q.output_bytes(),
+                weights_bytes: q.weights_bytes as u64,
+            })
+            .collect();
+        Self::from_parts(cfg, parts)
+    }
+
+    /// Build from explicit partition costs (the `defer plan --synthetic`
+    /// path: no artifacts touched, everything else from the config).
+    pub fn from_parts(cfg: &DeferConfig, parts: Vec<PartCost>) -> Result<RepartitionProblem> {
+        let (uplink, interconnect) = placement::links_from_config(cfg);
+        let (devices, worker_budget) = placement::device_pool_from_config(cfg)?;
+        Ok(RepartitionProblem {
+            parts,
+            devices,
+            worker_budget,
+            device_memory: if cfg.device_memory > 0 {
+                Some(cfg.device_memory)
+            } else {
+                None
+            },
+            uplink,
+            interconnect,
+        })
+    }
+}
+
+/// One fused stage of the chosen plan, with its fusion accounting.
+#[derive(Clone, Debug)]
+pub struct FusedStage {
+    /// First fused partition index (inclusive).
+    pub first_part: usize,
+    /// Last fused partition index (inclusive).
+    pub last_part: usize,
+    /// Summed FLOPs of the fused run.
+    pub flops: u64,
+    /// Summed resident weight bytes (what the memory cap constrains).
+    pub weights_bytes: u64,
+    /// Activation bytes of inner boundaries elided from the network.
+    pub elided_bytes: u64,
+}
+
+impl FusedStage {
+    /// Stable label: `p2` for a single partition, `p0..p1` for a run.
+    pub fn label(&self) -> String {
+        if self.first_part == self.last_part {
+            format!("p{}", self.first_part)
+        } else {
+            format!("p{}..p{}", self.first_part, self.last_part)
+        }
+    }
+}
+
+/// The joint planner's output: cut points, fused-stage accounting, and
+/// the placement (replicas, devices, links, predicted throughput) over
+/// those fused stages.
+#[derive(Clone, Debug)]
+pub struct RepartitionPlan {
+    /// `num_stages + 1` cut points; stage `s` fuses partitions
+    /// `cuts[s]..cuts[s+1]` (feed to [`PartitionPlan::fuse`]).
+    pub cuts: Vec<usize>,
+    /// Number of finest-granularity partitions (== `cuts.last()`).
+    pub part_count: usize,
+    /// Per-stage fusion accounting, stage order.
+    pub stages: Vec<FusedStage>,
+    /// Placement over the fused stages.
+    pub placement: PlacementPlan,
+}
+
+impl RepartitionPlan {
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Total worker replicas the joint plan places.
+    pub fn num_workers(&self) -> usize {
+        self.placement.num_workers()
+    }
+
+    /// Replica counts per fused stage.
+    pub fn replica_counts(&self) -> Vec<usize> {
+        self.placement.replica_counts()
+    }
+
+    /// Modeled steady-state frames/second.
+    pub fn predicted_throughput(&self) -> f64 {
+        self.placement.predicted_throughput
+    }
+
+    /// The [`Topology`] over the fused stages — consumed by the chain
+    /// runner exactly like a hand-written one.
+    pub fn topology(&self) -> Result<Topology> {
+        self.placement.topology()
+    }
+
+    /// Stable human-readable rendering (also the goldens surface: the
+    /// planner is deterministic, so this string is byte-identical
+    /// across runs on the same problem). The placement section is
+    /// [`PlacementPlan::render`] verbatim.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "repartition plan: {} partition(s) fused into {} stage(s), cuts {:?}\n",
+            self.part_count,
+            self.num_stages(),
+            self.cuts
+        );
+        for (i, st) in self.stages.iter().enumerate() {
+            out.push_str(&format!(
+                "  stage {i} = {}: {:.3} MFLOP, weights {} B, elided boundary {} B\n",
+                st.label(),
+                st.flops as f64 / 1e6,
+                st.weights_bytes,
+                st.elided_bytes
+            ));
+        }
+        out.push_str(&self.placement.render());
+        out
+    }
+}
+
+const EPS: f64 = 1e-12;
+
+/// Jointly choose cut points and replica counts for `p` (see module
+/// docs). Deterministic: same problem, same plan, byte-identical
+/// rendering.
+pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
+    let n = p.parts.len();
+    if n == 0 {
+        return Err(DeferError::Config(
+            "repartitioning needs at least one partition".into(),
+        ));
+    }
+    if p.worker_budget == 0 {
+        return Err(DeferError::Config(
+            "workers budget 0 cannot host any stage".into(),
+        ));
+    }
+    if p.devices.len() < p.worker_budget {
+        return Err(DeferError::Config(format!(
+            "workers budget {} exceeds the {} available devices",
+            p.worker_budget,
+            p.devices.len()
+        )));
+    }
+    if let Some(d) = p.devices.iter().find(|d| !(d.mflops > 0.0)) {
+        return Err(DeferError::Config(format!(
+            "device {:?}: mflops must be > 0, got {}",
+            d.name, d.mflops
+        )));
+    }
+    if let Some(cap) = p.device_memory {
+        if let Some((i, q)) = p
+            .parts
+            .iter()
+            .enumerate()
+            .find(|(_, q)| q.weights_bytes > cap)
+        {
+            return Err(DeferError::Config(format!(
+                "device_memory {cap} B cannot hold partition p{i} ({} B of weights) — \
+                 no cut placement can help",
+                q.weights_bytes
+            )));
+        }
+    }
+
+    // Conservative homogeneous rate for the search: the slowest pooled
+    // device (every device can sustain the plan; placement re-prices
+    // the chosen cuts against the real pool below).
+    let f_dp = p
+        .devices
+        .iter()
+        .map(|d| d.mflops * 1e6)
+        .fold(f64::INFINITY, f64::min);
+    let candidates: &[LinkSpec] = if p.interconnect.is_empty() {
+        std::slice::from_ref(&p.uplink)
+    } else {
+        &p.interconnect
+    };
+    // egress[i-1]: modeled egress seconds for a stage ending after
+    // partition i-1 (interior-link rule shared with placement).
+    let egress: Vec<f64> = p
+        .parts
+        .iter()
+        .map(|q| {
+            transfer_secs(&best_link_for(candidates, q.output_bytes), q.output_bytes)
+        })
+        .collect();
+    // Prefix sums for O(1) run accounting.
+    let mut flops_pre = vec![0f64; n + 1];
+    let mut weights_pre = vec![0u64; n + 1];
+    for (i, q) in p.parts.iter().enumerate() {
+        flops_pre[i + 1] = flops_pre[i] + q.flops as f64;
+        weights_pre[i + 1] = weights_pre[i] + q.weights_bytes;
+    }
+
+    // dp[i][w]: least max-stage-service covering parts[0..i] with at
+    // most w workers; parent = (run start j, replicas r) of the last
+    // stage. Ties keep the first (j, r) found: earliest split, fewest
+    // replicas.
+    let wb = p.worker_budget;
+    let cols = wb + 1;
+    let mut dp = vec![f64::INFINITY; (n + 1) * cols];
+    let mut parent = vec![(usize::MAX, 0usize); (n + 1) * cols];
+    // Zero parts cost nothing whatever the budget (row i = 0).
+    for slot in dp.iter_mut().take(cols) {
+        *slot = 0.0;
+    }
+    for i in 1..=n {
+        for w in 1..=wb {
+            let mut best = f64::INFINITY;
+            let mut arg = (usize::MAX, 0usize);
+            for j in 0..i {
+                if let Some(cap) = p.device_memory {
+                    if weights_pre[i] - weights_pre[j] > cap {
+                        continue;
+                    }
+                }
+                let base = (flops_pre[i] - flops_pre[j]) / f_dp + egress[i - 1];
+                for r in 1..=w {
+                    let prev = dp[j * cols + (w - r)];
+                    if !prev.is_finite() {
+                        continue;
+                    }
+                    let gate = prev.max(base / r as f64);
+                    if gate + EPS < best {
+                        best = gate;
+                        arg = (j, r);
+                    }
+                }
+            }
+            dp[i * cols + w] = best;
+            parent[i * cols + w] = arg;
+        }
+    }
+    if !dp[n * cols + wb].is_finite() {
+        return Err(DeferError::Config(format!(
+            "worker budget {wb} cannot cover the {n}-partition model under \
+             device_memory {:?} B (more stages are forced than workers allowed)",
+            p.device_memory
+        )));
+    }
+
+    // Canonical worker count: the smallest that achieves the optimum.
+    let optimum = dp[n * cols + wb];
+    let w_star = (1..=wb)
+        .find(|&w| dp[n * cols + w] <= optimum + EPS)
+        .expect("budget column is feasible");
+
+    // Reconstruct cut points.
+    let mut cuts = vec![n];
+    let (mut i, mut w) = (n, w_star);
+    while i > 0 {
+        let (j, r) = parent[i * cols + w];
+        debug_assert!(j != usize::MAX && r >= 1);
+        cuts.push(j);
+        w -= r;
+        i = j;
+    }
+    cuts.reverse();
+
+    // Fusion accounting + placement over the fused stages against the
+    // real (possibly heterogeneous) pool.
+    let mut stages = Vec::with_capacity(cuts.len() - 1);
+    let mut fused_costs = Vec::with_capacity(cuts.len() - 1);
+    for c in cuts.windows(2) {
+        let flops: u64 = p.parts[c[0]..c[1]].iter().map(|q| q.flops).sum();
+        stages.push(FusedStage {
+            first_part: c[0],
+            last_part: c[1] - 1,
+            flops,
+            weights_bytes: weights_pre[c[1]] - weights_pre[c[0]],
+            elided_bytes: p.parts[c[0]..c[1] - 1].iter().map(|q| q.output_bytes).sum(),
+        });
+        fused_costs.push(StageCost {
+            flops,
+            input_bytes: p.parts[c[0]].input_bytes,
+            output_bytes: p.parts[c[1] - 1].output_bytes,
+        });
+    }
+    let placement = placement::plan(&PlacementProblem {
+        stages: fused_costs,
+        devices: p.devices.clone(),
+        worker_budget: p.worker_budget,
+        uplink: p.uplink,
+        interconnect: p.interconnect.clone(),
+    })?;
+
+    Ok(RepartitionPlan {
+        cuts,
+        part_count: n,
+        stages,
+        placement,
+    })
+}
+
+/// Convenience: build the problem from config + finest plan, then plan.
+pub fn plan_from_config(cfg: &DeferConfig, plan_: &PartitionPlan) -> Result<RepartitionPlan> {
+    plan(&RepartitionProblem::from_config(cfg, plan_)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
+        (0..n)
+            .map(|i| DeviceProfile {
+                name: format!("edge{i}"),
+                mflops,
+            })
+            .collect()
+    }
+
+    fn part(flops: u64, input_bytes: u64, output_bytes: u64, weights_bytes: u64) -> PartCost {
+        PartCost {
+            flops,
+            input_bytes,
+            output_bytes,
+            weights_bytes,
+        }
+    }
+
+    fn problem(parts: Vec<PartCost>, budget: usize, memory: Option<u64>) -> RepartitionProblem {
+        RepartitionProblem {
+            parts,
+            devices: homogeneous(budget, 100.0),
+            worker_budget: budget,
+            device_memory: memory,
+            uplink: LinkSpec::wifi(),
+            interconnect: vec![LinkSpec::gigabit_lan()],
+        }
+    }
+
+    #[test]
+    fn no_memory_cap_collapses_to_one_wide_stage() {
+        // Documented degenerate optimum of the cost model: max over
+        // per-replica means is minimized by fusing everything and
+        // replicating across the whole budget.
+        let p = problem(
+            vec![
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(300_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+            ],
+            4,
+            None,
+        );
+        let rp = plan(&p).unwrap();
+        assert_eq!(rp.cuts, vec![0, 3]);
+        assert_eq!(rp.replica_counts(), vec![4]);
+        assert_eq!(rp.stages[0].flops, 500_000_000);
+        assert_eq!(rp.stages[0].weights_bytes, 3_000);
+        assert_eq!(rp.stages[0].elided_bytes, 8_192);
+    }
+
+    #[test]
+    fn memory_cap_forces_balanced_cuts() {
+        // Cap of 2 partitions' weights per worker: the 4-partition model
+        // must split into >= 2 stages; balanced [0,2,4] beats lopsided.
+        let p = problem(
+            vec![
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+            ],
+            4,
+            Some(2_000),
+        );
+        let rp = plan(&p).unwrap();
+        assert_eq!(rp.cuts, vec![0, 2, 4]);
+        assert_eq!(rp.replica_counts(), vec![2, 2]);
+        // Two partitions at 1 s each, fused: 2 s / 2 replicas = ~1 s gate.
+        assert!((rp.predicted_throughput() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn joint_choice_beats_minmax_balance_when_budget_is_lopsided() {
+        // Parts [4, 1, 1] (x 1e8 FLOPs) with one-part-per-worker memory:
+        // with budget 4 the joint plan gives the heavy singleton stage
+        // two replicas and fuses nothing (cap forbids fusing), landing
+        // on cuts [0,1,2,3] with replicas [2,1,1].
+        let p = problem(
+            vec![
+                part(400_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+            ],
+            4,
+            Some(1_000),
+        );
+        let rp = plan(&p).unwrap();
+        assert_eq!(rp.cuts, vec![0, 1, 2, 3]);
+        assert_eq!(rp.replica_counts(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn budget_below_forced_stage_count_is_rejected() {
+        let p = problem(
+            vec![
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+                part(100_000_000, 4_096, 4_096, 1_000),
+            ],
+            1,
+            Some(1_000),
+        );
+        let err = plan(&p).unwrap_err();
+        assert!(format!("{err}").contains("worker budget"), "{err}");
+    }
+
+    #[test]
+    fn oversized_partition_is_named() {
+        let p = problem(vec![part(1, 1, 1, 5_000)], 1, Some(1_000));
+        let err = plan(&p).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("p0") && msg.contains("5000"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_render() {
+        let mk = || {
+            problem(
+                vec![
+                    part(100_000_000, 12_288, 65_536, 4_000),
+                    part(300_000_000, 65_536, 65_536, 4_000),
+                    part(100_000_000, 65_536, 4_096, 4_000),
+                ],
+                4,
+                Some(8_000),
+            )
+        };
+        let first = plan(&mk()).unwrap();
+        for _ in 0..3 {
+            assert_eq!(first.render(), plan(&mk()).unwrap().render());
+        }
+    }
+}

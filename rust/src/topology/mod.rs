@@ -12,7 +12,12 @@
 //! connection bundles for either transport, and the coordinator consumes
 //! the result without knowing how it was wired. The placement optimizer
 //! ([`crate::placement`]) is exactly the promised pure planning pass
-//! that emits a `Topology` from stage costs and device budgets.
+//! that emits a `Topology` from stage costs and device budgets, and the
+//! repartition planner ([`crate::repartition`]) goes one step further:
+//! a "stage" here need not be one artifact partition — it may be a fused
+//! run of them ([`crate::model::StageSpec`]), with the cut points chosen
+//! jointly with the replica counts. The topology layer is agnostic: it
+//! describes stages × replicas × links, whoever decided them.
 //!
 //! Frame ordering with replication: a stage's replicas are dealt frames
 //! round-robin by a junction on the ingress side and merged round-robin
@@ -27,9 +32,11 @@ use crate::config::DeferConfig;
 use crate::error::{DeferError, Result};
 use crate::netem::LinkSpec;
 
-/// One pipeline stage: a model partition served by `replicas` workers.
+/// One pipeline stage's replication slot: a stage (one partition, or a
+/// fused run of them — see [`crate::model::StageSpec`]) served by
+/// `replicas` workers.
 #[derive(Clone, Debug)]
-pub struct StageSpec {
+pub struct StageReplicas {
     /// Stage label; worker labels derive from it (`node1`, `node1.0`).
     pub name: String,
     /// Worker replicas serving this stage (>= 1), fed round-robin.
@@ -76,7 +83,7 @@ impl StageView {
 /// links, not shared capacity.
 #[derive(Clone, Debug)]
 pub struct Topology {
-    stages: Vec<StageSpec>,
+    stages: Vec<StageReplicas>,
     hop_links: Vec<LinkSpec>,
 }
 
@@ -104,7 +111,7 @@ impl Topology {
             stages: replicas
                 .iter()
                 .enumerate()
-                .map(|(i, &r)| StageSpec {
+                .map(|(i, &r)| StageReplicas {
                     name: format!("node{i}"),
                     replicas: r,
                 })
@@ -155,7 +162,7 @@ impl Topology {
         Topology::new(&replicas, hop_links)
     }
 
-    pub fn stages(&self) -> &[StageSpec] {
+    pub fn stages(&self) -> &[StageReplicas] {
         &self.stages
     }
 

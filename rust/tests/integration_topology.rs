@@ -200,6 +200,100 @@ fn auto_place_beats_uniform_chain() {
     );
 }
 
+/// A compute node must execute a fused multi-partition stage end to end
+/// with reference parity: budget 1 and no memory cap fuse the *entire*
+/// finest partition set into one stage on one worker.
+#[test]
+fn fused_stage_executes_with_reference_parity() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut c = cfg(2); // nodes is ignored under auto_partition
+    c.auto_partition = true;
+    c.workers_budget = 1;
+    c.emulated_mflops = 50.0;
+    let runner = ChainRunner::with_engine(c, engine).unwrap();
+    // The finest tiny artifact set is 4-way; everything fused into one
+    // multi-partition stage.
+    assert!(runner.plan().parts.len() >= 2, "finest set is not fine");
+    assert_eq!(runner.stages().len(), 1);
+    assert_eq!(runner.stages()[0].num_parts(), runner.plan().parts.len());
+    let r = runner.run_frames(3).unwrap();
+    assert_eq!(r.cycles, 3);
+    assert_eq!(r.nodes, 1);
+    assert_eq!(r.workers, 1);
+    // Numerical parity with the Python reference through the fused run.
+    assert!(r.reference_error.unwrap() < 0.05);
+}
+
+/// The acceptance scenario: wifi uplink, gigabit cluster, deterministic
+/// 20 MFLOP/s devices, and a memory cap that forbids hosting the whole
+/// model on one worker. `--auto-partition --auto-place` planning over
+/// the finest artifact set must beat the coarse uniform 2-stage chain
+/// by >= 1.2x measured.
+#[test]
+fn auto_partition_beats_coarse_uniform_chain() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let frames = 8;
+    // Coarse baseline: the artifact-time 2-way split, one worker per
+    // stage, same links and device emulation.
+    let mut coarse = cfg(2);
+    coarse.emulated_mflops = 20.0;
+    coarse.per_hop_links = vec![
+        LinkSpec::wifi(),
+        LinkSpec::gigabit_lan(),
+        LinkSpec::gigabit_lan(),
+    ];
+    let r_coarse = ChainRunner::with_engine(coarse, engine.clone())
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+
+    // Joint repartitioning over the finest (4-way) set: cap the
+    // per-worker resident weights so no single stage can hold the whole
+    // model (>= 2 stages are forced), with budget for replication.
+    let fine = defer::model::PartitionPlan::load(
+        &cfg(1).artifacts_dir,
+        "tiny",
+        "resnet50",
+        defer::model::finest_part_count(&cfg(1).artifacts_dir, "tiny", "resnet50").unwrap(),
+    )
+    .unwrap();
+    let total: usize = fine.parts.iter().map(|p| p.weights_bytes).sum();
+    let largest: usize = fine.parts.iter().map(|p| p.weights_bytes).max().unwrap();
+    let mut auto = cfg(2);
+    auto.emulated_mflops = 20.0;
+    auto.per_hop_links = vec![LinkSpec::wifi(), LinkSpec::gigabit_lan()];
+    auto.auto_place = true;
+    auto.auto_partition = true;
+    auto.workers_budget = 4;
+    auto.device_memory = largest.max(total * 3 / 5) as u64;
+    let runner = ChainRunner::with_engine(auto, engine).unwrap();
+    // The memory cap split the model; the budget bought replicas.
+    assert!(runner.stages().len() >= 2, "memory cap was ignored");
+    assert!(runner.topology().num_workers() > runner.stages().len());
+    assert!(runner.topology().num_workers() <= 4);
+    assert_eq!(runner.topology().hop_link(0), LinkSpec::wifi());
+    // The planner's report is byte-stable and names the cuts.
+    let render = runner.plan_render().expect("planned run renders");
+    assert!(render.contains("repartition plan:"), "{render}");
+
+    let r_auto = runner.run_frames(frames).unwrap();
+    assert_eq!(r_auto.cycles, frames);
+    assert!(r_auto.reference_error.unwrap() < 0.05);
+    assert!(
+        r_auto.throughput >= 1.2 * r_coarse.throughput,
+        "auto-partition speedup only {:.2}x ({:.3} vs {:.3} cycles/s)",
+        r_auto.throughput / r_coarse.throughput,
+        r_auto.throughput,
+        r_coarse.throughput
+    );
+}
+
 #[test]
 fn replicated_stage_over_tcp() {
     if !have_artifacts() {

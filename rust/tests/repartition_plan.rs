@@ -1,0 +1,158 @@
+//! Repartition-planner golden tests: synthetic finest-granularity
+//! partition costs in, exact cuts + replicas + render bytes out. No
+//! artifacts, no RNG, no clocks — the planner is a pure function.
+
+use defer::netem::LinkSpec;
+use defer::placement::{self, DeviceProfile, PlacementProblem, StageCost};
+use defer::repartition::{plan, PartCost, RepartitionProblem};
+
+fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
+    (0..n)
+        .map(|i| DeviceProfile {
+            name: format!("edge{i}"),
+            mflops,
+        })
+        .collect()
+}
+
+fn part(flops: u64, input_bytes: u64, output_bytes: u64, weights_bytes: u64) -> PartCost {
+    PartCost {
+        flops,
+        input_bytes,
+        output_bytes,
+        weights_bytes,
+    }
+}
+
+/// The acceptance scenario in miniature: wifi uplink, gigabit cluster,
+/// a 3x-heavy middle partition, a memory cap that allows fusing at most
+/// two partitions, and budget for one extra worker per stage. The joint
+/// planner must cut so the heavy run gets the replicas.
+fn acceptance_problem(budget: usize) -> RepartitionProblem {
+    RepartitionProblem {
+        parts: vec![
+            part(100_000_000, 40_000, 20_000, 4_000),
+            part(300_000_000, 20_000, 20_000, 4_000),
+            part(100_000_000, 20_000, 4_000, 4_000),
+        ],
+        devices: homogeneous(budget, 100.0),
+        worker_budget: budget,
+        device_memory: Some(8_000),
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    }
+}
+
+#[test]
+fn joint_plan_gives_the_heavy_run_the_replicas() {
+    let rp = plan(&acceptance_problem(4)).unwrap();
+    // Fusing p1+p2 (400 MFLOP) against p0 alone and pouring three
+    // workers into the heavy run gates at 4.000232/3 s — better than
+    // the balanced cuts [0, 2, 3] (whose heavy run carries the larger
+    // 20 kB egress) and than any 3-stage split under this budget.
+    assert_eq!(rp.cuts, vec![0, 1, 3]);
+    assert_eq!(rp.replica_counts(), vec![1, 3]);
+    assert_eq!(rp.num_workers(), 4);
+    assert_eq!(rp.stages[1].flops, 400_000_000);
+    assert_eq!(rp.stages[1].weights_bytes, 8_000);
+    assert_eq!(rp.stages[1].elided_bytes, 20_000);
+    // It materializes as a chain-runner-ready topology.
+    let topo = rp.topology().unwrap();
+    assert_eq!(topo.num_stages(), 2);
+    assert_eq!(topo.num_workers(), 4);
+    assert_eq!(topo.hop_link(0), LinkSpec::wifi());
+    assert_eq!(topo.hop_link(1), LinkSpec::gigabit_lan());
+}
+
+/// The artifact-time coarse split (heavy front stage, one worker each)
+/// against the joint fine-grained plan: the repartition pass must win by
+/// well over the acceptance bar on the modeled numbers.
+#[test]
+fn repartition_beats_coarse_uniform_chain_in_the_model() {
+    let rp = plan(&acceptance_problem(4)).unwrap();
+    // Coarse chain: the fixed 2-stage artifact split [p0+p1 | p2], one
+    // replica per stage (same links, same devices).
+    let coarse = placement::plan(&PlacementProblem {
+        stages: vec![
+            StageCost {
+                flops: 400_000_000,
+                input_bytes: 40_000,
+                output_bytes: 20_000,
+            },
+            StageCost {
+                flops: 100_000_000,
+                input_bytes: 20_000,
+                output_bytes: 4_000,
+            },
+        ],
+        devices: homogeneous(2, 100.0),
+        worker_budget: 2,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    })
+    .unwrap();
+    let speedup = rp.predicted_throughput() / coarse.predicted_throughput;
+    assert!(
+        speedup >= 1.2,
+        "joint plan only {speedup:.2}x over the coarse chain"
+    );
+}
+
+/// Byte-identical output across repeated runs: the goldens surface.
+#[test]
+fn render_golden() {
+    let rp = plan(&acceptance_problem(4)).unwrap();
+    let expected = "repartition plan: 3 partition(s) fused into 2 stage(s), cuts [0, 1, 3]\n\
+                    \x20 stage 0 = p0: 100.000 MFLOP, weights 4000 B, elided boundary 0 B\n\
+                    \x20 stage 1 = p1..p2: 400.000 MFLOP, weights 8000 B, elided boundary 20000 B\n\
+                    placement plan: 2 stage(s), 4 worker(s), predicted 0.750 cycles/s\n\
+                    \x20 hop 0 uplink wifi (9.900 ms/frame)\n\
+                    \x20 stage 0: x1 on [edge3] via gigabit, compute 1000.000 ms + \
+                    egress 0.360 ms -> service 1000.360 ms/frame\n\
+                    \x20 stage 1: x3 on [edge0, edge1, edge2] via gigabit, compute 4000.000 ms + \
+                    egress 0.232 ms -> service 1333.411 ms/frame, bottleneck\n";
+    assert_eq!(rp.render(), expected);
+    // And it is deterministic across repeated plans.
+    assert_eq!(rp.render(), plan(&acceptance_problem(4)).unwrap().render());
+}
+
+/// Without budget headroom the planner still balances the cuts instead
+/// of replicating: 3 workers, one per stage, minmax boundary search.
+#[test]
+fn tight_budget_degenerates_to_balanced_pipeline() {
+    let rp = plan(&acceptance_problem(3)).unwrap();
+    // One worker per stage: 3 single-partition stages gate at the heavy
+    // 3 s partition; fusing anywhere only raises the max. But 2 stages
+    // x [1..2] workers can reach 2.0 s by pairing a light partition
+    // with the heavy one and replicating... under budget 3 the search
+    // settles on the best of all of those.
+    assert!(rp.num_workers() <= 3);
+    assert!(rp.num_stages() >= 2, "memory cap forces >= 2 stages");
+    // Whatever shape it picked must beat the naive 3-stage no-replica
+    // pipeline (gated by the 3 s partition).
+    assert!(rp.predicted_throughput() >= 1.0 / 3.1);
+}
+
+/// An uplink-bound problem: repartitioning cannot shrink hop 0, so the
+/// planner keeps workers minimal and placement reports the uplink gate.
+#[test]
+fn uplink_bound_problem_stays_lean() {
+    let p = RepartitionProblem {
+        parts: vec![
+            part(1_000_000, 60_000_000, 1_000, 1_000),
+            part(1_000_000, 1_000, 1_000, 1_000),
+        ],
+        devices: homogeneous(6, 500.0),
+        worker_budget: 6,
+        device_memory: Some(1_000),
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+    };
+    let rp = plan(&p).unwrap();
+    assert_eq!(rp.cuts, vec![0, 1, 2]);
+    assert_eq!(rp.replica_counts(), vec![1, 1]);
+    assert_eq!(
+        rp.placement.bottleneck,
+        defer::placement::Bottleneck::Uplink
+    );
+}

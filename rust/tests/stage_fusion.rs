@@ -1,0 +1,162 @@
+//! StageSpec fusion-accounting goldens: synthetic partition specs in,
+//! exact fused accounting out. No artifacts, no RNG, no clocks.
+//!
+//! The numbers here are the contract the repartition planner and the
+//! coordinator both rely on: summed FLOPs, elided inner boundary bytes
+//! (only the fused run's outer boundaries touch the network), and the
+//! concatenated weight-manifest order (partition order, then each
+//! partition's own manifest order — the exact layout of the fused
+//! weights payload).
+
+use defer::model::{PartitionPlan, PartitionSpec, StageSpec, WeightSpec};
+
+fn spec(
+    part_index: usize,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+    flops: u64,
+    weights: Vec<WeightSpec>,
+) -> PartitionSpec {
+    let weights_bytes = weights.iter().map(|w| w.elements * 4).sum();
+    PartitionSpec {
+        model: "m".into(),
+        profile: "tiny".into(),
+        part_index,
+        part_count: 3,
+        input_shape,
+        output_shape,
+        flops,
+        layers: vec![format!("layer{part_index}")],
+        weights,
+        weights_bytes,
+        hlo_path: std::path::PathBuf::new(),
+        weights_path: std::path::PathBuf::new(),
+    }
+}
+
+fn w(node: &str, param: &str, shape: Vec<usize>) -> WeightSpec {
+    let elements = shape.iter().product();
+    WeightSpec {
+        node: node.into(),
+        param: param.into(),
+        shape,
+        elements,
+    }
+}
+
+fn three_part_plan() -> PartitionPlan {
+    PartitionPlan {
+        parts: vec![
+            spec(0, vec![1, 4], vec![1, 8], 100, vec![w("a", "w", vec![4, 8])]),
+            spec(
+                1,
+                vec![1, 8],
+                vec![1, 2],
+                250,
+                vec![w("b", "w", vec![8, 2]), w("b", "b", vec![2])],
+            ),
+            spec(2, vec![1, 2], vec![1, 2], 50, vec![w("c", "w", vec![2, 2])]),
+        ],
+    }
+}
+
+#[test]
+fn fusion_accounting_golden() {
+    let plan = three_part_plan();
+    let stages = plan.fuse(&[0, 2, 3]).unwrap();
+    assert_eq!(stages.len(), 2);
+
+    let fused = &stages[0];
+    assert_eq!(fused.num_parts(), 2);
+    assert_eq!(fused.label(), "p0..p1of3");
+    // FLOPs sum.
+    assert_eq!(fused.flops(), 350);
+    // Outer boundaries only: the stage's network-visible input is p0's
+    // input, its output p1's output.
+    assert_eq!(fused.input_shape(), &[1, 4]);
+    assert_eq!(fused.output_shape(), &[1, 2]);
+    assert_eq!(fused.input_bytes(), 16);
+    assert_eq!(fused.output_bytes(), 8);
+    // The p0 -> p1 boundary ([1, 8] = 32 B) is elided from the network.
+    assert_eq!(fused.elided_boundary_bytes(), 32);
+    // Weights concatenate: bytes and element counts sum...
+    assert_eq!(fused.weights_bytes(), 128 + 72);
+    assert_eq!(fused.weight_elements(), 32 + 16 + 2);
+    // ...and the manifest order is partition order, then each
+    // partition's own manifest order.
+    let manifest: Vec<(String, String)> = fused
+        .weight_manifest()
+        .iter()
+        .map(|m| (m.node.clone(), m.param.clone()))
+        .collect();
+    assert_eq!(
+        manifest,
+        vec![
+            ("a".to_string(), "w".to_string()),
+            ("b".to_string(), "w".to_string()),
+            ("b".to_string(), "b".to_string()),
+        ]
+    );
+
+    let single = &stages[1];
+    assert_eq!(single.num_parts(), 1);
+    assert_eq!(single.label(), "p2of3");
+    assert_eq!(single.flops(), 50);
+    assert_eq!(single.elided_boundary_bytes(), 0);
+    assert_eq!(single.weights_bytes(), 16);
+
+    // The degenerate cuts reproduce the unfused chain exactly.
+    let singletons = plan.fuse(&[0, 1, 2, 3]).unwrap();
+    assert_eq!(singletons.len(), 3);
+    for (st, p) in singletons.iter().zip(&plan.parts) {
+        assert_eq!(st.num_parts(), 1);
+        assert_eq!(st.flops(), p.flops);
+        assert_eq!(st.input_shape(), p.input_shape.as_slice());
+    }
+}
+
+#[test]
+fn fuse_rejects_bad_cuts() {
+    let plan = three_part_plan();
+    // Must start at 0, end at parts.len(), strictly increase.
+    assert!(plan.fuse(&[0, 2]).is_err());
+    assert!(plan.fuse(&[1, 3]).is_err());
+    assert!(plan.fuse(&[0, 0, 3]).is_err());
+    assert!(plan.fuse(&[0, 2, 2, 3]).is_err());
+    assert!(plan.fuse(&[0]).is_err());
+}
+
+#[test]
+fn fuse_rejects_broken_runs() {
+    let plan = three_part_plan();
+    // Non-contiguous run (p0 then p2).
+    let err = StageSpec::fuse(vec![plan.parts[0].clone(), plan.parts[2].clone()])
+        .unwrap_err();
+    assert!(format!("{err}").contains("not contiguous"), "{err}");
+    // Empty run.
+    assert!(StageSpec::fuse(vec![]).is_err());
+    // Mixed artifact sets (different part_count).
+    let mut alien = plan.parts[1].clone();
+    alien.part_count = 8;
+    let err = StageSpec::fuse(vec![plan.parts[0].clone(), alien]).unwrap_err();
+    assert!(format!("{err}").contains("artifact sets"), "{err}");
+    // Boundary-shape mismatch inside the run.
+    let mut bent = plan.parts[1].clone();
+    bent.input_shape = vec![1, 6];
+    let err = StageSpec::fuse(vec![plan.parts[0].clone(), bent]).unwrap_err();
+    assert!(format!("{err}").contains("boundary mismatch"), "{err}");
+}
+
+#[test]
+fn partition_plan_validate_names_boundary_mismatch() {
+    // PartitionPlan::validate must reject a plan whose adjacent
+    // partitions do not chain, naming both sides.
+    let mut plan = three_part_plan();
+    plan.parts[1].input_shape = vec![1, 6];
+    let err = plan.validate().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("boundary mismatch"), "{msg}");
+    assert!(msg.contains("p0") && msg.contains("p1"), "{msg}");
+    // The intact plan validates.
+    assert!(three_part_plan().validate().is_ok());
+}
