@@ -1,0 +1,152 @@
+//! Chunk-parallel codec + pipelined-chain throughput bench.
+//!
+//! Part 1 (artifact-free): serial vs chunk-parallel encode/decode GB/s
+//! for every `Codec::paper_sweep()` arm on a MiB-scale activation
+//! payload, plus the byte-identity check the container guarantees.
+//!
+//! Part 2 (needs `make artifacts`): chain throughput on a codec-bound
+//! configuration (ZFP+LZ4 data path, ideal links) with the inline loop
+//! vs the software-pipelined codec path (and the chunk-parallel codec
+//! on top). Skipped gracefully when artifacts are absent.
+//!
+//! Emits `BENCH_codec.json` (machine-readable) next to the working
+//! directory so the perf trajectory is tracked across PRs.
+//!
+//! Env: DEFER_CODEC_THREADS (default 4), DEFER_PAYLOAD_MB (default 4),
+//!      DEFER_FRAMES (default 12), DEFER_PROFILE (default edge).
+
+use std::io::Write as _;
+use std::sync::Arc;
+
+use defer::bench::{bench, Table};
+use defer::config::DeferConfig;
+use defer::coordinator::chain::ChainRunner;
+use defer::netem::LinkSpec;
+use defer::serial::{chunked, Codec, CodecRuntime};
+use defer::threadpool::CodecPool;
+use defer::util::prng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let threads = env_usize("DEFER_CODEC_THREADS", 4).max(1);
+    let payload_mb = env_usize("DEFER_PAYLOAD_MB", 4).max(1);
+    let n = payload_mb * 1024 * 1024 / 4; // f32 count
+    let raw_bytes = n * 4;
+    let data = Rng::new(42).normal_vec(n);
+    let pool = Arc::new(CodecPool::new(threads));
+    let chunk = chunked::DEFAULT_CHUNK_ELEMS;
+
+    println!(
+        "# Chunk-parallel codec: {payload_mb} MiB payload, chunk {chunk} elems, {threads} workers"
+    );
+    let mut table = Table::new(&[
+        "codec",
+        "serial enc GB/s",
+        "parallel enc GB/s",
+        "serial dec GB/s",
+        "parallel dec GB/s",
+        "enc speedup",
+        "bytes identical",
+    ]);
+    let mut rows_json = Vec::new();
+    let gbs = |secs: f64| raw_bytes as f64 / 1e9 / secs;
+    for codec in Codec::paper_sweep() {
+        let serial_rt = CodecRuntime::chunked(chunk, None).unwrap();
+        let par_rt = CodecRuntime::chunked(chunk, Some(Arc::clone(&pool))).unwrap();
+        let (wire_s, mid_s) = codec.encode_frame(&data, &serial_rt, None);
+        let (wire_p, mid_p) = codec.encode_frame(&data, &par_rt, None);
+        let identical = wire_s == wire_p && mid_s == mid_p;
+
+        let enc_serial = bench(1, 5, || codec.encode_frame(&data, &serial_rt, None));
+        let enc_par = bench(1, 5, || codec.encode_frame(&data, &par_rt, None));
+        let dec_serial = bench(1, 5, || {
+            codec
+                .decode_frame(&wire_s, mid_s, n, &serial_rt, None)
+                .unwrap()
+        });
+        let dec_par = bench(1, 5, || {
+            codec.decode_frame(&wire_p, mid_p, n, &par_rt, None).unwrap()
+        });
+
+        let se = gbs(enc_serial.mean.as_secs_f64());
+        let pe = gbs(enc_par.mean.as_secs_f64());
+        let sd = gbs(dec_serial.mean.as_secs_f64());
+        let pd = gbs(dec_par.mean.as_secs_f64());
+        table.row(&[
+            codec.label(),
+            format!("{se:.3}"),
+            format!("{pe:.3}"),
+            format!("{sd:.3}"),
+            format!("{pd:.3}"),
+            format!("{:.2}x", pe / se),
+            identical.to_string(),
+        ]);
+        rows_json.push(format!(
+            r#"    {{"codec": "{}", "serial_enc_gbps": {se:.4}, "parallel_enc_gbps": {pe:.4}, "serial_dec_gbps": {sd:.4}, "parallel_dec_gbps": {pd:.4}, "bytes_identical": {identical}}}"#,
+            codec.label()
+        ));
+    }
+    print!("{}", table.render());
+
+    // ---- Part 2: pipelined vs inline chain (artifact-gated) ----
+    let mut chain_json = String::from("null");
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let frames = env_usize("DEFER_FRAMES", 12) as u64;
+        let profile = std::env::var("DEFER_PROFILE").unwrap_or_else(|_| "edge".into());
+        let engine = defer::runtime::Engine::cpu().expect("PJRT cpu client");
+        let run = |pipelined: bool, codec_threads: usize| -> f64 {
+            let mut cfg = DeferConfig::default();
+            cfg.artifacts_dir = artifacts.clone();
+            cfg.profile = profile.clone();
+            cfg.model = "resnet50".into();
+            cfg.nodes = 4;
+            cfg.link = LinkSpec::ideal(); // codec-bound: fast links
+            cfg.codec_pipeline = pipelined;
+            cfg.codec_threads = codec_threads;
+            ChainRunner::with_engine(cfg, engine.clone())
+                .expect("artifacts present")
+                .run_frames(frames)
+                .expect("chain run")
+                .throughput
+        };
+        println!("\n# Codec-bound chain (ZFP+LZ4 data path, ideal links, {frames} frames)");
+        let inline = run(false, 0);
+        let pipelined = run(true, 0);
+        let pipelined_par = run(true, threads);
+        let mut t2 = Table::new(&["configuration", "throughput (cycles/s)", "vs inline"]);
+        t2.row(&["inline codec".into(), format!("{inline:.3}"), "1.00x".into()]);
+        t2.row(&[
+            "pipelined codec".into(),
+            format!("{pipelined:.3}"),
+            format!("{:.2}x", pipelined / inline),
+        ]);
+        t2.row(&[
+            format!("pipelined + {threads}-way chunk codec"),
+            format!("{pipelined_par:.3}"),
+            format!("{:.2}x", pipelined_par / inline),
+        ]);
+        print!("{}", t2.render());
+        chain_json = format!(
+            r#"{{"frames": {frames}, "inline_cps": {inline:.4}, "pipelined_cps": {pipelined:.4}, "pipelined_parallel_cps": {pipelined_par:.4}}}"#
+        );
+    } else {
+        println!("\n(chain rows skipped: run `make artifacts` for part 2)");
+    }
+
+    let json = format!(
+        "{{\n  \"payload_bytes\": {raw_bytes},\n  \"chunk_elems\": {chunk},\n  \"codec_threads\": {threads},\n  \"codecs\": [\n{}\n  ],\n  \"chain\": {chain_json}\n}}\n",
+        rows_json.join(",\n")
+    );
+    match std::fs::File::create("BENCH_codec.json").and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("\nwrote BENCH_codec.json"),
+        Err(e) => println!("\ncould not write BENCH_codec.json: {e}"),
+    }
+}

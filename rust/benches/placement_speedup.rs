@@ -16,7 +16,7 @@ use defer::bench::Table;
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
 use defer::netem::LinkSpec;
-use defer::placement::{plan, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{plan, CodecCost, DeviceProfile, PlacementProblem, StageCost};
 use defer::repartition::{self, PartCost, RepartitionProblem};
 use defer::runtime::Engine;
 
@@ -48,6 +48,7 @@ fn synthetic_problem(budget: usize) -> PlacementProblem {
         worker_budget: budget,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     }
 }
 
@@ -127,6 +128,7 @@ fn main() {
             device_memory: Some(600_000),
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
+            codec: CodecCost::default(),
         })
         .expect("joint plan");
         let reps: Vec<String> = joint

@@ -43,12 +43,20 @@ fn write_length(out: &mut Vec<u8>, mut len: usize) {
 
 /// Compress `src` into a fresh LZ4 block.
 pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    compress_into(src, &mut out);
+    out
+}
+
+/// Compress `src` into `out` (cleared first), reusing its capacity —
+/// the pooled-buffer variant of [`compress`] for the per-frame hot path.
+pub fn compress_into(src: &[u8], out: &mut Vec<u8>) {
+    out.clear();
     let n = src.len();
-    let mut out = Vec::with_capacity(n / 2 + 16);
     if n == 0 {
         // A single empty-literal token terminates the block.
         out.push(0);
-        return out;
+        return;
     }
     let mut table = vec![0u32; 1 << HASH_LOG]; // position + 1 (0 = empty)
     let mut anchor = 0usize; // start of pending literals
@@ -88,13 +96,13 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
             let token_match = (mlen - MIN_MATCH).min(15) as u8;
             out.push((token_lit << 4) | token_match);
             if lit_len >= 15 {
-                write_length(&mut out, lit_len - 15);
+                write_length(out, lit_len - 15);
             }
             out.extend_from_slice(&src[anchor..i]);
             let offset = (i - cand) as u16;
             out.extend_from_slice(&offset.to_le_bytes());
             if mlen - MIN_MATCH >= 15 {
-                write_length(&mut out, mlen - MIN_MATCH - 15);
+                write_length(out, mlen - MIN_MATCH - 15);
             }
 
             // Seed the table inside the match for better chaining.
@@ -114,10 +122,9 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
     let lit_len = n - anchor;
     out.push((lit_len.min(15) as u8) << 4);
     if lit_len >= 15 {
-        write_length(&mut out, lit_len - 15);
+        write_length(out, lit_len - 15);
     }
     out.extend_from_slice(&src[anchor..]);
-    out
 }
 
 /// Decompress a block produced by [`compress`] (or any conformant encoder).

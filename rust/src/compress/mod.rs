@@ -6,6 +6,8 @@
 
 pub mod lz4;
 
+use std::borrow::Cow;
+
 use crate::error::Result;
 
 /// Compression scheme for one socket, as swept by Tables I/II.
@@ -43,12 +45,36 @@ impl Compression {
         }
     }
 
+    /// Compress an owned buffer. The `None` arm is a zero-copy
+    /// passthrough (the input *is* the output); `Lz4` compresses into
+    /// `scratch` when provided (reusing its capacity) and returns it,
+    /// handing `data` back through `reclaimed` so a pool can recycle it.
+    pub fn compress_vec(self, data: Vec<u8>, scratch: Option<Vec<u8>>) -> (Vec<u8>, Option<Vec<u8>>) {
+        match self {
+            Compression::None => (data, scratch),
+            Compression::Lz4 => {
+                let mut out = scratch.unwrap_or_default();
+                lz4::compress_into(&data, &mut out);
+                (out, Some(data))
+            }
+        }
+    }
+
     /// Decompress; `expected` is the known decompressed size for LZ4
     /// (travels in the wire header).
     pub fn decompress(self, data: &[u8], expected: usize) -> Result<Vec<u8>> {
         match self {
             Compression::None => Ok(data.to_vec()),
             Compression::Lz4 => lz4::decompress(data, expected),
+        }
+    }
+
+    /// Decompress without copying the `None` arm: `Uncompressed` payloads
+    /// are borrowed straight from the wire buffer, only `Lz4` allocates.
+    pub fn decompress_cow<'a>(self, data: &'a [u8], expected: usize) -> Result<Cow<'a, [u8]>> {
+        match self {
+            Compression::None => Ok(Cow::Borrowed(data)),
+            Compression::Lz4 => Ok(Cow::Owned(lz4::decompress(data, expected)?)),
         }
     }
 }
@@ -70,5 +96,30 @@ mod tests {
         let c = Compression::None.compress(&data);
         assert_eq!(c, data);
         assert_eq!(Compression::None.decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn none_arm_is_zero_copy() {
+        let data = b"payload bytes".to_vec();
+        let ptr = data.as_ptr();
+        let (out, reclaimed) = Compression::None.compress_vec(data, None);
+        // Same allocation passed through, nothing reclaimed.
+        assert_eq!(out.as_ptr(), ptr);
+        assert!(reclaimed.is_none());
+        let cow = Compression::None.decompress_cow(&out, out.len()).unwrap();
+        assert!(matches!(cow, Cow::Borrowed(_)));
+        assert_eq!(&*cow, b"payload bytes");
+    }
+
+    #[test]
+    fn lz4_vec_path_matches_slice_path() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let via_slice = Compression::Lz4.compress(&data);
+        let (via_vec, reclaimed) = Compression::Lz4.compress_vec(data.clone(), Some(Vec::new()));
+        assert_eq!(via_slice, via_vec);
+        assert_eq!(reclaimed.as_deref(), Some(data.as_slice()));
+        let cow = Compression::Lz4.decompress_cow(&via_vec, data.len()).unwrap();
+        assert!(matches!(cow, Cow::Owned(_)));
+        assert_eq!(&*cow, data.as_slice());
     }
 }

@@ -102,6 +102,30 @@ pub struct DeferConfig {
     /// describing the worker pool for auto-placement. `None` = a
     /// homogeneous pool of `emulated_mflops`-speed devices.
     pub device_profile: Option<PathBuf>,
+    /// Chunk-parallel codec workers shared by the whole deployment
+    /// (`serial::chunked`). 0 = legacy single-buffer codec payloads;
+    /// >= 1 = data payloads travel as chunk containers encoded/decoded
+    /// on a pool of this many threads (1 is useful for byte-identity
+    /// testing: same container, sequential work).
+    pub codec_threads: usize,
+    /// Elements per codec chunk when `codec_threads > 0`; must be a
+    /// positive multiple of 4 (ZFP block alignment). Default 128 Ki
+    /// values = 512 KiB raw, the paper's transfer-chunk granularity.
+    pub codec_chunk_elems: usize,
+    /// Software-pipeline decode | compute | encode inside every compute
+    /// node (and encode/send + read/decode in the dispatcher). `false`
+    /// restores the paper's inline loop (`--inline-codec`) for A/B runs.
+    pub codec_pipeline: bool,
+    /// Codec rate for the planner's service-time model, in GB/s of raw
+    /// activation bytes. `None` = use the built-in per-codec calibration
+    /// table; `Some(0.0)` = charge no codec time (the pre-calibration
+    /// model); `Some(g > 0)` = charge `1/g` secs/byte for both encode
+    /// and decode.
+    pub codec_gbps: Option<f64>,
+    /// Measure the codec rate live (micro-benchmark on synthetic data)
+    /// instead of the calibration table. Plans stop being byte-stable
+    /// across machines — off by default.
+    pub codec_measure: bool,
 }
 
 impl Default for DeferConfig {
@@ -126,6 +150,11 @@ impl Default for DeferConfig {
             workers_budget: 0,
             device_memory: 0,
             device_profile: None,
+            codec_threads: 0,
+            codec_chunk_elems: crate::serial::chunked::DEFAULT_CHUNK_ELEMS,
+            codec_pipeline: true,
+            codec_gbps: None,
+            codec_measure: false,
         }
     }
 }
@@ -214,6 +243,21 @@ impl DeferConfig {
         if let Some(x) = obj.get("device_profile") {
             cfg.device_profile = Some(PathBuf::from(x.as_str()?));
         }
+        if let Some(x) = obj.get("codec_threads") {
+            cfg.codec_threads = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("codec_chunk_elems") {
+            cfg.codec_chunk_elems = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("codec_pipeline") {
+            cfg.codec_pipeline = matches!(x, Json::Bool(true));
+        }
+        if let Some(x) = obj.get("codec_gbps") {
+            cfg.codec_gbps = Some(x.as_f64()?);
+        }
+        if let Some(x) = obj.get("codec_measure") {
+            cfg.codec_measure = matches!(x, Json::Bool(true));
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -283,6 +327,20 @@ impl DeferConfig {
         self.device_memory = args.get_usize("device-memory", self.device_memory as usize)? as u64;
         if let Some(p) = args.get("device-profile") {
             self.device_profile = Some(PathBuf::from(p));
+        }
+        self.codec_threads = args.get_usize("codec-threads", self.codec_threads)?;
+        self.codec_chunk_elems =
+            args.get_usize("codec-chunk-elems", self.codec_chunk_elems)?;
+        if args.has("inline-codec") {
+            self.codec_pipeline = false;
+        }
+        if let Some(g) = args.get("codec-gbps") {
+            self.codec_gbps = Some(g.parse().map_err(|_| {
+                DeferError::Cli(format!("--codec-gbps wants a number, got {g:?}"))
+            })?);
+        }
+        if args.has("codec-measure") {
+            self.codec_measure = true;
         }
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
@@ -373,6 +431,25 @@ impl DeferConfig {
                 "emulated_mflops must be >= 0, got {}",
                 self.emulated_mflops
             )));
+        }
+        if self.codec_threads > 256 {
+            return Err(DeferError::Config(format!(
+                "codec_threads {} is past any plausible core count (max 256)",
+                self.codec_threads
+            )));
+        }
+        if self.codec_threads > 0 {
+            // Fail at config time with the chunk-size rules, not at the
+            // first frame.
+            crate::serial::CodecRuntime::chunked(self.codec_chunk_elems, None)?;
+        }
+        if let Some(g) = self.codec_gbps {
+            if !(g >= 0.0 && g.is_finite()) {
+                return Err(DeferError::Config(format!(
+                    "codec_gbps must be a finite rate >= 0 (0 = charge no codec \
+                     time), got {g}"
+                )));
+            }
         }
         Ok(())
     }
@@ -530,6 +607,52 @@ mod tests {
         // Defaults keep repartitioning off.
         assert!(!DeferConfig::default().auto_partition);
         assert_eq!(DeferConfig::default().device_memory, 0);
+    }
+
+    #[test]
+    fn codec_pipeline_surface_round_trip() {
+        let text = r#"{
+            "codec_threads": 4,
+            "codec_chunk_elems": 65536,
+            "codec_pipeline": false,
+            "codec_gbps": 0.4
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert_eq!(cfg.codec_threads, 4);
+        assert_eq!(cfg.codec_chunk_elems, 65_536);
+        assert!(!cfg.codec_pipeline);
+        assert_eq!(cfg.codec_gbps, Some(0.4));
+        // Defaults: legacy payloads, pipelining on, calibrated planning.
+        let d = DeferConfig::default();
+        assert_eq!(d.codec_threads, 0);
+        assert!(d.codec_pipeline);
+        assert_eq!(d.codec_gbps, None);
+        assert!(!d.codec_measure);
+        // Chunk-size rules enforced at config time (only when chunking on).
+        assert!(DeferConfig::from_json_str(
+            r#"{"codec_threads": 2, "codec_chunk_elems": 6}"#
+        )
+        .is_err());
+        assert!(DeferConfig::from_json_str(r#"{"codec_chunk_elems": 6}"#).is_ok());
+        assert!(DeferConfig::from_json_str(r#"{"codec_threads": 9999}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"codec_gbps": -1}"#).is_err());
+        // CLI spelling.
+        let raw: Vec<String> = [
+            "run",
+            "--codec-threads",
+            "8",
+            "--inline-codec",
+            "--codec-gbps",
+            "0",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp", "inline-codec", "codec-measure"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.codec_threads, 8);
+        assert!(!cfg.codec_pipeline);
+        assert_eq!(cfg.codec_gbps, Some(0.0));
     }
 
     #[test]

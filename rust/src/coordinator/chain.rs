@@ -39,15 +39,16 @@ use std::time::Duration;
 use crate::config::DeferConfig;
 use crate::coordinator::compute_node::{run_compute_node, ComputeOptions, NodeStats};
 use crate::coordinator::dispatcher::{
-    configure_nodes, run_inference, DispatcherStats, WorkerAssignment,
+    configure_nodes, run_inference, DispatcherStats, InferenceOptions, WorkerAssignment,
 };
 use crate::coordinator::RunReport;
 use crate::error::{DeferError, Result};
 use crate::model::{PartitionPlan, ReferenceVectors, StageSpec};
 use crate::netem::Link;
 use crate::runtime::Engine;
+use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
-use crate::threadpool::WorkerPool;
+use crate::threadpool::{CodecPool, WorkerPool};
 use crate::topology::{wiring, Topology};
 
 /// A ready-to-run DEFER deployment.
@@ -187,6 +188,19 @@ impl ChainRunner {
         )?;
 
         // ---- spawn one thread per worker replica ----
+        // One codec worker pool is shared by every replica (and the
+        // dispatcher), so `--codec-threads` bounds total chunk-codec
+        // parallelism for the whole deployment.
+        let codec_pool = if self.cfg.codec_threads > 0 {
+            Some(Arc::new(CodecPool::new(self.cfg.codec_threads)))
+        } else {
+            None
+        };
+        let codec_rt = if self.cfg.codec_threads > 0 {
+            CodecRuntime::chunked(self.cfg.codec_chunk_elems, codec_pool)?
+        } else {
+            CodecRuntime::serial()
+        };
         let mut pool = WorkerPool::new();
         for (wc, stats) in workers.into_iter().zip(&node_stats) {
             let engine = self.engine.clone();
@@ -198,6 +212,8 @@ impl ChainRunner {
                 pipe_depth: self.cfg.pipe_depth,
                 compute_slowdown: self.cfg.compute_slowdown,
                 emulated_mflops: self.cfg.emulated_mflops,
+                codec_rt: codec_rt.clone(),
+                pipelined: self.cfg.codec_pipeline,
             };
             pool.spawn(&format!("compute-{}", wc.view.name), move || {
                 run_compute_node(engine, wc, codecs, out_link, stats, opts)
@@ -232,7 +248,12 @@ impl ChainRunner {
             frames,
             to_first,
             from_last,
-            self.cfg.codecs,
+            InferenceOptions {
+                codecs: self.cfg.codecs,
+                rt: codec_rt,
+                pipelined: self.cfg.codec_pipeline,
+                pipe_depth: self.cfg.pipe_depth,
+            },
             uplink,
             Arc::clone(&dstats),
             expected,

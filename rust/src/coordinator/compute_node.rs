@@ -22,16 +22,18 @@
 use std::sync::Arc;
 
 use crate::config::CodecConfig;
+use crate::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
 use crate::energy::{EnergyMeter, EnergyModel};
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::model::{PartitionSpec, StageSpec};
 use crate::netem::Link;
 use crate::runtime::{Engine, Executable};
-use crate::serial::json;
+use crate::serial::{json, CodecRuntime};
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
 use crate::topology::wiring::WorkerConns;
+use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
 /// Encode a fused stage's architecture payload:
@@ -172,7 +174,7 @@ impl NodeStats {
 }
 
 /// Runtime knobs for one compute node (shared by every replica).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone)]
 pub struct ComputeOptions {
     /// Reader → compute pipe depth (backpressure window).
     pub pipe_depth: usize,
@@ -180,6 +182,23 @@ pub struct ComputeOptions {
     pub compute_slowdown: f64,
     /// Deterministic device-speed emulation in MFLOPS (0 = off).
     pub emulated_mflops: f64,
+    /// Data-path codec runtime (chunking + shared worker pool).
+    pub codec_rt: CodecRuntime,
+    /// Software-pipeline the codec phases (decode | compute | encode on
+    /// separate threads); `false` = the paper's inline loop.
+    pub pipelined: bool,
+}
+
+impl Default for ComputeOptions {
+    fn default() -> Self {
+        ComputeOptions {
+            pipe_depth: 4,
+            compute_slowdown: 1.0,
+            emulated_mflops: 0.0,
+            codec_rt: CodecRuntime::serial(),
+            pipelined: true,
+        }
+    }
 }
 
 /// Run one compute node to completion (configuration + inference phases).
@@ -204,7 +223,7 @@ pub fn run_compute_node(
         config: mut config_conn,
         weights: mut weights_conn,
         data_in: in_conn,
-        data_out: mut out_conn,
+        data_out: out_conn,
     } = conns;
     // ---------------- configuration step ----------------
     let rx_counter = ByteCounter::new(); // inbound bytes are counted by the sender side
@@ -268,12 +287,18 @@ pub fn run_compute_node(
     drop(weights_conn);
 
     // ---------------- distributed inference step ----------------
-    // THREAD-1: socket reader -> pipe; THREAD-2 (this thread): compute+send.
+    // THREAD-1: socket reader -> pipe; the codec pipeline
+    // (`run_codec_pipeline`) then runs decode | compute | encode either
+    // inline on this thread (the paper's loop) or software-pipelined on
+    // three threads so frame k+1 decodes while frame k computes and
+    // frame k-1 encodes/transmits.
     let (tx, rx) = pipe::<Message>(opts.pipe_depth);
+    let payload_pool = Arc::new(BufPool::new(opts.pipe_depth + 2));
     let mut pool = WorkerPool::new();
     let mut in_conn = in_conn;
+    let reader_pool = Arc::clone(&payload_pool);
     pool.spawn(&format!("{}-reader", view.name), move || loop {
-        let msg = in_conn.recv(&ByteCounter::new())?;
+        let msg = in_conn.recv_pooled(&ByteCounter::new(), Some(&reader_pool))?;
         let stop = msg.msg_type == MessageType::Shutdown;
         tx.send(msg)
             .map_err(|_| DeferError::ChannelClosed("node reader pipe"))?;
@@ -295,65 +320,40 @@ pub fn run_compute_node(
         None
     };
     let mut emulated_busy = std::time::Duration::ZERO;
-    let result: Result<()> = (|| {
-        while let Some(msg) = rx.recv() {
-            match msg.msg_type {
-                MessageType::Shutdown => {
-                    // Relay shutdown so downstream stages drain too.
-                    out_conn.send(&msg, &out_link, &stats.data_tx)?;
-                    break;
-                }
-                MessageType::Data => {
-                    let values = codecs.data.decode_f32s(
-                        &msg.payload,
-                        msg.serialized_len as usize,
-                        msg.count as usize,
-                        Some(&stats.meter.codec),
-                    )?;
-                    let t_run = std::time::Instant::now();
-                    // Fused partitions run back to back; inner activations
-                    // stay in process memory, no codec, no link.
-                    let mut cur = Tensor::new(in_shape.clone(), values)?;
-                    for exe in &exes {
-                        cur = exe.run(&cur)?;
-                    }
-                    let output = cur;
-                    if let Some(floor) = flops_floor {
-                        let elapsed = t_run.elapsed();
-                        if elapsed < floor {
-                            std::thread::sleep(floor - elapsed);
-                        }
-                        emulated_busy += elapsed.max(floor);
-                    } else if opts.compute_slowdown > 1.0 {
-                        // Legacy multiplicative emulation (noise-amplifying;
-                        // prefer emulated_mflops).
-                        std::thread::sleep(
-                            t_run.elapsed().mul_f64(opts.compute_slowdown - 1.0),
-                        );
-                    }
-                    let (wire, mid) = codecs
-                        .data
-                        .encode_f32s(output.data(), Some(&stats.meter.codec));
-                    let out_msg = Message {
-                        msg_type: MessageType::Data,
-                        frame: msg.frame,
-                        serialized_len: mid as u64,
-                        count: output.len() as u64,
-                        payload: wire,
-                    };
-                    out_conn.send(&out_msg, &out_link, &stats.data_tx)?;
-                    stats.frames.add(1);
-                }
-                other => {
-                    return Err(DeferError::Coordinator(format!(
-                        "{}: unexpected {other:?} in inference phase",
-                        view.name
-                    )))
-                }
-            }
+    let ctx = PipelineCtx {
+        name: view.name.clone(),
+        codec: codecs.data,
+        rt: opts.codec_rt.clone().with_buffers(Arc::clone(&payload_pool)),
+        overhead: stats.meter.codec.clone(),
+        data_tx: stats.data_tx.clone(),
+        frames: stats.frames.clone(),
+        out_link: Arc::clone(&out_link),
+        pipelined: opts.pipelined,
+        pipe_depth: opts.pipe_depth,
+        payload_pool: Some(Arc::clone(&payload_pool)),
+    };
+    let result: Result<()> = run_codec_pipeline(rx, out_conn, ctx, |values| {
+        let t_run = std::time::Instant::now();
+        // Fused partitions run back to back; inner activations stay in
+        // process memory, no codec, no link.
+        let mut cur = Tensor::new(in_shape.clone(), values)?;
+        for exe in &exes {
+            cur = exe.run(&cur)?;
         }
-        Ok(())
-    })();
+        if let Some(floor) = flops_floor {
+            let elapsed = t_run.elapsed();
+            if elapsed < floor {
+                std::thread::sleep(floor - elapsed);
+            }
+            emulated_busy += elapsed.max(floor);
+        } else if opts.compute_slowdown > 1.0 {
+            // Legacy multiplicative emulation (noise-amplifying;
+            // prefer emulated_mflops).
+            std::thread::sleep(t_run.elapsed().mul_f64(opts.compute_slowdown - 1.0));
+        }
+        let (_, data) = cur.into_parts();
+        Ok(data)
+    });
 
     // Fold the on-device time into the node energy meter, under whichever
     // device-speed emulation is active (the emulated device is busy for

@@ -26,8 +26,10 @@ use crate::error::{DeferError, Result};
 use crate::metrics::{ByteCounter, Histogram, ThroughputClock};
 use crate::model::StageSpec;
 use crate::netem::Link;
+use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
-use crate::threadpool::WorkerPool;
+use crate::threadpool::{pipe, WorkerPool};
+use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
 use super::compute_node::encode_stage_architecture;
@@ -133,7 +135,9 @@ fn send_architecture(
     let (payload, mid) = stats.meter.codec.time(|| {
         let raw = encode_stage_architecture(&stage.parts, &hlo_refs, next_hop);
         let mid = raw.len();
-        (codecs.architecture.compression.compress(&raw), mid)
+        // Zero-copy on the default Uncompressed architecture socket.
+        let (payload, _) = codecs.architecture.compression.compress_vec(raw, None);
+        (payload, mid)
     });
     let msg = Message {
         msg_type: MessageType::ModelConfig,
@@ -176,6 +180,63 @@ fn send_weights(
     Ok(())
 }
 
+/// Dispatcher-side runtime options for the inference phase.
+#[derive(Clone)]
+pub struct InferenceOptions {
+    pub codecs: CodecConfig,
+    /// Data-path codec runtime (chunking + shared worker pool).
+    pub rt: CodecRuntime,
+    /// Software-pipeline encode|send and read|decode on separate
+    /// threads, so frame k+1 encodes while frame k is on the wire (and
+    /// results decode while the next one is being read).
+    pub pipelined: bool,
+    /// Bounded depth of the intra-dispatcher pipes.
+    pub pipe_depth: usize,
+}
+
+impl Default for InferenceOptions {
+    fn default() -> Self {
+        InferenceOptions {
+            codecs: CodecConfig::default(),
+            rt: CodecRuntime::serial(),
+            pipelined: true,
+            pipe_depth: 4,
+        }
+    }
+}
+
+/// Send one encoded data frame: stamp its send time, push it through
+/// the shaped uplink with byte/energy accounting, and recycle the
+/// payload buffer. Shared by the pipelined and inline sender paths so
+/// the accounting cannot diverge between them.
+#[allow(clippy::too_many_arguments)]
+fn send_data_frame(
+    to_first: &mut Conn,
+    frame: u64,
+    payload: Vec<u8>,
+    serialized_len: usize,
+    count: u64,
+    link: &Link,
+    stats: &DispatcherStats,
+    send_times: &Mutex<HashMap<u64, Instant>>,
+    rt: &CodecRuntime,
+) -> Result<()> {
+    let msg = Message {
+        msg_type: MessageType::Data,
+        frame,
+        serialized_len: serialized_len as u64,
+        count,
+        payload,
+    };
+    send_times.lock().unwrap().insert(frame, Instant::now());
+    to_first.send(&msg, link, &stats.data_tx)?;
+    stats.meter.tx_bytes.add(msg.wire_size());
+    if let Some(p) = rt.buffers() {
+        p.put(msg.payload);
+    }
+    Ok(())
+}
+
 /// Pump `frames` input tensors into the chain and collect all results.
 ///
 /// Returns when every frame's result has come back. If `expected` is given,
@@ -186,7 +247,7 @@ pub fn run_inference(
     frames: u64,
     mut to_first: Conn,
     mut from_last: Conn,
-    codecs: CodecConfig,
+    opts: InferenceOptions,
     link: Arc<Link>,
     stats: Arc<DispatcherStats>,
     expected: Option<Tensor>,
@@ -194,27 +255,87 @@ pub fn run_inference(
 ) -> Result<()> {
     let send_times: Arc<Mutex<HashMap<u64, Instant>>> =
         Arc::new(Mutex::new(HashMap::new()));
+    let codecs = opts.codecs;
+    // Encode scratch + payload recycling for the dispatcher's side.
+    let rt = opts
+        .rt
+        .clone()
+        .with_buffers(Arc::new(BufPool::new(opts.pipe_depth + 2)));
 
     let mut pool = WorkerPool::new();
-    {
+    if opts.pipelined {
+        // ---- encode | send on separate threads ----
+        // The sender is spawned first: `WorkerPool::join` surfaces the
+        // first error in spawn order, and when the chain dies the
+        // sender holds the root cause (the peer-labelled socket error)
+        // while the encoder only sees its pipe close.
+        let (enc_tx, enc_rx) = pipe::<(u64, Vec<u8>, usize)>(opts.pipe_depth);
+        let count = input.len() as u64;
+        {
+            let stats = Arc::clone(&stats);
+            let send_times = Arc::clone(&send_times);
+            let link = Arc::clone(&link);
+            let rt = rt.clone();
+            pool.spawn("dispatcher-sender", move || {
+                while let Some((frame, payload, mid)) = enc_rx.recv() {
+                    send_data_frame(
+                        &mut to_first,
+                        frame,
+                        payload,
+                        mid,
+                        count,
+                        &link,
+                        &stats,
+                        &send_times,
+                        &rt,
+                    )?;
+                }
+                // FIFO: shutdown travels behind the last frame.
+                to_first.send(
+                    &Message::control(MessageType::Shutdown),
+                    &link,
+                    &stats.data_tx,
+                )?;
+                Ok(())
+            });
+        }
+        {
+            let stats = Arc::clone(&stats);
+            let rt = rt.clone();
+            pool.spawn("dispatcher-encoder", move || {
+                for frame in 0..frames {
+                    let (payload, mid) = codecs
+                        .data
+                        .encode_frame(input.data(), &rt, Some(&stats.meter.codec));
+                    enc_tx
+                        .send((frame, payload, mid))
+                        .map_err(|_| DeferError::ChannelClosed("dispatcher encode pipe"))?;
+                }
+                Ok(())
+            });
+        }
+    } else {
         let stats = Arc::clone(&stats);
         let send_times = Arc::clone(&send_times);
         let link = Arc::clone(&link);
+        let rt = rt.clone();
         pool.spawn("dispatcher-sender", move || {
+            let count = input.len() as u64;
             for frame in 0..frames {
                 let (payload, mid) = codecs
                     .data
-                    .encode_f32s(input.data(), Some(&stats.meter.codec));
-                let msg = Message {
-                    msg_type: MessageType::Data,
+                    .encode_frame(input.data(), &rt, Some(&stats.meter.codec));
+                send_data_frame(
+                    &mut to_first,
                     frame,
-                    serialized_len: mid as u64,
-                    count: input.len() as u64,
                     payload,
-                };
-                send_times.lock().unwrap().insert(frame, Instant::now());
-                to_first.send(&msg, &link, &stats.data_tx)?;
-                stats.meter.tx_bytes.add(msg.wire_size());
+                    mid,
+                    count,
+                    &link,
+                    &stats,
+                    &send_times,
+                    &rt,
+                )?;
             }
             // FIFO: shutdown travels behind the last frame.
             to_first.send(
@@ -226,31 +347,87 @@ pub fn run_inference(
         });
     }
 
-    {
+    // ---- result path: read (and, when pipelined, decode elsewhere) ----
+    let decode_one = {
         let stats = Arc::clone(&stats);
+        let send_times = Arc::clone(&send_times);
+        let rt = rt.clone();
+        move |msg: Message| -> Result<()> {
+            let t_sent = send_times.lock().unwrap().remove(&msg.frame);
+            let values = codecs.data.decode_frame(
+                &msg.payload,
+                msg.serialized_len as usize,
+                msg.count as usize,
+                &rt,
+                Some(&stats.meter.codec),
+            )?;
+            let result = Tensor::new(output_shape.clone(), values)?;
+            if let Some(exp) = &expected {
+                let err = result.max_abs_diff(exp)?;
+                let mut slot = stats.reference_error.lock().unwrap();
+                *slot = Some(slot.unwrap_or(0.0).max(err));
+            }
+            if let Some(t) = t_sent {
+                stats.latency.record(t.elapsed());
+            }
+            stats.clock.record_cycle();
+            Ok(())
+        }
+    };
+
+    if opts.pipelined {
+        let (res_tx, res_rx) = pipe::<Message>(opts.pipe_depth);
+        pool.spawn("dispatcher-reader", move || {
+            let mut data_seen = 0u64;
+            while data_seen < frames {
+                let msg = from_last.recv(&ByteCounter::new())?;
+                let stop = msg.msg_type == MessageType::Shutdown;
+                if matches!(
+                    msg.msg_type,
+                    MessageType::Data | MessageType::ResultMsg
+                ) {
+                    data_seen += 1;
+                }
+                res_tx
+                    .send(msg)
+                    .map_err(|_| DeferError::ChannelClosed("dispatcher result pipe"))?;
+                if stop {
+                    return Ok(());
+                }
+            }
+            // Drain the trailing shutdown if the chain relays it.
+            let _ = from_last.recv(&ByteCounter::new());
+            Ok(())
+        });
+        pool.spawn("dispatcher-receiver", move || {
+            let mut received = 0u64;
+            while received < frames {
+                let Some(msg) = res_rx.recv() else {
+                    return Err(DeferError::ChannelClosed("dispatcher result pipe"));
+                };
+                match msg.msg_type {
+                    MessageType::Data | MessageType::ResultMsg => {
+                        decode_one(msg)?;
+                        received += 1;
+                    }
+                    MessageType::Shutdown => break,
+                    other => {
+                        return Err(DeferError::Coordinator(format!(
+                            "dispatcher: unexpected {other:?}"
+                        )))
+                    }
+                }
+            }
+            Ok(())
+        });
+    } else {
         pool.spawn("dispatcher-receiver", move || {
             let mut received = 0u64;
             while received < frames {
                 let msg = from_last.recv(&ByteCounter::new())?;
                 match msg.msg_type {
                     MessageType::Data | MessageType::ResultMsg => {
-                        let t_sent = send_times.lock().unwrap().remove(&msg.frame);
-                        let values = codecs.data.decode_f32s(
-                            &msg.payload,
-                            msg.serialized_len as usize,
-                            msg.count as usize,
-                            Some(&stats.meter.codec),
-                        )?;
-                        let result = Tensor::new(output_shape.clone(), values)?;
-                        if let Some(exp) = &expected {
-                            let err = result.max_abs_diff(exp)?;
-                            let mut slot = stats.reference_error.lock().unwrap();
-                            *slot = Some(slot.unwrap_or(0.0).max(err));
-                        }
-                        if let Some(t) = t_sent {
-                            stats.latency.record(t.elapsed());
-                        }
-                        stats.clock.record_cycle();
+                        decode_one(msg)?;
                         received += 1;
                     }
                     MessageType::Shutdown => break,

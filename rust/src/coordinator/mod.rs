@@ -32,6 +32,7 @@ pub mod baseline;
 pub mod chain;
 pub mod compute_node;
 pub mod dispatcher;
+pub mod pipeline;
 pub mod transport;
 
 pub use transport::Conn;

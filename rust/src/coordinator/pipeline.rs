@@ -1,0 +1,423 @@
+//! Software-pipelined codec stages for one worker replica.
+//!
+//! The paper's Algorithm 2 runs decode → compute → encode → send inline
+//! on one thread, so codec time adds 1:1 to every stage's service time.
+//! This module decouples the three phases onto their own threads joined
+//! by bounded [`pipe`]s, so frame `k+1` decodes while frame `k` computes
+//! and frame `k-1` encodes/transmits — per-stage occupancy drops from
+//! `decode + compute + encode + egress` to
+//! `max(decode, compute, encode + egress)` at steady state. FIFO order
+//! is preserved end to end: each phase is a single thread consuming a
+//! FIFO pipe, so frames cannot overtake inside a replica, and the
+//! junction merge (see [`crate::topology::wiring`]) already preserves
+//! order across replicas.
+//!
+//! [`run_codec_pipeline`] is generic over the compute step (a closure),
+//! which keeps it independent of PJRT — the order-preservation and
+//! error-path tests drive it with synthetic compute, no artifacts
+//! needed. `compute_node` passes the fused-executable run; the inline
+//! (non-pipelined) mode reproduces the legacy loop exactly for A/B
+//! benchmarking via `--inline-codec`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::netem::Link;
+use crate::serial::{Codec, CodecRuntime};
+use crate::threadpool::{pipe, WorkerPool};
+use crate::util::bufpool::BufPool;
+use crate::util::timer::SharedTimer;
+use crate::wire::{Message, MessageType};
+
+use super::transport::Conn;
+
+/// Everything the pipeline needs besides the connections and compute.
+pub struct PipelineCtx {
+    /// Stage name for thread labels and error messages.
+    pub name: String,
+    /// The data-socket codec.
+    pub codec: Codec,
+    /// Chunking/pool/buffer runtime shared with the peer.
+    pub rt: CodecRuntime,
+    /// Codec-time accumulator (the paper's "Overhead" metric).
+    pub overhead: SharedTimer,
+    /// Egress byte counter (this node's data-socket tx).
+    pub data_tx: ByteCounter,
+    /// Completed-frame counter.
+    pub frames: ByteCounter,
+    /// Shaped egress link.
+    pub out_link: Arc<Link>,
+    /// `false` = legacy inline loop (decode+compute+encode on one thread).
+    pub pipelined: bool,
+    /// Bounded depth of the inter-phase pipes (backpressure window).
+    pub pipe_depth: usize,
+    /// Recycles inbound payload buffers after decode (pair with the
+    /// reader's `recv_pooled`).
+    pub payload_pool: Option<Arc<BufPool>>,
+}
+
+/// A frame moving between pipeline phases, or the end-of-stream marker.
+enum Step<T> {
+    Frame { frame: u64, data: T },
+    /// Clean shutdown received from upstream; relay downstream.
+    Shutdown,
+}
+
+/// Clone an error's message for cross-thread reporting (the underlying
+/// enum is not `Clone`; the text is what matters at the boundary).
+fn describe(stage: &str, e: &DeferError) -> DeferError {
+    DeferError::Coordinator(format!("{stage}: {e}"))
+}
+
+/// Run one worker's inference phase: pull framed activations off `rx`
+/// (fed by the socket-reader thread), decode, run `compute`, encode, and
+/// send downstream — inline or software-pipelined per
+/// [`PipelineCtx::pipelined`]. Returns after relaying `Shutdown`, or
+/// when `rx` closes without one (upstream teardown — the reader's error
+/// is surfaced by the caller joining its pool), or with the first error.
+pub fn run_codec_pipeline<F>(
+    rx: crate::threadpool::PipeReceiver<Message>,
+    mut out_conn: Conn,
+    ctx: PipelineCtx,
+    mut compute: F,
+) -> Result<()>
+where
+    F: FnMut(Vec<f32>) -> Result<Vec<f32>>,
+{
+    if !ctx.pipelined {
+        // Legacy inline loop: one thread does everything per frame.
+        while let Some(msg) = rx.recv() {
+            match msg.msg_type {
+                MessageType::Shutdown => {
+                    out_conn.send(&msg, &ctx.out_link, &ctx.data_tx)?;
+                    return Ok(());
+                }
+                MessageType::Data => {
+                    let values = ctx.codec.decode_frame(
+                        &msg.payload,
+                        msg.serialized_len as usize,
+                        msg.count as usize,
+                        &ctx.rt,
+                        Some(&ctx.overhead),
+                    )?;
+                    if let Some(p) = &ctx.payload_pool {
+                        p.put(msg.payload);
+                    }
+                    let output = compute(values)?;
+                    let (wire, mid) =
+                        ctx.codec
+                            .encode_frame(&output, &ctx.rt, Some(&ctx.overhead));
+                    let out_msg = Message {
+                        msg_type: MessageType::Data,
+                        frame: msg.frame,
+                        serialized_len: mid as u64,
+                        count: output.len() as u64,
+                        payload: wire,
+                    };
+                    out_conn.send(&out_msg, &ctx.out_link, &ctx.data_tx)?;
+                    if let Some(p) = &ctx.payload_pool {
+                        p.put(out_msg.payload);
+                    }
+                    ctx.frames.add(1);
+                }
+                other => {
+                    return Err(DeferError::Coordinator(format!(
+                        "{}: unexpected {other:?} in inference phase",
+                        ctx.name
+                    )))
+                }
+            }
+        }
+        return Ok(());
+    }
+
+    // ---- pipelined: decode | compute (this thread) | encode+send ----
+    let (dec_tx, dec_rx) = pipe::<Step<Vec<f32>>>(ctx.pipe_depth);
+    let (enc_tx, enc_rx) = pipe::<Step<Vec<f32>>>(ctx.pipe_depth);
+    // Stage errors are stashed here (as text) so the compute thread can
+    // surface the *root cause* when it cannot join a detached stage.
+    let err_slot: Arc<Mutex<Option<DeferError>>> = Arc::new(Mutex::new(None));
+    let mut pool = WorkerPool::new();
+
+    {
+        let codec = ctx.codec;
+        let rt = ctx.rt.clone();
+        let overhead = ctx.overhead.clone();
+        let payload_pool = ctx.payload_pool.clone();
+        let name = ctx.name.clone();
+        let slot = Arc::clone(&err_slot);
+        pool.spawn(&format!("{}-decode", ctx.name), move || {
+            let body = || -> Result<()> {
+                while let Some(msg) = rx.recv() {
+                    match msg.msg_type {
+                        MessageType::Shutdown => {
+                            dec_tx
+                                .send(Step::Shutdown)
+                                .map_err(|_| DeferError::ChannelClosed("decode pipe"))?;
+                            return Ok(());
+                        }
+                        MessageType::Data => {
+                            let values = codec.decode_frame(
+                                &msg.payload,
+                                msg.serialized_len as usize,
+                                msg.count as usize,
+                                &rt,
+                                Some(&overhead),
+                            )?;
+                            if let Some(p) = &payload_pool {
+                                p.put(msg.payload);
+                            }
+                            dec_tx
+                                .send(Step::Frame {
+                                    frame: msg.frame,
+                                    data: values,
+                                })
+                                .map_err(|_| DeferError::ChannelClosed("decode pipe"))?;
+                        }
+                        other => {
+                            return Err(DeferError::Coordinator(format!(
+                                "{name}: unexpected {other:?} in inference phase"
+                            )))
+                        }
+                    }
+                }
+                // Upstream reader ended without Shutdown (teardown); end
+                // quietly — the reader's own error names the cause.
+                Ok(())
+            };
+            body().inspect_err(|e| err_slot_store(&slot, describe("decode stage", e)))
+        });
+    }
+
+    {
+        let codec = ctx.codec;
+        let rt = ctx.rt.clone();
+        let overhead = ctx.overhead.clone();
+        let out_link = Arc::clone(&ctx.out_link);
+        let data_tx = ctx.data_tx.clone();
+        let frames = ctx.frames.clone();
+        let payload_pool = ctx.payload_pool.clone();
+        let slot = Arc::clone(&err_slot);
+        pool.spawn(&format!("{}-encode", ctx.name), move || {
+            let mut body = || -> Result<()> {
+                while let Some(step) = enc_rx.recv() {
+                    match step {
+                        Step::Shutdown => {
+                            out_conn.send(
+                                &Message::control(MessageType::Shutdown),
+                                &out_link,
+                                &data_tx,
+                            )?;
+                            return Ok(());
+                        }
+                        Step::Frame { frame, data } => {
+                            let (wire, mid) =
+                                codec.encode_frame(&data, &rt, Some(&overhead));
+                            let out_msg = Message {
+                                msg_type: MessageType::Data,
+                                frame,
+                                serialized_len: mid as u64,
+                                count: data.len() as u64,
+                                payload: wire,
+                            };
+                            out_conn.send(&out_msg, &out_link, &data_tx)?;
+                            if let Some(p) = &payload_pool {
+                                p.put(out_msg.payload);
+                            }
+                            frames.add(1);
+                        }
+                    }
+                }
+                Ok(())
+            };
+            body().inspect_err(|e| err_slot_store(&slot, describe("encode stage", e)))
+        });
+    }
+
+    // Compute phase on this thread, between the two pipes.
+    let result: Result<()> = (|| {
+        while let Some(step) = dec_rx.recv() {
+            match step {
+                Step::Shutdown => {
+                    enc_tx
+                        .send(Step::Shutdown)
+                        .map_err(|_| DeferError::ChannelClosed("encode pipe"))?;
+                    return Ok(());
+                }
+                Step::Frame { frame, data } => {
+                    let output = compute(data)?;
+                    enc_tx
+                        .send(Step::Frame {
+                            frame,
+                            data: output,
+                        })
+                        .map_err(|_| DeferError::ChannelClosed("encode pipe"))?;
+                }
+            }
+        }
+        Ok(())
+    })();
+    // Close our sender so the encoder drains and exits even when the
+    // decode stage died mid-stream.
+    drop(enc_tx);
+    drop(dec_rx);
+
+    match result {
+        Ok(()) => {
+            // Clean end (or upstream teardown): joining surfaces any
+            // stage error with its original message.
+            pool.join()?;
+            Ok(())
+        }
+        Err(e) => {
+            // A stage is possibly blocked on I/O that only unblocks at
+            // teardown; do not wait for it. Prefer the stashed root
+            // cause over our own pipe-closed symptom.
+            pool.detach();
+            let root = err_slot.lock().unwrap().take();
+            Err(root.unwrap_or(e))
+        }
+    }
+}
+
+fn err_slot_store(slot: &Mutex<Option<DeferError>>, e: DeferError) {
+    let mut s = slot.lock().unwrap();
+    if s.is_none() {
+        *s = Some(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Compression;
+    use crate::serial::Serialization;
+    use crate::threadpool::PipeSender;
+
+    fn ctx(name: &str, pipelined: bool) -> PipelineCtx {
+        PipelineCtx {
+            name: name.into(),
+            codec: Codec::new(Serialization::Binary, Compression::None),
+            rt: CodecRuntime::serial(),
+            overhead: SharedTimer::new(),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined,
+            pipe_depth: 4,
+            payload_pool: None,
+        }
+    }
+
+    fn feed_frames(tx: &PipeSender<Message>, codec: Codec, n: u64) {
+        for frame in 0..n {
+            let data = vec![frame as f32; 8];
+            let (payload, mid) = codec.encode_f32s(&data, None);
+            tx.send(Message {
+                msg_type: MessageType::Data,
+                frame,
+                serialized_len: mid as u64,
+                count: 8,
+                payload,
+            })
+            .unwrap();
+        }
+        tx.send(Message::control(MessageType::Shutdown)).unwrap();
+    }
+
+    #[test]
+    fn pipelined_preserves_fifo_order_and_values() {
+        for pipelined in [false, true] {
+            let (tx, rx) = pipe::<Message>(32);
+            let (out_a, mut out_b) = Conn::local_pair(32);
+            let c = ctx("t", pipelined);
+            let codec = c.codec;
+            let frames_counter = c.frames.clone();
+            feed_frames(&tx, codec, 10);
+            drop(tx);
+            run_codec_pipeline(rx, out_a, c, |v| Ok(v.iter().map(|x| x * 2.0).collect()))
+                .unwrap();
+            let counter = ByteCounter::new();
+            for f in 0..10u64 {
+                let m = out_b.recv(&counter).unwrap();
+                assert_eq!(m.frame, f, "pipelined={pipelined}");
+                let vals = codec
+                    .decode_f32s(&m.payload, m.serialized_len as usize, 8, None)
+                    .unwrap();
+                assert_eq!(vals, vec![f as f32 * 2.0; 8]);
+            }
+            assert_eq!(
+                out_b.recv(&counter).unwrap().msg_type,
+                MessageType::Shutdown
+            );
+            assert_eq!(frames_counter.total(), 10);
+        }
+    }
+
+    #[test]
+    fn compute_error_propagates() {
+        for pipelined in [false, true] {
+            let (tx, rx) = pipe::<Message>(32);
+            let (out_a, _out_b) = Conn::local_pair(32);
+            let c = ctx("t", pipelined);
+            feed_frames(&tx, c.codec, 3);
+            drop(tx);
+            let err = run_codec_pipeline(rx, out_a, c, |_| {
+                Err(DeferError::Runtime("synthetic compute failure".into()))
+            })
+            .unwrap_err();
+            assert!(
+                format!("{err}").contains("synthetic compute failure"),
+                "pipelined={pipelined}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_error_names_root_cause() {
+        for pipelined in [false, true] {
+            let (tx, rx) = pipe::<Message>(8);
+            let (out_a, _out_b) = Conn::local_pair(8);
+            let c = ctx("t", pipelined);
+            // A Data frame whose payload is not a valid Binary payload.
+            tx.send(Message {
+                msg_type: MessageType::Data,
+                frame: 0,
+                serialized_len: 3,
+                count: 1,
+                payload: vec![1, 2, 3],
+            })
+            .unwrap();
+            drop(tx);
+            let err = run_codec_pipeline(rx, out_a, c, Ok).unwrap_err();
+            assert!(
+                format!("{err}").contains("ragged"),
+                "pipelined={pipelined}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn unexpected_message_type_rejected() {
+        let (tx, rx) = pipe::<Message>(8);
+        let (out_a, _out_b) = Conn::local_pair(8);
+        let c = ctx("stage7", true);
+        tx.send(Message::control(MessageType::Ready)).unwrap();
+        drop(tx);
+        let err = run_codec_pipeline(rx, out_a, c, Ok).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("stage7") && msg.contains("Ready"), "{msg}");
+    }
+
+    #[test]
+    fn upstream_teardown_without_shutdown_ends_quietly() {
+        for pipelined in [false, true] {
+            let (tx, rx) = pipe::<Message>(8);
+            let (out_a, _out_b) = Conn::local_pair(8);
+            let c = ctx("t", pipelined);
+            drop(tx); // reader died without sending anything
+            run_codec_pipeline(rx, out_a, c, Ok).unwrap();
+        }
+    }
+}

@@ -15,7 +15,7 @@ use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
 use crate::threadpool::{pipe, PipeReceiver, PipeSender};
-use crate::wire::{read_message, write_message, Message};
+use crate::wire::{write_message, Message};
 
 /// One directed connection endpoint.
 pub enum Conn {
@@ -121,8 +121,19 @@ impl Conn {
 
     /// Receive one framed message, counting bytes.
     pub fn recv(&mut self, counter: &ByteCounter) -> Result<Message> {
+        self.recv_pooled(counter, None)
+    }
+
+    /// [`Conn::recv`] with the payload buffer drawn from `pool` — the
+    /// per-connection allocation-hygiene variant (see
+    /// [`crate::wire::read_message_pooled`]).
+    pub fn recv_pooled(
+        &mut self,
+        counter: &ByteCounter,
+        pool: Option<&crate::util::bufpool::BufPool>,
+    ) -> Result<Message> {
         match self {
-            Conn::Tcp { reader, .. } => read_message(reader, counter),
+            Conn::Tcp { reader, .. } => crate::wire::read_message_pooled(reader, counter, pool),
             Conn::Local { rx, pending, .. } => {
                 if pending.is_empty() {
                     *pending = rx
@@ -130,7 +141,7 @@ impl Conn {
                         .ok_or(DeferError::ChannelClosed("local conn recv"))?;
                 }
                 let mut cursor = std::io::Cursor::new(pending.as_slice());
-                let msg = read_message(&mut cursor, counter)?;
+                let msg = crate::wire::read_message_pooled(&mut cursor, counter, pool)?;
                 let consumed = cursor.position() as usize;
                 pending.drain(..consumed);
                 Ok(msg)

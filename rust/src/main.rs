@@ -33,7 +33,16 @@ use defer::error::Result;
 use defer::runtime::Engine;
 use defer::util::{fmt_bytes, fmt_duration};
 
-const SWITCHES: &[&str] = &["tcp", "baseline", "verbose", "help", "auto-place", "auto-partition"];
+const SWITCHES: &[&str] = &[
+    "tcp",
+    "baseline",
+    "verbose",
+    "help",
+    "auto-place",
+    "auto-partition",
+    "inline-codec",
+    "codec-measure",
+];
 
 fn usage() -> &'static str {
     "defer — Distributed Edge Inference (COMSNETS 2022 reproduction)
@@ -77,6 +86,18 @@ RUN OPTIONS:
   --device-profile FILE    device pool JSON for auto-place:
                            {\"devices\": [{\"name\": \"jetson\", \"mflops\": 200}]}
   --pipe-depth N           chain backpressure window (default: 4)
+  --codec-threads N        chunk-parallel codec: split data payloads into
+                           block-aligned chunks encoded/decoded on N shared
+                           worker threads (0 = legacy single-buffer codec)
+  --codec-chunk-elems N    f32 values per codec chunk (default 131072 =
+                           512 KiB raw; must be a multiple of 4)
+  --inline-codec           disable codec/compute software pipelining (run
+                           the paper's decode+compute+encode inline loop)
+  --codec-gbps R           planner codec rate in GB/s of raw activation
+                           bytes (0 = charge no codec time; default: the
+                           built-in per-codec calibration table)
+  --codec-measure          calibrate the planner codec rate with a live
+                           micro-benchmark instead of the built-in table
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
   --slowdown F             legacy multiplicative compute emulation (>=1)

@@ -33,9 +33,19 @@
 //!   `R_0` is, so its occupancy `d = bytes_in_0 * 8 / bandwidth +
 //!   latency + jitter/2` does not shrink with replication.
 //!
-//! Pipeline throughput is `1 / max(d, max_i s_i)`. Codec time is not
-//! modeled (it is device-native and identical across placements), and
-//! jitter enters as its expectation so the plan stays deterministic.
+//! Pipeline throughput is `1 / max(d, max_i s_i)`. Jitter enters as its
+//! expectation so the plan stays deterministic.
+//!
+//! **Codec time** (ROADMAP item (c)) is charged through a [`CodecCost`]:
+//! per frame a replica decodes its stage's input bytes and encodes its
+//! output bytes at the configured secs/byte rates. With the runtime's
+//! codec/compute software pipeline on (`codec_pipeline`, the default)
+//! the phases overlap, so the per-replica busy time is
+//! `max(decode, compute, encode + egress)`; with `--inline-codec` they
+//! serialize and it is the sum. The rates come from `--codec-gbps`, a
+//! live `--codec-measure` micro-benchmark, or the built-in per-codec
+//! calibration table; `CodecCost::ZERO` (the `Default`) reproduces the
+//! pre-calibration model exactly, keeping the plan goldens byte-stable.
 //!
 //! # Algorithm
 //!
@@ -122,6 +132,118 @@ pub fn load_device_profiles(path: &Path) -> Result<Vec<DeviceProfile>> {
     parse_device_profiles(&text)
 }
 
+/// Modeled codec rates for the data socket, in seconds per raw
+/// (uncompressed) activation byte, plus whether the runtime pipelines
+/// codec and compute. The `Default` is [`CodecCost::ZERO`] — no codec
+/// charge, the pre-calibration model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CodecCost {
+    pub enc_secs_per_byte: f64,
+    pub dec_secs_per_byte: f64,
+    /// Runtime software-pipelines decode | compute | encode
+    /// (`codec_pipeline`): the stage gates on the slowest phase instead
+    /// of their sum, and compute overlaps egress.
+    pub pipelined: bool,
+}
+
+impl CodecCost {
+    /// No codec charge, inline aggregation — the pre-calibration model.
+    pub const ZERO: CodecCost = CodecCost {
+        enc_secs_per_byte: 0.0,
+        dec_secs_per_byte: 0.0,
+        pipelined: false,
+    };
+
+    /// A symmetric rate in GB/s of raw activation bytes; `gbps <= 0`
+    /// charges nothing (but keeps the `pipelined` aggregation).
+    pub fn from_gbps(gbps: f64, pipelined: bool) -> CodecCost {
+        let s = if gbps > 0.0 { 1.0 / (gbps * 1e9) } else { 0.0 };
+        CodecCost {
+            enc_secs_per_byte: s,
+            dec_secs_per_byte: s,
+            pipelined,
+        }
+    }
+
+    /// Built-in calibration table: single-thread secs/byte for this
+    /// crate's codec implementations, measured offline on a laptop-class
+    /// x86 core (order-of-magnitude; deterministic so plans stay
+    /// byte-stable across runs and machines). Rates are over *raw* f32
+    /// bytes; the LZ4 term is scaled by each serialization's inflation
+    /// factor because LZ4 runs over the serialized bytes.
+    pub fn calibrated(codec: &crate::serial::Codec, pipelined: bool) -> CodecCost {
+        use crate::compress::Compression;
+        use crate::serial::Serialization;
+        // (encode ns/raw-byte, decode ns/raw-byte, serialized inflation)
+        let (ser_enc, ser_dec, inflation) = match codec.serialization {
+            Serialization::Json => (12.0, 9.0, 3.0),
+            Serialization::Zfp(rate) => (2.5, 2.0, rate.0 as f64 / 32.0),
+            Serialization::Binary => (0.15, 0.15, 1.0),
+        };
+        let (lz_enc, lz_dec) = match codec.compression {
+            Compression::None => (0.0, 0.0),
+            Compression::Lz4 => (2.5 * inflation, 0.8 * inflation),
+        };
+        CodecCost {
+            enc_secs_per_byte: (ser_enc + lz_enc) * 1e-9,
+            dec_secs_per_byte: (ser_dec + lz_dec) * 1e-9,
+            pipelined,
+        }
+    }
+
+    /// Live micro-measurement: encode/decode a synthetic 256 Ki-value
+    /// payload a few times and keep the fastest pass. Sharper than the
+    /// table on the actual host, but plans stop being byte-stable across
+    /// machines — opt-in via `--codec-measure`.
+    pub fn measure(codec: &crate::serial::Codec, pipelined: bool) -> CodecCost {
+        let n = 256 * 1024;
+        let data = crate::util::prng::Rng::new(7).normal_vec(n);
+        let raw_bytes = (n * 4) as f64;
+        let mut best_enc = f64::INFINITY;
+        let mut best_dec = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let (wire, mid) = codec.encode_f32s(&data, None);
+            best_enc = best_enc.min(t0.elapsed().as_secs_f64());
+            let t1 = std::time::Instant::now();
+            let _ = codec.decode_f32s(&wire, mid, n, None);
+            best_dec = best_dec.min(t1.elapsed().as_secs_f64());
+        }
+        CodecCost {
+            enc_secs_per_byte: best_enc / raw_bytes,
+            dec_secs_per_byte: best_dec / raw_bytes,
+            pipelined,
+        }
+    }
+
+    /// Scale rates by a parallel-codec speedup (chunk-parallel path with
+    /// `threads` pool workers); `threads == 0` is the serial path.
+    pub fn over_threads(mut self, threads: usize) -> CodecCost {
+        if threads > 1 {
+            self.enc_secs_per_byte /= threads as f64;
+            self.dec_secs_per_byte /= threads as f64;
+        }
+        self
+    }
+
+    fn charges_nothing(&self) -> bool {
+        self.enc_secs_per_byte == 0.0 && self.dec_secs_per_byte == 0.0
+    }
+}
+
+/// The [`CodecCost`] a [`DeferConfig`] describes: `--codec-gbps`
+/// override first, then a `--codec-measure` live calibration, then the
+/// built-in table — scaled by the chunk-parallel worker count (an
+/// optimistic upper bound: the pool is shared by all replicas).
+pub fn codec_cost_from_config(cfg: &DeferConfig) -> CodecCost {
+    let base = match cfg.codec_gbps {
+        Some(g) => CodecCost::from_gbps(g, cfg.codec_pipeline),
+        None if cfg.codec_measure => CodecCost::measure(&cfg.codecs.data, cfg.codec_pipeline),
+        None => CodecCost::calibrated(&cfg.codecs.data, cfg.codec_pipeline),
+    };
+    base.over_threads(cfg.codec_threads)
+}
+
 /// What the planner needs to know about one pipeline stage — exactly the
 /// fields a `PartitionSpec` already carries.
 #[derive(Clone, Debug)]
@@ -149,6 +271,9 @@ pub struct PlacementProblem {
     /// Candidate links for every later hop (inter-stage and return).
     /// Empty = the uplink is the only medium.
     pub interconnect: Vec<LinkSpec>,
+    /// Codec service rates charged per frame ([`CodecCost::ZERO`] = the
+    /// pre-calibration model).
+    pub codec: CodecCost,
 }
 
 impl PlacementProblem {
@@ -176,6 +301,7 @@ impl PlacementProblem {
             worker_budget,
             uplink,
             interconnect,
+            codec: codec_cost_from_config(cfg),
         })
     }
 }
@@ -265,9 +391,14 @@ pub struct StagePlacement {
     pub devices: Vec<String>,
     /// Per-replica compute time per frame (gated by the slowest device).
     pub compute: Duration,
+    /// Per-replica codec time per frame (decode input + encode output);
+    /// zero under the pre-calibration model.
+    pub codec: Duration,
     /// Per-replica shaped egress write per frame.
     pub egress: Duration,
-    /// Effective stage occupancy per frame: `(compute + egress) / R`.
+    /// Effective stage occupancy per frame: the per-replica busy time
+    /// (inline: `codec + compute + egress`; pipelined:
+    /// `max(decode, compute, encode + egress)`) divided by `R`.
     pub service: Duration,
 }
 
@@ -325,8 +456,15 @@ impl PlacementPlan {
             }
         ));
         for (i, st) in self.stages.iter().enumerate() {
+            // The codec segment appears only when it is charged, keeping
+            // pre-calibration renders byte-identical.
+            let codec = if st.codec > Duration::ZERO {
+                format!(" + codec {:.3} ms", st.codec.as_secs_f64() * 1e3)
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "  stage {i}: x{} on [{}] via {}, compute {:.3} ms + egress {:.3} ms \
+                "  stage {i}: x{} on [{}] via {}, compute {:.3} ms{codec} + egress {:.3} ms \
                  -> service {:.3} ms/frame{}\n",
                 st.replicas,
                 st.devices.join(", "),
@@ -398,7 +536,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
         cursor += replicas[i];
     }
 
-    let uplink_secs = transfer_secs(&hop_links[0], p.stages[0].input_bytes);
+    let uplink_secs = uplink_occupancy(p, &hop_links[0]);
     let mut gate = uplink_secs;
     let mut bottleneck = Bottleneck::Uplink;
     let mut stages = Vec::with_capacity(s);
@@ -409,7 +547,17 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             .fold(f64::INFINITY, f64::min);
         let compute = p.stages[i].flops as f64 / f_min;
         let egress = transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
-        let service = (compute + egress) / replicas[i] as f64;
+        // Codec charges (zero under the pre-calibration model): a
+        // replica decodes its input and encodes its output every frame.
+        let dec = p.codec.dec_secs_per_byte * p.stages[i].input_bytes as f64;
+        let enc = p.codec.enc_secs_per_byte * p.stages[i].output_bytes as f64;
+        let busy = if p.codec.pipelined && !p.codec.charges_nothing() {
+            // Software-pipelined phases overlap; the slowest gates.
+            dec.max(compute).max(enc + egress)
+        } else {
+            dec + compute + enc + egress
+        };
+        let service = busy / replicas[i] as f64;
         if service > gate {
             gate = service;
             bottleneck = Bottleneck::Stage(i);
@@ -418,6 +566,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             replicas: replicas[i],
             devices: assigned[i].iter().map(|d| d.name.clone()).collect(),
             compute: Duration::from_secs_f64(compute),
+            codec: Duration::from_secs_f64(dec + enc),
             egress: Duration::from_secs_f64(egress),
             service: Duration::from_secs_f64(service),
         });
@@ -426,6 +575,19 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
         stages,
         gate,
         bottleneck,
+    }
+}
+
+/// Modeled occupancy of the shared dispatcher uplink: the shaped
+/// transfer of stage 0's input, plus the dispatcher's own encode of it
+/// (overlapped when the runtime pipelines encode|send).
+fn uplink_occupancy(p: &PlacementProblem, uplink: &LinkSpec) -> f64 {
+    let transfer = transfer_secs(uplink, p.stages[0].input_bytes);
+    let enc = p.codec.enc_secs_per_byte * p.stages[0].input_bytes as f64;
+    if p.codec.pipelined {
+        transfer.max(enc)
+    } else {
+        transfer + enc
     }
 }
 
@@ -521,7 +683,7 @@ pub fn plan(p: &PlacementProblem) -> Result<PlacementPlan> {
     Ok(PlacementPlan {
         stages: eval.stages,
         hop_links,
-        uplink_time: Duration::from_secs_f64(transfer_secs(&p.uplink, p.stages[0].input_bytes)),
+        uplink_time: Duration::from_secs_f64(uplink_occupancy(p, &p.uplink)),
         bottleneck: eval.bottleneck,
         predicted_throughput: 1.0 / eval.gate,
     })
@@ -579,6 +741,7 @@ mod tests {
             worker_budget: 6,
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
+            codec: CodecCost::default(),
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1, 1]);
@@ -610,10 +773,81 @@ mod tests {
             worker_budget: 2,
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
+            codec: CodecCost::default(),
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1]);
         assert_eq!(plan.stages[0].devices, vec!["fast".to_string()]);
+    }
+
+    #[test]
+    fn codec_charge_moves_the_bottleneck() {
+        // Uplink-bound without codec time; a slow codec makes the stage
+        // the gate and replication worthwhile — exactly the blind spot
+        // ROADMAP item (c) called out.
+        let mk = |codec: CodecCost| PlacementProblem {
+            stages: vec![StageCost {
+                flops: 50_000_000,
+                input_bytes: 5_000_000,
+                output_bytes: 5_000_000,
+            }],
+            devices: homogeneous(2, 10_000.0),
+            worker_budget: 2,
+            uplink: LinkSpec::gigabit_lan(),
+            interconnect: vec![LinkSpec::gigabit_lan()],
+            codec,
+        };
+        let without = plan(&mk(CodecCost::ZERO)).unwrap();
+        assert_eq!(without.bottleneck, Bottleneck::Uplink);
+        // 0.05 GB/s codec: 100 ms decode + 100 ms encode per frame
+        // dwarfs the 40 ms uplink; the stage gates even at R=2.
+        let with = plan(&mk(CodecCost::from_gbps(0.05, false))).unwrap();
+        assert_eq!(with.bottleneck, Bottleneck::Stage(0));
+        assert_eq!(with.replica_counts(), vec![2]);
+        assert!(with.predicted_throughput < without.predicted_throughput);
+        assert!(with.stages[0].codec > Duration::ZERO);
+        assert!(with.render().contains("codec"), "{}", with.render());
+        assert!(!without.render().contains("codec"), "{}", without.render());
+    }
+
+    #[test]
+    fn pipelined_codec_overlaps_phases() {
+        let mk = |pipelined: bool| PlacementProblem {
+            stages: vec![StageCost {
+                flops: 100_000_000,
+                input_bytes: 1_000_000,
+                output_bytes: 1_000_000,
+            }],
+            devices: homogeneous(1, 1_000.0),
+            worker_budget: 1,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+            codec: CodecCost::from_gbps(0.1, pipelined),
+        };
+        let inline = plan(&mk(false)).unwrap();
+        let pipelined = plan(&mk(true)).unwrap();
+        // Inline: 10 + 100 + 10 ms = 120 ms; pipelined: max = 100 ms.
+        let s_in = inline.stages[0].service.as_secs_f64();
+        let s_pl = pipelined.stages[0].service.as_secs_f64();
+        assert!((s_in - 0.120).abs() < 1e-6, "{s_in}");
+        assert!((s_pl - 0.100).abs() < 1e-6, "{s_pl}");
+    }
+
+    #[test]
+    fn calibration_table_orders_codecs_sanely() {
+        use crate::serial::Codec;
+        let sweep = Codec::paper_sweep();
+        let json_lz4 = CodecCost::calibrated(&sweep[0], true);
+        let json_raw = CodecCost::calibrated(&sweep[1], true);
+        let zfp_lz4 = CodecCost::calibrated(&sweep[2], true);
+        // JSON is the slowest arm; LZ4 adds cost on top of each.
+        assert!(json_raw.enc_secs_per_byte > zfp_lz4.enc_secs_per_byte);
+        assert!(json_lz4.enc_secs_per_byte > json_raw.enc_secs_per_byte);
+        // Parallel-codec scaling divides rates.
+        let par = zfp_lz4.over_threads(4);
+        assert!((par.enc_secs_per_byte - zfp_lz4.enc_secs_per_byte / 4.0).abs() < 1e-15);
+        // gbps = 0 charges nothing.
+        assert!(CodecCost::from_gbps(0.0, true).charges_nothing());
     }
 
     #[test]
@@ -629,6 +863,7 @@ mod tests {
             worker_budget: 0,
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
+            codec: CodecCost::default(),
         })
         .unwrap_err();
         assert!(format!("{err}").contains("budget"));
@@ -638,6 +873,7 @@ mod tests {
             worker_budget: 3,
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
+            codec: CodecCost::default(),
         })
         .unwrap_err();
         assert!(format!("{err}").contains("devices"));

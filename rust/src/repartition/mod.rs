@@ -28,7 +28,13 @@
 //!   reports it as the bottleneck when it gates;
 //! * `f` is the *slowest* pooled device's FLOP rate — conservative for
 //!   heterogeneous pools (the placement pass then assigns fast devices
-//!   to heavy stages and re-evaluates exactly).
+//!   to heavy stages and re-evaluates exactly);
+//! * codec time is charged through the shared
+//!   [`crate::placement::CodecCost`]: a stage decodes its first
+//!   partition's input and encodes its last partition's output, so
+//!   fusing also elides the *codec* work of inner boundaries — under the
+//!   pipelined runtime the per-replica busy time is
+//!   `max(decode, compute, encode + egress)`, inline it is the sum.
 //!
 //! # Memory, and why it exists
 //!
@@ -67,8 +73,8 @@ use crate::error::{DeferError, Result};
 use crate::model::PartitionPlan;
 use crate::netem::LinkSpec;
 use crate::placement::{
-    self, best_link_for, transfer_secs, DeviceProfile, PlacementPlan, PlacementProblem,
-    StageCost,
+    self, best_link_for, transfer_secs, CodecCost, DeviceProfile, PlacementPlan,
+    PlacementProblem, StageCost,
 };
 use crate::topology::Topology;
 
@@ -105,6 +111,10 @@ pub struct RepartitionProblem {
     pub uplink: LinkSpec,
     /// Candidate links for every later hop. Empty = uplink everywhere.
     pub interconnect: Vec<LinkSpec>,
+    /// Codec service rates charged per frame, shared with
+    /// [`crate::placement`] so both passes price codec time identically
+    /// ([`CodecCost::ZERO`] = the pre-calibration model).
+    pub codec: CodecCost,
 }
 
 impl RepartitionProblem {
@@ -141,6 +151,7 @@ impl RepartitionProblem {
             },
             uplink,
             interconnect,
+            codec: placement::codec_cost_from_config(cfg),
         })
     }
 }
@@ -305,6 +316,22 @@ pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
             transfer_secs(&best_link_for(candidates, q.output_bytes), q.output_bytes)
         })
         .collect();
+    // Codec terms (zero under the pre-calibration model): a stage
+    // starting at partition j decodes parts[j]'s input; one ending after
+    // partition i-1 encodes parts[i-1]'s output. Same pricing as
+    // placement::plan, which re-evaluates the chosen cuts below.
+    let dec_in: Vec<f64> = p
+        .parts
+        .iter()
+        .map(|q| p.codec.dec_secs_per_byte * q.input_bytes as f64)
+        .collect();
+    let enc_out: Vec<f64> = p
+        .parts
+        .iter()
+        .map(|q| p.codec.enc_secs_per_byte * q.output_bytes as f64)
+        .collect();
+    let charges_codec =
+        p.codec.enc_secs_per_byte > 0.0 || p.codec.dec_secs_per_byte > 0.0;
     // Prefix sums for O(1) run accounting.
     let mut flops_pre = vec![0f64; n + 1];
     let mut weights_pre = vec![0u64; n + 1];
@@ -335,7 +362,13 @@ pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
                         continue;
                     }
                 }
-                let base = (flops_pre[i] - flops_pre[j]) / f_dp + egress[i - 1];
+                let compute = (flops_pre[i] - flops_pre[j]) / f_dp;
+                let base = if p.codec.pipelined && charges_codec {
+                    // Pipelined phases overlap; the slowest gates.
+                    dec_in[j].max(compute).max(enc_out[i - 1] + egress[i - 1])
+                } else {
+                    dec_in[j] + compute + enc_out[i - 1] + egress[i - 1]
+                };
                 for r in 1..=w {
                     let prev = dp[j * cols + (w - r)];
                     if !prev.is_finite() {
@@ -403,6 +436,7 @@ pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
         worker_budget: p.worker_budget,
         uplink: p.uplink,
         interconnect: p.interconnect.clone(),
+        codec: p.codec,
     })?;
 
     Ok(RepartitionPlan {
@@ -448,6 +482,7 @@ mod tests {
             device_memory: memory,
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
+            codec: CodecCost::default(),
         }
     }
 
@@ -535,6 +570,23 @@ mod tests {
         let err = plan(&p).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("p0") && msg.contains("5000"), "{msg}");
+    }
+
+    #[test]
+    fn codec_charge_lowers_predicted_throughput() {
+        // Same cuts, slower model: the codec term must make every plan
+        // honest about serialization cost (ROADMAP item (c)).
+        let parts = vec![
+            part(100_000_000, 400_000, 400_000, 1_000),
+            part(100_000_000, 400_000, 400_000, 1_000),
+        ];
+        let mut with = problem(parts.clone(), 2, Some(1_000));
+        with.codec = CodecCost::from_gbps(0.1, false);
+        let without = plan(&problem(parts, 2, Some(1_000))).unwrap();
+        let with = plan(&with).unwrap();
+        assert_eq!(with.cuts, without.cuts);
+        assert!(with.predicted_throughput() < without.predicted_throughput());
+        assert!(with.render().contains("codec"), "{}", with.render());
     }
 
     #[test]

@@ -14,6 +14,16 @@ impl BitWriter {
         Self::default()
     }
 
+    /// A writer that appends to an existing byte buffer (whose current
+    /// contents are kept as whole bytes already written). Lets callers
+    /// emit bits straight into a reused/pre-headered buffer instead of
+    /// paying a fresh body allocation plus a copy; [`Self::bit_len`]
+    /// counts the pre-existing bytes, so block accounting must be
+    /// relative (the ZFP coder's is).
+    pub fn over(buf: Vec<u8>) -> Self {
+        BitWriter { buf, used: 0 }
+    }
+
     /// Append the low `n` bits of `v`, most significant first. `n <= 64`.
     #[inline]
     pub fn write(&mut self, v: u64, n: u8) {

@@ -1,0 +1,401 @@
+//! Chunk-parallel codec container: data-parallel ZFP/LZ4 over one frame.
+//!
+//! The paper's codecs are embarrassingly parallel below the frame level:
+//! ZFP codes independent 4-value blocks and LZ4 blocks are
+//! self-contained, so a frame can be split into fixed-size runs of
+//! elements ("chunks") that encode and decode concurrently on a shared
+//! [`CodecPool`]. This module defines the wire container that carries
+//! the per-chunk results and the [`CodecRuntime`] knob bundle the
+//! coordinator threads share.
+//!
+//! # Container layout (all integers u32 little-endian)
+//!
+//! ```text
+//! magic        0x4446434B ("DFCK")
+//! chunk_count  n
+//! chunk_elems  elements per chunk (last chunk may be short)
+//! n x { wire_len | serialized_len }     per-chunk header
+//! n x chunk payload bytes               each exactly a Codec::encode_f32s output
+//! ```
+//!
+//! With `chunk_elems >= count` the container holds exactly one chunk
+//! whose payload bytes are byte-identical to today's single-buffer
+//! [`Codec::encode_f32s`] output — the chunked path *degrades to* the
+//! legacy layout plus a 20-byte container header. The outer wire header
+//! ([`crate::wire`]) still carries the summed `serialized_len`, so
+//! payload accounting is unchanged.
+//!
+//! # Determinism guarantee
+//!
+//! Chunk boundaries depend only on `chunk_elems` (validated to be a
+//! multiple of ZFP's 4-value block), and chunk results are reassembled
+//! in index order. Therefore the container bytes are a pure function of
+//! `(codec, data, chunk_elems)` — **independent of the worker count**,
+//! including the fully sequential no-pool path. The planner goldens and
+//! the `codec_parallel` equivalence suite rely on this.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{DeferError, Result};
+use crate::serial::Codec;
+use crate::threadpool::CodecPool;
+use crate::util::bufpool::BufPool;
+use crate::util::timer::SharedTimer;
+
+/// Container magic: "DFCK".
+pub const CHUNK_MAGIC: u32 = 0x4446_434B;
+/// Fixed container header: magic + chunk_count + chunk_elems.
+pub const CONTAINER_HEADER: usize = 12;
+/// Per-chunk header: wire_len + serialized_len.
+pub const PER_CHUNK_HEADER: usize = 8;
+/// Default chunk size: 128 Ki f32 values = 512 KiB raw — the paper's
+/// 512 kB transfer-chunk granularity applied to the codec.
+pub const DEFAULT_CHUNK_ELEMS: usize = 128 * 1024;
+/// Upper bound keeping every per-chunk length representable in u32 even
+/// for the most inflating arm (JSON, <= 12 bytes + comma per value).
+pub const MAX_CHUNK_ELEMS: usize = 1 << 26;
+
+/// Runtime codec configuration shared by the coordinator's hot-path
+/// threads: chunking granularity, the shared worker pool, and an
+/// optional scratch-buffer pool (allocation hygiene).
+///
+/// `Default`/[`CodecRuntime::serial`] is the legacy single-buffer path —
+/// byte-identical to pre-chunking deployments.
+#[derive(Clone, Default)]
+pub struct CodecRuntime {
+    /// Elements per chunk; 0 = legacy single-buffer codec (no container).
+    chunk_elems: usize,
+    /// Shared chunk-work pool; `None` = encode/decode chunks inline.
+    pool: Option<Arc<CodecPool>>,
+    /// Scratch buffers for serialize/compress outputs.
+    buffers: Option<Arc<BufPool>>,
+}
+
+impl CodecRuntime {
+    /// The legacy single-buffer codec path (no container, no pool).
+    pub fn serial() -> Self {
+        Self::default()
+    }
+
+    /// A chunked runtime: payloads travel as containers of
+    /// `chunk_elems`-value chunks, encoded/decoded on `pool` when given.
+    pub fn chunked(chunk_elems: usize, pool: Option<Arc<CodecPool>>) -> Result<Self> {
+        if chunk_elems == 0 || chunk_elems % 4 != 0 || chunk_elems > MAX_CHUNK_ELEMS {
+            return Err(DeferError::Config(format!(
+                "codec chunk size {chunk_elems} must be a positive multiple of 4 \
+                 (ZFP block alignment) and at most {MAX_CHUNK_ELEMS}"
+            )));
+        }
+        Ok(CodecRuntime {
+            chunk_elems,
+            pool,
+            buffers: None,
+        })
+    }
+
+    /// Attach a scratch-buffer pool (typically one per worker/connection).
+    pub fn with_buffers(mut self, buffers: Arc<BufPool>) -> Self {
+        self.buffers = Some(buffers);
+        self
+    }
+
+    /// Whether payloads use the chunk container.
+    pub fn is_chunked(&self) -> bool {
+        self.chunk_elems > 0
+    }
+
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+
+    pub fn pool(&self) -> Option<&CodecPool> {
+        self.pool.as_deref()
+    }
+
+    pub fn buffers(&self) -> Option<&BufPool> {
+        self.buffers.as_deref()
+    }
+}
+
+/// Order-preserving parallel map over `items` (sequential when `pool` is
+/// absent or there are fewer than two items). Results are reassembled in
+/// index order, so output — and therefore every downstream byte — is
+/// independent of the worker count; parallelism only changes wall-clock.
+fn par_map<T, R, F>(pool: Option<&CodecPool>, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    match pool {
+        Some(pool) if items.len() > 1 => {
+            let n = items.len();
+            let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+            let f_ref = &f;
+            let results_ref = &results;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
+                .into_iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    Box::new(move || {
+                        let r = f_ref(i, item);
+                        results_ref.lock().unwrap().push((i, r));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+            let mut results = results.into_inner().unwrap();
+            results.sort_by_key(|&(i, _)| i);
+            results.into_iter().map(|(_, r)| r).collect()
+        }
+        _ => items
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| f(i, t))
+            .collect(),
+    }
+}
+
+/// Encode one frame as a chunk container (see module docs for layout and
+/// the determinism guarantee). Returns the container bytes and the
+/// summed pre-compression serialized length for payload accounting.
+pub fn encode_frame(
+    codec: &Codec,
+    data: &[f32],
+    rt: &CodecRuntime,
+    overhead: Option<&SharedTimer>,
+) -> (Vec<u8>, usize) {
+    debug_assert!(rt.is_chunked());
+    let work = || {
+        let chunks: Vec<&[f32]> = data.chunks(rt.chunk_elems.max(1)).collect();
+        let encoded: Vec<(Vec<u8>, usize)> = par_map(rt.pool(), chunks, |_, chunk| {
+            codec.encode_f32s_pooled(chunk, rt.buffers(), None)
+        });
+        let body: usize = encoded.iter().map(|(w, _)| w.len()).sum();
+        let mut out = rt.buffers().map(|p| p.take()).unwrap_or_default();
+        out.clear();
+        out.reserve(CONTAINER_HEADER + encoded.len() * PER_CHUNK_HEADER + body);
+        out.extend_from_slice(&CHUNK_MAGIC.to_le_bytes());
+        out.extend_from_slice(&(encoded.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(rt.chunk_elems as u32).to_le_bytes());
+        let mut mid_total = 0usize;
+        for (chunk_wire, mid) in &encoded {
+            out.extend_from_slice(&(chunk_wire.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(*mid as u32).to_le_bytes());
+            mid_total += *mid;
+        }
+        for (chunk_wire, _) in encoded {
+            out.extend_from_slice(&chunk_wire);
+            if let Some(p) = rt.buffers() {
+                p.put(chunk_wire);
+            }
+        }
+        (out, mid_total)
+    };
+    match overhead {
+        Some(t) => t.time(work),
+        None => work(),
+    }
+}
+
+fn read_u32(wire: &[u8], off: usize) -> usize {
+    u32::from_le_bytes(wire[off..off + 4].try_into().unwrap()) as usize
+}
+
+/// Decode a chunk container back into the frame's f32 values.
+/// `serialized_len` (from the outer wire header) cross-checks the summed
+/// per-chunk lengths; `count` is the total element count.
+pub fn decode_frame(
+    codec: &Codec,
+    wire: &[u8],
+    serialized_len: usize,
+    count: usize,
+    rt: &CodecRuntime,
+    overhead: Option<&SharedTimer>,
+) -> Result<Vec<f32>> {
+    let work = || -> Result<Vec<f32>> {
+        let err = |m: String| DeferError::Codec(format!("chunk container: {m}"));
+        if wire.len() < CONTAINER_HEADER {
+            return Err(err("truncated header".into()));
+        }
+        if read_u32(wire, 0) != CHUNK_MAGIC as usize {
+            return Err(err(
+                "bad magic (peer not running the chunked codec path?)".into()
+            ));
+        }
+        let n_chunks = read_u32(wire, 4);
+        let chunk_elems = read_u32(wire, 8);
+        if n_chunks > (wire.len() - CONTAINER_HEADER) / PER_CHUNK_HEADER {
+            return Err(err(format!(
+                "{n_chunks} chunk(s) cannot fit in {} bytes",
+                wire.len()
+            )));
+        }
+        let expected_chunks = if count == 0 || chunk_elems == 0 {
+            0
+        } else {
+            count.div_ceil(chunk_elems)
+        };
+        if n_chunks != expected_chunks {
+            return Err(err(format!(
+                "{n_chunks} chunk(s) for {count} values at {chunk_elems}/chunk \
+                 (expected {expected_chunks})"
+            )));
+        }
+        let mut off = CONTAINER_HEADER + n_chunks * PER_CHUNK_HEADER;
+        let mut parts = Vec::with_capacity(n_chunks);
+        let mut sum_serialized = 0usize;
+        for i in 0..n_chunks {
+            let hdr = CONTAINER_HEADER + i * PER_CHUNK_HEADER;
+            let wire_len = read_u32(wire, hdr);
+            let chunk_serialized = read_u32(wire, hdr + 4);
+            if wire.len() < off + wire_len {
+                return Err(err(format!("chunk {i} truncated")));
+            }
+            let chunk_count = if i + 1 == n_chunks {
+                count - chunk_elems * i
+            } else {
+                chunk_elems
+            };
+            parts.push((&wire[off..off + wire_len], chunk_serialized, chunk_count));
+            off += wire_len;
+            sum_serialized += chunk_serialized;
+        }
+        if off != wire.len() {
+            return Err(err(format!("{} trailing bytes", wire.len() - off)));
+        }
+        if sum_serialized != serialized_len {
+            return Err(err(format!(
+                "chunk serialized lengths sum to {sum_serialized}, \
+                 wire header says {serialized_len}"
+            )));
+        }
+        let decoded: Vec<Result<Vec<f32>>> =
+            par_map(rt.pool(), parts, |_, (bytes, mid, chunk_count)| {
+                codec.decode_f32s(bytes, mid, chunk_count, None)
+            });
+        let mut out = Vec::with_capacity(count);
+        for part in decoded {
+            out.extend_from_slice(&part?);
+        }
+        if out.len() != count {
+            return Err(err(format!(
+                "decoded {} values, expected {count}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    };
+    match overhead {
+        Some(t) => t.time(work),
+        None => work(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::Serialization;
+    use crate::util::prng::Rng;
+
+    fn rt(chunk_elems: usize, threads: usize) -> CodecRuntime {
+        let pool = (threads > 0).then(|| Arc::new(CodecPool::new(threads)));
+        CodecRuntime::chunked(chunk_elems, pool).unwrap()
+    }
+
+    #[test]
+    fn chunk_size_validated() {
+        assert!(CodecRuntime::chunked(0, None).is_err());
+        assert!(CodecRuntime::chunked(6, None).is_err());
+        assert!(CodecRuntime::chunked(MAX_CHUNK_ELEMS + 4, None).is_err());
+        assert!(CodecRuntime::chunked(4, None).is_ok());
+        assert!(!CodecRuntime::serial().is_chunked());
+    }
+
+    #[test]
+    fn parallel_bytes_equal_sequential_bytes() {
+        let data = Rng::new(91).normal_vec(10_000);
+        for codec in Codec::paper_sweep() {
+            let (seq, seq_mid) = encode_frame(&codec, &data, &rt(1024, 0), None);
+            let (par, par_mid) = encode_frame(&codec, &data, &rt(1024, 4), None);
+            assert_eq!(seq, par, "{}", codec.label());
+            assert_eq!(seq_mid, par_mid);
+        }
+    }
+
+    #[test]
+    fn single_chunk_degrades_to_legacy_payload() {
+        let data = Rng::new(92).normal_vec(1000);
+        for codec in Codec::paper_sweep() {
+            let (legacy, legacy_mid) = codec.encode_f32s(&data, None);
+            let (container, mid) = encode_frame(&codec, &data, &rt(4096, 0), None);
+            assert_eq!(mid, legacy_mid);
+            assert_eq!(
+                &container[CONTAINER_HEADER + PER_CHUNK_HEADER..],
+                &legacy[..],
+                "{}: single-chunk payload must be the legacy bytes",
+                codec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn round_trip_odd_sizes() {
+        let pool = Some(Arc::new(CodecPool::new(3)));
+        for n in [0usize, 1, 3, 4, 5, 1023, 1024, 1025, 4096 + 7] {
+            let data = Rng::new(93 + n as u64).normal_vec(n);
+            for codec in [
+                Codec::new(Serialization::Binary, crate::compress::Compression::None),
+                Codec::new(Serialization::Binary, crate::compress::Compression::Lz4),
+            ] {
+                let rt = CodecRuntime::chunked(256, pool.clone()).unwrap();
+                let (wire, mid) = encode_frame(&codec, &data, &rt, None);
+                let back = decode_frame(&codec, &wire, mid, n, &rt, None).unwrap();
+                assert_eq!(back, data, "{} n={n}", codec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_containers_rejected() {
+        let data = Rng::new(94).normal_vec(600);
+        let codec = Codec::default();
+        let rt = rt(256, 0);
+        let (wire, mid) = encode_frame(&codec, &data, &rt, None);
+        // Truncations at every structural boundary.
+        assert!(decode_frame(&codec, &wire[..4], mid, 600, &rt, None).is_err());
+        assert!(decode_frame(&codec, &wire[..CONTAINER_HEADER], mid, 600, &rt, None).is_err());
+        assert!(decode_frame(&codec, &wire[..wire.len() - 1], mid, 600, &rt, None).is_err());
+        // Bad magic.
+        let mut bad = wire.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_frame(&codec, &bad, mid, 600, &rt, None).is_err());
+        // Count mismatch (wrong chunk_count expectation).
+        assert!(decode_frame(&codec, &wire, mid, 601, &rt, None).is_err());
+        // Serialized-length mismatch vs outer header.
+        assert!(decode_frame(&codec, &wire, mid + 1, 600, &rt, None).is_err());
+        // Trailing garbage.
+        let mut noisy = wire;
+        noisy.push(0);
+        assert!(decode_frame(&codec, &noisy, mid, 600, &rt, None).is_err());
+    }
+
+    #[test]
+    fn buffer_pool_recycles_across_frames() {
+        let data = Rng::new(95).normal_vec(5000);
+        let codec = Codec::default();
+        let bufs = Arc::new(BufPool::new(8));
+        let rt = CodecRuntime::chunked(1024, None)
+            .unwrap()
+            .with_buffers(Arc::clone(&bufs));
+        let (first, mid) = encode_frame(&codec, &data, &rt, None);
+        let baseline = decode_frame(&codec, &first, mid, 5000, &rt, None).unwrap();
+        // Returning the payload makes the next frame reuse it.
+        rt.buffers().unwrap().put(first);
+        assert!(bufs.pooled() > 0);
+        let (second, mid2) = encode_frame(&codec, &data, &rt, None);
+        assert_eq!(mid, mid2);
+        let again = decode_frame(&codec, &second, mid2, 5000, &rt, None).unwrap();
+        assert_eq!(baseline, again);
+    }
+}

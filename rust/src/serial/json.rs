@@ -339,11 +339,21 @@ fn write_value(out: &mut String, v: &Json) {
 /// NumPy arrays. Uses shortest round-trip formatting (Rust's float Display),
 /// giving the same ~2-3x inflation over raw binary that `json.dumps` shows.
 pub fn encode_f32s(data: &[f32]) -> Vec<u8> {
-    let mut out = String::with_capacity(data.len() * 12 + 2);
-    out.push('[');
+    let mut out = Vec::with_capacity(data.len() * 12 + 2);
+    encode_f32s_into(data, &mut out);
+    out
+}
+
+/// [`encode_f32s`] into a reused buffer (cleared first) — the
+/// pooled-buffer variant for the per-frame hot path. Output bytes are
+/// identical to [`encode_f32s`].
+pub fn encode_f32s_into(data: &[f32], out: &mut Vec<u8>) {
+    use std::io::Write as _;
+    out.clear();
+    out.push(b'[');
     for (i, v) in data.iter().enumerate() {
         if i > 0 {
-            out.push(',');
+            out.push(b',');
         }
         if v.fract() == 0.0 && v.abs() < 1e15 {
             let _ = write!(out, "{}.0", *v as i64);
@@ -351,8 +361,7 @@ pub fn encode_f32s(data: &[f32]) -> Vec<u8> {
             let _ = write!(out, "{v}");
         }
     }
-    out.push(']');
-    out.into_bytes()
+    out.push(b']');
 }
 
 /// Decode the JSON array form back to f32s.

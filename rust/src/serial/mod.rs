@@ -6,11 +6,15 @@
 //! `decode_tensor_data` are what the chain hot path calls per frame.
 
 pub mod bits;
+pub mod chunked;
 pub mod json;
 pub mod zfp;
 
+pub use chunked::CodecRuntime;
+
 use crate::compress::Compression;
 use crate::error::{DeferError, Result};
+use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
 
 /// How f32 payloads are serialized before (optional) compression.
@@ -69,6 +73,58 @@ impl Serialization {
 /// (and far smaller than JSON), preserving the paper's codec ranking.
 pub const DEFAULT_ZFP_RATE: u8 = 24;
 
+/// Bulk-append an f32 slice to `out` as little-endian bytes. On
+/// little-endian targets this is a single memcpy — it is the weights
+/// ground-truth path for every config exchange, moving MBs at a time,
+/// where the old per-element `extend_from_slice(&v.to_le_bytes())` loop
+/// paid four-byte bookkeeping per value.
+fn extend_f32s_le(out: &mut Vec<u8>, data: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: viewing initialized f32 storage as bytes is always
+        // valid (alignment 1, no invalid byte patterns, exact length).
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        out.reserve(data.len() * 4);
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bulk-decode little-endian bytes into f32s (inverse of
+/// [`extend_f32s_le`]); rejects ragged lengths.
+fn f32s_from_le(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(DeferError::Codec("binary: ragged length".into()));
+    }
+    #[cfg(target_endian = "little")]
+    {
+        let mut out = vec![0f32; bytes.len() / 4];
+        // SAFETY: the destination spans exactly `bytes.len()` bytes of
+        // f32 storage; every bit pattern is a valid f32.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr().cast::<u8>(),
+                bytes.len(),
+            );
+        }
+        Ok(out)
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
 /// A per-socket codec: serialization + compression.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Codec {
@@ -104,6 +160,20 @@ impl Codec {
         format!("{}+{}", self.serialization.name(), self.compression.name())
     }
 
+    /// Serialize `data` into `out` (cleared first), no compression.
+    fn serialize_into(&self, data: &[f32], out: &mut Vec<u8>) {
+        match self.serialization {
+            Serialization::Json => json::encode_f32s_into(data, out),
+            Serialization::Zfp(rate) => {
+                zfp::encode_into(data, rate, out).expect("validated rate")
+            }
+            Serialization::Binary => {
+                out.clear();
+                extend_f32s_le(out, data);
+            }
+        }
+    }
+
     /// Serialize + compress an f32 payload. Returns the wire bytes and the
     /// intermediate (serialized, uncompressed) size for payload accounting.
     /// `overhead` accumulates formatting time (paper's "Overhead" metric).
@@ -112,22 +182,37 @@ impl Codec {
         data: &[f32],
         overhead: Option<&SharedTimer>,
     ) -> (Vec<u8>, usize) {
+        self.encode_f32s_pooled(data, None, overhead)
+    }
+
+    /// [`Codec::encode_f32s`] with scratch buffers drawn from (and
+    /// returned to) `bufs` — the allocation-hygiene variant for the
+    /// per-frame hot path. The caller owns the returned payload; handing
+    /// it back to the same pool after the send completes closes the
+    /// recycling loop. Output bytes are identical to `encode_f32s`.
+    /// `Compression::None` passes the serialized buffer through without a
+    /// copy.
+    pub fn encode_f32s_pooled(
+        &self,
+        data: &[f32],
+        bufs: Option<&BufPool>,
+        overhead: Option<&SharedTimer>,
+    ) -> (Vec<u8>, usize) {
         let work = || {
-            let serialized = match self.serialization {
-                Serialization::Json => json::encode_f32s(data),
-                Serialization::Zfp(rate) => {
-                    zfp::encode(data, rate).expect("validated rate")
-                }
-                Serialization::Binary => {
-                    let mut out = Vec::with_capacity(data.len() * 4);
-                    for v in data {
-                        out.extend_from_slice(&v.to_le_bytes());
-                    }
-                    out
-                }
-            };
+            let mut serialized = bufs.map(|p| p.take()).unwrap_or_default();
+            self.serialize_into(data, &mut serialized);
             let mid = serialized.len();
-            (self.compression.compress(&serialized), mid)
+            // Only Lz4 needs a second buffer; the None arm passes the
+            // serialized buffer through untouched (zero-copy).
+            let scratch = match self.compression {
+                Compression::None => None,
+                Compression::Lz4 => bufs.map(|p| p.take()),
+            };
+            let (payload, reclaimed) = self.compression.compress_vec(serialized, scratch);
+            if let (Some(p), Some(r)) = (bufs, reclaimed) {
+                p.put(r);
+            }
+            (payload, mid)
         };
         match overhead {
             Some(t) => t.time(work),
@@ -137,7 +222,8 @@ impl Codec {
 
     /// Inverse of [`Codec::encode_f32s`]. `serialized_len` is the
     /// uncompressed-serialized size from the wire header; `count` the
-    /// element count.
+    /// element count. The `Uncompressed` arm decodes straight from the
+    /// wire buffer (zero-copy decompression).
     pub fn decode_f32s(
         &self,
         wire: &[u8],
@@ -146,19 +232,11 @@ impl Codec {
         overhead: Option<&SharedTimer>,
     ) -> Result<Vec<f32>> {
         let work = || -> Result<Vec<f32>> {
-            let serialized = self.compression.decompress(wire, serialized_len)?;
+            let serialized = self.compression.decompress_cow(wire, serialized_len)?;
             let out = match self.serialization {
                 Serialization::Json => json::decode_f32s(&serialized)?,
                 Serialization::Zfp(_) => zfp::decode(&serialized)?,
-                Serialization::Binary => {
-                    if serialized.len() % 4 != 0 {
-                        return Err(DeferError::Codec("binary: ragged length".into()));
-                    }
-                    serialized
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect()
-                }
+                Serialization::Binary => f32s_from_le(&serialized)?,
             };
             if out.len() != count {
                 return Err(DeferError::Codec(format!(
@@ -171,6 +249,40 @@ impl Codec {
         match overhead {
             Some(t) => t.time(work),
             None => work(),
+        }
+    }
+
+    /// Frame-level encode: the hot-path entry the coordinator calls per
+    /// frame. A serial [`CodecRuntime`] produces exactly the
+    /// [`Codec::encode_f32s`] bytes; a chunked runtime produces the
+    /// [`chunked`] container (identical bytes for any worker count).
+    pub fn encode_frame(
+        &self,
+        data: &[f32],
+        rt: &CodecRuntime,
+        overhead: Option<&SharedTimer>,
+    ) -> (Vec<u8>, usize) {
+        if rt.is_chunked() {
+            chunked::encode_frame(self, data, rt, overhead)
+        } else {
+            self.encode_f32s_pooled(data, rt.buffers(), overhead)
+        }
+    }
+
+    /// Frame-level decode, inverse of [`Codec::encode_frame`] under the
+    /// same runtime (both ends of a socket share one configuration).
+    pub fn decode_frame(
+        &self,
+        wire: &[u8],
+        serialized_len: usize,
+        count: usize,
+        rt: &CodecRuntime,
+        overhead: Option<&SharedTimer>,
+    ) -> Result<Vec<f32>> {
+        if rt.is_chunked() {
+            chunked::decode_frame(self, wire, serialized_len, count, rt, overhead)
+        } else {
+            self.decode_f32s(wire, serialized_len, count, overhead)
         }
     }
 }

@@ -201,25 +201,38 @@ fn decode_block(r: &mut BitReader, rate: ZfpRate) -> [f32; 4] {
 ///
 /// Layout: `MAGIC u32le | count u32le | rate u8 | pad[3] | blocks...`
 pub fn encode(data: &[f32], rate: ZfpRate) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(encoded_size(data.len(), rate));
+    encode_into(data, rate, &mut out)?;
+    Ok(out)
+}
+
+/// [`encode`] into a reused buffer (cleared first) — the pooled-buffer
+/// variant for the per-frame hot path. Output bytes are identical to
+/// [`encode`].
+pub fn encode_into(data: &[f32], rate: ZfpRate, out: &mut Vec<u8>) -> Result<()> {
     let rate = rate.validate()?;
     let n = data.len();
     if n as u64 > u32::MAX as u64 {
         return Err(DeferError::Codec("zfp: >u32::MAX elements".into()));
     }
-    let mut w = BitWriter::new();
+    out.clear();
+    out.reserve(encoded_size(n, rate));
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.push(rate.0);
+    out.extend_from_slice(&[0u8; 3]);
+    // Emit block bits straight after the header in the (reused) output
+    // buffer — no separate body allocation, no copy. Block accounting in
+    // encode_block is relative to the writer's running bit_len, so the
+    // 96 header bits underneath do not disturb the fixed-rate budgets.
+    let mut w = BitWriter::over(std::mem::take(out));
     for chunk in data.chunks(4) {
         let mut block = [0.0f32; 4];
         block[..chunk.len()].copy_from_slice(chunk);
         encode_block(&mut w, &block, rate);
     }
-    let body = w.into_bytes();
-    let mut out = Vec::with_capacity(12 + body.len());
-    out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.extend_from_slice(&(n as u32).to_le_bytes());
-    out.push(rate.0);
-    out.extend_from_slice(&[0u8; 3]);
-    out.extend_from_slice(&body);
-    Ok(out)
+    *out = w.into_bytes();
+    Ok(())
 }
 
 /// Decode a buffer produced by [`encode`].

@@ -108,6 +108,20 @@ impl<T> Drop for PipeSender<T> {
     }
 }
 
+impl<T> Drop for PipeReceiver<T> {
+    fn drop(&mut self) {
+        // A dropped receiver can never drain the queue, so senders blocked
+        // on a full pipe would otherwise wait forever. Mark the pipe
+        // closed: pending and future `send`s fail fast with
+        // `ChannelClosed`, which is how a downstream pipeline stage's
+        // death unwinds its upstream.
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.not_full.notify_all();
+        self.shared.not_empty.notify_all();
+    }
+}
+
 impl<T> PipeReceiver<T> {
     /// Blocking receive; `None` after close + drain.
     pub fn recv(&self) -> Option<T> {
@@ -196,6 +210,155 @@ impl WorkerPool {
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+}
+
+// -------------------------------------------------------------- CodecPool
+
+/// A boxed unit of work queued on a [`CodecPool`].
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+struct CodecPoolShared {
+    queue: Mutex<VecDeque<PoolJob>>,
+    available: Condvar,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// A small persistent worker pool for data-parallel codec work.
+///
+/// Unlike [`WorkerPool`] (spawn-and-join, one closure per thread), this
+/// pool keeps `threads` workers alive and feeds them short jobs — the
+/// per-chunk encode/decode tasks of the chunk-parallel codec path
+/// ([`crate::serial::chunked`]). One pool is shared by every worker
+/// replica of a deployment, so total codec parallelism is bounded by the
+/// configured `--codec-threads` regardless of stage count.
+///
+/// [`CodecPool::run_scoped`] provides structured fork-join over borrowed
+/// data: it blocks until every submitted job has finished, which is what
+/// makes handing non-`'static` closures to the workers sound.
+pub struct CodecPool {
+    shared: Arc<CodecPoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Total jobs executed (diagnostics / bench reporting).
+    jobs_run: Arc<AtomicUsize>,
+}
+
+impl CodecPool {
+    /// Spawn a pool with `threads` workers (>= 1).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(CodecPoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+        });
+        let jobs_run = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let jobs_run = Arc::clone(&jobs_run);
+                std::thread::Builder::new()
+                    .name(format!("codec-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let mut q = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(job) = q.pop_front() {
+                                    break job;
+                                }
+                                if shared.shutdown.load(Ordering::Acquire) {
+                                    return;
+                                }
+                                q = shared.available.wait(q).unwrap();
+                            }
+                        };
+                        job();
+                        jobs_run.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .expect("spawn codec worker")
+            })
+            .collect();
+        CodecPool {
+            shared,
+            workers,
+            jobs_run,
+        }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total jobs executed so far.
+    pub fn jobs_run(&self) -> usize {
+        self.jobs_run.load(Ordering::Relaxed)
+    }
+
+    /// Run `jobs` on the pool and block until all of them complete
+    /// (structured fork-join). Jobs may borrow from the caller's stack:
+    /// the barrier below guarantees no job outlives this call, which is
+    /// what makes the lifetime erasure sound. A panicking job is caught
+    /// on the worker (keeping the pool alive) and re-raised here after
+    /// every sibling has finished.
+    pub fn run_scoped<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        struct Done {
+            pending: Mutex<usize>,
+            finished: Condvar,
+            panicked: std::sync::atomic::AtomicBool,
+        }
+        let done = Arc::new(Done {
+            pending: Mutex::new(jobs.len()),
+            finished: Condvar::new(),
+            panicked: std::sync::atomic::AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: `run_scoped` blocks until `pending == 0`, i.e.
+                // until this job has run to completion (or panicked and
+                // been caught) on a worker — the borrowed data outlives
+                // every use. The transmute only erases the lifetime.
+                let job: PoolJob = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                let done = Arc::clone(&done);
+                q.push_back(Box::new(move || {
+                    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                        done.panicked.store(true, Ordering::Release);
+                    }
+                    let mut pending = done.pending.lock().unwrap();
+                    *pending -= 1;
+                    if *pending == 0 {
+                        done.finished.notify_all();
+                    }
+                }));
+            }
+            self.shared.available.notify_all();
+        }
+        let mut pending = done.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = done.finished.wait(pending).unwrap();
+        }
+        drop(pending);
+        if done.panicked.load(Ordering::Acquire) {
+            panic!("codec pool job panicked");
+        }
+    }
+}
+
+impl Drop for CodecPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -323,5 +486,81 @@ mod tests {
         let mut pool = WorkerPool::new();
         pool.spawn("panics", || panic!("boom"));
         assert!(pool.join().is_err());
+    }
+
+    #[test]
+    fn receiver_drop_unblocks_sender() {
+        let (tx, rx) = pipe::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || {
+            // Pipe is full; this blocks until the receiver goes away,
+            // then must fail instead of hanging.
+            tx.send(2)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(rx);
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn codec_pool_scoped_borrow() {
+        let pool = CodecPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let mut out = vec![0u64; 100];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(7)
+                .enumerate()
+                .map(|(c, slot)| {
+                    let data = &data;
+                    Box::new(move || {
+                        for (k, s) in slot.iter_mut().enumerate() {
+                            *s = data[c * 7 + k] * 2;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 2));
+        assert!(pool.jobs_run() >= 15);
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn codec_pool_survives_job_panic() {
+        let pool = CodecPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(vec![
+                Box::new(|| panic!("intentional")) as Box<dyn FnOnce() + Send>,
+                Box::new(|| {}) as Box<dyn FnOnce() + Send>,
+            ]);
+        }));
+        assert!(r.is_err());
+        // The pool is still serviceable afterwards.
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        pool.run_scoped(vec![Box::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }) as Box<dyn FnOnce() + Send>]);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn codec_pool_many_rounds_deterministic_completion() {
+        let pool = CodecPool::new(4);
+        for round in 0..50 {
+            let total = Arc::new(AtomicUsize::new(0));
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+                .map(|i| {
+                    let total = Arc::clone(&total);
+                    Box::new(move || {
+                        total.fetch_add(i, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+            assert_eq!(total.load(Ordering::SeqCst), 120, "round {round}");
+        }
     }
 }

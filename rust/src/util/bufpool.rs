@@ -1,0 +1,104 @@
+//! Reusable byte-buffer pool — allocation hygiene for the codec hot path.
+//!
+//! The chain moves MB-scale payloads every frame; before this pool every
+//! frame paid a fresh `vec![0u8; wire_len]` in `wire::read_message` and a
+//! fresh output `Vec` in `Codec::encode_f32s` / `Compression::compress`.
+//! A [`BufPool`] recycles those buffers per connection (or per worker):
+//! `take` hands back a previously returned buffer with its capacity
+//! intact, `put` returns one after the consumer is done with it. The
+//! pool is bounded so a burst cannot pin unbounded memory, and it is
+//! `Mutex`-guarded — contention is negligible at frame granularity.
+
+use std::sync::Mutex;
+
+/// A bounded pool of reusable `Vec<u8>` buffers.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    /// Max buffers retained; extra `put`s drop the buffer instead.
+    max: usize,
+}
+
+impl BufPool {
+    /// A pool retaining at most `max` free buffers (>= 1).
+    pub fn new(max: usize) -> Self {
+        BufPool {
+            free: Mutex::new(Vec::new()),
+            max: max.max(1),
+        }
+    }
+
+    /// Take an empty buffer (capacity from a previous `put` when
+    /// available, freshly allocated otherwise).
+    pub fn take(&self) -> Vec<u8> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Take a buffer resized to `len` (zero-filled where not overwritten
+    /// by a previous use — callers overwrite the whole range).
+    pub fn take_len(&self, len: usize) -> Vec<u8> {
+        let mut buf = self.take();
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// Return a buffer for reuse. Contents are discarded.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max {
+            free.push(buf);
+        }
+    }
+
+    /// Free buffers currently pooled (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_capacity() {
+        let pool = BufPool::new(4);
+        let mut a = pool.take_len(1000);
+        a[999] = 7;
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.take_len(500);
+        assert!(b.capacity() >= cap.min(500));
+        assert_eq!(b.len(), 500);
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn bounded_retention() {
+        let pool = BufPool::new(2);
+        for _ in 0..5 {
+            pool.put(Vec::with_capacity(64));
+        }
+        assert_eq!(pool.pooled(), 2);
+        // Capacity-less buffers are not worth pooling.
+        pool.take();
+        pool.take();
+        pool.put(Vec::new());
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn take_len_zeroes_new_range() {
+        let pool = BufPool::new(1);
+        let mut a = pool.take_len(8);
+        a.iter_mut().for_each(|b| *b = 0xFF);
+        pool.put(a);
+        let b = pool.take_len(16);
+        assert_eq!(b, vec![0u8; 16]);
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared utilities: seeded PRNG, byte formatting, timing helpers.
+//! Small shared utilities: seeded PRNG, byte formatting, timing helpers,
+//! reusable buffer pools.
 
+pub mod bufpool;
 pub mod prng;
 pub mod timer;
 

@@ -143,6 +143,19 @@ pub fn write_message(
 /// Read one message written by [`write_message`]. Validates magic, type,
 /// size sanity and CRC.
 pub fn read_message(r: &mut impl Read, counter: &ByteCounter) -> Result<Message> {
+    read_message_pooled(r, counter, None)
+}
+
+/// [`read_message`] drawing the payload buffer from `pool` when given —
+/// the allocation-hygiene variant for per-frame traffic. The consumer
+/// should hand `Message::payload` back to the same pool once decoded,
+/// closing the recycling loop (the old path paid a fresh
+/// `vec![0u8; wire_len]` per frame).
+pub fn read_message_pooled(
+    r: &mut impl Read,
+    counter: &ByteCounter,
+    pool: Option<&crate::util::bufpool::BufPool>,
+) -> Result<Message> {
     let mut header = [0u8; HEADER_SIZE];
     r.read_exact(&mut header)?;
     counter.add(HEADER_SIZE as u64);
@@ -159,7 +172,10 @@ pub fn read_message(r: &mut impl Read, counter: &ByteCounter) -> Result<Message>
     if wire_len > MAX_PAYLOAD {
         return Err(DeferError::Wire(format!("payload {wire_len} exceeds cap")));
     }
-    let mut payload = vec![0u8; wire_len as usize];
+    let mut payload = match pool {
+        Some(p) => p.take_len(wire_len as usize),
+        None => vec![0u8; wire_len as usize],
+    };
     r.read_exact(&mut payload)?;
     counter.add(wire_len);
     let crc_actual = crc32::finish(crc32::update(

@@ -1,0 +1,231 @@
+//! Pipelined-compute-node ordering suite (artifact-free).
+//!
+//! Drives the software-pipelined codec path (`coordinator::pipeline`)
+//! through real topology wiring — including a replicated stage with
+//! round-robin deal/merge junctions — using a synthetic compute closure
+//! instead of PJRT executables. The contract under test: frames leave
+//! the deployment in FIFO order with correct values, whatever the
+//! per-replica timing jitter, and the chunk-parallel codec container
+//! works end to end through the pipeline.
+
+use std::sync::Arc;
+
+use defer::compress::Compression;
+use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
+use defer::metrics::ByteCounter;
+use defer::netem::{Link, LinkSpec};
+use defer::serial::{Codec, CodecRuntime, Serialization};
+use defer::threadpool::{pipe, CodecPool};
+use defer::topology::wiring::{build, TransportOptions, WorkerConns};
+use defer::topology::Topology;
+use defer::util::timer::SharedTimer;
+use defer::wire::{Message, MessageType};
+
+const ELEMS: usize = 64;
+
+/// Spawn one synthetic worker: a socket-reader thread feeding the real
+/// codec pipeline, with `compute` standing in for the fused executables.
+fn spawn_worker(
+    wc: WorkerConns,
+    codec: Codec,
+    rt: CodecRuntime,
+    pipelined: bool,
+) -> std::thread::JoinHandle<defer::Result<()>> {
+    std::thread::spawn(move || {
+        let WorkerConns {
+            view,
+            config: _config,
+            weights: _weights,
+            data_in,
+            data_out,
+        } = wc;
+        let (tx, rx) = pipe::<Message>(4);
+        let mut in_conn = data_in;
+        let reader = std::thread::spawn(move || loop {
+            match in_conn.recv(&ByteCounter::new()) {
+                Ok(msg) => {
+                    let stop = msg.msg_type == MessageType::Shutdown;
+                    if tx.send(msg).is_err() || stop {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        let replica = view.replica;
+        let ctx = PipelineCtx {
+            name: view.name.clone(),
+            codec,
+            rt,
+            overhead: SharedTimer::new(),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined,
+            pipe_depth: 4,
+            payload_pool: None,
+        };
+        let result = run_codec_pipeline(rx, data_out, ctx, move |values| {
+            // Jitter compute per frame & replica so a lost ordering
+            // guarantee would actually scramble arrivals.
+            let f = values[0] as u64;
+            std::thread::sleep(std::time::Duration::from_micros(
+                ((f * 7 + replica as u64 * 13) % 5) * 300,
+            ));
+            Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
+        });
+        reader.join().expect("reader thread");
+        result
+    })
+}
+
+/// Run `frames` frames through a topology of synthetic pipelined
+/// workers; assert FIFO order and transformed values at the dispatcher.
+fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: bool, frames: u64) {
+    let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
+    let topo = Topology::new(replicas, hop_links).unwrap();
+    let defer::topology::wiring::Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp: false,
+            base_port: None,
+            pipe_depth: 4,
+        },
+    )
+    .unwrap();
+    drop(control); // no configuration phase for synthetic workers
+    let mut to_first = to_first;
+    let mut from_last = from_last;
+    let stages = replicas.len();
+
+    let workers: Vec<_> = workers
+        .into_iter()
+        .map(|wc| spawn_worker(wc, codec, rt.clone(), pipelined))
+        .collect();
+
+    // Both ends of every data socket share one codec runtime (exactly
+    // like a real deployment, where the config ships to all roles).
+    let sender_rt = rt.clone();
+    let sender = std::thread::spawn(move || {
+        let link = Link::ideal();
+        let counter = ByteCounter::new();
+        let rt = sender_rt;
+        for frame in 0..frames {
+            let data = vec![frame as f32; ELEMS];
+            let (payload, mid) = codec.encode_frame(&data, &rt, None);
+            to_first
+                .send(
+                    &Message {
+                        msg_type: MessageType::Data,
+                        frame,
+                        serialized_len: mid as u64,
+                        count: ELEMS as u64,
+                        payload,
+                    },
+                    &link,
+                    &counter,
+                )
+                .unwrap();
+        }
+        to_first
+            .send(&Message::control(MessageType::Shutdown), &link, &counter)
+            .unwrap();
+    });
+
+    let counter = ByteCounter::new();
+    for f in 0..frames {
+        let msg = from_last.recv(&counter).unwrap();
+        assert_eq!(msg.msg_type, MessageType::Data);
+        assert_eq!(msg.frame, f, "frames out of order");
+        let values = codec
+            .decode_frame(
+                &msg.payload,
+                msg.serialized_len as usize,
+                msg.count as usize,
+                &rt,
+                None,
+            )
+            .unwrap();
+        // Each stage applies v -> 2v + 1.
+        let mut expect = f as f32;
+        for _ in 0..stages {
+            expect = expect * 2.0 + 1.0;
+        }
+        assert_eq!(values, vec![expect; ELEMS], "frame {f}");
+    }
+    assert_eq!(
+        from_last.recv(&counter).unwrap().msg_type,
+        MessageType::Shutdown
+    );
+    sender.join().unwrap();
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+    junctions.join().unwrap();
+}
+
+#[test]
+fn pipelined_single_stage_preserves_fifo() {
+    run_topology(
+        &[1],
+        Codec::new(Serialization::Binary, Compression::None),
+        CodecRuntime::serial(),
+        true,
+        50,
+    );
+}
+
+#[test]
+fn pipelined_replicated_stage_preserves_fifo() {
+    // The acceptance property: replication (round-robin deal + merge)
+    // plus per-replica pipelining still delivers frames in order.
+    run_topology(
+        &[3],
+        Codec::new(Serialization::Binary, Compression::None),
+        CodecRuntime::serial(),
+        true,
+        60,
+    );
+}
+
+#[test]
+fn pipelined_multi_stage_with_replication_preserves_fifo() {
+    run_topology(
+        &[1, 3, 2],
+        Codec::new(Serialization::Binary, Compression::None),
+        CodecRuntime::serial(),
+        true,
+        40,
+    );
+}
+
+#[test]
+fn chunk_parallel_container_flows_through_pipeline() {
+    // Chunked containers + shared codec pool + pipelining, end to end.
+    let pool = Arc::new(CodecPool::new(3));
+    let rt = CodecRuntime::chunked(16, Some(pool)).unwrap();
+    run_topology(
+        &[2],
+        Codec::new(Serialization::Binary, Compression::Lz4),
+        rt,
+        true,
+        30,
+    );
+}
+
+#[test]
+fn inline_mode_matches_pipelined_results() {
+    run_topology(
+        &[2],
+        Codec::new(Serialization::Binary, Compression::None),
+        CodecRuntime::serial(),
+        false,
+        30,
+    );
+}

@@ -64,8 +64,7 @@ fn spawn_node(engine: Engine) -> Harness {
             stats,
             ComputeOptions {
                 pipe_depth: 2,
-                compute_slowdown: 1.0,
-                emulated_mflops: 0.0,
+                ..ComputeOptions::default()
             },
         )
     });

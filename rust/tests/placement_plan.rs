@@ -3,7 +3,7 @@
 //! pure function, so these assert its output byte-for-byte.
 
 use defer::netem::LinkSpec;
-use defer::placement::{plan, Bottleneck, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{plan, Bottleneck, CodecCost, DeviceProfile, PlacementProblem, StageCost};
 
 fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
     (0..n)
@@ -38,6 +38,7 @@ fn bottleneck_stage_soaks_up_the_worker_budget() {
         worker_budget: 5,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![1, 3, 1]);
@@ -94,6 +95,7 @@ fn planner_is_deterministic() {
             worker_budget: 4,
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan(), LinkSpec::fast_edge()],
+            codec: CodecCost::default(),
         }
     };
     let first = plan(&mk(false)).unwrap();
@@ -125,6 +127,7 @@ fn heaviest_stage_gets_fastest_device() {
         worker_budget: 2,
         uplink: LinkSpec::ideal(),
         interconnect: vec![],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.stages[1].devices, vec!["fast".to_string()]);
@@ -147,6 +150,7 @@ fn uplink_bound_pipeline_is_left_unreplicated() {
         worker_budget: 8,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![1, 1]);
@@ -166,6 +170,7 @@ fn interior_hops_pick_fastest_candidate() {
         worker_budget: 2,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::wifi(), LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     // 1 MiB over gigabit (~8 ms + 0.2 ms) beats wifi (~168 ms + 3.5 ms).
@@ -185,6 +190,7 @@ fn budget_spreads_across_equal_bottlenecks() {
         worker_budget: 6,
         uplink: LinkSpec::gigabit_lan(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![3, 3]);
@@ -201,6 +207,7 @@ fn render_golden() {
         worker_budget: 3,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let placed = plan(&p).unwrap();
     // wifi uplink: 40 kB * 8 / 50 Mbps = 6.4 ms + 3 ms lat + 0.5 ms E[jitter].

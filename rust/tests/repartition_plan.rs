@@ -3,7 +3,7 @@
 //! artifacts, no RNG, no clocks — the planner is a pure function.
 
 use defer::netem::LinkSpec;
-use defer::placement::{self, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{self, CodecCost, DeviceProfile, PlacementProblem, StageCost};
 use defer::repartition::{plan, PartCost, RepartitionProblem};
 
 fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
@@ -40,6 +40,7 @@ fn acceptance_problem(budget: usize) -> RepartitionProblem {
         device_memory: Some(8_000),
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     }
 }
 
@@ -89,6 +90,7 @@ fn repartition_beats_coarse_uniform_chain_in_the_model() {
         worker_budget: 2,
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     })
     .unwrap();
     let speedup = rp.predicted_throughput() / coarse.predicted_throughput;
@@ -147,6 +149,7 @@ fn uplink_bound_problem_stays_lean() {
         device_memory: Some(1_000),
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
     };
     let rp = plan(&p).unwrap();
     assert_eq!(rp.cuts, vec![0, 1, 2]);
