@@ -49,6 +49,7 @@ fn synthetic_problem(budget: usize) -> PlacementProblem {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     }
 }
 
@@ -129,6 +130,7 @@ fn main() {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
+            relay_junctions: false,
         })
         .expect("joint plan");
         let reps: Vec<String> = joint

@@ -126,6 +126,11 @@ pub struct DeferConfig {
     /// instead of the calibration table. Plans stop being byte-stable
     /// across machines — off by default.
     pub codec_measure: bool,
+    /// Restore the legacy coordinator-side junction relay threads for
+    /// replicated stage boundaries (and the relay-hop planner cost
+    /// model) instead of the worker-owned deal/merge data plane. A/B
+    /// escape hatch — off by default.
+    pub relay_junctions: bool,
 }
 
 impl Default for DeferConfig {
@@ -155,6 +160,7 @@ impl Default for DeferConfig {
             codec_pipeline: true,
             codec_gbps: None,
             codec_measure: false,
+            relay_junctions: false,
         }
     }
 }
@@ -258,6 +264,9 @@ impl DeferConfig {
         if let Some(x) = obj.get("codec_measure") {
             cfg.codec_measure = matches!(x, Json::Bool(true));
         }
+        if let Some(x) = obj.get("relay_junctions") {
+            cfg.relay_junctions = matches!(x, Json::Bool(true));
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -341,6 +350,9 @@ impl DeferConfig {
         }
         if args.has("codec-measure") {
             self.codec_measure = true;
+        }
+        if args.has("relay-junctions") {
+            self.relay_junctions = true;
         }
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
@@ -653,6 +665,22 @@ mod tests {
         assert_eq!(cfg.codec_threads, 8);
         assert!(!cfg.codec_pipeline);
         assert_eq!(cfg.codec_gbps, Some(0.0));
+    }
+
+    #[test]
+    fn relay_junctions_surface_round_trip() {
+        let cfg = DeferConfig::from_json_str(r#"{"relay_junctions": true}"#).unwrap();
+        assert!(cfg.relay_junctions);
+        // CLI spelling.
+        let raw: Vec<String> = ["run", "--relay-junctions"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &["tcp", "relay-junctions"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.relay_junctions);
+        // The default data plane is worker-owned.
+        assert!(!DeferConfig::default().relay_junctions);
     }
 
     #[test]

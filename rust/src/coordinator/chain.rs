@@ -16,8 +16,12 @@
 //! * **wire** — hand the topology to [`crate::topology::wiring`], which
 //!   establishes every connection for either transport (in-process byte
 //!   pipes, or TCP loopback with ephemeral ports — the paper's CORE
-//!   deployment on one host) and spawns deal/merge junctions for
-//!   replicated stage boundaries.
+//!   deployment on one host). Replicated stage boundaries are
+//!   worker-owned: each replica merges from its predecessor set and
+//!   deals to its successor set directly, so no relay thread (and on
+//!   real multi-host deployments, no extra network crossing) sits
+//!   between stages. `--relay-junctions` restores the legacy
+//!   coordinator-side relay threads for A/B comparison.
 //! * **spawn** — one thread per worker replica (its own "device"), each
 //!   owning an independent instance of its uplink's [`Link`] shaper
 //!   (replication adds physical links, not shared capacity).
@@ -184,6 +188,7 @@ impl ChainRunner {
                 tcp: self.cfg.tcp,
                 base_port: self.cfg.base_port,
                 pipe_depth: self.cfg.pipe_depth,
+                relay_junctions: self.cfg.relay_junctions,
             },
         )?;
 
@@ -232,7 +237,14 @@ impl ChainRunner {
                 link: Arc::new(Link::new(topo.hop_link(v.stage))),
             })
             .collect();
-        configure_nodes(&self.stages, &mut control, &assignments, &self.cfg.codecs, &dstats)?;
+        configure_nodes(
+            &self.stages,
+            &mut control,
+            &assignments,
+            &self.cfg.codecs,
+            &codec_rt,
+            &dstats,
+        )?;
         drop(control);
 
         // ---- distributed inference step ----

@@ -12,12 +12,20 @@
 //!
 //! The inference loop then runs as two threads connected by a bounded pipe
 //! (the paper's THREAD-1 / THREAD-2 "to avoid inference bottleneck"):
-//! the reader thread pulls framed activations off the incoming socket and
-//! pipes them to the compute thread, which deserializes + decompresses,
-//! runs the fused partitions back to back in process memory (inner
-//! boundaries never touch a codec or the network), re-serializes +
-//! compresses the final output, and relays to the next hop. FIFO order
-//! is preserved end to end.
+//! the reader thread pulls framed activations off the incoming
+//! connection set and pipes them to the compute thread, which
+//! deserializes + decompresses, runs the fused partitions back to back
+//! in process memory (inner boundaries never touch a codec or the
+//! network), re-serializes + compresses the final output, and deals to
+//! the next hop. FIFO order is preserved end to end.
+//!
+//! The node **owns its boundary fan**: `data_in` is a
+//! [`MergeReceiver`](crate::topology::wiring::MergeReceiver) holding one
+//! FIFO connection per predecessor replica (restoring global frame
+//! order by schedule, no relay thread), and the pipeline's egress is a
+//! [`DealSender`](crate::topology::wiring::DealSender) rotating over the
+//! successor replicas. Unreplicated neighbours degrade both to plain
+//! single connections — the paper's chain node exactly.
 
 use std::sync::Arc;
 
@@ -182,7 +190,8 @@ pub struct ComputeOptions {
     pub compute_slowdown: f64,
     /// Deterministic device-speed emulation in MFLOPS (0 = off).
     pub emulated_mflops: f64,
-    /// Data-path codec runtime (chunking + shared worker pool).
+    /// Shared codec runtime (chunking + worker pool) — used by the data
+    /// path and the config-phase weights exchange alike.
     pub codec_rt: CodecRuntime,
     /// Software-pipeline the codec phases (decode | compute | encode on
     /// separate threads); `false` = the paper's inline loop.
@@ -251,10 +260,15 @@ pub fn run_compute_node(
             view.name, w_msg.msg_type
         )));
     }
-    let flat = codecs.weights.decode_f32s(
+    // The weights exchange rides the same chunk-parallel codec runtime
+    // as the data path (the dispatcher encodes with the identical
+    // runtime), so large fused-stage weight blobs no longer serialize
+    // on the legacy inline path.
+    let flat = codecs.weights.decode_frame(
         &w_msg.payload,
         w_msg.serialized_len as usize,
         w_msg.count as usize,
+        &opts.codec_rt,
         Some(&stats.meter.codec),
     )?;
     // The stage's weights arrive as one concatenated array, partition
@@ -287,11 +301,13 @@ pub fn run_compute_node(
     drop(weights_conn);
 
     // ---------------- distributed inference step ----------------
-    // THREAD-1: socket reader -> pipe; the codec pipeline
-    // (`run_codec_pipeline`) then runs decode | compute | encode either
-    // inline on this thread (the paper's loop) or software-pipelined on
-    // three threads so frame k+1 decodes while frame k computes and
-    // frame k-1 encodes/transmits.
+    // THREAD-1: boundary reader -> pipe. The merge receiver restores
+    // global FIFO order across the predecessor replicas by schedule;
+    // the codec pipeline (`run_codec_pipeline`) then runs
+    // decode | compute | encode either inline on this thread (the
+    // paper's loop) or software-pipelined on three threads so frame k+1
+    // decodes while frame k computes and frame k-1 encodes/transmits,
+    // with the encode phase dealing to the successor replicas.
     let (tx, rx) = pipe::<Message>(opts.pipe_depth);
     let payload_pool = Arc::new(BufPool::new(opts.pipe_depth + 2));
     let mut pool = WorkerPool::new();

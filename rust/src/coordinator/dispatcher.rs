@@ -11,10 +11,15 @@
 //! shaped come from its [`WorkerAssignment`] — replicated stages simply
 //! list the same stage index more than once.
 //!
-//! Distributed inference step: pump serialized input frames to the first
-//! node and collect results from the last node, FIFO. Sender and receiver
-//! run on separate threads so the pipeline stays full (the chain applies
-//! backpressure through its bounded links).
+//! Distributed inference step: pump serialized input frames into the
+//! stage-0 replica set and collect results from the last stage's
+//! replica set, FIFO. The dispatcher owns its boundary fan like any
+//! other node: it **deals** frames round-robin straight to the stage-0
+//! replicas through a [`DealSender`] and **merges** results from the
+//! last-stage replicas through a [`MergeReceiver`] — no junction relay
+//! in either direction. Sender and receiver run on separate threads so
+//! the pipeline stays full (the chain applies backpressure through its
+//! bounded links).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -29,6 +34,7 @@ use crate::netem::Link;
 use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
+use crate::topology::wiring::{DealSender, MergeReceiver};
 use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
@@ -77,11 +83,16 @@ pub struct WorkerAssignment {
 /// `stages` are the pipeline's fused stages (single-partition in the
 /// paper's chain); `conns[i]` is the (config, weights) connection pair
 /// for the worker described by `assignments[i]` (stage-major order).
+/// `rt` is the deployment's shared codec runtime: the weights payloads
+/// travel the same chunk-parallel path as data frames, so large
+/// fused-stage weight blobs encode concurrently instead of on the
+/// legacy inline path.
 pub fn configure_nodes(
     stages: &[StageSpec],
     conns: &mut [(Conn, Conn)],
     assignments: &[WorkerAssignment],
     codecs: &CodecConfig,
+    rt: &CodecRuntime,
     stats: &DispatcherStats,
 ) -> Result<()> {
     let t0 = Instant::now();
@@ -101,7 +112,7 @@ pub fn configure_nodes(
             ))
         })?;
         send_architecture(stage, &a.next_hop, config_conn, codecs, &a.link, stats)?;
-        send_weights(stage, weights_conn, codecs, &a.link, stats)?;
+        send_weights(stage, weights_conn, codecs, rt, &a.link, stats)?;
     }
     // Wait for every node to instantiate its model (paper: the model socket
     // waits for weights, then builds the TensorFlow model).
@@ -155,6 +166,7 @@ fn send_weights(
     stage: &StageSpec,
     conn: &mut Conn,
     codecs: &CodecConfig,
+    rt: &CodecRuntime,
     link: &Link,
     stats: &DispatcherStats,
 ) -> Result<()> {
@@ -167,7 +179,10 @@ fn send_weights(
             flat.extend(arr);
         }
     }
-    let (payload, mid) = codecs.weights.encode_f32s(&flat, Some(&stats.meter.codec));
+    // Chunk-parallel when the deployment runs chunked (byte-identical
+    // legacy payload otherwise) — the receiving node decodes with the
+    // same shared runtime.
+    let (payload, mid) = codecs.weights.encode_frame(&flat, rt, Some(&stats.meter.codec));
     let msg = Message {
         msg_type: MessageType::Weights,
         frame: 0,
@@ -205,13 +220,14 @@ impl Default for InferenceOptions {
     }
 }
 
-/// Send one encoded data frame: stamp its send time, push it through
-/// the shaped uplink with byte/energy accounting, and recycle the
-/// payload buffer. Shared by the pipelined and inline sender paths so
-/// the accounting cannot diverge between them.
+/// Send one encoded data frame: stamp its send time, deal it to the
+/// stage-0 replica the round-robin schedule owns (through the shaped
+/// uplink with byte/energy accounting), and recycle the payload buffer.
+/// Shared by the pipelined and inline sender paths so the accounting
+/// cannot diverge between them.
 #[allow(clippy::too_many_arguments)]
 fn send_data_frame(
-    to_first: &mut Conn,
+    to_first: &mut DealSender,
     frame: u64,
     payload: Vec<u8>,
     serialized_len: usize,
@@ -229,7 +245,7 @@ fn send_data_frame(
         payload,
     };
     send_times.lock().unwrap().insert(frame, Instant::now());
-    to_first.send(&msg, link, &stats.data_tx)?;
+    to_first.send_data(&msg, link, &stats.data_tx)?;
     stats.meter.tx_bytes.add(msg.wire_size());
     if let Some(p) = rt.buffers() {
         p.put(msg.payload);
@@ -245,8 +261,8 @@ fn send_data_frame(
 pub fn run_inference(
     input: Tensor,
     frames: u64,
-    mut to_first: Conn,
-    mut from_last: Conn,
+    mut to_first: DealSender,
+    mut from_last: MergeReceiver,
     opts: InferenceOptions,
     link: Arc<Link>,
     stats: Arc<DispatcherStats>,
@@ -290,12 +306,9 @@ pub fn run_inference(
                         &rt,
                     )?;
                 }
-                // FIFO: shutdown travels behind the last frame.
-                to_first.send(
-                    &Message::control(MessageType::Shutdown),
-                    &link,
-                    &stats.data_tx,
-                )?;
+                // FIFO: shutdown travels behind the last frame,
+                // broadcast to every stage-0 replica.
+                to_first.broadcast_shutdown(&link, &stats.data_tx)?;
                 Ok(())
             });
         }
@@ -337,12 +350,9 @@ pub fn run_inference(
                     &rt,
                 )?;
             }
-            // FIFO: shutdown travels behind the last frame.
-            to_first.send(
-                &Message::control(MessageType::Shutdown),
-                &link,
-                &stats.data_tx,
-            )?;
+            // FIFO: shutdown travels behind the last frame, broadcast
+            // to every stage-0 replica.
+            to_first.broadcast_shutdown(&link, &stats.data_tx)?;
             Ok(())
         });
     }

@@ -9,8 +9,13 @@
 //! `max(decode, compute, encode + egress)` at steady state. FIFO order
 //! is preserved end to end: each phase is a single thread consuming a
 //! FIFO pipe, so frames cannot overtake inside a replica, and the
-//! junction merge (see [`crate::topology::wiring`]) already preserves
-//! order across replicas.
+//! worker-owned deal/merge schedules (see [`crate::topology::wiring`])
+//! preserve order across replicas.
+//!
+//! The encode stage writes through a [`DealSender`] — the replica's own
+//! round-robin fan-out over its successor set (a single connection for
+//! unreplicated successors). There is no relay thread between stages:
+//! the pipeline's last phase *is* the boundary deal.
 //!
 //! [`run_codec_pipeline`] is generic over the compute step (a closure),
 //! which keeps it independent of PJRT — the order-preservation and
@@ -26,11 +31,10 @@ use crate::metrics::ByteCounter;
 use crate::netem::Link;
 use crate::serial::{Codec, CodecRuntime};
 use crate::threadpool::{pipe, WorkerPool};
+use crate::topology::wiring::DealSender;
 use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
 use crate::wire::{Message, MessageType};
-
-use super::transport::Conn;
 
 /// Everything the pipeline needs besides the connections and compute.
 pub struct PipelineCtx {
@@ -78,7 +82,7 @@ fn describe(stage: &str, e: &DeferError) -> DeferError {
 /// is surfaced by the caller joining its pool), or with the first error.
 pub fn run_codec_pipeline<F>(
     rx: crate::threadpool::PipeReceiver<Message>,
-    mut out_conn: Conn,
+    mut out: DealSender,
     ctx: PipelineCtx,
     mut compute: F,
 ) -> Result<()>
@@ -90,7 +94,7 @@ where
         while let Some(msg) = rx.recv() {
             match msg.msg_type {
                 MessageType::Shutdown => {
-                    out_conn.send(&msg, &ctx.out_link, &ctx.data_tx)?;
+                    out.broadcast_shutdown(&ctx.out_link, &ctx.data_tx)?;
                     return Ok(());
                 }
                 MessageType::Data => {
@@ -115,7 +119,7 @@ where
                         count: output.len() as u64,
                         payload: wire,
                     };
-                    out_conn.send(&out_msg, &ctx.out_link, &ctx.data_tx)?;
+                    out.send_data(&out_msg, &ctx.out_link, &ctx.data_tx)?;
                     if let Some(p) = &ctx.payload_pool {
                         p.put(out_msg.payload);
                     }
@@ -204,11 +208,7 @@ where
                 while let Some(step) = enc_rx.recv() {
                     match step {
                         Step::Shutdown => {
-                            out_conn.send(
-                                &Message::control(MessageType::Shutdown),
-                                &out_link,
-                                &data_tx,
-                            )?;
+                            out.broadcast_shutdown(&out_link, &data_tx)?;
                             return Ok(());
                         }
                         Step::Frame { frame, data } => {
@@ -221,7 +221,7 @@ where
                                 count: data.len() as u64,
                                 payload: wire,
                             };
-                            out_conn.send(&out_msg, &out_link, &data_tx)?;
+                            out.send_data(&out_msg, &out_link, &data_tx)?;
                             if let Some(p) = &payload_pool {
                                 p.put(out_msg.payload);
                             }
@@ -292,8 +292,13 @@ fn err_slot_store(slot: &Mutex<Option<DeferError>>, e: DeferError) {
 mod tests {
     use super::*;
     use crate::compress::Compression;
+    use crate::coordinator::transport::Conn;
     use crate::serial::Serialization;
     use crate::threadpool::PipeSender;
+
+    fn sink(conn: Conn) -> DealSender {
+        DealSender::single(conn, "test sink")
+    }
 
     fn ctx(name: &str, pipelined: bool) -> PipelineCtx {
         PipelineCtx {
@@ -336,8 +341,10 @@ mod tests {
             let frames_counter = c.frames.clone();
             feed_frames(&tx, codec, 10);
             drop(tx);
-            run_codec_pipeline(rx, out_a, c, |v| Ok(v.iter().map(|x| x * 2.0).collect()))
-                .unwrap();
+            run_codec_pipeline(rx, sink(out_a), c, |v| {
+                Ok(v.iter().map(|x| x * 2.0).collect())
+            })
+            .unwrap();
             let counter = ByteCounter::new();
             for f in 0..10u64 {
                 let m = out_b.recv(&counter).unwrap();
@@ -363,7 +370,7 @@ mod tests {
             let c = ctx("t", pipelined);
             feed_frames(&tx, c.codec, 3);
             drop(tx);
-            let err = run_codec_pipeline(rx, out_a, c, |_| {
+            let err = run_codec_pipeline(rx, sink(out_a), c, |_| {
                 Err(DeferError::Runtime("synthetic compute failure".into()))
             })
             .unwrap_err();
@@ -390,7 +397,7 @@ mod tests {
             })
             .unwrap();
             drop(tx);
-            let err = run_codec_pipeline(rx, out_a, c, Ok).unwrap_err();
+            let err = run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap_err();
             assert!(
                 format!("{err}").contains("ragged"),
                 "pipelined={pipelined}: {err}"
@@ -405,7 +412,7 @@ mod tests {
         let c = ctx("stage7", true);
         tx.send(Message::control(MessageType::Ready)).unwrap();
         drop(tx);
-        let err = run_codec_pipeline(rx, out_a, c, Ok).unwrap_err();
+        let err = run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("stage7") && msg.contains("Ready"), "{msg}");
     }
@@ -417,7 +424,7 @@ mod tests {
             let (out_a, _out_b) = Conn::local_pair(8);
             let c = ctx("t", pipelined);
             drop(tx); // reader died without sending anything
-            run_codec_pipeline(rx, out_a, c, Ok).unwrap();
+            run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap();
         }
     }
 }

@@ -42,6 +42,7 @@ const SWITCHES: &[&str] = &[
     "auto-partition",
     "inline-codec",
     "codec-measure",
+    "relay-junctions",
 ];
 
 fn usage() -> &'static str {
@@ -98,6 +99,10 @@ RUN OPTIONS:
                            built-in per-codec calibration table)
   --codec-measure          calibrate the planner codec rate with a live
                            micro-benchmark instead of the built-in table
+  --relay-junctions        legacy data plane: route replicated stage
+                           boundaries through coordinator-side relay
+                           threads (and price the extra relay hop in the
+                           planners) instead of worker-owned deal/merge
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
   --slowdown F             legacy multiplicative compute emulation (>=1)

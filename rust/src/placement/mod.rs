@@ -36,6 +36,20 @@
 //! Pipeline throughput is `1 / max(d, max_i s_i)`. Jitter enters as its
 //! expectation so the plan stays deterministic.
 //!
+//! **Relay pricing.** The runtime's default data plane is worker-owned:
+//! a replicated boundary is a direct replica-to-replica crossing, which
+//! is exactly what the egress term above prices. Under the legacy
+//! `--relay-junctions` wiring every frame crossing a replicated
+//! *interior* boundary detours through a relay thread in the
+//! coordinator process — on a real multi-host deployment that is a
+//! second physical crossing of the hop (sender host → dispatcher host →
+//! receiver host). With [`PlacementProblem::relay_junctions`] set the
+//! model charges that hidden hop: interior-boundary egress doubles
+//! whenever either side of the boundary is replicated. Hop 0 and the
+//! return hop never double (the relay is co-located with the
+//! dispatcher), and the default worker-owned model is byte-identical to
+//! the pre-relay-pricing goldens.
+//!
 //! **Codec time** (ROADMAP item (c)) is charged through a [`CodecCost`]:
 //! per frame a replica decodes its stage's input bytes and encodes its
 //! output bytes at the configured secs/byte rates. With the runtime's
@@ -274,6 +288,11 @@ pub struct PlacementProblem {
     /// Codec service rates charged per frame ([`CodecCost::ZERO`] = the
     /// pre-calibration model).
     pub codec: CodecCost,
+    /// Price the legacy junction-relay data plane: interior-boundary
+    /// egress doubles when either side of the boundary is replicated
+    /// (the frame detours through the coordinator host). `false` = the
+    /// worker-owned data plane, direct replica-to-replica egress.
+    pub relay_junctions: bool,
 }
 
 impl PlacementProblem {
@@ -302,6 +321,7 @@ impl PlacementProblem {
             uplink,
             interconnect,
             codec: codec_cost_from_config(cfg),
+            relay_junctions: cfg.relay_junctions,
         })
     }
 }
@@ -394,8 +414,12 @@ pub struct StagePlacement {
     /// Per-replica codec time per frame (decode input + encode output);
     /// zero under the pre-calibration model.
     pub codec: Duration,
-    /// Per-replica shaped egress write per frame.
+    /// Per-replica shaped egress write per frame. Under the relay model
+    /// this includes the junction detour (see `relayed`).
     pub egress: Duration,
+    /// The egress was doubled by the legacy relay model (replicated
+    /// interior boundary under `relay_junctions`).
+    pub relayed: bool,
     /// Effective stage occupancy per frame: the per-replica busy time
     /// (inline: `codec + compute + egress`; pipelined:
     /// `max(decode, compute, encode + egress)`) divided by `R`.
@@ -463,9 +487,13 @@ impl PlacementPlan {
             } else {
                 String::new()
             };
+            // The relay marker appears only under the legacy relay cost
+            // model, keeping worker-owned renders byte-identical to the
+            // historical goldens.
+            let relay = if st.relayed { " (+relay)" } else { "" };
             out.push_str(&format!(
-                "  stage {i}: x{} on [{}] via {}, compute {:.3} ms{codec} + egress {:.3} ms \
-                 -> service {:.3} ms/frame{}\n",
+                "  stage {i}: x{} on [{}] via {}{relay}, compute {:.3} ms{codec} + \
+                 egress {:.3} ms -> service {:.3} ms/frame{}\n",
                 st.replicas,
                 st.devices.join(", "),
                 self.hop_links[i + 1].label(),
@@ -546,7 +574,15 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             .map(|d| d.flops_per_sec())
             .fold(f64::INFINITY, f64::min);
         let compute = p.stages[i].flops as f64 / f_min;
-        let egress = transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
+        // Legacy relay model: a replicated *interior* boundary detours
+        // through the coordinator host, so the frame crosses the hop
+        // twice (sender -> relay, relay -> receiver). The uplink and
+        // return hops never double — the relay is co-located with the
+        // dispatcher. Worker-owned wiring (the default) is one direct
+        // crossing.
+        let relayed = p.relay_junctions && i + 1 < s && (replicas[i] > 1 || replicas[i + 1] > 1);
+        let hop_crossings = if relayed { 2.0 } else { 1.0 };
+        let egress = hop_crossings * transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
         // Codec charges (zero under the pre-calibration model): a
         // replica decodes its input and encodes its output every frame.
         let dec = p.codec.dec_secs_per_byte * p.stages[i].input_bytes as f64;
@@ -568,6 +604,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             compute: Duration::from_secs_f64(compute),
             codec: Duration::from_secs_f64(dec + enc),
             egress: Duration::from_secs_f64(egress),
+            relayed,
             service: Duration::from_secs_f64(service),
         });
     }
@@ -742,6 +779,7 @@ mod tests {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
+            relay_junctions: false,
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1, 1]);
@@ -774,6 +812,7 @@ mod tests {
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
             codec: CodecCost::default(),
+            relay_junctions: false,
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1]);
@@ -796,6 +835,7 @@ mod tests {
             uplink: LinkSpec::gigabit_lan(),
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec,
+            relay_junctions: false,
         };
         let without = plan(&mk(CodecCost::ZERO)).unwrap();
         assert_eq!(without.bottleneck, Bottleneck::Uplink);
@@ -823,6 +863,7 @@ mod tests {
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
             codec: CodecCost::from_gbps(0.1, pipelined),
+            relay_junctions: false,
         };
         let inline = plan(&mk(false)).unwrap();
         let pipelined = plan(&mk(true)).unwrap();
@@ -851,6 +892,50 @@ mod tests {
     }
 
     #[test]
+    fn relay_model_charges_the_hidden_interior_hop() {
+        // Two stages, big inter-stage boundary, stage 0 replicated:
+        // under the legacy relay wiring the boundary detours through
+        // the coordinator host, so its egress must double — and only
+        // there (uplink and return hops host the relay locally).
+        let mk = |relay: bool| PlacementProblem {
+            stages: vec![
+                StageCost {
+                    flops: 200_000_000,
+                    input_bytes: 1_000,
+                    output_bytes: 5_000_000,
+                },
+                StageCost {
+                    flops: 10_000_000,
+                    input_bytes: 5_000_000,
+                    output_bytes: 1_000,
+                },
+            ],
+            devices: homogeneous(3, 100.0),
+            worker_budget: 3,
+            uplink: LinkSpec::gigabit_lan(),
+            interconnect: vec![LinkSpec::gigabit_lan()],
+            codec: CodecCost::default(),
+            relay_junctions: relay,
+        };
+        let direct = plan(&mk(false)).unwrap();
+        let relay = plan(&mk(true)).unwrap();
+        assert_eq!(direct.replica_counts(), vec![2, 1]);
+        assert!(!direct.stages[0].relayed);
+        assert!(relay.stages[0].relayed, "replicated boundary not relayed");
+        assert!(
+            !relay.stages[1].relayed,
+            "return hop must not charge a relay"
+        );
+        let e_direct = direct.stages[0].egress.as_secs_f64();
+        let e_relay = relay.stages[0].egress.as_secs_f64();
+        // Durations quantize to whole nanoseconds; allow that much slack.
+        assert!((e_relay - 2.0 * e_direct).abs() < 1e-8, "{e_relay} vs {e_direct}");
+        assert!(relay.predicted_throughput <= direct.predicted_throughput);
+        assert!(relay.render().contains("(+relay)"), "{}", relay.render());
+        assert!(!direct.render().contains("(+relay)"), "{}", direct.render());
+    }
+
+    #[test]
     fn budget_and_pool_validated() {
         let stages = vec![StageCost {
             flops: 1,
@@ -864,6 +949,7 @@ mod tests {
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
             codec: CodecCost::default(),
+            relay_junctions: false,
         })
         .unwrap_err();
         assert!(format!("{err}").contains("budget"));
@@ -874,6 +960,7 @@ mod tests {
             uplink: LinkSpec::ideal(),
             interconnect: vec![],
             codec: CodecCost::default(),
+            relay_junctions: false,
         })
         .unwrap_err();
         assert!(format!("{err}").contains("devices"));

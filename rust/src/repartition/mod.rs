@@ -115,6 +115,14 @@ pub struct RepartitionProblem {
     /// [`crate::placement`] so both passes price codec time identically
     /// ([`CodecCost::ZERO`] = the pre-calibration model).
     pub codec: CodecCost,
+    /// Price the legacy junction-relay data plane (see
+    /// [`PlacementProblem::relay_junctions`]). The DP search itself
+    /// stays relay-blind — relay pricing depends on the replica counts
+    /// of *both* boundary sides, which the per-stage transitions do not
+    /// see — but the final [`crate::placement::plan`] re-pricing of the
+    /// chosen cuts charges the relay hop exactly, so the emitted plan
+    /// (and its render) is honest about the legacy wiring.
+    pub relay_junctions: bool,
 }
 
 impl RepartitionProblem {
@@ -152,6 +160,7 @@ impl RepartitionProblem {
             uplink,
             interconnect,
             codec: placement::codec_cost_from_config(cfg),
+            relay_junctions: cfg.relay_junctions,
         })
     }
 }
@@ -437,6 +446,7 @@ pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
         uplink: p.uplink,
         interconnect: p.interconnect.clone(),
         codec: p.codec,
+        relay_junctions: p.relay_junctions,
     })?;
 
     Ok(RepartitionPlan {
@@ -483,6 +493,7 @@ mod tests {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
+            relay_junctions: false,
         }
     }
 

@@ -14,14 +14,20 @@
 //! magic        0x4446434B ("DFCK")
 //! chunk_count  n
 //! chunk_elems  elements per chunk (last chunk may be short)
-//! n x { wire_len | serialized_len }     per-chunk header
+//! n x { wire_len | serialized_len | crc32 }   per-chunk header
 //! n x chunk payload bytes               each exactly a Codec::encode_f32s output
 //! ```
+//!
+//! Each chunk header carries a CRC-32 ([`crate::wire::crc32`]) of its
+//! payload bytes, so a corrupted chunk is detected and reported **by
+//! chunk index** before any decode work runs, instead of surfacing as
+//! an opaque whole-frame codec failure (the outer wire CRC says *that*
+//! the frame is bad; the per-chunk CRC says *where*).
 //!
 //! With `chunk_elems >= count` the container holds exactly one chunk
 //! whose payload bytes are byte-identical to today's single-buffer
 //! [`Codec::encode_f32s`] output — the chunked path *degrades to* the
-//! legacy layout plus a 20-byte container header. The outer wire header
+//! legacy layout plus a 24-byte container header. The outer wire header
 //! ([`crate::wire`]) still carries the summed `serialized_len`, so
 //! payload accounting is unchanged.
 //!
@@ -46,8 +52,8 @@ use crate::util::timer::SharedTimer;
 pub const CHUNK_MAGIC: u32 = 0x4446_434B;
 /// Fixed container header: magic + chunk_count + chunk_elems.
 pub const CONTAINER_HEADER: usize = 12;
-/// Per-chunk header: wire_len + serialized_len.
-pub const PER_CHUNK_HEADER: usize = 8;
+/// Per-chunk header: wire_len + serialized_len + payload crc32.
+pub const PER_CHUNK_HEADER: usize = 12;
 /// Default chunk size: 128 Ki f32 values = 512 KiB raw — the paper's
 /// 512 kB transfer-chunk granularity applied to the codec.
 pub const DEFAULT_CHUNK_ELEMS: usize = 128 * 1024;
@@ -168,10 +174,15 @@ pub fn encode_frame(
     debug_assert!(rt.is_chunked());
     let work = || {
         let chunks: Vec<&[f32]> = data.chunks(rt.chunk_elems.max(1)).collect();
-        let encoded: Vec<(Vec<u8>, usize)> = par_map(rt.pool(), chunks, |_, chunk| {
-            codec.encode_f32s_pooled(chunk, rt.buffers(), None)
+        // The per-chunk CRC rides the same parallel pass as the encode
+        // itself — a serial CRC sweep afterwards would floor large-frame
+        // encode throughput at single-thread CRC speed.
+        let encoded: Vec<(Vec<u8>, usize, u32)> = par_map(rt.pool(), chunks, |_, chunk| {
+            let (wire, mid) = codec.encode_f32s_pooled(chunk, rt.buffers(), None);
+            let crc = crate::wire::crc32::crc32(&wire);
+            (wire, mid, crc)
         });
-        let body: usize = encoded.iter().map(|(w, _)| w.len()).sum();
+        let body: usize = encoded.iter().map(|(w, _, _)| w.len()).sum();
         let mut out = rt.buffers().map(|p| p.take()).unwrap_or_default();
         out.clear();
         out.reserve(CONTAINER_HEADER + encoded.len() * PER_CHUNK_HEADER + body);
@@ -179,12 +190,13 @@ pub fn encode_frame(
         out.extend_from_slice(&(encoded.len() as u32).to_le_bytes());
         out.extend_from_slice(&(rt.chunk_elems as u32).to_le_bytes());
         let mut mid_total = 0usize;
-        for (chunk_wire, mid) in &encoded {
+        for (chunk_wire, mid, crc) in &encoded {
             out.extend_from_slice(&(chunk_wire.len() as u32).to_le_bytes());
             out.extend_from_slice(&(*mid as u32).to_le_bytes());
+            out.extend_from_slice(&crc.to_le_bytes());
             mid_total += *mid;
         }
-        for (chunk_wire, _) in encoded {
+        for (chunk_wire, _, _) in encoded {
             out.extend_from_slice(&chunk_wire);
             if let Some(p) = rt.buffers() {
                 p.put(chunk_wire);
@@ -249,6 +261,7 @@ pub fn decode_frame(
             let hdr = CONTAINER_HEADER + i * PER_CHUNK_HEADER;
             let wire_len = read_u32(wire, hdr);
             let chunk_serialized = read_u32(wire, hdr + 4);
+            let chunk_crc = read_u32(wire, hdr + 8) as u32;
             if wire.len() < off + wire_len {
                 return Err(err(format!("chunk {i} truncated")));
             }
@@ -257,7 +270,12 @@ pub fn decode_frame(
             } else {
                 chunk_elems
             };
-            parts.push((&wire[off..off + wire_len], chunk_serialized, chunk_count));
+            parts.push((
+                &wire[off..off + wire_len],
+                chunk_serialized,
+                chunk_count,
+                chunk_crc,
+            ));
             off += wire_len;
             sum_serialized += chunk_serialized;
         }
@@ -270,8 +288,18 @@ pub fn decode_frame(
                  wire header says {serialized_len}"
             )));
         }
+        // Per-chunk integrity first, decode second — a corrupted chunk
+        // is reported by index (the outer wire CRC only says the frame
+        // is bad somewhere), and the codec never chews on garbage.
         let decoded: Vec<Result<Vec<f32>>> =
-            par_map(rt.pool(), parts, |_, (bytes, mid, chunk_count)| {
+            par_map(rt.pool(), parts, |i, (bytes, mid, chunk_count, expect)| {
+                let actual = crate::wire::crc32::crc32(bytes);
+                if actual != expect {
+                    return Err(DeferError::Codec(format!(
+                        "chunk container: chunk {i} of {n_chunks} corrupt \
+                         (crc {actual:#010x} != {expect:#010x})"
+                    )));
+                }
                 codec.decode_f32s(bytes, mid, chunk_count, None)
             });
         let mut out = Vec::with_capacity(count);
@@ -378,6 +406,29 @@ mod tests {
         let mut noisy = wire;
         noisy.push(0);
         assert!(decode_frame(&codec, &noisy, mid, 600, &rt, None).is_err());
+    }
+
+    #[test]
+    fn corrupt_chunk_is_named_by_index() {
+        // 600 values at 256/chunk = 3 chunks. Flip one payload byte in
+        // the middle chunk: the per-chunk CRC must catch it and name
+        // chunk 1, not fail the whole frame opaquely.
+        let data = Rng::new(96).normal_vec(600);
+        let codec = Codec::new(Serialization::Binary, crate::compress::Compression::None);
+        let rt = rt(256, 0);
+        let (mut wire, mid) = encode_frame(&codec, &data, &rt, None);
+        let wire_len0 =
+            u32::from_le_bytes(wire[CONTAINER_HEADER..CONTAINER_HEADER + 4].try_into().unwrap())
+                as usize;
+        let payloads = CONTAINER_HEADER + 3 * PER_CHUNK_HEADER;
+        wire[payloads + wire_len0 + 2] ^= 0xFF; // inside chunk 1
+        let err = decode_frame(&codec, &wire, mid, 600, &rt, None).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("chunk 1 of 3"), "unindexed error: {msg}");
+        assert!(msg.contains("crc"), "{msg}");
+        // The other chunks still verify: flipping the byte back heals it.
+        wire[payloads + wire_len0 + 2] ^= 0xFF;
+        assert_eq!(decode_frame(&codec, &wire, mid, 600, &rt, None).unwrap(), data);
     }
 
     #[test]

@@ -180,6 +180,18 @@ impl WorkerPool {
         self.handles.push((name.to_string(), handle));
     }
 
+    /// Number of workers spawned (and not yet joined).
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// True when no workers were spawned — e.g. the wiring layer's
+    /// junction pool under worker-owned wiring, which the data-plane
+    /// smoke tests assert on.
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
     /// Drop all handles without joining — used on error paths where a
     /// worker may be blocked on I/O that only unblocks once the caller
     /// releases its side of the connection.

@@ -19,12 +19,18 @@
 //! jointly with the replica counts. The topology layer is agnostic: it
 //! describes stages × replicas × links, whoever decided them.
 //!
-//! Frame ordering with replication: a stage's replicas are dealt frames
-//! round-robin by a junction on the ingress side and merged round-robin
-//! on the egress side. Because every connection is FIFO and the merge
+//! Frame ordering with replication: frame `f` is always produced by
+//! replica `f mod u` of a stage and consumed by replica `f mod d` of
+//! the next — the endpoints themselves run the matching round-robin
+//! deal ([`wiring::DealSender`]) and FIFO-restoring merge
+//! ([`wiring::MergeReceiver`]) schedules, derived purely from
+//! `(u, d, own index)`. Because every connection is FIFO and the merge
 //! rotation mirrors the deal rotation, global frame order is preserved
-//! end to end regardless of per-replica compute jitter (the merge simply
-//! blocks on the replica that owns the next frame in sequence).
+//! end to end regardless of per-replica compute jitter (a merge simply
+//! blocks on the connection that owns the next frame in sequence), with
+//! no relay process between stages. The legacy coordinator-side
+//! junction relays remain available behind `--relay-junctions` for A/B
+//! comparison.
 
 pub mod wiring;
 

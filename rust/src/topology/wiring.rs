@@ -10,22 +10,58 @@
 //!   `base_port` remains as an optional override for CORE-style
 //!   deployments that need predictable ports (allocated sequentially:
 //!   three ports per worker in stage-major order, then the dispatcher
-//!   return port, then junction ingress ports per replicated boundary).
+//!   return port; legacy relay mode additionally allocates junction
+//!   ingress ports per replicated boundary).
 //!
-//! Replicated stage boundaries are wired through a **junction**: a relay
-//! thread that merges the upstream endpoints round-robin and deals to
-//! the downstream endpoints round-robin. Merge rotation mirrors deal
-//! rotation over FIFO connections, so global frame order is preserved
-//! (see the module doc of [`crate::topology`]). Boundaries with one
-//! endpoint on each side are connected directly — an unreplicated chain
-//! has zero junctions and is wired exactly like the pre-topology
-//! coordinator.
+//! # Worker-owned deal/merge (the default data plane)
 //!
-//! Byte accounting: a hop's bytes are counted once, by the original
-//! sender, against its shaped link. Junctions are routing fabric, not
-//! network elements — they relay over an ideal link into a throwaway
-//! counter, so `RunReport` byte totals are replication-invariant per
-//! frame delivered.
+//! Each replica **owns its own fan-out and fan-in**. At a boundary
+//! between a `u`-replica stage and a `d`-replica stage, every upstream
+//! replica holds one connection to every downstream replica (`u x d`
+//! edges), and both sides run a deterministic round-robin schedule
+//! derived from nothing but `(u, d, own index)`:
+//!
+//! * frame `f` is produced by upstream replica `f mod u` and consumed by
+//!   downstream replica `f mod d` (the global deal invariant);
+//! * a sender's `m`-th output frame is global frame `i + m*u`, so its
+//!   [`DealSender`] rotates over the `d` successors starting at
+//!   `i mod d` with step `u mod d`;
+//! * a receiver's `k`-th input frame is global frame `j + k*d`, so its
+//!   [`MergeReceiver`] rotates over the `u` predecessors starting at
+//!   `j mod u` with step `d mod u`, blocking on the connection that owns
+//!   the next frame in sequence.
+//!
+//! Every connection is FIFO and every frame takes exactly one network
+//! hop, so global frame order is preserved end to end with **no relay
+//! process in the path** — on a multi-host deployment a replicated
+//! boundary costs one replica-to-replica crossing, not a round-trip
+//! through the dispatcher host. Shutdown is a broadcast: a sender
+//! forwards `Shutdown` to *all* successors after its last data frame,
+//! and a receiver that meets `Shutdown` on the scheduled connection
+//! drains the (provably data-free) remaining connections before
+//! reporting end of stream.
+//!
+//! # Legacy relay mode (`--relay-junctions`)
+//!
+//! The pre-refactor data plane is kept behind
+//! [`TransportOptions::relay_junctions`] for A/B comparison: replicated
+//! boundaries are wired through a **junction** — a relay thread in the
+//! coordinator process that merges the upstream endpoints round-robin
+//! and deals to the downstream endpoints round-robin ([`run_junction`]).
+//! Boundaries with one endpoint on each side are connected directly in
+//! both modes — an unreplicated chain has zero junctions and identical
+//! wiring whichever mode is selected.
+//!
+//! # Byte accounting
+//!
+//! A hop's bytes are counted once, by the original sender, against its
+//! shaped link. Junctions are routing fabric, not network elements —
+//! they relay over an ideal link into a throwaway counter. The
+//! worker-owned shutdown broadcast keeps the same invariant: one
+//! `Shutdown` per sender is counted/shaped, the extra fan-out copies
+//! travel over an ideal link into a throwaway counter. `RunReport` byte
+//! totals are therefore replication-invariant per frame delivered, and
+//! identical across both data planes.
 
 use std::net::{SocketAddr, TcpListener};
 
@@ -45,16 +81,191 @@ pub struct TransportOptions {
     pub base_port: Option<u16>,
     /// Bounded depth of in-process pipes (backpressure window).
     pub pipe_depth: usize,
+    /// Restore the legacy coordinator-side junction relays for
+    /// replicated boundaries (A/B escape hatch). Default wiring is
+    /// worker-owned deal/merge with no relay threads.
+    pub relay_junctions: bool,
 }
 
-/// Everything one worker replica needs: its view plus the four
-/// established connections (config, weights, data-in, data-out).
+impl Default for TransportOptions {
+    fn default() -> Self {
+        TransportOptions {
+            tcp: false,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+        }
+    }
+}
+
+/// Round-robin dealing side of a worker-owned boundary: one FIFO
+/// connection per successor, advanced by a deterministic schedule (see
+/// the module docs). A single-connection sender degrades to plain
+/// passthrough, so unreplicated chains pay nothing.
+pub struct DealSender {
+    conns: Vec<Conn>,
+    /// Peer labels, index-aligned with `conns` (error reporting).
+    labels: Vec<String>,
+    next: usize,
+    step: usize,
+}
+
+impl DealSender {
+    /// A deal set over `conns` (labelled index-wise by `labels`),
+    /// starting at `start` and advancing by `step` per data frame.
+    pub fn new(conns: Vec<Conn>, labels: Vec<String>, start: usize, step: usize) -> DealSender {
+        assert!(!conns.is_empty(), "deal sender needs at least one conn");
+        assert_eq!(conns.len(), labels.len(), "one label per conn");
+        let n = conns.len();
+        DealSender {
+            conns,
+            labels,
+            next: start % n,
+            step: step % n,
+        }
+    }
+
+    /// Wrap one connection (the unreplicated / relay-mode case).
+    pub fn single(conn: Conn, label: &str) -> DealSender {
+        DealSender::new(vec![conn], vec![label.to_string()], 0, 0)
+    }
+
+    /// Number of successor connections.
+    pub fn fan(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Send one data frame to the successor the schedule owns, then
+    /// advance the rotation. Errors name the dead peer.
+    pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let idx = self.next;
+        self.conns[idx]
+            .send(msg, link, counter)
+            .map_err(|e| DeferError::Coordinator(format!("send to {}: {e}", self.labels[idx])))?;
+        self.next = (self.next + self.step) % self.conns.len();
+        Ok(())
+    }
+
+    /// Broadcast `Shutdown` to every successor. Exactly one copy is
+    /// shaped and counted (the logical end-of-stream marker crossing the
+    /// hop); the fan-out replicas are wiring fabric and travel over an
+    /// ideal link into a throwaway counter, keeping byte totals
+    /// replication-invariant and identical to the relay data plane.
+    pub fn broadcast_shutdown(&mut self, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let msg = Message::control(MessageType::Shutdown);
+        let null = ByteCounter::new();
+        let ideal = Link::ideal();
+        for (idx, conn) in self.conns.iter_mut().enumerate() {
+            let (l, c) = if idx == 0 { (link, counter) } else { (&ideal, &null) };
+            conn.send(&msg, l, c).map_err(|e| {
+                DeferError::Coordinator(format!("shutdown to {}: {e}", self.labels[idx]))
+            })?;
+        }
+        Ok(())
+    }
+}
+
+/// FIFO-restoring merging side of a worker-owned boundary: one FIFO
+/// connection per predecessor, read in the deterministic schedule that
+/// mirrors the upstream deal (see the module docs), so frames are
+/// returned in global order without any frame buffering — the receiver
+/// simply blocks on the connection that owns the next frame.
+pub struct MergeReceiver {
+    conns: Vec<Conn>,
+    /// Peer labels, index-aligned with `conns` (error reporting).
+    labels: Vec<String>,
+    next: usize,
+    step: usize,
+    /// End of stream already reported (every predecessor shut down).
+    drained: bool,
+}
+
+impl MergeReceiver {
+    /// A merge set over `conns` (labelled index-wise by `labels`),
+    /// starting at `start` and advancing by `step` per data frame.
+    pub fn new(conns: Vec<Conn>, labels: Vec<String>, start: usize, step: usize) -> MergeReceiver {
+        assert!(!conns.is_empty(), "merge receiver needs at least one conn");
+        assert_eq!(conns.len(), labels.len(), "one label per conn");
+        let n = conns.len();
+        MergeReceiver {
+            conns,
+            labels,
+            next: start % n,
+            step: step % n,
+            drained: false,
+        }
+    }
+
+    /// Wrap one connection (the unreplicated / relay-mode case).
+    pub fn single(conn: Conn, label: &str) -> MergeReceiver {
+        MergeReceiver::new(vec![conn], vec![label.to_string()], 0, 0)
+    }
+
+    /// Number of predecessor connections.
+    pub fn fan(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Receive the next in-order message. Data frames advance the
+    /// rotation; a `Shutdown` on the scheduled connection means the
+    /// global stream ended (no later frame can exist — see module docs),
+    /// so the remaining predecessors' pending `Shutdown`s are drained
+    /// and a single merged `Shutdown` is returned. Errors name the dead
+    /// peer.
+    pub fn recv(&mut self, counter: &ByteCounter) -> Result<Message> {
+        self.recv_pooled(counter, None)
+    }
+
+    /// [`MergeReceiver::recv`] with payload buffers drawn from `pool`.
+    pub fn recv_pooled(
+        &mut self,
+        counter: &ByteCounter,
+        pool: Option<&crate::util::bufpool::BufPool>,
+    ) -> Result<Message> {
+        if self.drained {
+            return Err(DeferError::ChannelClosed("merge receiver drained"));
+        }
+        let idx = self.next;
+        let msg = self.conns[idx]
+            .recv_pooled(counter, pool)
+            .map_err(|e| DeferError::Coordinator(format!("recv from {}: {e}", self.labels[idx])))?;
+        if msg.msg_type == MessageType::Shutdown {
+            // The deal is round-robin: a missing frame at this slot means
+            // no later slot's frame exists either, so every other conn
+            // holds exactly one pending Shutdown. Drain them so peers
+            // never block on an unread socket at teardown.
+            let labels = &self.labels;
+            for (i, conn) in self.conns.iter_mut().enumerate() {
+                if i == idx {
+                    continue;
+                }
+                let trailing = conn.recv(counter).map_err(|e| {
+                    DeferError::Coordinator(format!("recv from {}: {e}", labels[i]))
+                })?;
+                if trailing.msg_type != MessageType::Shutdown {
+                    return Err(DeferError::Coordinator(format!(
+                        "{} sent {:?} after the merged stream ended",
+                        labels[i], trailing.msg_type
+                    )));
+                }
+            }
+            self.drained = true;
+            return Ok(msg);
+        }
+        self.next = (self.next + self.step) % self.conns.len();
+        Ok(msg)
+    }
+}
+
+/// Everything one worker replica needs: its view plus the established
+/// control connections (config, weights) and its owned data-plane sets
+/// (merge from every predecessor, deal to every successor).
 pub struct WorkerConns {
     pub view: StageView,
     pub config: Conn,
     pub weights: Conn,
-    pub data_in: Conn,
-    pub data_out: Conn,
+    pub data_in: MergeReceiver,
+    pub data_out: DealSender,
 }
 
 /// A fully wired deployment, ready to spawn.
@@ -62,27 +273,30 @@ pub struct Wiring {
     /// Dispatcher-side (config, weights) pair per worker, in the same
     /// stage-major order as `workers`.
     pub control: Vec<(Conn, Conn)>,
-    /// Dispatcher's data uplink into stage 0 (hop 0).
-    pub to_first: Conn,
-    /// Dispatcher's return link from the last stage (hop S).
-    pub from_last: Conn,
+    /// Dispatcher's data uplink: a deal set over the stage-0 replicas.
+    pub to_first: DealSender,
+    /// Dispatcher's return path: a merge set over the last stage's
+    /// replicas.
+    pub from_last: MergeReceiver,
     /// Per-worker bundles, stage-major.
     pub workers: Vec<WorkerConns>,
-    /// Junction relay threads for replicated boundaries; join after the
-    /// run drains (no-op for uniform chains).
+    /// Junction relay threads — empty under worker-owned wiring; only
+    /// legacy relay mode ([`TransportOptions::relay_junctions`]) spawns
+    /// one per replicated boundary. Join after the run drains.
     pub junctions: WorkerPool,
 }
 
 /// Establish every connection the topology needs, for either transport.
 pub fn build(topo: &Topology, opts: &TransportOptions) -> Result<Wiring> {
     if opts.tcp {
-        build_tcp(topo, opts.base_port)
+        build_tcp(topo, opts.base_port, opts.relay_junctions)
     } else {
-        build_local(topo, opts.pipe_depth)
+        build_local(topo, opts.pipe_depth, opts.relay_junctions)
     }
 }
 
-/// Round-robin merge + deal relay for one replicated stage boundary.
+/// Round-robin merge + deal relay for one replicated stage boundary
+/// (legacy relay mode only).
 ///
 /// Reads inputs in rotation (skipping drained ones) and forwards each
 /// frame to the next output in rotation. A `Shutdown` closes its input;
@@ -131,20 +345,62 @@ fn boundary_fan(topo: &Topology, b: usize) -> (usize, usize) {
     (u, d)
 }
 
+/// Labels of the endpoints upstream of boundary `b` (senders into it).
+fn upstream_labels(topo: &Topology, b: usize) -> Vec<String> {
+    if b == 0 {
+        vec!["dispatcher".to_string()]
+    } else {
+        (0..topo.replicas(b - 1))
+            .map(|r| format!("{} data socket", topo.worker_name(b - 1, r)))
+            .collect()
+    }
+}
+
+/// Labels of the endpoints downstream of boundary `b` (receivers of it).
+fn downstream_labels(topo: &Topology, b: usize) -> Vec<String> {
+    if b == topo.num_stages() {
+        vec!["dispatcher return socket".to_string()]
+    } else {
+        (0..topo.replicas(b))
+            .map(|r| format!("{} data socket", topo.worker_name(b, r)))
+            .collect()
+    }
+}
+
+/// Deal-schedule parameters for upstream endpoint `i` of a `u -> d`
+/// boundary: start and step over the `d` successors (module docs).
+fn deal_schedule(i: usize, u: usize, d: usize) -> (usize, usize) {
+    (i % d, u % d)
+}
+
+/// Merge-schedule parameters for downstream endpoint `j` of a `u -> d`
+/// boundary: start and step over the `u` predecessors (module docs).
+fn merge_schedule(j: usize, u: usize, d: usize) -> (usize, usize) {
+    (j % u, d % u)
+}
+
+/// Boundary endpoint sets under construction: `outs[i]` collects sender
+/// `i`'s conns in successor order, `ins[j]` collects receiver `j`'s
+/// conns in predecessor order.
+struct BoundaryConns {
+    outs: Vec<Vec<Conn>>,
+    ins: Vec<Vec<Conn>>,
+}
+
 // ------------------------------------------------------------ in-process
 
-fn build_local(topo: &Topology, depth: usize) -> Result<Wiring> {
+fn build_local(topo: &Topology, depth: usize, relay: bool) -> Result<Wiring> {
     let views = topo.worker_views();
     let s = topo.num_stages();
     let mut junctions = WorkerPool::new();
 
-    // Per-worker data endpoints, keyed (stage, replica).
-    let mut data_in: Vec<Vec<Option<Conn>>> = topo
+    // Per-worker data endpoint sets, keyed (stage, replica).
+    let mut data_in: Vec<Vec<Option<MergeReceiver>>> = topo
         .stages()
         .iter()
         .map(|st| (0..st.replicas).map(|_| None).collect())
         .collect();
-    let mut data_out: Vec<Vec<Option<Conn>>> = topo
+    let mut data_out: Vec<Vec<Option<DealSender>>> = topo
         .stages()
         .iter()
         .map(|st| (0..st.replicas).map(|_| None).collect())
@@ -154,15 +410,16 @@ fn build_local(topo: &Topology, depth: usize) -> Result<Wiring> {
 
     for b in 0..=s {
         let (u, d) = boundary_fan(topo, b);
-        let (outs, ins): (Vec<Conn>, Vec<Conn>) = if u == 1 && d == 1 {
-            let (o, i) = Conn::local_pair(depth);
-            (vec![o], vec![i])
-        } else {
+        let up_labels = upstream_labels(topo, b);
+        let down_labels = downstream_labels(topo, b);
+        let bc = if relay && (u > 1 || d > 1) {
+            // Legacy relay: one junction thread per replicated boundary;
+            // every endpoint sees a single connection to the relay.
             let mut outs = Vec::with_capacity(u);
             let mut jin = Vec::with_capacity(u);
             for _ in 0..u {
                 let (o, i) = Conn::local_pair(depth);
-                outs.push(o);
+                outs.push(vec![o]);
                 jin.push(i);
             }
             let mut jout = Vec::with_capacity(d);
@@ -170,23 +427,60 @@ fn build_local(topo: &Topology, depth: usize) -> Result<Wiring> {
             for _ in 0..d {
                 let (o, i) = Conn::local_pair(depth);
                 jout.push(o);
-                ins.push(i);
+                ins.push(vec![i]);
             }
             spawn_junction(&mut junctions, b, jin, jout);
-            (outs, ins)
+            BoundaryConns { outs, ins }
+        } else {
+            // Worker-owned: a full u x d mesh of direct pipes.
+            let mut outs: Vec<Vec<Conn>> = (0..u).map(|_| Vec::with_capacity(d)).collect();
+            let mut ins: Vec<Vec<Conn>> = (0..d).map(|_| Vec::with_capacity(u)).collect();
+            // Each sender's out list is in receiver order; each
+            // receiver's in list accumulates in sender order (senders
+            // iterate outermost).
+            for sender_conns in outs.iter_mut() {
+                for receiver_conns in ins.iter_mut() {
+                    let (o, inn) = Conn::local_pair(depth);
+                    sender_conns.push(o);
+                    receiver_conns.push(inn);
+                }
+            }
+            BoundaryConns { outs, ins }
         };
-        for (r, o) in outs.into_iter().enumerate() {
-            if b == 0 {
-                to_first = Some(o);
+        for (i, conns) in bc.outs.into_iter().enumerate() {
+            let labels = if relay && (u > 1 || d > 1) {
+                vec![format!("hop {b} junction")]
             } else {
-                data_out[b - 1][r] = Some(o);
+                down_labels.clone()
+            };
+            let (start, step) = if conns.len() == 1 {
+                (0, 0)
+            } else {
+                deal_schedule(i, u, d)
+            };
+            let sender = DealSender::new(conns, labels, start, step);
+            if b == 0 {
+                to_first = Some(sender);
+            } else {
+                data_out[b - 1][i] = Some(sender);
             }
         }
-        for (r, i) in ins.into_iter().enumerate() {
-            if b == s {
-                from_last = Some(i);
+        for (j, conns) in bc.ins.into_iter().enumerate() {
+            let labels = if relay && (u > 1 || d > 1) {
+                vec![format!("hop {b} junction")]
             } else {
-                data_in[b][r] = Some(i);
+                up_labels.clone()
+            };
+            let (start, step) = if conns.len() == 1 {
+                (0, 0)
+            } else {
+                merge_schedule(j, u, d)
+            };
+            let recv = MergeReceiver::new(conns, labels, start, step);
+            if b == s {
+                from_last = Some(recv);
+            } else {
+                data_in[b][j] = Some(recv);
             }
         }
     }
@@ -223,12 +517,21 @@ fn build_local(topo: &Topology, depth: usize) -> Result<Wiring> {
 
 // ----------------------------------------------------------- TCP loopback
 
+/// How often a transiently failing bind is retried before giving up
+/// (EADDRINUSE races between parallel test runs resolve in well under
+/// this many backoff rounds).
+const BIND_ATTEMPTS: u32 = 5;
+
 /// Sequential-or-ephemeral port allocator.
 struct PortAlloc {
     next: Option<u16>,
 }
 
 impl PortAlloc {
+    /// Bind the next port, retrying a bounded number of times with
+    /// backoff on transient failures (a fixed `base_port` range can race
+    /// a just-released socket in TIME_WAIT or a parallel test run). The
+    /// final error names the port that never came free.
     fn bind(&mut self) -> Result<(TcpListener, SocketAddr)> {
         let port = match self.next {
             Some(p) => {
@@ -239,10 +542,33 @@ impl PortAlloc {
             }
             None => 0,
         };
-        let l = TcpListener::bind(("127.0.0.1", port))
-            .map_err(|e| DeferError::Coordinator(format!("bind 127.0.0.1:{port}: {e}")))?;
-        let addr = l.local_addr()?;
-        Ok((l, addr))
+        let mut backoff = std::time::Duration::from_millis(5);
+        let mut last_err = None;
+        for attempt in 0..BIND_ATTEMPTS {
+            match TcpListener::bind(("127.0.0.1", port)) {
+                Ok(l) => {
+                    let addr = l.local_addr()?;
+                    return Ok((l, addr));
+                }
+                // Only EADDRINUSE is a transient race worth waiting out;
+                // anything else (EACCES on a privileged port, EADDRNOTAVAIL)
+                // is permanent and must fail fast.
+                Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => last_err = Some(e),
+                Err(e) => {
+                    return Err(DeferError::Coordinator(format!(
+                        "bind 127.0.0.1:{port}: {e}"
+                    )))
+                }
+            }
+            if attempt + 1 < BIND_ATTEMPTS {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+        }
+        Err(DeferError::Coordinator(format!(
+            "bind 127.0.0.1:{port} still in use after {BIND_ATTEMPTS} attempts: {}",
+            last_err.expect("at least one bind attempt ran")
+        )))
     }
 }
 
@@ -257,9 +583,12 @@ struct WorkerListeners {
 
 /// All listeners are bound before any connect, so every `connect` below
 /// completes through the kernel's listen backlog even before the
-/// matching `accept` runs — no acceptor-thread dance, no deadlock, and
-/// each listener serves exactly one inbound connection.
-fn build_tcp(topo: &Topology, base_port: Option<u16>) -> Result<Wiring> {
+/// matching `accept` runs — no acceptor-thread dance, no deadlock. A
+/// worker's data listener serves one inbound connection per predecessor
+/// replica; connects to one listener are issued sequentially, so accept
+/// order equals dial order (loopback connects complete synchronously)
+/// and each accepted connection is attributable to its sender index.
+fn build_tcp(topo: &Topology, base_port: Option<u16>, relay: bool) -> Result<Wiring> {
     let views = topo.worker_views();
     let s = topo.num_stages();
     let mut alloc = PortAlloc { next: base_port };
@@ -304,66 +633,96 @@ fn build_tcp(topo: &Topology, base_port: Option<u16>) -> Result<Wiring> {
         control.push((c, w));
     }
 
-    // Data plane, boundary by boundary.
-    let mut data_out: Vec<Option<Conn>> = (0..views.len()).map(|_| None).collect();
+    // Data plane, boundary by boundary. Senders' out-sets are fully
+    // dialed here; receivers' in-sets are accepted afterwards (every
+    // inbound connection is already pending in a listen backlog).
+    let mut data_out: Vec<Option<DealSender>> = (0..views.len()).map(|_| None).collect();
     let mut to_first = None;
     for b in 0..=s {
         let (u, d) = boundary_fan(topo, b);
-        // Downstream ingress addresses (+ peer labels for errors).
-        let down: Vec<(String, String)> = if b == s {
-            vec![(ret_addr.to_string(), "dispatcher return socket".to_string())]
+        let down_labels = downstream_labels(topo, b);
+        // Downstream ingress addresses, receiver order.
+        let down_addrs: Vec<String> = if b == s {
+            vec![ret_addr.to_string()]
         } else {
             (0..d)
-                .map(|r| {
-                    let widx = off[b] + r;
-                    (
-                        listeners[widx].data_addr.to_string(),
-                        format!("{} data socket", views[widx].name),
-                    )
-                })
+                .map(|r| listeners[off[b] + r].data_addr.to_string())
                 .collect()
         };
-        let outs: Vec<Conn> = if u == 1 && d == 1 {
-            vec![Conn::tcp_connect(&down[0].0, &down[0].1)?]
-        } else {
+        let outs: Vec<DealSender> = if relay && (u > 1 || d > 1) {
+            // Legacy relay: per-sender junction ingress ports, one relay
+            // thread dealing onto the downstream data listeners.
             let mut jls = Vec::with_capacity(u);
             for _ in 0..u {
                 jls.push(alloc.bind()?);
             }
             let mut outs = Vec::with_capacity(u);
             for (r, (_, addr)) in jls.iter().enumerate() {
-                outs.push(Conn::tcp_connect(
-                    &addr.to_string(),
-                    &format!("hop {b} junction input {r}"),
-                )?);
+                outs.push(DealSender::single(
+                    Conn::tcp_connect(&addr.to_string(), &format!("hop {b} junction input {r}"))?,
+                    &format!("hop {b} junction"),
+                ));
             }
             let mut jin = Vec::with_capacity(u);
             for (l, _) in &jls {
                 jin.push(Conn::tcp_accept(l)?);
             }
             let mut jout = Vec::with_capacity(d);
-            for (addr, peer) in &down {
+            for (addr, peer) in down_addrs.iter().zip(&down_labels) {
                 jout.push(Conn::tcp_connect(addr, peer)?);
             }
             spawn_junction(&mut junctions, b, jin, jout);
             outs
+        } else {
+            // Worker-owned: sender i dials every receiver j. Dialing
+            // with the sender index outermost keeps each receiver
+            // listener's backlog in sender order, which is the order
+            // the accept loop below attributes connections in.
+            let mut out_conns: Vec<Vec<Conn>> = (0..u).map(|_| Vec::with_capacity(d)).collect();
+            for (i, sender_conns) in out_conns.iter_mut().enumerate() {
+                for (addr, peer) in down_addrs.iter().zip(&down_labels) {
+                    sender_conns.push(Conn::tcp_connect(addr, peer)?);
+                }
+                debug_assert_eq!(sender_conns.len(), d, "sender {i} dialed every successor");
+            }
+            out_conns
+                .into_iter()
+                .enumerate()
+                .map(|(i, conns)| {
+                    let (start, step) = deal_schedule(i, u, d);
+                    DealSender::new(conns, down_labels.clone(), start, step)
+                })
+                .collect()
         };
-        for (r, o) in outs.into_iter().enumerate() {
+        for (i, o) in outs.into_iter().enumerate() {
             if b == 0 {
                 to_first = Some(o);
             } else {
-                data_out[off[b - 1] + r] = Some(o);
+                data_out[off[b - 1] + i] = Some(o);
             }
         }
     }
 
-    // Every inbound connection is now pending; accept them all.
+    // Every inbound connection is now pending; accept them all. A
+    // receiver at a worker-owned replicated boundary accepts one
+    // connection per predecessor, in sender order (see above).
     let mut workers = Vec::with_capacity(views.len());
     for (widx, view) in views.into_iter().enumerate() {
         let l = &listeners[widx];
         let config = Conn::tcp_accept(&l.config)?;
         let weights = Conn::tcp_accept(&l.weights)?;
-        let data_in = Conn::tcp_accept(&l.data)?;
+        let b = view.stage;
+        let (u, d) = boundary_fan(topo, b);
+        let data_in = if relay && (u > 1 || d > 1) {
+            MergeReceiver::single(Conn::tcp_accept(&l.data)?, &format!("hop {b} junction"))
+        } else {
+            let mut conns = Vec::with_capacity(u);
+            for _ in 0..u {
+                conns.push(Conn::tcp_accept(&l.data)?);
+            }
+            let (start, step) = merge_schedule(view.replica, u, d);
+            MergeReceiver::new(conns, upstream_labels(topo, b), start, step)
+        };
         let dout = data_out[widx]
             .take()
             .expect("boundary wiring covered every stage egress");
@@ -375,7 +734,20 @@ fn build_tcp(topo: &Topology, base_port: Option<u16>) -> Result<Wiring> {
             data_out: dout,
         });
     }
-    let from_last = Conn::tcp_accept(&ret_listener)?;
+    let (u, d) = boundary_fan(topo, s);
+    let from_last = if relay && (u > 1 || d > 1) {
+        MergeReceiver::single(
+            Conn::tcp_accept(&ret_listener)?,
+            &format!("hop {s} junction"),
+        )
+    } else {
+        let mut conns = Vec::with_capacity(u);
+        for _ in 0..u {
+            conns.push(Conn::tcp_accept(&ret_listener)?);
+        }
+        let (start, step) = merge_schedule(0, u, d);
+        MergeReceiver::new(conns, upstream_labels(topo, s), start, step)
+    };
 
     Ok(Wiring {
         control,
@@ -403,8 +775,8 @@ mod tests {
 
     #[test]
     fn junction_restores_round_robin_order() {
-        // Deal 7 frames over 3 inputs by hand, then let the junction
-        // merge them back into one ordered stream.
+        // Legacy relay mode: deal 7 frames over 3 inputs by hand, then
+        // let the junction merge them back into one ordered stream.
         let u = 3;
         let mut up = Vec::new();
         let mut jin = Vec::new();
@@ -427,27 +799,208 @@ mod tests {
         for f in 0..7u64 {
             assert_eq!(down.recv(&c).unwrap().frame, f);
         }
-        assert_eq!(
-            down.recv(&c).unwrap().msg_type,
-            MessageType::Shutdown
+        assert_eq!(down.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+    }
+
+    #[test]
+    fn worker_owned_merge_restores_round_robin_order() {
+        // The same property with no relay thread anywhere: 3 senders
+        // each hold their round-robin share of 7 frames; a single merge
+        // receiver (the dispatcher's return path) restores global order.
+        let u = 3;
+        let mut up = Vec::new();
+        let mut ins = Vec::new();
+        for _ in 0..u {
+            let (a, b) = Conn::local_pair(8);
+            up.push(a);
+            ins.push(b);
+        }
+        let labels = (0..u).map(|i| format!("peer{i}")).collect();
+        let (start, step) = merge_schedule(0, u, 1);
+        let mut merge = MergeReceiver::new(ins, labels, start, step);
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..7u64 {
+            up[(f as usize) % u].send(&data_msg(f), &link, &c).unwrap();
+        }
+        for conn in up.iter_mut() {
+            conn.send(&Message::control(MessageType::Shutdown), &link, &c)
+                .unwrap();
+        }
+        for f in 0..7u64 {
+            assert_eq!(merge.recv(&c).unwrap().frame, f);
+        }
+        // One merged shutdown; the receiver drained every peer.
+        assert_eq!(merge.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+        assert!(merge.recv(&c).is_err(), "stream already drained");
+    }
+
+    #[test]
+    fn deal_sender_rotates_by_schedule() {
+        // A sole upstream (the dispatcher) dealing to 3 replicas: frame
+        // f must land on replica f mod 3, shutdown broadcast to all.
+        let d = 3;
+        let mut downs = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..d {
+            let (a, b) = Conn::local_pair(8);
+            outs.push(a);
+            downs.push(b);
+        }
+        let labels = (0..d).map(|j| format!("replica{j}")).collect();
+        let (start, step) = deal_schedule(0, 1, d);
+        let mut deal = DealSender::new(outs, labels, start, step);
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..7u64 {
+            deal.send_data(&data_msg(f), &link, &c).unwrap();
+        }
+        deal.broadcast_shutdown(&link, &c).unwrap();
+        for (j, down) in downs.iter_mut().enumerate() {
+            let mut expect = j as u64;
+            loop {
+                let m = down.recv(&ByteCounter::new()).unwrap();
+                if m.msg_type == MessageType::Shutdown {
+                    break;
+                }
+                assert_eq!(m.frame, expect, "replica {j}");
+                expect += d as u64;
+            }
+            assert!(expect >= 7, "replica {j} starved");
+        }
+        // Exactly one shutdown was shaped/counted: 7 data frames + 1
+        // control marker, not 1 per successor.
+        let shutdown_wire = Message::control(MessageType::Shutdown).wire_size();
+        let data_wire = data_msg(0).wire_size();
+        assert_eq!(c.total(), 7 * data_wire + shutdown_wire);
+    }
+
+    #[test]
+    fn dead_peer_is_named_by_label() {
+        let (a, b) = Conn::local_pair(2);
+        let mut deal = DealSender::single(a, "node1.1 data socket");
+        drop(b);
+        let err = deal
+            .send_data(&data_msg(0), &Link::ideal(), &ByteCounter::new())
+            .unwrap_err();
+        assert!(
+            format!("{err}").contains("node1.1 data socket"),
+            "unlabelled error: {err}"
+        );
+
+        let (a, b) = Conn::local_pair(2);
+        let mut merge = MergeReceiver::single(b, "node0 data socket");
+        drop(a);
+        let err = merge.recv(&ByteCounter::new()).unwrap_err();
+        assert!(
+            format!("{err}").contains("node0 data socket"),
+            "unlabelled error: {err}"
         );
     }
 
     #[test]
     fn uniform_local_wiring_has_no_junctions() {
         let topo = Topology::uniform_chain(3, LinkSpec::ideal()).unwrap();
+        let w = build(&topo, &TransportOptions::default()).unwrap();
+        assert_eq!(w.workers.len(), 3);
+        assert_eq!(w.control.len(), 3);
+        assert!(w.junctions.is_empty());
+        for wc in &w.workers {
+            assert_eq!(wc.data_in.fan(), 1);
+            assert_eq!(wc.data_out.fan(), 1);
+        }
+        w.junctions.join().unwrap();
+    }
+
+    #[test]
+    fn replicated_wiring_is_junction_free_by_default() {
+        let topo = Topology::new(&[1, 3, 2], vec![LinkSpec::ideal(); 4]).unwrap();
+        let w = build(&topo, &TransportOptions::default()).unwrap();
+        assert!(
+            w.junctions.is_empty(),
+            "worker-owned wiring must spawn zero relay threads"
+        );
+        // Fan sets match the topology: stage 1 replicas each merge from
+        // the sole stage-0 worker and deal to both stage-2 replicas.
+        let node1_0 = w
+            .workers
+            .iter()
+            .find(|wc| wc.view.name == "node1.0")
+            .unwrap();
+        assert_eq!(node1_0.data_in.fan(), 1);
+        assert_eq!(node1_0.data_out.fan(), 2);
+        assert_eq!(w.to_first.fan(), 3);
+        assert_eq!(w.from_last.fan(), 2);
+        w.junctions.join().unwrap();
+    }
+
+    #[test]
+    fn relay_mode_still_spawns_junctions() {
+        let topo = Topology::new(&[1, 3, 1], vec![LinkSpec::ideal(); 4]).unwrap();
         let w = build(
             &topo,
             &TransportOptions {
-                tcp: false,
-                base_port: None,
-                pipe_depth: 4,
+                relay_junctions: true,
+                ..TransportOptions::default()
             },
         )
         .unwrap();
-        assert_eq!(w.workers.len(), 3);
-        assert_eq!(w.control.len(), 3);
-        // No replication => relay pool joins immediately.
+        // Boundaries 1 and 2 are replicated -> two relay threads; every
+        // endpoint sees a single connection.
+        assert_eq!(w.junctions.len(), 2);
+        assert_eq!(w.to_first.fan(), 1);
+        assert_eq!(w.from_last.fan(), 1);
+        for wc in &w.workers {
+            assert_eq!(wc.data_in.fan(), 1);
+            assert_eq!(wc.data_out.fan(), 1);
+        }
+        // Drive a frame through so the junctions exit cleanly.
+        let mut to_first = w.to_first;
+        let mut from_last = w.from_last;
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        let mut pool = WorkerPool::new();
+        for wc in w.workers {
+            pool.spawn(&format!("relay-{}", wc.view.name), move || {
+                let WorkerConns {
+                    mut data_in,
+                    mut data_out,
+                    ..
+                } = wc;
+                let null = ByteCounter::new();
+                let link = Link::ideal();
+                loop {
+                    let msg = data_in.recv(&null)?;
+                    if msg.msg_type == MessageType::Shutdown {
+                        data_out.broadcast_shutdown(&link, &null)?;
+                        return Ok(());
+                    }
+                    data_out.send_data(&msg, &link, &null)?;
+                }
+            });
+        }
+        for f in 0..5u64 {
+            to_first.send_data(&data_msg(f), &link, &c).unwrap();
+        }
+        to_first.broadcast_shutdown(&link, &c).unwrap();
+        for f in 0..5u64 {
+            assert_eq!(from_last.recv(&c).unwrap().frame, f);
+        }
+        assert_eq!(from_last.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+        pool.join().unwrap();
         w.junctions.join().unwrap();
+    }
+
+    #[test]
+    fn bind_retry_error_names_the_port() {
+        // Occupy a port, then ask the allocator for exactly it: the
+        // bounded retry must give up and name the port.
+        let holder = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = holder.local_addr().unwrap().port();
+        let mut alloc = PortAlloc { next: Some(port) };
+        let err = alloc.bind().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains(&format!("127.0.0.1:{port}")), "{msg}");
+        assert!(msg.contains("attempts"), "{msg}");
     }
 }

@@ -148,9 +148,10 @@ fn one_pool_shared_by_many_threads() {
 
 #[test]
 fn container_constants_documented() {
-    // Layout constants the wire docs promise.
+    // Layout constants the wire docs promise (per-chunk header grew a
+    // crc32 field alongside wire_len and serialized_len).
     assert_eq!(chunked::CONTAINER_HEADER, 12);
-    assert_eq!(chunked::PER_CHUNK_HEADER, 8);
+    assert_eq!(chunked::PER_CHUNK_HEADER, 12);
     assert_eq!(chunked::DEFAULT_CHUNK_ELEMS % 4, 0);
     assert_eq!(chunked::DEFAULT_CHUNK_ELEMS * 4, 512 * 1024);
 }

@@ -1,12 +1,13 @@
 //! Pipelined-compute-node ordering suite (artifact-free).
 //!
 //! Drives the software-pipelined codec path (`coordinator::pipeline`)
-//! through real topology wiring — including a replicated stage with
-//! round-robin deal/merge junctions — using a synthetic compute closure
-//! instead of PJRT executables. The contract under test: frames leave
-//! the deployment in FIFO order with correct values, whatever the
-//! per-replica timing jitter, and the chunk-parallel codec container
-//! works end to end through the pipeline.
+//! through real topology wiring — including replicated stages with
+//! worker-owned deal/merge connection sets (and, for A/B, the legacy
+//! junction relays) — using a synthetic compute closure instead of PJRT
+//! executables. The contract under test: frames leave the deployment in
+//! FIFO order with correct values, whatever the per-replica timing
+//! jitter, and the chunk-parallel codec container works end to end
+//! through the pipeline.
 
 use std::sync::Arc;
 
@@ -23,8 +24,10 @@ use defer::wire::{Message, MessageType};
 
 const ELEMS: usize = 64;
 
-/// Spawn one synthetic worker: a socket-reader thread feeding the real
-/// codec pipeline, with `compute` standing in for the fused executables.
+/// Spawn one synthetic worker: a boundary-reader thread feeding the
+/// real codec pipeline, with `compute` standing in for the fused
+/// executables. The pipeline's encode phase deals straight onto the
+/// worker's successor set.
 fn spawn_worker(
     wc: WorkerConns,
     codec: Codec,
@@ -81,7 +84,15 @@ fn spawn_worker(
 
 /// Run `frames` frames through a topology of synthetic pipelined
 /// workers; assert FIFO order and transformed values at the dispatcher.
-fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: bool, frames: u64) {
+/// Returns the decoded per-frame values for cross-mode comparison.
+fn run_topology(
+    replicas: &[usize],
+    codec: Codec,
+    rt: CodecRuntime,
+    pipelined: bool,
+    relay_junctions: bool,
+    frames: u64,
+) -> Vec<Vec<f32>> {
     let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
     let topo = Topology::new(replicas, hop_links).unwrap();
     let defer::topology::wiring::Wiring {
@@ -96,10 +107,14 @@ fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: b
             tcp: false,
             base_port: None,
             pipe_depth: 4,
+            relay_junctions,
         },
     )
     .unwrap();
     drop(control); // no configuration phase for synthetic workers
+    if !relay_junctions {
+        assert!(junctions.is_empty(), "junction thread in worker-owned mode");
+    }
     let mut to_first = to_first;
     let mut from_last = from_last;
     let stages = replicas.len();
@@ -120,7 +135,7 @@ fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: b
             let data = vec![frame as f32; ELEMS];
             let (payload, mid) = codec.encode_frame(&data, &rt, None);
             to_first
-                .send(
+                .send_data(
                     &Message {
                         msg_type: MessageType::Data,
                         frame,
@@ -133,12 +148,11 @@ fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: b
                 )
                 .unwrap();
         }
-        to_first
-            .send(&Message::control(MessageType::Shutdown), &link, &counter)
-            .unwrap();
+        to_first.broadcast_shutdown(&link, &counter).unwrap();
     });
 
     let counter = ByteCounter::new();
+    let mut results = Vec::with_capacity(frames as usize);
     for f in 0..frames {
         let msg = from_last.recv(&counter).unwrap();
         assert_eq!(msg.msg_type, MessageType::Data);
@@ -158,6 +172,7 @@ fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: b
             expect = expect * 2.0 + 1.0;
         }
         assert_eq!(values, vec![expect; ELEMS], "frame {f}");
+        results.push(values);
     }
     assert_eq!(
         from_last.recv(&counter).unwrap().msg_type,
@@ -168,6 +183,7 @@ fn run_topology(replicas: &[usize], codec: Codec, rt: CodecRuntime, pipelined: b
         h.join().unwrap().unwrap();
     }
     junctions.join().unwrap();
+    results
 }
 
 #[test]
@@ -177,19 +193,22 @@ fn pipelined_single_stage_preserves_fifo() {
         Codec::new(Serialization::Binary, Compression::None),
         CodecRuntime::serial(),
         true,
+        false,
         50,
     );
 }
 
 #[test]
 fn pipelined_replicated_stage_preserves_fifo() {
-    // The acceptance property: replication (round-robin deal + merge)
-    // plus per-replica pipelining still delivers frames in order.
+    // The acceptance property: worker-owned replication (round-robin
+    // deal + schedule-merge, no relay threads) plus per-replica
+    // pipelining still delivers frames in order.
     run_topology(
         &[3],
         Codec::new(Serialization::Binary, Compression::None),
         CodecRuntime::serial(),
         true,
+        false,
         60,
     );
 }
@@ -201,8 +220,19 @@ fn pipelined_multi_stage_with_replication_preserves_fifo() {
         Codec::new(Serialization::Binary, Compression::None),
         CodecRuntime::serial(),
         true,
+        false,
         40,
     );
+}
+
+#[test]
+fn relay_wiring_results_are_bit_identical_to_worker_owned() {
+    // The A/B contract behind `--relay-junctions`: both data planes
+    // produce the same frames in the same order, bit for bit.
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let owned = run_topology(&[2, 3], codec, CodecRuntime::serial(), true, false, 30);
+    let relay = run_topology(&[2, 3], codec, CodecRuntime::serial(), true, true, 30);
+    assert_eq!(owned, relay);
 }
 
 #[test]
@@ -215,6 +245,7 @@ fn chunk_parallel_container_flows_through_pipeline() {
         Codec::new(Serialization::Binary, Compression::Lz4),
         rt,
         true,
+        false,
         30,
     );
 }
@@ -225,6 +256,7 @@ fn inline_mode_matches_pipelined_results() {
         &[2],
         Codec::new(Serialization::Binary, Compression::None),
         CodecRuntime::serial(),
+        false,
         false,
         30,
     );

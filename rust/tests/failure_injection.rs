@@ -15,7 +15,7 @@ use defer::metrics::ByteCounter;
 use defer::model::PartitionPlan;
 use defer::netem::Link;
 use defer::runtime::Engine;
-use defer::topology::wiring::WorkerConns;
+use defer::topology::wiring::{DealSender, MergeReceiver, WorkerConns};
 use defer::topology::StageView;
 use defer::wire::{Message, MessageType};
 
@@ -56,8 +56,8 @@ fn spawn_node(engine: Engine) -> Harness {
                 view: StageView::standalone(0),
                 config: cfg_n,
                 weights: w_n,
-                data_in: din_n,
-                data_out: dout_n,
+                data_in: MergeReceiver::single(din_n, "dispatcher"),
+                data_out: DealSender::single(dout_n, "dispatcher return socket"),
             },
             CodecConfig::default(),
             link,

@@ -294,6 +294,65 @@ fn auto_partition_beats_coarse_uniform_chain() {
     );
 }
 
+/// The tentpole's A/B acceptance on the shaped replicated-bottleneck
+/// scenario: the worker-owned data plane (default) against the legacy
+/// relay wiring (`--relay-junctions`). Results must be bit-identical,
+/// byte accounting identical (the deal/merge protocol counts exactly
+/// what the junction protocol counted), and measured throughput must
+/// not regress below the relay baseline (small scheduling slack only —
+/// dropping the relay thread can only remove work from the path).
+#[test]
+fn worker_owned_data_plane_matches_relay_wiring() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let frames = 8;
+    // Replicate the heavier stage under deterministic device emulation
+    // with shaped links — the replicated-bottleneck bench shape.
+    let probe = ChainRunner::with_engine(cfg(2), engine.clone()).unwrap();
+    let bottleneck = if probe.plan().parts[0].flops >= probe.plan().parts[1].flops {
+        0
+    } else {
+        1
+    };
+    let mk = |relay: bool| {
+        let mut c = cfg(2);
+        c.emulated_mflops = 20.0;
+        c.per_hop_links = vec![
+            LinkSpec::wifi(),
+            LinkSpec::gigabit_lan(),
+            LinkSpec::gigabit_lan(),
+        ];
+        c.replicas = vec![1, 1];
+        c.replicas[bottleneck] = 2;
+        c.relay_junctions = relay;
+        c
+    };
+    let r_owned = ChainRunner::with_engine(mk(false), engine.clone())
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+    let r_relay = ChainRunner::with_engine(mk(true), engine)
+        .unwrap()
+        .run_frames(frames)
+        .unwrap();
+    assert_eq!(r_owned.cycles, frames);
+    assert_eq!(r_relay.cycles, frames);
+    // Bit-identical results (same codec, same artifacts, same order).
+    assert_eq!(r_owned.reference_error, r_relay.reference_error);
+    // Byte accounting is data-plane-invariant.
+    assert_eq!(r_owned.architecture_bytes, r_relay.architecture_bytes);
+    assert_eq!(r_owned.weights_bytes, r_relay.weights_bytes);
+    assert_eq!(r_owned.data_bytes, r_relay.data_bytes);
+    assert!(
+        r_owned.throughput >= 0.9 * r_relay.throughput,
+        "worker-owned data plane regressed: {:.3} vs relay {:.3} cycles/s",
+        r_owned.throughput,
+        r_relay.throughput
+    );
+}
+
 #[test]
 fn replicated_stage_over_tcp() {
     if !have_artifacts() {

@@ -39,6 +39,7 @@ fn bottleneck_stage_soaks_up_the_worker_budget() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![1, 3, 1]);
@@ -96,6 +97,7 @@ fn planner_is_deterministic() {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan(), LinkSpec::fast_edge()],
             codec: CodecCost::default(),
+            relay_junctions: false,
         }
     };
     let first = plan(&mk(false)).unwrap();
@@ -128,6 +130,7 @@ fn heaviest_stage_gets_fastest_device() {
         uplink: LinkSpec::ideal(),
         interconnect: vec![],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.stages[1].devices, vec!["fast".to_string()]);
@@ -151,6 +154,7 @@ fn uplink_bound_pipeline_is_left_unreplicated() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![1, 1]);
@@ -171,6 +175,7 @@ fn interior_hops_pick_fastest_candidate() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::wifi(), LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     // 1 MiB over gigabit (~8 ms + 0.2 ms) beats wifi (~168 ms + 3.5 ms).
@@ -191,6 +196,7 @@ fn budget_spreads_across_equal_bottlenecks() {
         uplink: LinkSpec::gigabit_lan(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![3, 3]);
@@ -208,6 +214,7 @@ fn render_golden() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     // wifi uplink: 40 kB * 8 / 50 Mbps = 6.4 ms + 3 ms lat + 0.5 ms E[jitter].

@@ -41,6 +41,7 @@ fn acceptance_problem(budget: usize) -> RepartitionProblem {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     }
 }
 
@@ -91,6 +92,7 @@ fn repartition_beats_coarse_uniform_chain_in_the_model() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     })
     .unwrap();
     let speedup = rp.predicted_throughput() / coarse.predicted_throughput;
@@ -150,6 +152,7 @@ fn uplink_bound_problem_stays_lean() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        relay_junctions: false,
     };
     let rp = plan(&p).unwrap();
     assert_eq!(rp.cuts, vec![0, 1, 2]);

@@ -1,13 +1,18 @@
 //! Frame-order preservation through the topology wiring layer.
 //!
-//! These tests drive the wiring (junctions included) without the PJRT
-//! engine: each worker replica is emulated by a relay thread that
-//! forwards frames after a random per-replica compute delay. The
-//! invariant under test is the one the dispatcher relies on: whatever
-//! the topology (replicated stages, uneven jitter, either transport),
-//! frames come back in exactly the order they went in, followed by one
-//! `Shutdown`. Property-style: deterministic PRNG, many random
-//! topologies (no proptest crate offline).
+//! These tests drive the wiring without the PJRT engine: each worker
+//! replica is emulated by a relay thread that forwards frames after a
+//! random per-replica compute delay. The invariant under test is the
+//! one the dispatcher relies on: whatever the topology (replicated
+//! stages, uneven jitter, either transport, worker-owned or legacy
+//! relay data plane), frames come back in exactly the order they went
+//! in, followed by one `Shutdown`. Property-style: deterministic PRNG,
+//! many random topologies (no proptest crate offline).
+//!
+//! Worker-owned wiring (the default) must additionally spawn **zero**
+//! junction relay threads — each replica's [`MergeReceiver`] /
+//! [`DealSender`] pair *is* the boundary — and a dead successor replica
+//! must surface its peer label in the sender's error.
 
 use std::time::Duration;
 
@@ -28,36 +33,49 @@ fn data_msg(frame: u64) -> Message {
     }
 }
 
+fn opts(tcp: bool, base_port: Option<u16>, relay: bool) -> wiring::TransportOptions {
+    wiring::TransportOptions {
+        tcp,
+        base_port,
+        pipe_depth: 2,
+        relay_junctions: relay,
+    }
+}
+
 /// Wire the topology, emulate every worker as a jittered relay, pump
 /// `frames` frames through, and assert FIFO delivery end to end.
 fn drive(topo: &Topology, tcp: bool, frames: u64, jitter_us: u64, seed: u64) {
-    drive_with_ports(topo, tcp, None, frames, jitter_us, seed)
+    drive_with(topo, opts(tcp, None, false), frames, jitter_us, seed)
 }
 
-fn drive_with_ports(
+fn drive_with(
     topo: &Topology,
-    tcp: bool,
-    base_port: Option<u16>,
+    transport: wiring::TransportOptions,
     frames: u64,
     jitter_us: u64,
     seed: u64,
 ) {
+    let relay_mode = transport.relay_junctions;
     let wiring::Wiring {
         control,
         mut to_first,
         mut from_last,
         workers,
         junctions,
-    } = wiring::build(
-        topo,
-        &wiring::TransportOptions {
-            tcp,
-            base_port,
-            pipe_depth: 2,
-        },
-    )
-    .unwrap();
+    } = wiring::build(topo, &transport).unwrap();
     drop(control); // no configuration phase in this harness
+    if relay_mode {
+        assert_eq!(
+            junctions.is_empty(),
+            topo.is_uniform(),
+            "relay mode spawns a junction per replicated boundary"
+        );
+    } else {
+        assert!(
+            junctions.is_empty(),
+            "worker-owned wiring must spawn zero junction relay threads"
+        );
+    }
 
     let mut pool = WorkerPool::new();
     for (w_i, wc) in workers.into_iter().enumerate() {
@@ -72,14 +90,14 @@ fn drive_with_ports(
             let link = Link::ideal();
             loop {
                 let msg = data_in.recv(&null)?;
-                let stop = msg.msg_type == MessageType::Shutdown;
-                if !stop && jitter_us > 0 {
-                    std::thread::sleep(Duration::from_micros(rng.below(jitter_us)));
-                }
-                data_out.send(&msg, &link, &null)?;
-                if stop {
+                if msg.msg_type == MessageType::Shutdown {
+                    data_out.broadcast_shutdown(&link, &null)?;
                     return Ok(());
                 }
+                if jitter_us > 0 {
+                    std::thread::sleep(Duration::from_micros(rng.below(jitter_us)));
+                }
+                data_out.send_data(&msg, &link, &null)?;
             }
         });
     }
@@ -89,9 +107,9 @@ fn drive_with_ports(
         let null = ByteCounter::new();
         let link = Link::ideal();
         for f in 0..frames {
-            to_first.send(&data_msg(f), &link, &null)?;
+            to_first.send_data(&data_msg(f), &link, &null)?;
         }
-        to_first.send(&Message::control(MessageType::Shutdown), &link, &null)?;
+        to_first.broadcast_shutdown(&link, &null)?;
         Ok(())
     });
 
@@ -120,7 +138,9 @@ fn uniform_chain_order_both_transports() {
 #[test]
 fn replicated_middle_stage_preserves_order_under_jitter() {
     // The SEIFER-style shape: a 3-replica bottleneck stage between two
-    // sole stages, with per-replica compute jitter up to 400 us.
+    // sole stages, with per-replica compute jitter up to 400 us. This
+    // is the worker-owned acceptance property (mirrors, and replaces in
+    // the default data plane, the old junction order test).
     let topo = Topology::new(&[1, 3, 1], vec![LinkSpec::ideal(); 4]).unwrap();
     drive(&topo, false, 60, 400, 11);
     drive(&topo, true, 60, 400, 12);
@@ -128,16 +148,18 @@ fn replicated_middle_stage_preserves_order_under_jitter() {
 
 #[test]
 fn replicated_first_and_last_stages_preserve_order() {
-    // Junctions also sit on the dispatcher uplink (1 -> R deal) and the
-    // return link (R -> 1 merge); both rotations must line up.
+    // The dispatcher deals straight onto the replicated first stage and
+    // merges straight from the replicated last stage; both schedules
+    // must line up with the interior ones.
     let topo = Topology::new(&[2, 1, 2], vec![LinkSpec::ideal(); 4]).unwrap();
     drive(&topo, false, 40, 200, 21);
+    drive(&topo, true, 40, 200, 22);
 }
 
 #[test]
 fn adjacent_replicated_stages_preserve_order() {
-    // R -> R' boundary: one junction merges U inputs and deals to D
-    // outputs in a single rotation pair.
+    // R -> R' boundary: a full u x d mesh with per-endpoint deal/merge
+    // rotations replacing the single junction rotation pair.
     let topo = Topology::new(&[2, 3], vec![LinkSpec::ideal(); 3]).unwrap();
     drive(&topo, false, 50, 300, 31);
 }
@@ -145,7 +167,8 @@ fn adjacent_replicated_stages_preserve_order() {
 #[test]
 fn prop_random_topologies_preserve_order() {
     // forall topologies (1..=4 stages, 1..=3 replicas each), jittered
-    // relays: FIFO delivery holds. 12 seeded cases, local transport.
+    // relays: FIFO delivery holds under worker-owned deal/merge. 12
+    // seeded cases, local transport.
     let mut rng = Rng::new(0xDEFE_0001);
     for case in 0..12u64 {
         let stages = rng.range(1, 4);
@@ -158,17 +181,94 @@ fn prop_random_topologies_preserve_order() {
 }
 
 #[test]
+fn prop_relay_mode_still_preserves_order() {
+    // The legacy A/B data plane keeps the same external contract: same
+    // random-topology property through coordinator-side junctions.
+    let mut rng = Rng::new(0xDEFE_0002);
+    for case in 0..6u64 {
+        let stages = rng.range(1, 4);
+        let replicas: Vec<usize> = (0..stages).map(|_| rng.range(1, 3)).collect();
+        let topo = Topology::new(&replicas, vec![LinkSpec::ideal(); stages + 1]).unwrap();
+        let frames = rng.range(5, 40) as u64;
+        let jitter = rng.below(500);
+        drive_with(&topo, opts(false, None, true), frames, jitter, 200 + case);
+    }
+}
+
+#[test]
 fn frames_fewer_than_replicas_still_drain() {
-    // Starved replicas see only the shutdown broadcast; the merge must
-    // still terminate cleanly.
+    // Starved replicas see only the shutdown broadcast; every merge
+    // schedule must still terminate cleanly.
     let topo = Topology::new(&[1, 4, 1], vec![LinkSpec::ideal(); 4]).unwrap();
     drive(&topo, false, 2, 0, 41);
+    drive_with(&topo, opts(false, None, true), 2, 0, 42);
+}
+
+#[test]
+fn zero_frames_clean_shutdown() {
+    // Shutdown-only stream: the broadcast/drain protocol alone.
+    let topo = Topology::new(&[2, 2], vec![LinkSpec::ideal(); 3]).unwrap();
+    drive(&topo, false, 0, 0, 51);
 }
 
 #[test]
 fn tcp_base_port_override_allocates_sequentially() {
-    // Unlikely-to-collide range; exercises the PortAlloc override path
-    // (including junction ingress ports past the worker block).
+    // Unlikely-to-collide range; exercises the PortAlloc override path.
+    // Worker-owned wiring allocates exactly 3 ports per worker plus the
+    // return port — no junction ingress ports.
     let topo = Topology::new(&[1, 2], vec![LinkSpec::ideal(); 3]).unwrap();
-    drive_with_ports(&topo, true, Some(45_731), 5, 0, 51);
+    drive_with(&topo, opts(true, Some(45_731), false), 5, 0, 61);
+    // Relay mode still allocates its junction ports past the block.
+    drive_with(&topo, opts(true, Some(45_831), true), 5, 0, 62);
+}
+
+/// The CI smoke for the tentpole: a replicated-stage deployment over
+/// real TCP sockets runs with **zero** junction relay threads in the
+/// process, on both the interior and the dispatcher boundaries.
+#[test]
+fn worker_owned_tcp_replicated_smoke_zero_junctions() {
+    let topo = Topology::new(&[2, 3, 2], vec![LinkSpec::ideal(); 4]).unwrap();
+    let wiring = wiring::build(&topo, &opts(true, None, false)).unwrap();
+    assert!(wiring.junctions.is_empty(), "junction thread spawned");
+    assert_eq!(wiring.to_first.fan(), 2);
+    assert_eq!(wiring.from_last.fan(), 2);
+    drop(wiring);
+    // And the full FIFO property holds over TCP with that shape.
+    drive(&topo, true, 30, 200, 71);
+}
+
+/// A dead successor replica must be *named* in the sender's error — the
+/// peer label travels with the connection set.
+#[test]
+fn dead_successor_replica_surfaces_peer_label() {
+    let topo = Topology::new(&[1, 2], vec![LinkSpec::ideal(); 3]).unwrap();
+    let wiring::Wiring {
+        control,
+        to_first,
+        from_last,
+        mut workers,
+        junctions,
+    } = wiring::build(&topo, &opts(false, None, false)).unwrap();
+    drop(control);
+    drop(from_last);
+    drop(to_first);
+    // Kill replica node1.1 (stage 1, replica 1) outright.
+    let victim = workers
+        .iter()
+        .position(|wc| wc.view.name == "node1.1")
+        .unwrap();
+    drop(workers.remove(victim));
+    // node0 deals round-robin over [node1.0, node1.1]; its second frame
+    // targets the dead replica and must error with its label.
+    let node0 = workers
+        .iter_mut()
+        .find(|wc| wc.view.name == "node0")
+        .unwrap();
+    let null = ByteCounter::new();
+    let link = Link::ideal();
+    node0.data_out.send_data(&data_msg(0), &link, &null).unwrap();
+    let err = node0.data_out.send_data(&data_msg(1), &link, &null).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("node1.1"), "peer not named: {msg}");
+    junctions.join().unwrap();
 }
