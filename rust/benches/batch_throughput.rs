@@ -1,0 +1,195 @@
+//! Micro-batching throughput bench (artifact-free).
+//!
+//! The regime batching targets: small activation frames, where the
+//! per-message fixed costs (wire header, CRC, send/recv syscalls,
+//! codec setup) rival the payload itself. Synthetic pipeline workers
+//! (elementwise compute, no PJRT) run over real TCP sockets so every
+//! per-message cost is the genuine article; the dispatcher's batcher
+//! coalesces 1..=16 frames per message and the bench reports cycles/s
+//! per batch size, plus an adaptive-mode row.
+//!
+//! Emits `BENCH_batch.json` (machine-readable) into the working
+//! directory so the perf trajectory is tracked across PRs.
+//!
+//! Env: DEFER_FRAMES (default 2000), DEFER_FRAME_ELEMS (default 64).
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use defer::bench::Table;
+use defer::compress::Compression;
+use defer::coordinator::dispatcher::{run_inference, DispatcherStats, InferenceOptions};
+use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
+use defer::energy::EnergyModel;
+use defer::metrics::ByteCounter;
+use defer::netem::{Link, LinkSpec};
+use defer::serial::{Codec, CodecRuntime, Serialization};
+use defer::tensor::Tensor;
+use defer::threadpool::pipe;
+use defer::topology::wiring::{build, TransportOptions, WorkerConns};
+use defer::topology::Topology;
+use defer::util::timer::SharedTimer;
+use defer::wire::{Message, MessageType};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Synthetic worker: boundary reader feeding the real codec pipeline,
+/// elementwise `v -> 2v + 1` in place of the fused executables.
+fn spawn_worker(
+    wc: WorkerConns,
+    codec: Codec,
+    rt: CodecRuntime,
+) -> std::thread::JoinHandle<defer::Result<()>> {
+    std::thread::spawn(move || {
+        let WorkerConns {
+            view,
+            config: _config,
+            weights: _weights,
+            data_in,
+            data_out,
+        } = wc;
+        let (tx, rx) = pipe::<Message>(8);
+        let mut in_conn = data_in;
+        let reader = std::thread::spawn(move || loop {
+            match in_conn.recv(&ByteCounter::new()) {
+                Ok(msg) => {
+                    let stop = msg.msg_type == MessageType::Shutdown;
+                    if tx.send(msg).is_err() || stop {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        let ctx = PipelineCtx {
+            name: view.name.clone(),
+            codec,
+            rt,
+            overhead: SharedTimer::new(),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined: true,
+            pipe_depth: 8,
+            payload_pool: None,
+        };
+        let result = run_codec_pipeline(rx, data_out, ctx, |values, _batch| {
+            Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
+        });
+        reader.join().expect("reader thread");
+        result
+    })
+}
+
+/// One timed run: `frames` small frames through a 2-stage TCP chain at
+/// the given batch size. Returns measured cycles/s.
+fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
+    let replicas = [1usize, 1];
+    let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
+    let topo = Topology::new(&replicas, hop_links).unwrap();
+    let defer::topology::wiring::Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp: true,
+            base_port: None,
+            pipe_depth: 8,
+            relay_junctions: false,
+        },
+    )
+    .unwrap();
+    drop(control);
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let workers: Vec<_> = workers
+        .into_iter()
+        .map(|wc| spawn_worker(wc, codec, CodecRuntime::serial()))
+        .collect();
+
+    let input = Tensor::new(vec![elems], vec![1.0; elems]).unwrap();
+    let stats = Arc::new(DispatcherStats::new(EnergyModel::default()));
+    let opts = InferenceOptions {
+        pipelined: true,
+        pipe_depth: 8,
+        batch,
+        batch_adaptive: adaptive,
+        ..InferenceOptions::default()
+    };
+    let t0 = Instant::now();
+    run_inference(
+        input,
+        frames,
+        to_first,
+        from_last,
+        opts,
+        Arc::new(Link::ideal()),
+        Arc::clone(&stats),
+        None,
+        vec![elems],
+    )
+    .unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    junctions.join().unwrap();
+    assert_eq!(stats.clock.cycles(), frames, "dropped frames at batch {batch}");
+    frames as f64 / secs
+}
+
+fn main() {
+    let frames = env_usize("DEFER_FRAMES", 2000) as u64;
+    let elems = env_usize("DEFER_FRAME_ELEMS", 64).max(1);
+    println!(
+        "# Micro-batching: {frames} frames of {elems} f32 over TCP, 2-stage synthetic chain"
+    );
+    // Warm up sockets/allocator so batch=1 is not penalized by order.
+    let _ = run_once(frames.min(200), elems, 1, false);
+
+    let mut table = Table::new(&["batch", "cycles/s", "vs batch=1"]);
+    let mut rows_json = Vec::new();
+    let mut base = 0.0f64;
+    for batch in [1usize, 2, 4, 8, 16] {
+        let cps = run_once(frames, elems, batch, false);
+        if batch == 1 {
+            base = cps;
+        }
+        let speedup = cps / base;
+        table.row(&[
+            batch.to_string(),
+            format!("{cps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        rows_json.push(format!(
+            r#"    {{"batch": {batch}, "cycles_per_sec": {cps:.2}, "speedup_vs_unbatched": {speedup:.3}}}"#
+        ));
+    }
+    let adaptive_cps = run_once(frames, elems, 8, true);
+    table.row(&[
+        "adaptive(<=8)".into(),
+        format!("{adaptive_cps:.1}"),
+        format!("{:.2}x", adaptive_cps / base),
+    ]);
+    print!("{}", table.render());
+
+    let json = format!(
+        "{{\n  \"frames\": {frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"stages\": 2,\n  \"rows\": [\n{}\n  ],\n  \"adaptive\": {{\"cap\": 8, \"cycles_per_sec\": {adaptive_cps:.2}, \"speedup_vs_unbatched\": {:.3}}}\n}}\n",
+        rows_json.join(",\n"),
+        adaptive_cps / base
+    );
+    match std::fs::File::create("BENCH_batch.json").and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("\nwrote BENCH_batch.json"),
+        Err(e) => println!("\ncould not write BENCH_batch.json: {e}"),
+    }
+}

@@ -73,6 +73,7 @@ fn main() {
         frame: 1,
         serialized_len: float_bytes.len() as u64,
         count: n as u64,
+        batch: 1,
         payload: float_bytes.clone(),
     };
     let link = Link::ideal();

@@ -16,7 +16,7 @@ use defer::bench::Table;
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
 use defer::netem::LinkSpec;
-use defer::placement::{plan, CodecCost, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{plan, BatchCost, CodecCost, DeviceProfile, PlacementProblem, StageCost};
 use defer::repartition::{self, PartCost, RepartitionProblem};
 use defer::runtime::Engine;
 
@@ -49,6 +49,7 @@ fn synthetic_problem(budget: usize) -> PlacementProblem {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     }
 }
@@ -130,6 +131,7 @@ fn main() {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
+            batch: BatchCost::ZERO,
             relay_junctions: false,
         })
         .expect("joint plan");

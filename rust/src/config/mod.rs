@@ -131,6 +131,24 @@ pub struct DeferConfig {
     /// model) instead of the worker-owned deal/merge data plane. A/B
     /// escape hatch — off by default.
     pub relay_junctions: bool,
+    /// Max input frames coalesced into one batched wire message
+    /// (micro-batching). 1 = unbatched — byte-identical to the legacy
+    /// data plane. The planner also prices batch sizes up to this cap
+    /// when `batch_overhead_us > 0`.
+    pub batch: usize,
+    /// Latency budget for filling a batch, in milliseconds (0 =
+    /// unbounded). The planner only accepts a batch size B when the
+    /// extra wait a frame can see — (B-1) gate periods — fits the
+    /// budget.
+    pub batch_latency_ms: f64,
+    /// Adaptive batching: size each batch to the dispatcher's live send
+    /// queue depth (up to `batch`) instead of always filling to the
+    /// cap, so a drained queue ships single frames.
+    pub batch_adaptive: bool,
+    /// Per-message fixed overhead for the planner's batch pricing, in
+    /// microseconds per frame at B=1 (amortized as `overhead / B`).
+    /// 0 = batching is not priced and the planner keeps B=1.
+    pub batch_overhead_us: f64,
 }
 
 impl Default for DeferConfig {
@@ -161,6 +179,10 @@ impl Default for DeferConfig {
             codec_gbps: None,
             codec_measure: false,
             relay_junctions: false,
+            batch: 1,
+            batch_latency_ms: 0.0,
+            batch_adaptive: false,
+            batch_overhead_us: 0.0,
         }
     }
 }
@@ -267,6 +289,18 @@ impl DeferConfig {
         if let Some(x) = obj.get("relay_junctions") {
             cfg.relay_junctions = matches!(x, Json::Bool(true));
         }
+        if let Some(x) = obj.get("batch") {
+            cfg.batch = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("batch_latency_ms") {
+            cfg.batch_latency_ms = x.as_f64()?;
+        }
+        if let Some(x) = obj.get("batch_adaptive") {
+            cfg.batch_adaptive = matches!(x, Json::Bool(true));
+        }
+        if let Some(x) = obj.get("batch_overhead_us") {
+            cfg.batch_overhead_us = x.as_f64()?;
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -354,6 +388,12 @@ impl DeferConfig {
         if args.has("relay-junctions") {
             self.relay_junctions = true;
         }
+        self.batch = args.get_usize("batch", self.batch)?;
+        self.batch_latency_ms = args.get_f64("batch-latency-ms", self.batch_latency_ms)?;
+        if args.has("batch-adaptive") {
+            self.batch_adaptive = true;
+        }
+        self.batch_overhead_us = args.get_f64("batch-overhead-us", self.batch_overhead_us)?;
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
                 DeferError::Cli(format!("--base-port wants a port number, got {p:?}"))
@@ -462,6 +502,27 @@ impl DeferConfig {
                      time), got {g}"
                 )));
             }
+        }
+        if self.batch == 0 || self.batch > crate::wire::MAX_BATCH as usize {
+            return Err(DeferError::Config(format!(
+                "batch must be in 1..={}, got {}",
+                crate::wire::MAX_BATCH,
+                self.batch
+            )));
+        }
+        if !(self.batch_latency_ms >= 0.0 && self.batch_latency_ms.is_finite()) {
+            return Err(DeferError::Config(format!(
+                "batch_latency_ms must be a finite budget >= 0 (0 = unbounded), \
+                 got {}",
+                self.batch_latency_ms
+            )));
+        }
+        if !(self.batch_overhead_us >= 0.0 && self.batch_overhead_us.is_finite()) {
+            return Err(DeferError::Config(format!(
+                "batch_overhead_us must be finite and >= 0 (0 = batching not \
+                 priced), got {}",
+                self.batch_overhead_us
+            )));
         }
         Ok(())
     }
@@ -681,6 +742,52 @@ mod tests {
         assert!(cfg.relay_junctions);
         // The default data plane is worker-owned.
         assert!(!DeferConfig::default().relay_junctions);
+    }
+
+    #[test]
+    fn batching_surface_round_trip() {
+        let text = r#"{
+            "batch": 8,
+            "batch_latency_ms": 2.5,
+            "batch_adaptive": true,
+            "batch_overhead_us": 120
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert_eq!(cfg.batch, 8);
+        assert_eq!(cfg.batch_latency_ms, 2.5);
+        assert!(cfg.batch_adaptive);
+        assert_eq!(cfg.batch_overhead_us, 120.0);
+        // Defaults stay unbatched and unpriced.
+        let d = DeferConfig::default();
+        assert_eq!(d.batch, 1);
+        assert_eq!(d.batch_latency_ms, 0.0);
+        assert!(!d.batch_adaptive);
+        assert_eq!(d.batch_overhead_us, 0.0);
+        // Out-of-range values rejected at config time.
+        assert!(DeferConfig::from_json_str(r#"{"batch": 0}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"batch": 99999999}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"batch_latency_ms": -1}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"batch_overhead_us": -0.5}"#).is_err());
+        // CLI spelling.
+        let raw: Vec<String> = [
+            "run",
+            "--batch",
+            "4",
+            "--batch-latency-ms",
+            "1.5",
+            "--batch-adaptive",
+            "--batch-overhead-us",
+            "80",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp", "batch-adaptive"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.batch, 4);
+        assert_eq!(cfg.batch_latency_ms, 1.5);
+        assert!(cfg.batch_adaptive);
+        assert_eq!(cfg.batch_overhead_us, 80.0);
     }
 
     #[test]

@@ -112,6 +112,7 @@ impl SingleDevice {
             data_overhead: std::time::Duration::ZERO,
             config_time: self.exe.compile_time(),
             reference_error,
+            queue_high_water: 0,
         })
     }
 }

@@ -265,6 +265,9 @@ impl ChainRunner {
                 rt: codec_rt,
                 pipelined: self.cfg.codec_pipeline,
                 pipe_depth: self.cfg.pipe_depth,
+                batch: self.cfg.batch,
+                batch_latency_ms: self.cfg.batch_latency_ms,
+                batch_adaptive: self.cfg.batch_adaptive,
             },
             uplink,
             Arc::clone(&dstats),
@@ -308,6 +311,7 @@ impl ChainRunner {
                 .sum::<Duration>(),
             config_time,
             reference_error,
+            queue_high_water: dstats.queue_depth.high_water() as u64,
         })
     }
 }

@@ -348,15 +348,45 @@ pub fn run_compute_node(
         pipe_depth: opts.pipe_depth,
         payload_pool: Some(Arc::clone(&payload_pool)),
     };
-    let result: Result<()> = run_codec_pipeline(rx, out_conn, ctx, |values| {
+    let per_frame_elems: usize = in_shape.iter().product();
+    let node_name = view.name.clone();
+    let result: Result<()> = run_codec_pipeline(rx, out_conn, ctx, |values, batch| {
         let t_run = std::time::Instant::now();
-        // Fused partitions run back to back; inner activations stay in
-        // process memory, no codec, no link.
-        let mut cur = Tensor::new(in_shape.clone(), values)?;
-        for exe in &exes {
-            cur = exe.run(&cur)?;
+        let b = batch.max(1);
+        if values.len() != per_frame_elems * b {
+            return Err(DeferError::Coordinator(format!(
+                "{node_name}: batch of {b} frame(s) carries {} values, \
+                 expected {} ({} per frame)",
+                values.len(),
+                per_frame_elems * b,
+                per_frame_elems
+            )));
         }
+        // Fused partitions run back to back; inner activations stay in
+        // process memory, no codec, no link. A batched message splits
+        // into its member frames here — the executables' shapes are
+        // per-frame — and the outputs re-stack in order.
+        let output = if b == 1 {
+            let mut cur = Tensor::new(in_shape.clone(), values)?;
+            for exe in &exes {
+                cur = exe.run(&cur)?;
+            }
+            cur.into_parts().1
+        } else {
+            let mut out = Vec::with_capacity(values.len());
+            for sub in values.chunks(per_frame_elems) {
+                let mut cur = Tensor::new(in_shape.clone(), sub.to_vec())?;
+                for exe in &exes {
+                    cur = exe.run(&cur)?;
+                }
+                out.extend_from_slice(&cur.into_parts().1);
+            }
+            out
+        };
         if let Some(floor) = flops_floor {
+            // The emulated device runs every member frame: the floor
+            // scales with the batch.
+            let floor = floor.mul_f64(b as f64);
             let elapsed = t_run.elapsed();
             if elapsed < floor {
                 std::thread::sleep(floor - elapsed);
@@ -367,8 +397,7 @@ pub fn run_compute_node(
             // prefer emulated_mflops).
             std::thread::sleep(t_run.elapsed().mul_f64(opts.compute_slowdown - 1.0));
         }
-        let (_, data) = cur.into_parts();
-        Ok(data)
+        Ok(output)
     });
 
     // Fold the on-device time into the node energy meter, under whichever

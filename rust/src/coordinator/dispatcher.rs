@@ -28,7 +28,7 @@ use std::time::{Duration, Instant};
 use crate::config::CodecConfig;
 use crate::energy::{EnergyMeter, EnergyModel};
 use crate::error::{DeferError, Result};
-use crate::metrics::{ByteCounter, Histogram, ThroughputClock};
+use crate::metrics::{ByteCounter, Histogram, QueueDepthGauge, ThroughputClock};
 use crate::model::StageSpec;
 use crate::netem::Link;
 use crate::serial::CodecRuntime;
@@ -52,6 +52,10 @@ pub struct DispatcherStats {
     pub config_time: Mutex<Duration>,
     /// Max |err| vs expected output, when an expectation is provided.
     pub reference_error: Mutex<Option<f32>>,
+    /// Depth of the dispatcher's bounded encode→send queue (last seen +
+    /// high water). The batcher reads `last()` in adaptive mode; the
+    /// run report surfaces `high_water()` as the backpressure signal.
+    pub queue_depth: QueueDepthGauge,
 }
 
 impl DispatcherStats {
@@ -65,6 +69,7 @@ impl DispatcherStats {
             clock: ThroughputClock::new(),
             config_time: Mutex::new(Duration::ZERO),
             reference_error: Mutex::new(None),
+            queue_depth: QueueDepthGauge::new(),
         }
     }
 }
@@ -155,6 +160,7 @@ fn send_architecture(
         frame: 0,
         serialized_len: mid as u64,
         count: 0,
+        batch: 1,
         payload,
     };
     conn.send(&msg, link, &stats.architecture_tx)?;
@@ -188,6 +194,7 @@ fn send_weights(
         frame: 0,
         serialized_len: mid as u64,
         count: flat.len() as u64,
+        batch: 1,
         payload,
     };
     conn.send(&msg, link, &stats.weights_tx)?;
@@ -207,6 +214,21 @@ pub struct InferenceOptions {
     pub pipelined: bool,
     /// Bounded depth of the intra-dispatcher pipes.
     pub pipe_depth: usize,
+    /// Max logical frames coalesced into one batched wire message
+    /// (>= 1; 1 = unbatched, byte-identical to the legacy data plane).
+    pub batch: usize,
+    /// Latency budget for filling a batch, in milliseconds (0 =
+    /// unbounded). In the closed-loop dispatcher every input frame is
+    /// available immediately, so the budget never forces a short batch
+    /// here; it is carried for parity with the planner's feasibility
+    /// rule and for open-loop front-ends.
+    pub batch_latency_ms: f64,
+    /// Adaptive batching (pipelined mode): size each batch to what is
+    /// already waiting — `min(batch, queue_depth + 1)` — so a drained
+    /// queue degrades to single frames and a backed-up wire coalesces
+    /// up to the cap. The inline path has no queue and uses the fixed
+    /// batch size.
+    pub batch_adaptive: bool,
 }
 
 impl Default for InferenceOptions {
@@ -216,19 +238,24 @@ impl Default for InferenceOptions {
             rt: CodecRuntime::serial(),
             pipelined: true,
             pipe_depth: 4,
+            batch: 1,
+            batch_latency_ms: 0.0,
+            batch_adaptive: false,
         }
     }
 }
 
-/// Send one encoded data frame: stamp its send time, deal it to the
-/// stage-0 replica the round-robin schedule owns (through the shaped
-/// uplink with byte/energy accounting), and recycle the payload buffer.
-/// Shared by the pipelined and inline sender paths so the accounting
-/// cannot diverge between them.
+/// Send one encoded data message carrying `batch` coalesced frames
+/// (first id `frame`): stamp every member frame's send time, deal the
+/// whole batch to the stage-0 replica the round-robin schedule owns
+/// (through the shaped uplink with byte/energy accounting), and recycle
+/// the payload buffer. Shared by the pipelined and inline sender paths
+/// so the accounting cannot diverge between them.
 #[allow(clippy::too_many_arguments)]
 fn send_data_frame(
     to_first: &mut DealSender,
     frame: u64,
+    batch: u32,
     payload: Vec<u8>,
     serialized_len: usize,
     count: u64,
@@ -242,15 +269,38 @@ fn send_data_frame(
         frame,
         serialized_len: serialized_len as u64,
         count,
+        batch,
         payload,
     };
-    send_times.lock().unwrap().insert(frame, Instant::now());
+    let now = Instant::now();
+    {
+        let mut st = send_times.lock().unwrap();
+        for f in frame..frame + batch as u64 {
+            st.insert(f, now);
+        }
+    }
     to_first.send_data(&msg, link, &stats.data_tx)?;
     stats.meter.tx_bytes.add(msg.wire_size());
     if let Some(p) = rt.buffers() {
         p.put(msg.payload);
     }
     Ok(())
+}
+
+/// Stack `b` copies of the per-frame input values into `scratch` (the
+/// dispatcher replays one input tensor per frame, so a batch is the
+/// input repeated). Rebuilds only when the batch size changes.
+fn stack_input<'a>(input: &'a [f32], b: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+    if b == 1 {
+        return input;
+    }
+    if scratch.len() != input.len() * b {
+        scratch.clear();
+        for _ in 0..b {
+            scratch.extend_from_slice(input);
+        }
+    }
+    scratch
 }
 
 /// Pump `frames` input tensors into the chain and collect all results.
@@ -285,7 +335,8 @@ pub fn run_inference(
         // first error in spawn order, and when the chain dies the
         // sender holds the root cause (the peer-labelled socket error)
         // while the encoder only sees its pipe close.
-        let (enc_tx, enc_rx) = pipe::<(u64, Vec<u8>, usize)>(opts.pipe_depth);
+        // The pipe carries (first frame id, batch, payload, mid).
+        let (enc_tx, enc_rx) = pipe::<(u64, u32, Vec<u8>, usize)>(opts.pipe_depth);
         let count = input.len() as u64;
         {
             let stats = Arc::clone(&stats);
@@ -293,13 +344,18 @@ pub fn run_inference(
             let link = Arc::clone(&link);
             let rt = rt.clone();
             pool.spawn("dispatcher-sender", move || {
-                while let Some((frame, payload, mid)) = enc_rx.recv() {
+                while let Some((frame, batch, payload, mid)) = enc_rx.recv() {
+                    // Depth of the encode→send queue *behind* this
+                    // message: the adaptive batcher's feedback signal
+                    // and the run report's backpressure high-water.
+                    stats.queue_depth.observe(enc_rx.len());
                     send_data_frame(
                         &mut to_first,
                         frame,
+                        batch,
                         payload,
                         mid,
-                        count,
+                        count * batch as u64,
                         &link,
                         &stats,
                         &send_times,
@@ -315,14 +371,31 @@ pub fn run_inference(
         {
             let stats = Arc::clone(&stats);
             let rt = rt.clone();
+            let b_max = opts.batch.max(1);
+            let adaptive = opts.batch_adaptive;
             pool.spawn("dispatcher-encoder", move || {
-                for frame in 0..frames {
+                let mut scratch: Vec<f32> = Vec::new();
+                let mut sent = 0u64;
+                while sent < frames {
+                    // Adaptive mode batches what is already waiting:
+                    // a drained send queue means the wire keeps up, so
+                    // ship single frames for latency; a backed-up queue
+                    // means per-message overhead is the bottleneck, so
+                    // coalesce up to the cap. The tail flushes short.
+                    let want = if adaptive {
+                        (stats.queue_depth.last() + 1).min(b_max)
+                    } else {
+                        b_max
+                    };
+                    let b = (want as u64).min(frames - sent).max(1) as usize;
+                    let values = stack_input(input.data(), b, &mut scratch);
                     let (payload, mid) = codecs
                         .data
-                        .encode_frame(input.data(), &rt, Some(&stats.meter.codec));
+                        .encode_frame(values, &rt, Some(&stats.meter.codec));
                     enc_tx
-                        .send((frame, payload, mid))
+                        .send((sent, b as u32, payload, mid))
                         .map_err(|_| DeferError::ChannelClosed("dispatcher encode pipe"))?;
+                    sent += b as u64;
                 }
                 Ok(())
             });
@@ -332,23 +405,32 @@ pub fn run_inference(
         let send_times = Arc::clone(&send_times);
         let link = Arc::clone(&link);
         let rt = rt.clone();
+        let b_max = opts.batch.max(1);
         pool.spawn("dispatcher-sender", move || {
             let count = input.len() as u64;
-            for frame in 0..frames {
+            let mut scratch: Vec<f32> = Vec::new();
+            let mut sent = 0u64;
+            while sent < frames {
+                // Inline mode has no send queue to adapt to; it uses
+                // the fixed batch size (tail flushes short).
+                let b = (b_max as u64).min(frames - sent).max(1) as usize;
+                let values = stack_input(input.data(), b, &mut scratch);
                 let (payload, mid) = codecs
                     .data
-                    .encode_frame(input.data(), &rt, Some(&stats.meter.codec));
+                    .encode_frame(values, &rt, Some(&stats.meter.codec));
                 send_data_frame(
                     &mut to_first,
-                    frame,
+                    sent,
+                    b as u32,
                     payload,
                     mid,
-                    count,
+                    count * b as u64,
                     &link,
                     &stats,
                     &send_times,
                     &rt,
                 )?;
+                sent += b as u64;
             }
             // FIFO: shutdown travels behind the last frame, broadcast
             // to every stage-0 replica.
@@ -358,12 +440,17 @@ pub fn run_inference(
     }
 
     // ---- result path: read (and, when pipelined, decode elsewhere) ----
+    // A batched result decodes once, then splits into its member frames
+    // FIFO: each gets its own latency sample, throughput cycle, and
+    // reference check, so per-frame metrics stay batch-size-invariant.
+    let out_elems: usize = output_shape.iter().product();
     let decode_one = {
         let stats = Arc::clone(&stats);
         let send_times = Arc::clone(&send_times);
         let rt = rt.clone();
         move |msg: Message| -> Result<()> {
-            let t_sent = send_times.lock().unwrap().remove(&msg.frame);
+            let b = msg.batch.max(1) as usize;
+            let first = msg.frame;
             let values = codecs.data.decode_frame(
                 &msg.payload,
                 msg.serialized_len as usize,
@@ -371,32 +458,57 @@ pub fn run_inference(
                 &rt,
                 Some(&stats.meter.codec),
             )?;
-            let result = Tensor::new(output_shape.clone(), values)?;
-            if let Some(exp) = &expected {
-                let err = result.max_abs_diff(exp)?;
-                let mut slot = stats.reference_error.lock().unwrap();
-                *slot = Some(slot.unwrap_or(0.0).max(err));
+            if let Some(p) = rt.buffers() {
+                p.put(msg.payload);
             }
-            if let Some(t) = t_sent {
-                stats.latency.record(t.elapsed());
+            if values.len() != out_elems * b {
+                return Err(DeferError::Coordinator(format!(
+                    "dispatcher: result batch of {b} frame(s) carries {} values, \
+                     expected {}",
+                    values.len(),
+                    out_elems * b
+                )));
             }
-            stats.clock.record_cycle();
-            Ok(())
+            let finish = |frame: u64, result: Tensor| -> Result<()> {
+                let t_sent = send_times.lock().unwrap().remove(&frame);
+                if let Some(exp) = &expected {
+                    let err = result.max_abs_diff(exp)?;
+                    let mut slot = stats.reference_error.lock().unwrap();
+                    *slot = Some(slot.unwrap_or(0.0).max(err));
+                }
+                if let Some(t) = t_sent {
+                    stats.latency.record(t.elapsed());
+                }
+                stats.clock.record_cycle();
+                Ok(())
+            };
+            if b == 1 {
+                finish(first, Tensor::new(output_shape.clone(), values)?)
+            } else {
+                for (i, sub) in values.chunks(out_elems).enumerate() {
+                    let result = Tensor::new(output_shape.clone(), sub.to_vec())?;
+                    finish(first + i as u64, result)?;
+                }
+                Ok(())
+            }
         }
     };
 
     if opts.pipelined {
         let (res_tx, res_rx) = pipe::<Message>(opts.pipe_depth);
+        let reader_rt = rt.clone();
         pool.spawn("dispatcher-reader", move || {
             let mut data_seen = 0u64;
             while data_seen < frames {
-                let msg = from_last.recv(&ByteCounter::new())?;
+                // Payload buffers come from the dispatcher's pool (the
+                // decode side puts them back once decoded).
+                let msg = from_last.recv_pooled(&ByteCounter::new(), reader_rt.buffers())?;
                 let stop = msg.msg_type == MessageType::Shutdown;
                 if matches!(
                     msg.msg_type,
                     MessageType::Data | MessageType::ResultMsg
                 ) {
-                    data_seen += 1;
+                    data_seen += msg.batch.max(1) as u64;
                 }
                 res_tx
                     .send(msg)
@@ -417,8 +529,9 @@ pub fn run_inference(
                 };
                 match msg.msg_type {
                     MessageType::Data | MessageType::ResultMsg => {
+                        let b = msg.batch.max(1) as u64;
                         decode_one(msg)?;
-                        received += 1;
+                        received += b;
                     }
                     MessageType::Shutdown => break,
                     other => {
@@ -434,11 +547,12 @@ pub fn run_inference(
         pool.spawn("dispatcher-receiver", move || {
             let mut received = 0u64;
             while received < frames {
-                let msg = from_last.recv(&ByteCounter::new())?;
+                let msg = from_last.recv_pooled(&ByteCounter::new(), rt.buffers())?;
                 match msg.msg_type {
                     MessageType::Data | MessageType::ResultMsg => {
+                        let b = msg.batch.max(1) as u64;
                         decode_one(msg)?;
-                        received += 1;
+                        received += b;
                     }
                     MessageType::Shutdown => break,
                     other => {

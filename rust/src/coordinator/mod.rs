@@ -75,6 +75,10 @@ pub struct RunReport {
     /// Max |err| of the final frame vs the Python reference (None if the
     /// run never checked).
     pub reference_error: Option<f32>,
+    /// High-water depth of the dispatcher's bounded encode→send queue —
+    /// the observable backpressure signal (0 when the wire kept up, or
+    /// for the single-device baseline which has no queue).
+    pub queue_high_water: u64,
 }
 
 impl RunReport {

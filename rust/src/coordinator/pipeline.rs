@@ -61,9 +61,10 @@ pub struct PipelineCtx {
     pub payload_pool: Option<Arc<BufPool>>,
 }
 
-/// A frame moving between pipeline phases, or the end-of-stream marker.
+/// A frame (or batch of frames) moving between pipeline phases, or the
+/// end-of-stream marker.
 enum Step<T> {
-    Frame { frame: u64, data: T },
+    Frame { frame: u64, batch: u32, data: T },
     /// Clean shutdown received from upstream; relay downstream.
     Shutdown,
 }
@@ -80,6 +81,12 @@ fn describe(stage: &str, e: &DeferError) -> DeferError {
 /// [`PipelineCtx::pipelined`]. Returns after relaying `Shutdown`, or
 /// when `rx` closes without one (upstream teardown — the reader's error
 /// is surfaced by the caller joining its pool), or with the first error.
+///
+/// Batches stay whole: a message carrying `batch` stacked frames is
+/// decoded once, handed to `compute` as one stacked vector (with the
+/// batch count as the second argument), encoded once, and forwarded as
+/// one message with the batch field preserved — so the per-message fixed
+/// costs are paid once per batch, not once per frame.
 pub fn run_codec_pipeline<F>(
     rx: crate::threadpool::PipeReceiver<Message>,
     mut out: DealSender,
@@ -87,7 +94,7 @@ pub fn run_codec_pipeline<F>(
     mut compute: F,
 ) -> Result<()>
 where
-    F: FnMut(Vec<f32>) -> Result<Vec<f32>>,
+    F: FnMut(Vec<f32>, usize) -> Result<Vec<f32>>,
 {
     if !ctx.pipelined {
         // Legacy inline loop: one thread does everything per frame.
@@ -108,7 +115,7 @@ where
                     if let Some(p) = &ctx.payload_pool {
                         p.put(msg.payload);
                     }
-                    let output = compute(values)?;
+                    let output = compute(values, msg.batch as usize)?;
                     let (wire, mid) =
                         ctx.codec
                             .encode_frame(&output, &ctx.rt, Some(&ctx.overhead));
@@ -117,13 +124,14 @@ where
                         frame: msg.frame,
                         serialized_len: mid as u64,
                         count: output.len() as u64,
+                        batch: msg.batch,
                         payload: wire,
                     };
                     out.send_data(&out_msg, &ctx.out_link, &ctx.data_tx)?;
                     if let Some(p) = &ctx.payload_pool {
                         p.put(out_msg.payload);
                     }
-                    ctx.frames.add(1);
+                    ctx.frames.add(msg.batch as u64);
                 }
                 other => {
                     return Err(DeferError::Coordinator(format!(
@@ -175,6 +183,7 @@ where
                             dec_tx
                                 .send(Step::Frame {
                                     frame: msg.frame,
+                                    batch: msg.batch,
                                     data: values,
                                 })
                                 .map_err(|_| DeferError::ChannelClosed("decode pipe"))?;
@@ -211,7 +220,7 @@ where
                             out.broadcast_shutdown(&out_link, &data_tx)?;
                             return Ok(());
                         }
-                        Step::Frame { frame, data } => {
+                        Step::Frame { frame, batch, data } => {
                             let (wire, mid) =
                                 codec.encode_frame(&data, &rt, Some(&overhead));
                             let out_msg = Message {
@@ -219,13 +228,14 @@ where
                                 frame,
                                 serialized_len: mid as u64,
                                 count: data.len() as u64,
+                                batch,
                                 payload: wire,
                             };
                             out.send_data(&out_msg, &out_link, &data_tx)?;
                             if let Some(p) = &payload_pool {
                                 p.put(out_msg.payload);
                             }
-                            frames.add(1);
+                            frames.add(batch as u64);
                         }
                     }
                 }
@@ -245,11 +255,12 @@ where
                         .map_err(|_| DeferError::ChannelClosed("encode pipe"))?;
                     return Ok(());
                 }
-                Step::Frame { frame, data } => {
-                    let output = compute(data)?;
+                Step::Frame { frame, batch, data } => {
+                    let output = compute(data, batch as usize)?;
                     enc_tx
                         .send(Step::Frame {
                             frame,
+                            batch,
                             data: output,
                         })
                         .map_err(|_| DeferError::ChannelClosed("encode pipe"))?;
@@ -324,6 +335,7 @@ mod tests {
                 frame,
                 serialized_len: mid as u64,
                 count: 8,
+                batch: 1,
                 payload,
             })
             .unwrap();
@@ -341,7 +353,7 @@ mod tests {
             let frames_counter = c.frames.clone();
             feed_frames(&tx, codec, 10);
             drop(tx);
-            run_codec_pipeline(rx, sink(out_a), c, |v| {
+            run_codec_pipeline(rx, sink(out_a), c, |v, _| {
                 Ok(v.iter().map(|x| x * 2.0).collect())
             })
             .unwrap();
@@ -370,7 +382,7 @@ mod tests {
             let c = ctx("t", pipelined);
             feed_frames(&tx, c.codec, 3);
             drop(tx);
-            let err = run_codec_pipeline(rx, sink(out_a), c, |_| {
+            let err = run_codec_pipeline(rx, sink(out_a), c, |_, _| {
                 Err(DeferError::Runtime("synthetic compute failure".into()))
             })
             .unwrap_err();
@@ -393,11 +405,12 @@ mod tests {
                 frame: 0,
                 serialized_len: 3,
                 count: 1,
+                batch: 1,
                 payload: vec![1, 2, 3],
             })
             .unwrap();
             drop(tx);
-            let err = run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap_err();
+            let err = run_codec_pipeline(rx, sink(out_a), c, |v, _| Ok(v)).unwrap_err();
             assert!(
                 format!("{err}").contains("ragged"),
                 "pipelined={pipelined}: {err}"
@@ -412,7 +425,7 @@ mod tests {
         let c = ctx("stage7", true);
         tx.send(Message::control(MessageType::Ready)).unwrap();
         drop(tx);
-        let err = run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap_err();
+        let err = run_codec_pipeline(rx, sink(out_a), c, |v, _| Ok(v)).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("stage7") && msg.contains("Ready"), "{msg}");
     }
@@ -424,7 +437,55 @@ mod tests {
             let (out_a, _out_b) = Conn::local_pair(8);
             let c = ctx("t", pipelined);
             drop(tx); // reader died without sending anything
-            run_codec_pipeline(rx, sink(out_a), c, Ok).unwrap();
+            run_codec_pipeline(rx, sink(out_a), c, |v, _| Ok(v)).unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_frames_flow_whole_and_count_per_frame() {
+        // A batch of 4 stacked frames must decode/compute/encode once,
+        // leave as one message with the batch field intact, and advance
+        // the completed-frame counter by the batch size.
+        for pipelined in [false, true] {
+            let (tx, rx) = pipe::<Message>(8);
+            let (out_a, mut out_b) = Conn::local_pair(8);
+            let c = ctx("t", pipelined);
+            let codec = c.codec;
+            let frames_counter = c.frames.clone();
+            let data: Vec<f32> = (0..32).map(|i| i as f32).collect(); // 4 x 8
+            let (payload, mid) = codec.encode_f32s(&data, None);
+            tx.send(Message {
+                msg_type: MessageType::Data,
+                frame: 10,
+                serialized_len: mid as u64,
+                count: 32,
+                batch: 4,
+                payload,
+            })
+            .unwrap();
+            tx.send(Message::control(MessageType::Shutdown)).unwrap();
+            drop(tx);
+            let mut seen_batch = 0usize;
+            run_codec_pipeline(rx, sink(out_a), c, |v, b| {
+                seen_batch = b;
+                Ok(v.iter().map(|x| x + 1.0).collect())
+            })
+            .unwrap();
+            assert_eq!(seen_batch, 4, "pipelined={pipelined}");
+            assert_eq!(frames_counter.total(), 4);
+            let counter = ByteCounter::new();
+            let m = out_b.recv(&counter).unwrap();
+            assert_eq!(m.frame, 10);
+            assert_eq!(m.batch, 4);
+            let vals = codec
+                .decode_f32s(&m.payload, m.serialized_len as usize, 32, None)
+                .unwrap();
+            let expect: Vec<f32> = (0..32).map(|i| i as f32 + 1.0).collect();
+            assert_eq!(vals, expect);
+            assert_eq!(
+                out_b.recv(&counter).unwrap().msg_type,
+                MessageType::Shutdown
+            );
         }
     }
 }

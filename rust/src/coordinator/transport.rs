@@ -15,6 +15,7 @@ use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
 use crate::threadpool::{pipe, PipeReceiver, PipeSender};
+use crate::util::bufpool::BufPool;
 use crate::wire::{write_message, Message};
 
 /// One directed connection endpoint.
@@ -29,6 +30,12 @@ pub enum Conn {
         /// Partially consumed inbound buffer (multiple messages per Vec are
         /// not produced today, but keep reads robust).
         pending: Vec<u8>,
+        /// Frame-buffer pool shared by both endpoints of the pair: the
+        /// sender draws its outbound wire buffer here, the receiver puts
+        /// the fully consumed inbound buffer back. Closes the last
+        /// allocation loop in the deal/merge hot path (each local send
+        /// used to pay a fresh `Vec` per message).
+        frames: Arc<BufPool>,
     },
 }
 
@@ -92,16 +99,22 @@ impl Conn {
     pub fn local_pair(depth: usize) -> (Conn, Conn) {
         let (atx, brx) = pipe::<Vec<u8>>(depth);
         let (btx, arx) = pipe::<Vec<u8>>(depth);
+        // Bound the shared frame pool by what can be in flight across
+        // both directions at once (pipe depth each way, plus slack for
+        // the buffers the two endpoints hold while reading/writing).
+        let frames = Arc::new(BufPool::new(2 * depth.max(1) + 2));
         (
             Conn::Local {
                 tx: atx,
                 rx: arx,
                 pending: Vec::new(),
+                frames: Arc::clone(&frames),
             },
             Conn::Local {
                 tx: btx,
                 rx: brx,
                 pending: Vec::new(),
+                frames,
             },
         )
     }
@@ -110,8 +123,9 @@ impl Conn {
     pub fn send(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
         match self {
             Conn::Tcp { writer, .. } => write_message(writer, msg, link, counter),
-            Conn::Local { tx, .. } => {
-                let mut buf = Vec::with_capacity(msg.wire_size() as usize);
+            Conn::Local { tx, frames, .. } => {
+                let mut buf = frames.take();
+                buf.reserve(msg.wire_size() as usize);
                 write_message(&mut buf, msg, link, counter)?;
                 tx.send(buf)
                     .map_err(|_| DeferError::ChannelClosed("local conn send"))
@@ -134,7 +148,7 @@ impl Conn {
     ) -> Result<Message> {
         match self {
             Conn::Tcp { reader, .. } => crate::wire::read_message_pooled(reader, counter, pool),
-            Conn::Local { rx, pending, .. } => {
+            Conn::Local { rx, pending, frames, .. } => {
                 if pending.is_empty() {
                     *pending = rx
                         .recv()
@@ -144,6 +158,11 @@ impl Conn {
                 let msg = crate::wire::read_message_pooled(&mut cursor, counter, pool)?;
                 let consumed = cursor.position() as usize;
                 pending.drain(..consumed);
+                if pending.is_empty() {
+                    // Hand the drained wire buffer back for the next send
+                    // on either endpoint.
+                    frames.put(std::mem::take(pending));
+                }
                 Ok(msg)
             }
         }
@@ -164,8 +183,27 @@ mod tests {
             frame,
             serialized_len: n as u64,
             count: 0,
+            batch: 1,
             payload: vec![frame as u8; n],
         }
+    }
+
+    #[test]
+    fn local_pair_recycles_wire_buffers() {
+        // After a send/recv cycle the consumed wire buffer must return
+        // to the pair's shared pool and feed the next send.
+        let (mut a, mut b) = Conn::local_pair(2);
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..6u64 {
+            a.send(&data_msg(f, 256), &link, &c).unwrap();
+            b.recv(&c).unwrap();
+        }
+        let pooled = match &a {
+            Conn::Local { frames, .. } => frames.pooled(),
+            _ => unreachable!(),
+        };
+        assert!(pooled >= 1, "no buffer returned to the pool");
     }
 
     #[test]

@@ -43,6 +43,7 @@ const SWITCHES: &[&str] = &[
     "inline-codec",
     "codec-measure",
     "relay-junctions",
+    "batch-adaptive",
 ];
 
 fn usage() -> &'static str {
@@ -103,6 +104,18 @@ RUN OPTIONS:
                            boundaries through coordinator-side relay
                            threads (and price the extra relay hop in the
                            planners) instead of worker-owned deal/merge
+  --batch B                coalesce up to B input frames into one batched
+                           wire message end-to-end (default: 1 = unbatched,
+                           byte-identical legacy wire format)
+  --batch-latency-ms T     latency budget for filling a batch; the planner
+                           rejects batch sizes whose extra wait exceeds T
+                           (0 = unbounded)
+  --batch-adaptive         size each batch to the dispatcher's live send
+                           queue depth (up to --batch) instead of always
+                           filling to the cap
+  --batch-overhead-us U    per-frame fixed overhead at B=1 for the planner's
+                           batch pricing, amortized as U/B (0 = batching
+                           not priced, planner keeps B=1)
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
   --slowdown F             legacy multiplicative compute emulation (>=1)
@@ -163,6 +176,9 @@ fn print_report(r: &RunReport) {
         "  energy/node/cycle: {:.6} J",
         r.energy_per_node_per_cycle()
     );
+    if r.queue_high_water > 0 {
+        println!("  send queue high water: {}", r.queue_high_water);
+    }
     if let Some(err) = r.reference_error {
         println!("  max |err| vs python reference: {err:.3e}");
     }

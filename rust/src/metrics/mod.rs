@@ -140,6 +140,41 @@ impl Histogram {
     }
 }
 
+/// Queue-depth gauge: records the instantaneous depth of a bounded pipe
+/// every time someone observes it, keeping both the latest sample and
+/// the high-water mark. This is how batching backpressure becomes
+/// visible (a pipe pinned at capacity = the stage behind it is the
+/// gate) and what the adaptive batcher reads to size its next batch.
+#[derive(Clone, Default, Debug)]
+pub struct QueueDepthGauge {
+    last: Arc<AtomicU64>,
+    high: Arc<AtomicU64>,
+}
+
+impl QueueDepthGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation of a queue's current depth.
+    #[inline]
+    pub fn observe(&self, depth: usize) {
+        let d = depth as u64;
+        self.last.store(d, Ordering::Relaxed);
+        self.high.fetch_max(d, Ordering::Relaxed);
+    }
+
+    /// Most recently observed depth.
+    pub fn last(&self) -> usize {
+        self.last.load(Ordering::Relaxed) as usize
+    }
+
+    /// Largest depth ever observed.
+    pub fn high_water(&self) -> usize {
+        self.high.load(Ordering::Relaxed) as usize
+    }
+}
+
 /// Throughput clock: counts completed inference cycles over a wall-clock
 /// window — the paper's "inference cycles per second".
 #[derive(Clone)]
@@ -259,6 +294,22 @@ mod tests {
     }
 
     #[test]
+    fn queue_depth_gauge_tracks_last_and_high_water() {
+        let g = QueueDepthGauge::new();
+        assert_eq!(g.last(), 0);
+        assert_eq!(g.high_water(), 0);
+        g.observe(3);
+        g.observe(7);
+        g.observe(2);
+        assert_eq!(g.last(), 2);
+        assert_eq!(g.high_water(), 7);
+        // Clones share state — one gauge per queue, observed anywhere.
+        let g2 = g.clone();
+        g2.observe(9);
+        assert_eq!(g.high_water(), 9);
+    }
+
+    #[test]
     fn throughput_clock() {
         let t = ThroughputClock::new();
         for _ in 0..10 {
@@ -307,6 +358,9 @@ pub struct RunMetrics {
     pub traffic: TrafficBreakdown,
     /// Serialization/deserialization time (paper's "overhead").
     pub overhead: crate::util::timer::SharedTimer,
+    /// High-water depth of the dispatcher's bounded send queue — the
+    /// observable backpressure signal behind micro-batching.
+    pub queue_depth: QueueDepthGauge,
     /// Results that failed integrity/shape checks.
     pub errors: Arc<Mutex<Vec<String>>>,
 }
@@ -324,6 +378,7 @@ impl RunMetrics {
             latency: Arc::new(Histogram::new()),
             traffic: TrafficBreakdown::new(),
             overhead: crate::util::timer::SharedTimer::new(),
+            queue_depth: QueueDepthGauge::new(),
             errors: Arc::new(Mutex::new(Vec::new())),
         }
     }

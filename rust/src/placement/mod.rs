@@ -61,6 +61,17 @@
 //! calibration table; `CodecCost::ZERO` (the `Default`) reproduces the
 //! pre-calibration model exactly, keeping the plan goldens byte-stable.
 //!
+//! **Batch pricing** is charged through a [`BatchCost`]: every endpoint
+//! pays a fixed per-message overhead (framing, syscalls, codec setup)
+//! that at batch size `B` amortizes to `fixed / B` per frame — added to
+//! each replica's busy time after the pipelined max (per-message work
+//! does not overlap the phases it frames) and to the shared uplink. The
+//! planner searches `B` in `1..=max_batch`, rejecting sizes whose
+//! worst-case queueing wait — `(B-1)` gate periods — exceeds the latency
+//! budget, and keeps the smallest `B` achieving the best feasible gate.
+//! `BatchCost::ZERO` (the `Default`) keeps `B = 1` and reproduces the
+//! pre-batching model exactly.
+//!
 //! # Algorithm
 //!
 //! 1. **Links.** Hop 0 (and only hop 0) uses the problem's `uplink` —
@@ -258,6 +269,65 @@ pub fn codec_cost_from_config(cfg: &DeferConfig) -> CodecCost {
     base.over_threads(cfg.codec_threads)
 }
 
+/// Micro-batching terms for the planner: a fixed per-message overhead
+/// every endpoint pays per frame at `B = 1` (framing, syscalls, codec
+/// setup, per-message bookkeeping), which coalescing `B` frames into
+/// one wire message amortizes to `fixed_secs / B` — at the price of up
+/// to `B - 1` extra gate periods of queueing latency for the first
+/// frame of a batch. The `Default` is [`BatchCost::ZERO`] — batching is
+/// not priced and the planner keeps `B = 1`, so pre-batching plans stay
+/// byte-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchCost {
+    /// Per-frame fixed overhead at `B = 1`, in seconds.
+    pub fixed_secs: f64,
+    /// Largest batch size the runtime may use (>= 1).
+    pub max_batch: usize,
+    /// Latency budget in seconds: a batch size `B` is only feasible
+    /// when the extra wait it can add — `(B - 1)` gate periods — fits.
+    /// `<= 0` = unbounded.
+    pub latency_budget_secs: f64,
+}
+
+impl BatchCost {
+    /// No batch pricing: the planner keeps `B = 1`.
+    pub const ZERO: BatchCost = BatchCost {
+        fixed_secs: 0.0,
+        max_batch: 1,
+        latency_budget_secs: 0.0,
+    };
+
+    fn charges_nothing(&self) -> bool {
+        !(self.fixed_secs > 0.0) || self.max_batch <= 1
+    }
+
+    /// The amortized per-frame charge at batch size `b`.
+    fn per_frame(&self, b: usize) -> f64 {
+        if self.charges_nothing() {
+            0.0
+        } else {
+            self.fixed_secs / b.max(1) as f64
+        }
+    }
+}
+
+impl Default for BatchCost {
+    fn default() -> Self {
+        BatchCost::ZERO
+    }
+}
+
+/// The [`BatchCost`] a [`DeferConfig`] describes: `--batch-overhead-us`
+/// per frame at `B = 1`, amortizable up to `--batch`, bounded by
+/// `--batch-latency-ms`.
+pub fn batch_cost_from_config(cfg: &DeferConfig) -> BatchCost {
+    BatchCost {
+        fixed_secs: cfg.batch_overhead_us * 1e-6,
+        max_batch: cfg.batch.max(1),
+        latency_budget_secs: cfg.batch_latency_ms * 1e-3,
+    }
+}
+
 /// What the planner needs to know about one pipeline stage — exactly the
 /// fields a `PartitionSpec` already carries.
 #[derive(Clone, Debug)]
@@ -293,6 +363,9 @@ pub struct PlacementProblem {
     /// (the frame detours through the coordinator host). `false` = the
     /// worker-owned data plane, direct replica-to-replica egress.
     pub relay_junctions: bool,
+    /// Micro-batching terms ([`BatchCost::ZERO`] = batching not priced,
+    /// the planner keeps `B = 1`).
+    pub batch: BatchCost,
 }
 
 impl PlacementProblem {
@@ -322,6 +395,7 @@ impl PlacementProblem {
             interconnect,
             codec: codec_cost_from_config(cfg),
             relay_junctions: cfg.relay_junctions,
+            batch: batch_cost_from_config(cfg),
         })
     }
 }
@@ -420,9 +494,13 @@ pub struct StagePlacement {
     /// The egress was doubled by the legacy relay model (replicated
     /// interior boundary under `relay_junctions`).
     pub relayed: bool,
+    /// Amortized per-frame batch overhead (`fixed / B`); zero when
+    /// batching is not priced.
+    pub batch: Duration,
     /// Effective stage occupancy per frame: the per-replica busy time
     /// (inline: `codec + compute + egress`; pipelined:
-    /// `max(decode, compute, encode + egress)`) divided by `R`.
+    /// `max(decode, compute, encode + egress)`; plus the amortized
+    /// batch overhead) divided by `R`.
     pub service: Duration,
 }
 
@@ -439,6 +517,12 @@ pub struct PlacementPlan {
     pub bottleneck: Bottleneck,
     /// Modeled steady-state frames/second.
     pub predicted_throughput: f64,
+    /// Planned batch size (1 = unbatched; > 1 only when the problem
+    /// prices a per-frame overhead that amortization beats).
+    pub batch: usize,
+    /// The priced per-frame fixed overhead at `B = 1` (zero when
+    /// batching is not priced).
+    pub batch_overhead: Duration,
 }
 
 impl PlacementPlan {
@@ -479,6 +563,16 @@ impl PlacementPlan {
                 ""
             }
         ));
+        // The batch line appears only when batching is priced, keeping
+        // pre-batching renders byte-identical.
+        if self.batch_overhead > Duration::ZERO {
+            out.push_str(&format!(
+                "  batch: B={} per-frame overhead {:.3} ms amortized to {:.3} ms\n",
+                self.batch,
+                self.batch_overhead.as_secs_f64() * 1e3,
+                self.batch_overhead.as_secs_f64() * 1e3 / self.batch as f64
+            ));
+        }
         for (i, st) in self.stages.iter().enumerate() {
             // The codec segment appears only when it is charged, keeping
             // pre-calibration renders byte-identical.
@@ -491,9 +585,15 @@ impl PlacementPlan {
             // model, keeping worker-owned renders byte-identical to the
             // historical goldens.
             let relay = if st.relayed { " (+relay)" } else { "" };
+            // The batch segment appears only when batching is priced.
+            let batch = if st.batch > Duration::ZERO {
+                format!(" + batch {:.3} ms", st.batch.as_secs_f64() * 1e3)
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
                 "  stage {i}: x{} on [{}] via {}{relay}, compute {:.3} ms{codec} + \
-                 egress {:.3} ms -> service {:.3} ms/frame{}\n",
+                 egress {:.3} ms{batch} -> service {:.3} ms/frame{}\n",
                 st.replicas,
                 st.devices.join(", "),
                 self.hop_links[i + 1].label(),
@@ -543,9 +643,10 @@ struct Eval {
     bottleneck: Bottleneck,
 }
 
-/// Model one replica vector: assign devices, compute per-stage service
-/// times, find the gate. Pure function of its inputs.
-fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) -> Eval {
+/// Model one replica vector at batch size `batch`: assign devices,
+/// compute per-stage service times, find the gate. Pure function of its
+/// inputs.
+fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], batch: usize) -> Eval {
     let s = p.stages.len();
     // Heaviest stage claims the fastest devices (deterministic ranks).
     let mut stage_order: Vec<usize> = (0..s).collect();
@@ -564,7 +665,11 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
         cursor += replicas[i];
     }
 
-    let uplink_secs = uplink_occupancy(p, &hop_links[0]);
+    // Per-frame fixed overhead, amortized over the frames sharing one
+    // wire message. Charged after the pipelined max — per-message work
+    // does not overlap the phases it frames.
+    let batch_charge = p.batch.per_frame(batch);
+    let uplink_secs = uplink_occupancy(p, &hop_links[0]) + batch_charge;
     let mut gate = uplink_secs;
     let mut bottleneck = Bottleneck::Uplink;
     let mut stages = Vec::with_capacity(s);
@@ -592,7 +697,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             dec.max(compute).max(enc + egress)
         } else {
             dec + compute + enc + egress
-        };
+        } + batch_charge;
         let service = busy / replicas[i] as f64;
         if service > gate {
             gate = service;
@@ -605,6 +710,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize]) ->
             codec: Duration::from_secs_f64(dec + enc),
             egress: Duration::from_secs_f64(egress),
             relayed,
+            batch: Duration::from_secs_f64(batch_charge),
             service: Duration::from_secs_f64(service),
         });
     }
@@ -680,49 +786,87 @@ pub fn plan(p: &PlacementProblem) -> Result<PlacementPlan> {
     // round-robin f_min down) or shifts a fast device away from a stage
     // that needed it more is rejected, ending the search.
     const EPS: f64 = 1e-12;
-    let mut replicas = vec![1usize; s];
-    let mut eval = evaluate(p, &hop_links, &replicas);
-    while replicas.iter().sum::<usize>() < p.worker_budget {
-        let b = match eval.bottleneck {
-            Bottleneck::Stage(i) => i,
-            Bottleneck::Uplink => break,
-        };
-        let mut cand = replicas.clone();
-        cand[b] += 1;
-        let cand_eval = evaluate(p, &hop_links, &cand);
-        let shrinks = cand_eval.stages[b].service.as_secs_f64() + EPS
-            < eval.stages[b].service.as_secs_f64();
-        if shrinks && cand_eval.gate <= eval.gate + EPS {
-            replicas = cand;
-            eval = cand_eval;
-        } else {
-            break;
-        }
-    }
-
-    // Trim replicas that buy nothing: the budget is permission, not an
-    // obligation, and the loop above can overshoot when it runs out
-    // mid-balancing (e.g. two equal stages and one spare worker).
-    for i in 0..s {
-        while replicas[i] > 1 {
+    let solve_at = |batch: usize| -> Eval {
+        let mut replicas = vec![1usize; s];
+        let mut eval = evaluate(p, &hop_links, &replicas, batch);
+        while replicas.iter().sum::<usize>() < p.worker_budget {
+            let b = match eval.bottleneck {
+                Bottleneck::Stage(i) => i,
+                Bottleneck::Uplink => break,
+            };
             let mut cand = replicas.clone();
-            cand[i] -= 1;
-            let cand_eval = evaluate(p, &hop_links, &cand);
-            if cand_eval.gate <= eval.gate + EPS {
+            cand[b] += 1;
+            let cand_eval = evaluate(p, &hop_links, &cand, batch);
+            let shrinks = cand_eval.stages[b].service.as_secs_f64() + EPS
+                < eval.stages[b].service.as_secs_f64();
+            if shrinks && cand_eval.gate <= eval.gate + EPS {
                 replicas = cand;
                 eval = cand_eval;
             } else {
                 break;
             }
         }
+
+        // Trim replicas that buy nothing: the budget is permission, not
+        // an obligation, and the loop above can overshoot when it runs
+        // out mid-balancing (e.g. two equal stages and one spare
+        // worker).
+        for i in 0..s {
+            while replicas[i] > 1 {
+                let mut cand = replicas.clone();
+                cand[i] -= 1;
+                let cand_eval = evaluate(p, &hop_links, &cand, batch);
+                if cand_eval.gate <= eval.gate + EPS {
+                    replicas = cand;
+                    eval = cand_eval;
+                } else {
+                    break;
+                }
+            }
+        }
+        eval
+    };
+
+    // Micro-batch pricing: coalescing B frames into one message
+    // amortizes the fixed per-frame overhead to `fixed / B`, at a
+    // worst-case queueing cost of `(B - 1)` gate periods. The gate is
+    // non-increasing in B and the per-step improvement only shrinks, so
+    // search B upward, keep the smallest B achieving the best feasible
+    // gate, and stop as soon as the gate stops improving or the latency
+    // budget is exceeded.
+    let max_b = if p.batch.charges_nothing() {
+        1
+    } else {
+        p.batch.max_batch.max(1)
+    };
+    let mut best_b = 1usize;
+    let mut best_eval = solve_at(1);
+    for b in 2..=max_b {
+        let eval = solve_at(b);
+        let feasible = p.batch.latency_budget_secs <= 0.0
+            || (b - 1) as f64 * eval.gate <= p.batch.latency_budget_secs + EPS;
+        if !feasible || eval.gate + EPS >= best_eval.gate {
+            break;
+        }
+        best_b = b;
+        best_eval = eval;
     }
+    let eval = best_eval;
 
     Ok(PlacementPlan {
         stages: eval.stages,
         hop_links,
-        uplink_time: Duration::from_secs_f64(uplink_occupancy(p, &p.uplink)),
+        uplink_time: Duration::from_secs_f64(
+            uplink_occupancy(p, &p.uplink) + p.batch.per_frame(best_b),
+        ),
         bottleneck: eval.bottleneck,
         predicted_throughput: 1.0 / eval.gate,
+        batch: best_b,
+        batch_overhead: Duration::from_secs_f64(if p.batch.charges_nothing() {
+            0.0
+        } else {
+            p.batch.fixed_secs
+        }),
     })
 }
 
@@ -780,6 +924,7 @@ mod tests {
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1, 1]);
@@ -813,6 +958,7 @@ mod tests {
             interconnect: vec![],
             codec: CodecCost::default(),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         };
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1]);
@@ -836,6 +982,7 @@ mod tests {
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec,
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         };
         let without = plan(&mk(CodecCost::ZERO)).unwrap();
         assert_eq!(without.bottleneck, Bottleneck::Uplink);
@@ -864,6 +1011,7 @@ mod tests {
             interconnect: vec![],
             codec: CodecCost::from_gbps(0.1, pipelined),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         };
         let inline = plan(&mk(false)).unwrap();
         let pipelined = plan(&mk(true)).unwrap();
@@ -916,6 +1064,7 @@ mod tests {
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
             relay_junctions: relay,
+            batch: BatchCost::ZERO,
         };
         let direct = plan(&mk(false)).unwrap();
         let relay = plan(&mk(true)).unwrap();
@@ -936,6 +1085,104 @@ mod tests {
     }
 
     #[test]
+    fn batch_amortization_raises_throughput_and_respects_budget() {
+        // One stage, 10 ms compute, 5 ms per-frame fixed overhead: at
+        // B=1 the gate is 15 ms; amortized over B=8 it approaches
+        // 10.625 ms. Unbounded budget picks the largest useful B.
+        let mk = |batch: BatchCost| PlacementProblem {
+            stages: vec![StageCost {
+                flops: 10_000_000,
+                input_bytes: 1_000,
+                output_bytes: 1_000,
+            }],
+            devices: homogeneous(1, 1_000.0),
+            worker_budget: 1,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+            codec: CodecCost::default(),
+            relay_junctions: false,
+            batch,
+        };
+        let unpriced = plan(&mk(BatchCost::ZERO)).unwrap();
+        assert_eq!(unpriced.batch, 1);
+        assert_eq!(unpriced.batch_overhead, Duration::ZERO);
+        assert!(!unpriced.render().contains("batch"), "{}", unpriced.render());
+
+        let priced = plan(&mk(BatchCost {
+            fixed_secs: 5e-3,
+            max_batch: 8,
+            latency_budget_secs: 0.0,
+        }))
+        .unwrap();
+        assert_eq!(priced.batch, 8);
+        let gate = 1.0 / priced.predicted_throughput;
+        assert!((gate - (0.010 + 0.005 / 8.0)).abs() < 1e-9, "{gate}");
+        assert!(priced.predicted_throughput > unpriced.predicted_throughput);
+        assert!(
+            priced.render().contains("batch: B=8"),
+            "{}",
+            priced.render()
+        );
+
+        // A 25 ms latency budget only admits B with (B-1)*gate <= 25 ms:
+        // B=3 waits ~2*10.something ms, feasible; B=4 is not.
+        let bounded = plan(&mk(BatchCost {
+            fixed_secs: 5e-3,
+            max_batch: 8,
+            latency_budget_secs: 25e-3,
+        }))
+        .unwrap();
+        assert_eq!(bounded.batch, 3);
+
+        // Zero overhead or max_batch 1 keeps the plan unbatched.
+        let inert = plan(&mk(BatchCost {
+            fixed_secs: 0.0,
+            max_batch: 8,
+            latency_budget_secs: 0.0,
+        }))
+        .unwrap();
+        assert_eq!(inert.batch, 1);
+    }
+
+    #[test]
+    fn batch_term_amortizes_across_replicas() {
+        // Two equal stages, one of which the budget lets replicate: the
+        // per-frame batch charge divides by R like the rest of the busy
+        // time, so the lightly-replicated stage carries more of it.
+        let p = PlacementProblem {
+            stages: vec![
+                StageCost {
+                    flops: 20_000_000,
+                    input_bytes: 1_000,
+                    output_bytes: 1_000,
+                },
+                StageCost {
+                    flops: 5_000_000,
+                    input_bytes: 1_000,
+                    output_bytes: 1_000,
+                },
+            ],
+            devices: homogeneous(3, 1_000.0),
+            worker_budget: 3,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+            codec: CodecCost::default(),
+            relay_junctions: false,
+            batch: BatchCost {
+                fixed_secs: 4e-3,
+                max_batch: 4,
+                latency_budget_secs: 0.0,
+            },
+        };
+        let plan = plan(&p).unwrap();
+        assert!(plan.batch > 1, "batch stayed 1: {}", plan.render());
+        // Same amortized per-frame charge on both stages...
+        assert_eq!(plan.stages[0].batch, plan.stages[1].batch);
+        // ...but stage 0 (replicated) spreads it over R service-wise.
+        assert_eq!(plan.replica_counts(), vec![2, 1]);
+    }
+
+    #[test]
     fn budget_and_pool_validated() {
         let stages = vec![StageCost {
             flops: 1,
@@ -950,6 +1197,7 @@ mod tests {
             interconnect: vec![],
             codec: CodecCost::default(),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         })
         .unwrap_err();
         assert!(format!("{err}").contains("budget"));
@@ -961,6 +1209,7 @@ mod tests {
             interconnect: vec![],
             codec: CodecCost::default(),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         })
         .unwrap_err();
         assert!(format!("{err}").contains("devices"));

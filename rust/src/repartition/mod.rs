@@ -73,7 +73,7 @@ use crate::error::{DeferError, Result};
 use crate::model::PartitionPlan;
 use crate::netem::LinkSpec;
 use crate::placement::{
-    self, best_link_for, transfer_secs, CodecCost, DeviceProfile, PlacementPlan,
+    self, best_link_for, transfer_secs, BatchCost, CodecCost, DeviceProfile, PlacementPlan,
     PlacementProblem, StageCost,
 };
 use crate::topology::Topology;
@@ -123,6 +123,15 @@ pub struct RepartitionProblem {
     /// chosen cuts charges the relay hop exactly, so the emitted plan
     /// (and its render) is honest about the legacy wiring.
     pub relay_junctions: bool,
+    /// Micro-batching terms, shared with [`crate::placement`] so both
+    /// passes price batches identically ([`BatchCost::ZERO`] = batching
+    /// not priced). Like relay pricing, the DP search itself stays
+    /// batch-blind — the amortized charge shifts every candidate
+    /// stage's busy time by the same `fixed / B`, which cannot reorder
+    /// cut choices — but the final [`crate::placement::plan`] re-pricing
+    /// of the chosen cuts searches batch sizes exactly, so the emitted
+    /// plan (and its render) carries the throughput-optimal `B`.
+    pub batch: BatchCost,
 }
 
 impl RepartitionProblem {
@@ -161,6 +170,7 @@ impl RepartitionProblem {
             interconnect,
             codec: placement::codec_cost_from_config(cfg),
             relay_junctions: cfg.relay_junctions,
+            batch: placement::batch_cost_from_config(cfg),
         })
     }
 }
@@ -447,6 +457,7 @@ pub fn plan(p: &RepartitionProblem) -> Result<RepartitionPlan> {
         interconnect: p.interconnect.clone(),
         codec: p.codec,
         relay_junctions: p.relay_junctions,
+        batch: p.batch,
     })?;
 
     Ok(RepartitionPlan {
@@ -494,6 +505,7 @@ mod tests {
             interconnect: vec![LinkSpec::gigabit_lan()],
             codec: CodecCost::default(),
             relay_junctions: false,
+            batch: BatchCost::ZERO,
         }
     }
 

@@ -135,8 +135,13 @@ impl DealSender {
         self.conns.len()
     }
 
-    /// Send one data frame to the successor the schedule owns, then
-    /// advance the rotation. Errors name the dead peer.
+    /// Send one data message to the successor the schedule owns, then
+    /// advance the rotation. The unit of dealing is the *message*: a
+    /// batched message (wire `batch > 1`) moves all its member frames
+    /// to one replica and advances the rotation once, so batches are
+    /// dealt round-robin exactly like single frames and the merge side
+    /// restores FIFO order positionally, batch-size-blind. Errors name
+    /// the dead peer.
     pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
         let idx = self.next;
         self.conns[idx]
@@ -769,6 +774,7 @@ mod tests {
             frame,
             serialized_len: 4,
             count: 0,
+            batch: 1,
             payload: vec![frame as u8; 4],
         }
     }

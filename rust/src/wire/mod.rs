@@ -9,13 +9,20 @@
 //! ```text
 //! magic   u32le  0x44454652 ("DEFR")
 //! type    u8     MessageType
-//! _pad    u8[3]
+//! batch   u24le  frames coalesced in this message, minus one (0 = single)
 //! frame   u64le  frame id (inference cycle number; 0 for config traffic)
 //! wire    u64le  payload length on the wire (post-compression)
 //! serial  u64le  serialized length (pre-compression, for decompressor)
 //! count   u64le  f32 element count (0 for non-tensor payloads)
 //! crc     u32le  CRC-32 over header bytes [0..40) + the wire payload
 //! ```
+//!
+//! The batch field lives in what used to be the header pad bytes and is
+//! stored biased by one, so an unbatched message (`batch == 1`) writes
+//! zeros there — byte-identical to the pre-batching wire format. A
+//! batched `Data`/`ResultMsg` carries the stacked activations of frames
+//! `frame .. frame + batch` in one payload (one header, one container),
+//! which is what amortizes the per-frame fixed costs.
 //!
 //! The payload follows in chunks of at most [`CHUNK_SIZE`] bytes — the
 //! paper's "chunked data transfer (with a default size of 512kB per chunk)".
@@ -36,6 +43,9 @@ pub const CHUNK_SIZE: usize = 512 * 1024;
 pub const MAGIC: u32 = 0x4445_4652; // "DEFR"
 /// Refuse absurd payloads (corrupt headers) before allocating.
 pub const MAX_PAYLOAD: u64 = 8 * 1024 * 1024 * 1024;
+/// Max frames one message may coalesce (the header stores `batch - 1`
+/// in 3 bytes).
+pub const MAX_BATCH: u32 = 1 << 24;
 
 /// Message discriminants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,11 +83,15 @@ impl MessageType {
 #[derive(Clone, Debug, PartialEq)]
 pub struct Message {
     pub msg_type: MessageType,
+    /// First member frame id; a batched message carries frames
+    /// `frame .. frame + batch`.
     pub frame: u64,
     /// Pre-compression serialized size (decompressor input).
     pub serialized_len: u64,
-    /// f32 element count for tensor payloads.
+    /// f32 element count for tensor payloads (total across the batch).
     pub count: u64,
+    /// Logical frames coalesced in the payload (>= 1; 1 = unbatched).
+    pub batch: u32,
     pub payload: Vec<u8>,
 }
 
@@ -88,6 +102,7 @@ impl Message {
             frame: 0,
             serialized_len: 0,
             count: 0,
+            batch: 1,
             payload: Vec::new(),
         }
     }
@@ -104,6 +119,9 @@ fn encode_header(msg: &Message) -> [u8; HEADER_SIZE] {
     let mut h = [0u8; HEADER_SIZE];
     h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
     h[4] = msg.msg_type as u8;
+    // Batch count, biased by one, in the former pad bytes: an unbatched
+    // message writes zeros, keeping the legacy wire bytes exactly.
+    h[5..8].copy_from_slice(&(msg.batch - 1).to_le_bytes()[..3]);
     h[8..16].copy_from_slice(&msg.frame.to_le_bytes());
     h[16..24].copy_from_slice(&(msg.payload.len() as u64).to_le_bytes());
     h[24..32].copy_from_slice(&msg.serialized_len.to_le_bytes());
@@ -127,6 +145,12 @@ pub fn write_message(
     link: &Link,
     counter: &ByteCounter,
 ) -> Result<()> {
+    if msg.batch == 0 || msg.batch > MAX_BATCH {
+        return Err(DeferError::Wire(format!(
+            "batch {} out of range 1..={MAX_BATCH}",
+            msg.batch
+        )));
+    }
     let header = encode_header(msg);
     link.shape(header.len());
     w.write_all(&header)?;
@@ -164,6 +188,7 @@ pub fn read_message_pooled(
         return Err(DeferError::Wire(format!("bad magic {magic:#x}")));
     }
     let msg_type = MessageType::from_u8(header[4])?;
+    let batch = 1 + u32::from_le_bytes([header[5], header[6], header[7], 0]);
     let frame = u64::from_le_bytes(header[8..16].try_into().unwrap());
     let wire_len = u64::from_le_bytes(header[16..24].try_into().unwrap());
     let serialized_len = u64::from_le_bytes(header[24..32].try_into().unwrap());
@@ -192,6 +217,7 @@ pub fn read_message_pooled(
         frame,
         serialized_len,
         count,
+        batch,
         payload,
     })
 }
@@ -227,9 +253,55 @@ mod tests {
             frame: 1234,
             serialized_len: 999,
             count: 250,
+            batch: 1,
             payload: rng.bytes(1000),
         };
         assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn batched_message_round_trip() {
+        let mut rng = Rng::new(53);
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 64,
+            serialized_len: 4000,
+            count: 1000,
+            batch: 8,
+            payload: rng.bytes(4000),
+        };
+        let got = round_trip(&msg);
+        assert_eq!(got.batch, 8);
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn batch_one_is_byte_identical_to_legacy_wire_format() {
+        // batch == 1 must write zeros in the former pad bytes — the
+        // whole encoded stream is the pre-batching format, bit for bit.
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 7,
+            serialized_len: 16,
+            count: 4,
+            batch: 1,
+            payload: vec![1, 2, 3, 4],
+        };
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        assert_eq!(&buf[5..8], &[0u8, 0, 0], "pad bytes must stay zero");
+    }
+
+    #[test]
+    fn zero_and_oversize_batch_rejected_before_write() {
+        let mut msg = Message::control(MessageType::Data);
+        msg.batch = 0;
+        let mut buf = Vec::new();
+        assert!(write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).is_err());
+        msg.batch = MAX_BATCH + 1;
+        assert!(write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).is_err());
+        msg.batch = MAX_BATCH;
+        assert!(write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).is_ok());
     }
 
     #[test]
@@ -241,6 +313,7 @@ mod tests {
             frame: 0,
             serialized_len: 0,
             count: 0,
+            batch: 1,
             payload: rng.bytes(CHUNK_SIZE * 2 + 777),
         };
         assert_eq!(round_trip(&msg), msg);
@@ -253,6 +326,7 @@ mod tests {
             frame: 1,
             serialized_len: 8,
             count: 2,
+            batch: 1,
             payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
         };
         let mut buf = Vec::new();
@@ -282,6 +356,7 @@ mod tests {
             frame: 1,
             serialized_len: 0,
             count: 0,
+            batch: 1,
             payload: vec![9; 100],
         };
         let mut buf = Vec::new();

@@ -1,0 +1,366 @@
+//! Micro-batching acceptance suite (artifact-free).
+//!
+//! Two layers of coverage, both driving real topology wiring with
+//! synthetic pipeline workers standing in for PJRT executables:
+//!
+//! 1. Wire-level: hand-built batched messages (mixed batch sizes,
+//!    short tails) through replicated stages on both transports — the
+//!    frames must come back FIFO with correct per-frame values, because
+//!    the deal/merge schedule rotates per *message* and is
+//!    batch-size-blind.
+//! 2. Dispatcher-level: the real `run_inference` batcher end to end —
+//!    batched runs must be bit-identical to unbatched ones (the
+//!    reference check records exactly 0.0 error), per-frame metrics
+//!    must stay batch-size-invariant, tails flush short, zero frames
+//!    terminate cleanly, and adaptive mode completes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use defer::compress::Compression;
+use defer::coordinator::dispatcher::{run_inference, DispatcherStats, InferenceOptions};
+use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
+use defer::energy::EnergyModel;
+use defer::metrics::ByteCounter;
+use defer::netem::{Link, LinkSpec};
+use defer::serial::{Codec, CodecRuntime, Serialization};
+use defer::tensor::Tensor;
+use defer::threadpool::pipe;
+use defer::topology::wiring::{build, TransportOptions, WorkerConns};
+use defer::topology::Topology;
+use defer::util::timer::SharedTimer;
+use defer::wire::{Message, MessageType};
+
+const ELEMS: usize = 64;
+
+/// Spawn one synthetic worker: a boundary-reader thread feeding the
+/// real codec pipeline, with an elementwise `v -> 2v + 1` standing in
+/// for the fused executables. Records the largest batch size it was
+/// handed, so tests can assert coalescing actually happened.
+fn spawn_worker(
+    wc: WorkerConns,
+    codec: Codec,
+    rt: CodecRuntime,
+    max_batch_seen: Arc<AtomicUsize>,
+) -> std::thread::JoinHandle<defer::Result<()>> {
+    std::thread::spawn(move || {
+        let WorkerConns {
+            view,
+            config: _config,
+            weights: _weights,
+            data_in,
+            data_out,
+        } = wc;
+        let (tx, rx) = pipe::<Message>(4);
+        let mut in_conn = data_in;
+        let reader = std::thread::spawn(move || loop {
+            match in_conn.recv(&ByteCounter::new()) {
+                Ok(msg) => {
+                    let stop = msg.msg_type == MessageType::Shutdown;
+                    if tx.send(msg).is_err() || stop {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        });
+        let replica = view.replica;
+        let ctx = PipelineCtx {
+            name: view.name.clone(),
+            codec,
+            rt,
+            overhead: SharedTimer::new(),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined: true,
+            pipe_depth: 4,
+            payload_pool: None,
+        };
+        let result = run_codec_pipeline(rx, data_out, ctx, move |values, batch| {
+            // A batch arrives as one stacked payload: b whole frames.
+            assert_eq!(values.len(), ELEMS * batch, "partial frame in batch");
+            max_batch_seen.fetch_max(batch, Ordering::Relaxed);
+            // Jitter per replica so a lost ordering guarantee would
+            // actually scramble arrivals.
+            std::thread::sleep(std::time::Duration::from_micros(
+                (replica as u64 % 3) * 400,
+            ));
+            Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
+        });
+        reader.join().expect("reader thread");
+        result
+    })
+}
+
+struct Harness {
+    to_first: defer::topology::wiring::DealSender,
+    from_last: defer::topology::wiring::MergeReceiver,
+    workers: Vec<std::thread::JoinHandle<defer::Result<()>>>,
+    junctions: defer::threadpool::WorkerPool,
+    max_batch_seen: Arc<AtomicUsize>,
+    stages: usize,
+}
+
+fn harness(replicas: &[usize], tcp: bool) -> Harness {
+    let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
+    let topo = Topology::new(replicas, hop_links).unwrap();
+    let defer::topology::wiring::Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+        },
+    )
+    .unwrap();
+    drop(control); // no configuration phase for synthetic workers
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let max_batch_seen = Arc::new(AtomicUsize::new(0));
+    let workers: Vec<_> = workers
+        .into_iter()
+        .map(|wc| {
+            spawn_worker(
+                wc,
+                codec,
+                CodecRuntime::serial(),
+                Arc::clone(&max_batch_seen),
+            )
+        })
+        .collect();
+    Harness {
+        to_first,
+        from_last,
+        workers,
+        junctions,
+        max_batch_seen,
+        stages: replicas.len(),
+    }
+}
+
+impl Harness {
+    fn join(self) {
+        for h in self.workers {
+            h.join().unwrap().unwrap();
+        }
+        self.junctions.join().unwrap();
+    }
+}
+
+/// Each stage applies v -> 2v + 1; fold that over the chain depth.
+fn expect_value(input: f32, stages: usize) -> f32 {
+    let mut v = input;
+    for _ in 0..stages {
+        v = v * 2.0 + 1.0;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------
+// Layer 1: hand-built batched wire messages, FIFO through replication.
+// ---------------------------------------------------------------------
+
+/// Send `frames` frames coalesced per the cycling `pattern` of batch
+/// sizes; assert the dispatcher side gets every frame back in FIFO
+/// order with the per-frame transform applied.
+fn run_batched_wire(replicas: &[usize], tcp: bool, pattern: &[usize], frames: u64) {
+    let mut h = harness(replicas, tcp);
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let rt = CodecRuntime::serial();
+    let link = Link::ideal();
+    let counter = ByteCounter::new();
+
+    let mut sent = 0u64;
+    let mut step = 0usize;
+    while sent < frames {
+        let b = pattern[step % pattern.len()].min((frames - sent) as usize).max(1);
+        step += 1;
+        // Stack b frames, each filled with its own frame id.
+        let mut values = Vec::with_capacity(ELEMS * b);
+        for f in sent..sent + b as u64 {
+            values.extend(std::iter::repeat(f as f32).take(ELEMS));
+        }
+        let (payload, mid) = codec.encode_frame(&values, &rt, None);
+        h.to_first
+            .send_data(
+                &Message {
+                    msg_type: MessageType::Data,
+                    frame: sent,
+                    serialized_len: mid as u64,
+                    count: values.len() as u64,
+                    batch: b as u32,
+                    payload,
+                },
+                &link,
+                &counter,
+            )
+            .unwrap();
+        sent += b as u64;
+    }
+    h.to_first.broadcast_shutdown(&link, &counter).unwrap();
+
+    // Frames must come back in global FIFO order, whole batches intact.
+    let mut next = 0u64;
+    while next < frames {
+        let msg = h.from_last.recv(&counter).unwrap();
+        assert_eq!(msg.msg_type, MessageType::Data);
+        assert_eq!(msg.frame, next, "batches out of order");
+        let b = msg.batch.max(1) as usize;
+        let values = codec
+            .decode_frame(
+                &msg.payload,
+                msg.serialized_len as usize,
+                msg.count as usize,
+                &rt,
+                None,
+            )
+            .unwrap();
+        assert_eq!(values.len(), ELEMS * b);
+        for (i, sub) in values.chunks(ELEMS).enumerate() {
+            let expect = expect_value((next + i as u64) as f32, h.stages);
+            assert_eq!(sub, vec![expect; ELEMS], "frame {}", next + i as u64);
+        }
+        next += b as u64;
+    }
+    assert_eq!(
+        h.from_last.recv(&counter).unwrap().msg_type,
+        MessageType::Shutdown
+    );
+    h.join();
+}
+
+#[test]
+fn mixed_batches_preserve_fifo_across_replicated_stages() {
+    run_batched_wire(&[1, 3, 2], false, &[1, 2, 3], 24);
+}
+
+#[test]
+fn batched_wire_over_tcp_with_short_tail() {
+    // 12 frames in batches of 5: 5, 5, 2 — the tail flushes short.
+    run_batched_wire(&[2], true, &[5], 12);
+}
+
+#[test]
+fn single_frame_batches_are_plain_legacy_traffic() {
+    run_batched_wire(&[2, 2], false, &[1], 10);
+}
+
+// ---------------------------------------------------------------------
+// Layer 2: the real dispatcher batcher, end to end.
+// ---------------------------------------------------------------------
+
+/// Run `run_inference` against synthetic workers; return the stats and
+/// the largest batch any worker saw.
+fn run_dispatcher(
+    replicas: &[usize],
+    tcp: bool,
+    pipelined: bool,
+    frames: u64,
+    batch: usize,
+    adaptive: bool,
+) -> (Arc<DispatcherStats>, usize) {
+    let h = harness(replicas, tcp);
+    let input = Tensor::new(vec![ELEMS], vec![3.0; ELEMS]).unwrap();
+    let expected =
+        Tensor::new(vec![ELEMS], vec![expect_value(3.0, h.stages); ELEMS]).unwrap();
+    let stats = Arc::new(DispatcherStats::new(EnergyModel::default()));
+    let opts = InferenceOptions {
+        pipelined,
+        pipe_depth: 4,
+        batch,
+        batch_adaptive: adaptive,
+        ..InferenceOptions::default()
+    };
+    run_inference(
+        input,
+        frames,
+        h.to_first,
+        h.from_last,
+        opts,
+        Arc::new(Link::ideal()),
+        Arc::clone(&stats),
+        Some(expected),
+        vec![ELEMS],
+    )
+    .unwrap();
+    let max_seen = h.max_batch_seen.load(Ordering::Relaxed);
+    for w in h.workers {
+        w.join().unwrap().unwrap();
+    }
+    h.junctions.join().unwrap();
+    (stats, max_seen)
+}
+
+#[test]
+fn batched_run_is_bit_identical_to_unbatched() {
+    // The acceptance property: with the same input, batch = 4 must
+    // produce exactly the frames batch = 1 does. The dispatcher checks
+    // every frame against the expected tensor — 0.0 recorded error is
+    // bitwise equality, and per-frame metrics stay batch-invariant.
+    for (batch, want_coalesced) in [(1usize, 1usize), (4, 4)] {
+        let (stats, max_seen) = run_dispatcher(&[1, 2], false, true, 20, batch, false);
+        assert_eq!(stats.clock.cycles(), 20, "batch={batch}");
+        assert_eq!(stats.latency.count(), 20, "batch={batch}");
+        assert_eq!(
+            *stats.reference_error.lock().unwrap(),
+            Some(0.0),
+            "batch={batch}"
+        );
+        assert_eq!(max_seen, want_coalesced, "batch={batch}");
+    }
+}
+
+#[test]
+fn tail_shorter_than_batch_flushes() {
+    // 10 frames at batch 4: 4, 4, 2. Every frame must complete.
+    let (stats, max_seen) = run_dispatcher(&[2], false, true, 10, 4, false);
+    assert_eq!(stats.clock.cycles(), 10);
+    assert_eq!(stats.latency.count(), 10);
+    assert_eq!(*stats.reference_error.lock().unwrap(), Some(0.0));
+    assert_eq!(max_seen, 4);
+}
+
+#[test]
+fn zero_frames_terminates_cleanly() {
+    let (stats, _) = run_dispatcher(&[1, 2], false, true, 0, 4, false);
+    assert_eq!(stats.clock.cycles(), 0);
+    assert_eq!(stats.latency.count(), 0);
+    assert_eq!(*stats.reference_error.lock().unwrap(), None);
+}
+
+#[test]
+fn batched_dispatcher_over_tcp() {
+    let (stats, max_seen) = run_dispatcher(&[2], true, true, 12, 3, false);
+    assert_eq!(stats.clock.cycles(), 12);
+    assert_eq!(*stats.reference_error.lock().unwrap(), Some(0.0));
+    assert_eq!(max_seen, 3);
+}
+
+#[test]
+fn inline_mode_batches_with_fixed_size() {
+    // The inline (non-pipelined) path has no send queue: fixed batches.
+    let (stats, max_seen) = run_dispatcher(&[1], false, false, 9, 3, false);
+    assert_eq!(stats.clock.cycles(), 9);
+    assert_eq!(stats.latency.count(), 9);
+    assert_eq!(*stats.reference_error.lock().unwrap(), Some(0.0));
+    assert_eq!(max_seen, 3);
+}
+
+#[test]
+fn adaptive_mode_completes_and_respects_the_cap() {
+    // Adaptive sizing is timing-dependent (it reads the live queue
+    // depth), so assert the invariants, not a specific size: every
+    // frame completes bit-exact and no batch exceeds the cap.
+    let (stats, max_seen) = run_dispatcher(&[1, 2], false, true, 30, 8, true);
+    assert_eq!(stats.clock.cycles(), 30);
+    assert_eq!(stats.latency.count(), 30);
+    assert_eq!(*stats.reference_error.lock().unwrap(), Some(0.0));
+    assert!(max_seen >= 1 && max_seen <= 8, "max batch seen {max_seen}");
+}

@@ -68,7 +68,7 @@ fn spawn_worker(
             pipe_depth: 4,
             payload_pool: None,
         };
-        let result = run_codec_pipeline(rx, data_out, ctx, move |values| {
+        let result = run_codec_pipeline(rx, data_out, ctx, move |values, _batch| {
             // Jitter compute per frame & replica so a lost ordering
             // guarantee would actually scramble arrivals.
             let f = values[0] as u64;
@@ -141,6 +141,7 @@ fn run_topology(
                         frame,
                         serialized_len: mid as u64,
                         count: ELEMS as u64,
+                        batch: 1,
                         payload,
                     },
                     &link,

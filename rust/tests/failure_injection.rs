@@ -96,6 +96,7 @@ fn node_rejects_data_before_config() {
             frame: 0,
             serialized_len: 0,
             count: 0,
+            batch: 1,
             payload: vec![],
         },
     );
@@ -123,6 +124,7 @@ fn node_rejects_truncated_weights() {
             frame: 0,
             serialized_len: arch_len as u64,
             count: 0,
+            batch: 1,
             payload: arch,
         },
     );
@@ -138,6 +140,7 @@ fn node_rejects_truncated_weights() {
             frame: 0,
             serialized_len: mid as u64,
             count: flat.len() as u64,
+            batch: 1,
             payload,
         },
     );
@@ -161,6 +164,7 @@ fn node_rejects_corrupt_architecture_payload() {
             frame: 0,
             serialized_len: 8,
             count: 0,
+            batch: 1,
             payload: vec![0xFF; 8],
         },
     );
@@ -186,6 +190,7 @@ fn node_inference_phase_rejects_config_replay() {
             frame: 0,
             serialized_len: arch_len as u64,
             count: 0,
+            batch: 1,
             payload: arch,
         },
     );
@@ -204,6 +209,7 @@ fn node_inference_phase_rejects_config_replay() {
             frame: 0,
             serialized_len: mid as u64,
             count: flat.len() as u64,
+            batch: 1,
             payload,
         },
     );
@@ -218,6 +224,7 @@ fn node_inference_phase_rejects_config_replay() {
             frame: 1,
             serialized_len: 0,
             count: 0,
+            batch: 1,
             payload: vec![],
         },
     );

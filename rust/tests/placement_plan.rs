@@ -3,7 +3,9 @@
 //! pure function, so these assert its output byte-for-byte.
 
 use defer::netem::LinkSpec;
-use defer::placement::{plan, Bottleneck, CodecCost, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{
+    plan, BatchCost, Bottleneck, CodecCost, DeviceProfile, PlacementProblem, StageCost,
+};
 
 fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
     (0..n)
@@ -39,6 +41,7 @@ fn bottleneck_stage_soaks_up_the_worker_budget() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
@@ -97,6 +100,7 @@ fn planner_is_deterministic() {
             uplink: LinkSpec::wifi(),
             interconnect: vec![LinkSpec::gigabit_lan(), LinkSpec::fast_edge()],
             codec: CodecCost::default(),
+            batch: BatchCost::ZERO,
             relay_junctions: false,
         }
     };
@@ -130,6 +134,7 @@ fn heaviest_stage_gets_fastest_device() {
         uplink: LinkSpec::ideal(),
         interconnect: vec![],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
@@ -154,6 +159,7 @@ fn uplink_bound_pipeline_is_left_unreplicated() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
@@ -175,6 +181,7 @@ fn interior_hops_pick_fastest_candidate() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::wifi(), LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
@@ -196,11 +203,59 @@ fn budget_spreads_across_equal_bottlenecks() {
         uplink: LinkSpec::gigabit_lan(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();
     assert_eq!(placed.replica_counts(), vec![3, 3]);
     assert_eq!(placed.num_workers(), 6);
+}
+
+/// Micro-batch pricing golden: a fixed per-message overhead is
+/// amortized across the replicas of a stage but charged whole to the
+/// shared uplink, so pricing it can move the reported bottleneck.
+/// Unpriced, the replicated stage gates the pipeline; at the planned
+/// B=8 the uplink does. Both renders are asserted byte-for-byte, and
+/// the unpriced render carries no batch line at all.
+#[test]
+fn batch_term_moves_reported_bottleneck_golden() {
+    let mk = |batch: BatchCost| PlacementProblem {
+        stages: vec![stage(2_000_000, 40_000, 20_000)],
+        devices: homogeneous(2, 100.0),
+        worker_budget: 2,
+        uplink: LinkSpec::wifi(),
+        interconnect: vec![LinkSpec::gigabit_lan()],
+        codec: CodecCost::default(),
+        batch,
+        relay_junctions: false,
+    };
+    // 2 MFLOPs / 100 MFLOP/s = 20 ms compute, x2 -> 10.18 ms service;
+    // wifi uplink 9.9 ms: the stage gates.
+    let unpriced = plan(&mk(BatchCost::ZERO)).unwrap();
+    assert_eq!(unpriced.batch, 1);
+    assert_eq!(unpriced.bottleneck, Bottleneck::Stage(0));
+    let expected = "placement plan: 1 stage(s), 2 worker(s), predicted 98.232 cycles/s\n\
+                    \x20 hop 0 uplink wifi (9.900 ms/frame)\n\
+                    \x20 stage 0: x2 on [edge0, edge1] via gigabit, compute 20.000 ms + \
+                    egress 0.360 ms -> service 10.180 ms/frame, bottleneck\n";
+    assert_eq!(unpriced.render(), expected);
+    // 8 ms per message amortizes to 1 ms at B=8: the stage pays
+    // (20.36 + 1)/2 = 10.68 ms but the shared uplink pays the whole
+    // charge, 9.9 + 1 = 10.9 ms, and becomes the gate.
+    let priced = plan(&mk(BatchCost {
+        fixed_secs: 8e-3,
+        max_batch: 8,
+        latency_budget_secs: 0.0,
+    }))
+    .unwrap();
+    assert_eq!(priced.batch, 8);
+    assert_eq!(priced.bottleneck, Bottleneck::Uplink);
+    let expected = "placement plan: 1 stage(s), 2 worker(s), predicted 91.743 cycles/s\n\
+                    \x20 hop 0 uplink wifi (10.900 ms/frame, bottleneck)\n\
+                    \x20 batch: B=8 per-frame overhead 8.000 ms amortized to 1.000 ms\n\
+                    \x20 stage 0: x2 on [edge0, edge1] via gigabit, compute 20.000 ms + \
+                    egress 0.360 ms + batch 1.000 ms -> service 10.680 ms/frame\n";
+    assert_eq!(priced.render(), expected);
 }
 
 /// Render is the goldens surface: assert the exact bytes for a small
@@ -214,6 +269,7 @@ fn render_golden() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let placed = plan(&p).unwrap();

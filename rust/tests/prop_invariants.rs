@@ -100,6 +100,7 @@ fn prop_wire_messages_survive_any_payload() {
             frame: rng.next_u64(),
             serialized_len: rng.next_u64() % (1 << 40),
             count: rng.next_u64() % (1 << 40),
+            batch: 1 + rng.next_u64() as u32 % 1024,
             payload: rng.bytes(n),
         };
         let mut buf = Vec::new();
@@ -117,6 +118,7 @@ fn prop_wire_detects_any_single_byte_flip() {
         frame: 7,
         serialized_len: 100,
         count: 25,
+        batch: 5,
         payload: rng.bytes(100),
     };
     let mut buf = Vec::new();

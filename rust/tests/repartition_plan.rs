@@ -3,7 +3,7 @@
 //! artifacts, no RNG, no clocks — the planner is a pure function.
 
 use defer::netem::LinkSpec;
-use defer::placement::{self, CodecCost, DeviceProfile, PlacementProblem, StageCost};
+use defer::placement::{self, BatchCost, CodecCost, DeviceProfile, PlacementProblem, StageCost};
 use defer::repartition::{plan, PartCost, RepartitionProblem};
 
 fn homogeneous(n: usize, mflops: f64) -> Vec<DeviceProfile> {
@@ -41,6 +41,7 @@ fn acceptance_problem(budget: usize) -> RepartitionProblem {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     }
 }
@@ -92,6 +93,7 @@ fn repartition_beats_coarse_uniform_chain_in_the_model() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     })
     .unwrap();
@@ -152,6 +154,7 @@ fn uplink_bound_problem_stays_lean() {
         uplink: LinkSpec::wifi(),
         interconnect: vec![LinkSpec::gigabit_lan()],
         codec: CodecCost::default(),
+        batch: BatchCost::ZERO,
         relay_junctions: false,
     };
     let rp = plan(&p).unwrap();

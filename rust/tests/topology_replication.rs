@@ -29,6 +29,7 @@ fn data_msg(frame: u64) -> Message {
         frame,
         serialized_len: 8,
         count: 0,
+        batch: 1,
         payload: vec![frame as u8; 8],
     }
 }
