@@ -8,8 +8,13 @@
 //! coalesces 1..=16 frames per message and the bench reports cycles/s
 //! per batch size, plus an adaptive-mode row.
 //!
-//! Emits `BENCH_batch.json` (machine-readable) into the working
-//! directory so the perf trajectory is tracked across PRs.
+//! A second section races the two data planes — thread-per-connection
+//! blocking I/O vs the sharded reactor — on a replicated u=d=4 mesh,
+//! where the blocking plane's thread bill is steepest.
+//!
+//! Emits `BENCH_batch.json` and `BENCH_io.json` (machine-readable)
+//! into the working directory so the perf trajectory is tracked
+//! across PRs.
 //!
 //! Env: DEFER_FRAMES (default 2000), DEFER_FRAME_ELEMS (default 64).
 
@@ -24,10 +29,11 @@ use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
 use defer::energy::EnergyModel;
 use defer::metrics::ByteCounter;
 use defer::netem::{Link, LinkSpec};
+use defer::netio::Reactor;
 use defer::serial::{Codec, CodecRuntime, Serialization};
 use defer::tensor::Tensor;
 use defer::threadpool::pipe;
-use defer::topology::wiring::{build, TransportOptions, WorkerConns};
+use defer::topology::wiring::{build, FrameSink, FrameSource, TransportOptions, WorkerConns};
 use defer::topology::Topology;
 use defer::util::timer::SharedTimer;
 use defer::wire::{Message, MessageType};
@@ -39,12 +45,15 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// Synthetic worker: boundary reader feeding the real codec pipeline,
-/// elementwise `v -> 2v + 1` in place of the fused executables.
+/// Synthetic worker: elementwise `v -> 2v + 1` in place of the fused
+/// executables. Blocking plane parks a boundary-reader thread; the
+/// reactor plane registers the boundary with the shared event loop,
+/// mirroring `compute_node`'s two branches.
 fn spawn_worker(
     wc: WorkerConns,
     codec: Codec,
     rt: CodecRuntime,
+    reactor: Option<Arc<Reactor>>,
 ) -> std::thread::JoinHandle<defer::Result<()>> {
     std::thread::spawn(move || {
         let WorkerConns {
@@ -55,18 +64,28 @@ fn spawn_worker(
             data_out,
         } = wc;
         let (tx, rx) = pipe::<Message>(8);
-        let mut in_conn = data_in;
-        let reader = std::thread::spawn(move || loop {
-            match in_conn.recv(&ByteCounter::new()) {
-                Ok(msg) => {
-                    let stop = msg.msg_type == MessageType::Shutdown;
-                    if tx.send(msg).is_err() || stop {
-                        return;
-                    }
-                }
-                Err(_) => return,
+        let mut reader = None;
+        let out: FrameSink = match &reactor {
+            Some(r) => {
+                r.register_ingress(data_in, tx, None)?;
+                r.register_egress(data_out, 8)?.into()
             }
-        });
+            None => {
+                let mut in_conn = data_in;
+                reader = Some(std::thread::spawn(move || loop {
+                    match in_conn.recv(&ByteCounter::new()) {
+                        Ok(msg) => {
+                            let stop = msg.msg_type == MessageType::Shutdown;
+                            if tx.send(msg).is_err() || stop {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                }));
+                data_out.into()
+            }
+        };
         let ctx = PipelineCtx {
             name: view.name.clone(),
             codec,
@@ -79,20 +98,31 @@ fn spawn_worker(
             pipe_depth: 8,
             payload_pool: None,
         };
-        let result = run_codec_pipeline(rx, data_out, ctx, |values, _batch| {
+        let result = run_codec_pipeline(rx, out, ctx, |values, _batch| {
             Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
         });
-        reader.join().expect("reader thread");
+        if let Some(h) = reader {
+            h.join().expect("reader thread");
+        }
         result
     })
 }
 
-/// One timed run: `frames` small frames through a 2-stage TCP chain at
-/// the given batch size. Returns measured cycles/s.
-fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
-    let replicas = [1usize, 1];
+/// One timed run: `frames` small frames through a TCP chain of
+/// `replicas` at the given batch size. `io_threads` selects the data
+/// plane: `Some(n)` runs everything on an n-shard reactor, `None` is
+/// the blocking thread-per-connection plane. Returns measured cycles/s.
+fn run_chain(
+    frames: u64,
+    elems: usize,
+    batch: usize,
+    adaptive: bool,
+    replicas: &[usize],
+    io_threads: Option<usize>,
+) -> f64 {
+    let reactor = io_threads.map(|n| Reactor::new(n).unwrap());
     let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
-    let topo = Topology::new(&replicas, hop_links).unwrap();
+    let topo = Topology::new(replicas, hop_links).unwrap();
     let defer::topology::wiring::Wiring {
         control,
         to_first,
@@ -113,7 +143,7 @@ fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
     let codec = Codec::new(Serialization::Binary, Compression::None);
     let workers: Vec<_> = workers
         .into_iter()
-        .map(|wc| spawn_worker(wc, codec, CodecRuntime::serial()))
+        .map(|wc| spawn_worker(wc, codec, CodecRuntime::serial(), reactor.clone()))
         .collect();
 
     let input = Tensor::new(vec![elems], vec![1.0; elems]).unwrap();
@@ -125,12 +155,21 @@ fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
         batch_adaptive: adaptive,
         ..InferenceOptions::default()
     };
+    let (sink, source): (FrameSink, FrameSource) = match &reactor {
+        Some(r) => {
+            let sink = r.register_egress(to_first, 8).unwrap().into();
+            let (res_tx, res_rx) = pipe::<Message>(8);
+            let err = r.register_ingress(from_last, res_tx, None).unwrap();
+            (sink, FrameSource::Queued { rx: res_rx, err })
+        }
+        None => (to_first.into(), from_last.into()),
+    };
     let t0 = Instant::now();
     run_inference(
         input,
         frames,
-        to_first,
-        from_last,
+        sink,
+        source,
         opts,
         Arc::new(Link::ideal()),
         Arc::clone(&stats),
@@ -143,8 +182,15 @@ fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
         w.join().unwrap().unwrap();
     }
     junctions.join().unwrap();
+    drop(reactor);
     assert_eq!(stats.clock.cycles(), frames, "dropped frames at batch {batch}");
     frames as f64 / secs
+}
+
+/// Batching section shape: default 2-stage unreplicated chain, blocking
+/// plane (the pre-reactor baseline the trajectory was recorded on).
+fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
+    run_chain(frames, elems, batch, adaptive, &[1, 1], None)
 }
 
 fn main() {
@@ -191,5 +237,44 @@ fn main() {
     {
         Ok(()) => println!("\nwrote BENCH_batch.json"),
         Err(e) => println!("\ncould not write BENCH_batch.json: {e}"),
+    }
+
+    // ---- data-plane I/O: reactor vs thread-per-connection ----
+    let io_replicas = [4usize, 4];
+    let io_frames = frames.min(1000);
+    let io_batch = 4usize;
+    // Parked per-connection threads on the blocking plane: one reader
+    // per worker plus the dispatcher's result reader (matches the
+    // RunReport `data_plane_threads` accounting).
+    let blocking_threads = io_replicas.iter().sum::<usize>() + 1;
+    let shards = 2usize;
+    println!(
+        "\n# Data-plane I/O: u=d=4 replicated mesh over TCP, {io_frames} frames, batch {io_batch}"
+    );
+    let blocking_cps = run_chain(io_frames, elems, io_batch, false, &io_replicas, None);
+    let reactor_cps = run_chain(io_frames, elems, io_batch, false, &io_replicas, Some(shards));
+    let ratio = reactor_cps / blocking_cps;
+    let mut io_table = Table::new(&["plane", "data-plane threads", "cycles/s", "vs blocking"]);
+    io_table.row(&[
+        "blocking".into(),
+        blocking_threads.to_string(),
+        format!("{blocking_cps:.1}"),
+        "1.00x".into(),
+    ]);
+    io_table.row(&[
+        "reactor".into(),
+        shards.to_string(),
+        format!("{reactor_cps:.1}"),
+        format!("{ratio:.2}x"),
+    ]);
+    print!("{}", io_table.render());
+
+    let io_json = format!(
+        "{{\n  \"frames\": {io_frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"replicas\": [4, 4],\n  \"batch\": {io_batch},\n  \"rows\": [\n    {{\"plane\": \"blocking\", \"data_plane_threads\": {blocking_threads}, \"cycles_per_sec\": {blocking_cps:.2}, \"vs_blocking\": 1.000}},\n    {{\"plane\": \"reactor\", \"data_plane_threads\": {shards}, \"cycles_per_sec\": {reactor_cps:.2}, \"vs_blocking\": {ratio:.3}}}\n  ]\n}}\n"
+    );
+    match std::fs::File::create("BENCH_io.json").and_then(|mut f| f.write_all(io_json.as_bytes()))
+    {
+        Ok(()) => println!("\nwrote BENCH_io.json"),
+        Err(e) => println!("\ncould not write BENCH_io.json: {e}"),
     }
 }

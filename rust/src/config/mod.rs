@@ -149,6 +149,12 @@ pub struct DeferConfig {
     /// microseconds per frame at B=1 (amortized as `overhead / B`).
     /// 0 = batching is not priced and the planner keeps B=1.
     pub batch_overhead_us: f64,
+    /// Reactor I/O shard threads for the data plane. 0 = auto
+    /// (`min(2, cores)`). Ignored under `blocking_io`.
+    pub io_threads: usize,
+    /// Keep the legacy blocking thread-per-connection data plane instead
+    /// of the sharded reactor. A/B escape hatch — off by default.
+    pub blocking_io: bool,
 }
 
 impl Default for DeferConfig {
@@ -183,6 +189,8 @@ impl Default for DeferConfig {
             batch_latency_ms: 0.0,
             batch_adaptive: false,
             batch_overhead_us: 0.0,
+            io_threads: 0,
+            blocking_io: false,
         }
     }
 }
@@ -301,6 +309,12 @@ impl DeferConfig {
         if let Some(x) = obj.get("batch_overhead_us") {
             cfg.batch_overhead_us = x.as_f64()?;
         }
+        if let Some(x) = obj.get("io_threads") {
+            cfg.io_threads = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("blocking_io") {
+            cfg.blocking_io = matches!(x, Json::Bool(true));
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -394,6 +408,10 @@ impl DeferConfig {
             self.batch_adaptive = true;
         }
         self.batch_overhead_us = args.get_f64("batch-overhead-us", self.batch_overhead_us)?;
+        self.io_threads = args.get_usize("io-threads", self.io_threads)?;
+        if args.has("blocking-io") {
+            self.blocking_io = true;
+        }
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
                 DeferError::Cli(format!("--base-port wants a port number, got {p:?}"))
@@ -482,6 +500,12 @@ impl DeferConfig {
             return Err(DeferError::Config(format!(
                 "emulated_mflops must be >= 0, got {}",
                 self.emulated_mflops
+            )));
+        }
+        if self.io_threads > 256 {
+            return Err(DeferError::Config(format!(
+                "io_threads {} is past any plausible core count (max 256)",
+                self.io_threads
             )));
         }
         if self.codec_threads > 256 {
@@ -742,6 +766,32 @@ mod tests {
         assert!(cfg.relay_junctions);
         // The default data plane is worker-owned.
         assert!(!DeferConfig::default().relay_junctions);
+    }
+
+    #[test]
+    fn io_surface_round_trip() {
+        let text = r#"{
+            "io_threads": 3,
+            "blocking_io": true
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert_eq!(cfg.io_threads, 3);
+        assert!(cfg.blocking_io);
+        // Defaults: auto-sized reactor plane.
+        let d = DeferConfig::default();
+        assert_eq!(d.io_threads, 0);
+        assert!(!d.blocking_io);
+        // Implausible shard counts rejected at config time.
+        assert!(DeferConfig::from_json_str(r#"{"io_threads": 9999}"#).is_err());
+        // CLI spelling.
+        let raw: Vec<String> = ["run", "--io-threads", "2", "--blocking-io"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &["tcp", "blocking-io"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.io_threads, 2);
+        assert!(cfg.blocking_io);
     }
 
     #[test]

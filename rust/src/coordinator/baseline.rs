@@ -113,6 +113,8 @@ impl SingleDevice {
             config_time: self.exe.compile_time(),
             reference_error,
             queue_high_water: 0,
+            data_plane_threads: 0,
+            io_shards: Vec::new(),
         })
     }
 }

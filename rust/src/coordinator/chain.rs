@@ -49,11 +49,14 @@ use crate::coordinator::RunReport;
 use crate::error::{DeferError, Result};
 use crate::model::{PartitionPlan, ReferenceVectors, StageSpec};
 use crate::netem::Link;
+use crate::netio::Reactor;
 use crate::runtime::Engine;
 use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
-use crate::threadpool::{CodecPool, WorkerPool};
+use crate::threadpool::{pipe, CodecPool, WorkerPool};
+use crate::topology::wiring::{FrameSink, FrameSource};
 use crate::topology::{wiring, Topology};
+use crate::wire::Message;
 
 /// A ready-to-run DEFER deployment.
 pub struct ChainRunner {
@@ -192,6 +195,22 @@ impl ChainRunner {
             },
         )?;
 
+        // ---- data-plane runtime ----
+        // Default: a sharded reactor owns every mesh connection's
+        // readiness, so the data plane costs `io_threads` shard threads
+        // total instead of one parked thread per connection.
+        // `--blocking-io` keeps the thread-per-connection plane for A/B.
+        let reactor = if self.cfg.blocking_io {
+            None
+        } else {
+            let shards = if self.cfg.io_threads > 0 {
+                self.cfg.io_threads
+            } else {
+                Reactor::default_io_threads()
+            };
+            Some(Arc::new(Reactor::new(shards)?))
+        };
+
         // ---- spawn one thread per worker replica ----
         // One codec worker pool is shared by every replica (and the
         // dispatcher), so `--codec-threads` bounds total chunk-codec
@@ -219,6 +238,7 @@ impl ChainRunner {
                 emulated_mflops: self.cfg.emulated_mflops,
                 codec_rt: codec_rt.clone(),
                 pipelined: self.cfg.codec_pipeline,
+                reactor: reactor.clone(),
             };
             pool.spawn(&format!("compute-{}", wc.view.name), move || {
                 run_compute_node(engine, wc, codecs, out_link, stats, opts)
@@ -254,6 +274,27 @@ impl ChainRunner {
         };
         let expected = self.reference.as_ref().map(|r| r.output.clone());
         let uplink = Arc::new(Link::new(topo.hop_link(0)));
+        // The dispatcher's endpoints join whichever plane is active. On
+        // the reactor plane the egress deal becomes a queued sink and
+        // the return merge feeds a pipe via a shard-owned ingress
+        // machine; serialization/shaping/accounting still happen on the
+        // dispatcher's own threads, so wire traffic is byte-identical.
+        let (to_first, from_last): (FrameSink, FrameSource) = match &reactor {
+            Some(r) => {
+                let sink = r.register_egress(to_first, self.cfg.pipe_depth)?.into();
+                let (res_tx, res_rx) = pipe::<Message>(self.cfg.pipe_depth);
+                let err = r.register_ingress(from_last, res_tx, None)?;
+                (sink, FrameSource::Queued { rx: res_rx, err })
+            }
+            None => (to_first.into(), from_last.into()),
+        };
+        // Threads whose whole job is moving frames on/off connections:
+        // per-worker parked readers plus the dispatcher's connection
+        // owners on the blocking plane; the shard threads otherwise.
+        let data_plane_threads = match &reactor {
+            Some(r) => r.io_threads() as u64,
+            None => views.len() as u64 + if self.cfg.codec_pipeline { 2 } else { 1 },
+        };
         let t0 = std::time::Instant::now();
         run_inference(
             input,
@@ -277,6 +318,14 @@ impl ChainRunner {
         let elapsed = t0.elapsed();
         pool.join()?;
         junctions.join()?;
+        // Snapshot the shard counters, then retire the reactor (workers
+        // have joined, so this is the last handle; every machine drained
+        // with the final merged shutdown).
+        let io_shards: Vec<(u64, u64)> = reactor
+            .as_ref()
+            .map(|r| r.shard_stats())
+            .unwrap_or_default();
+        drop(reactor);
 
         // ---- assemble report ----
         let cycles = dstats.clock.cycles();
@@ -312,6 +361,8 @@ impl ChainRunner {
             config_time,
             reference_error,
             queue_high_water: dstats.queue_depth.high_water() as u64,
+            data_plane_threads,
+            io_shards,
         })
     }
 }

@@ -26,6 +26,12 @@
 //! [`DealSender`](crate::topology::wiring::DealSender) rotating over the
 //! successor replicas. Unreplicated neighbours degrade both to plain
 //! single connections — the paper's chain node exactly.
+//!
+//! Under the reactor data plane ([`ComputeOptions::reactor`]) the reader
+//! thread is subsumed by a readiness-driven ingress machine on a shared
+//! I/O shard, and the egress deal retires through a queued sink on the
+//! same reactor — the pipe, the schedules, and the byte accounting are
+//! unchanged, so both planes emit identical wire traffic.
 
 use std::sync::Arc;
 
@@ -36,11 +42,12 @@ use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::model::{PartitionSpec, StageSpec};
 use crate::netem::Link;
+use crate::netio::Reactor;
 use crate::runtime::{Engine, Executable};
 use crate::serial::{json, CodecRuntime};
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
-use crate::topology::wiring::WorkerConns;
+use crate::topology::wiring::{FrameSink, WorkerConns};
 use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
@@ -196,6 +203,11 @@ pub struct ComputeOptions {
     /// Software-pipeline the codec phases (decode | compute | encode on
     /// separate threads); `false` = the paper's inline loop.
     pub pipelined: bool,
+    /// Shared reactor data plane. When set, the node's boundary I/O runs
+    /// as readiness-driven state machines on the reactor's shards
+    /// instead of a parked reader thread plus blocking deal writes.
+    /// `None` = the blocking plane (`--blocking-io`).
+    pub reactor: Option<Arc<Reactor>>,
 }
 
 impl Default for ComputeOptions {
@@ -206,6 +218,7 @@ impl Default for ComputeOptions {
             emulated_mflops: 0.0,
             codec_rt: CodecRuntime::serial(),
             pipelined: true,
+            reactor: None,
         }
     }
 }
@@ -311,17 +324,29 @@ pub fn run_compute_node(
     let (tx, rx) = pipe::<Message>(opts.pipe_depth);
     let payload_pool = Arc::new(BufPool::new(opts.pipe_depth + 2));
     let mut pool = WorkerPool::new();
-    let mut in_conn = in_conn;
     let reader_pool = Arc::clone(&payload_pool);
-    pool.spawn(&format!("{}-reader", view.name), move || loop {
-        let msg = in_conn.recv_pooled(&ByteCounter::new(), Some(&reader_pool))?;
-        let stop = msg.msg_type == MessageType::Shutdown;
-        tx.send(msg)
-            .map_err(|_| DeferError::ChannelClosed("node reader pipe"))?;
-        if stop {
-            return Ok(());
-        }
-    });
+    let mut ingress_err = None;
+    let out: FrameSink = if let Some(reactor) = &opts.reactor {
+        // Reactor plane: the shard-owned ingress machine replaces the
+        // parked reader thread (same merge schedule, same pipe, same
+        // buffer pool), and the egress deal becomes a queued sink whose
+        // writes retire on readiness. Serialization, link shaping and
+        // byte accounting stay on the compute thread inside the sink.
+        ingress_err = Some(reactor.register_ingress(in_conn, tx, Some(reader_pool))?);
+        reactor.register_egress(out_conn, opts.pipe_depth)?.into()
+    } else {
+        let mut in_conn = in_conn;
+        pool.spawn(&format!("{}-reader", view.name), move || loop {
+            let msg = in_conn.recv_pooled(&ByteCounter::new(), Some(&reader_pool))?;
+            let stop = msg.msg_type == MessageType::Shutdown;
+            tx.send(msg)
+                .map_err(|_| DeferError::ChannelClosed("node reader pipe"))?;
+            if stop {
+                return Ok(());
+            }
+        });
+        out_conn.into()
+    };
 
     let in_shape = stage.input_shape().to_vec();
     // Deterministic device emulation: floor each frame's compute to the
@@ -350,7 +375,7 @@ pub fn run_compute_node(
     };
     let per_frame_elems: usize = in_shape.iter().product();
     let node_name = view.name.clone();
-    let result: Result<()> = run_codec_pipeline(rx, out_conn, ctx, |values, batch| {
+    let result: Result<()> = run_codec_pipeline(rx, out, ctx, |values, batch| {
         let t_run = std::time::Instant::now();
         let b = batch.max(1);
         if values.len() != per_frame_elems * b {
@@ -416,14 +441,26 @@ pub fn run_compute_node(
     // Outgoing bytes drive network energy.
     stats_for_energy.meter.tx_bytes.add(stats.data_tx.total());
 
+    // On the reactor plane, ingress failures land in the error slot (the
+    // machine closes the pipe, which the pipeline sees as a generic
+    // closed-channel error); prefer the labelled root cause.
+    let take_ingress_err = |slot: &Option<crate::netio::ErrSlot>| {
+        slot.as_ref().and_then(|s| s.lock().unwrap().take())
+    };
     if result.is_err() {
         // Do not wait for the reader: it may be blocked on the incoming
         // socket, which only closes when the peer tears down. Detach it —
         // it exits when its connection drops — and surface the real error.
         pool.detach();
+        if let Some(e) = take_ingress_err(&ingress_err) {
+            return Err(e);
+        }
         return result;
     }
     pool.join()?;
+    if let Some(e) = take_ingress_err(&ingress_err) {
+        return Err(e);
+    }
     result
 }
 

@@ -34,7 +34,7 @@ use crate::netem::Link;
 use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
-use crate::topology::wiring::{DealSender, MergeReceiver};
+use crate::topology::wiring::{FrameSink, FrameSource};
 use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
@@ -253,7 +253,7 @@ impl Default for InferenceOptions {
 /// so the accounting cannot diverge between them.
 #[allow(clippy::too_many_arguments)]
 fn send_data_frame(
-    to_first: &mut DealSender,
+    to_first: &mut FrameSink,
     frame: u64,
     batch: u32,
     payload: Vec<u8>,
@@ -311,14 +311,16 @@ fn stack_input<'a>(input: &'a [f32], b: usize, scratch: &'a mut Vec<f32>) -> &'a
 pub fn run_inference(
     input: Tensor,
     frames: u64,
-    mut to_first: DealSender,
-    mut from_last: MergeReceiver,
+    to_first: impl Into<FrameSink>,
+    from_last: impl Into<FrameSource>,
     opts: InferenceOptions,
     link: Arc<Link>,
     stats: Arc<DispatcherStats>,
     expected: Option<Tensor>,
     output_shape: Vec<usize>,
 ) -> Result<()> {
+    let mut to_first = to_first.into();
+    let mut from_last = from_last.into();
     let send_times: Arc<Mutex<HashMap<u64, Instant>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let codecs = opts.codecs;
@@ -346,9 +348,12 @@ pub fn run_inference(
             pool.spawn("dispatcher-sender", move || {
                 while let Some((frame, batch, payload, mid)) = enc_rx.recv() {
                     // Depth of the encode→send queue *behind* this
-                    // message: the adaptive batcher's feedback signal
-                    // and the run report's backpressure high-water.
-                    stats.queue_depth.observe(enc_rx.len());
+                    // message, plus whatever the sink has serialized but
+                    // not yet put on the wire (0 on the blocking plane,
+                    // whose sends complete inline): the adaptive
+                    // batcher's feedback signal and the run report's
+                    // backpressure high-water.
+                    stats.queue_depth.observe(enc_rx.len() + to_first.queue_len());
                     send_data_frame(
                         &mut to_first,
                         frame,
@@ -494,7 +499,10 @@ pub fn run_inference(
         }
     };
 
-    if opts.pipelined {
+    let direct = matches!(from_last, FrameSource::Direct(_));
+    if opts.pipelined && direct {
+        // Blocking plane: a dedicated reader thread pulls framed bytes
+        // off the merge set so socket waits overlap with decode.
         let (res_tx, res_rx) = pipe::<Message>(opts.pipe_depth);
         let reader_rt = rt.clone();
         pool.spawn("dispatcher-reader", move || {
@@ -544,6 +552,10 @@ pub fn run_inference(
             Ok(())
         });
     } else {
+        // Inline mode, or a reactor-fed source: the ingress machine (or
+        // the inline contract) already decouples the wire from decode,
+        // so the receiver consumes the source directly — no reader
+        // thread.
         pool.spawn("dispatcher-receiver", move || {
             let mut received = 0u64;
             while received < frames {
@@ -562,8 +574,10 @@ pub fn run_inference(
                     }
                 }
             }
-            // Drain the trailing shutdown if the chain relays it.
-            if received == frames {
+            // Drain the trailing shutdown if the chain relays it (the
+            // reactor ingress machine drains its own mesh, so only the
+            // blocking source holds one).
+            if direct && received == frames {
                 let _ = from_last.recv(&ByteCounter::new());
             }
             Ok(())

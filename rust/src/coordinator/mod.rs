@@ -79,6 +79,14 @@ pub struct RunReport {
     /// the observable backpressure signal (0 when the wire kept up, or
     /// for the single-device baseline which has no queue).
     pub queue_high_water: u64,
+    /// Dedicated data-plane I/O threads the run spawned: the parked
+    /// per-connection readers (workers + dispatcher) on the blocking
+    /// plane, the reactor's shard threads otherwise. Legacy
+    /// `--relay-junctions` threads are not included. 0 for the baseline.
+    pub data_plane_threads: u64,
+    /// Final `(wakeups, dispatches)` counters per reactor shard; empty
+    /// on the blocking plane and for the baseline.
+    pub io_shards: Vec<(u64, u64)>,
 }
 
 impl RunReport {

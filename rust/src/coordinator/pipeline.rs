@@ -12,10 +12,11 @@
 //! worker-owned deal/merge schedules (see [`crate::topology::wiring`])
 //! preserve order across replicas.
 //!
-//! The encode stage writes through a [`DealSender`] — the replica's own
+//! The encode stage writes through a [`FrameSink`] — the replica's own
 //! round-robin fan-out over its successor set (a single connection for
-//! unreplicated successors). There is no relay thread between stages:
-//! the pipeline's last phase *is* the boundary deal.
+//! unreplicated successors), blocking or reactor-backed. There is no
+//! relay thread between stages: the pipeline's last phase *is* the
+//! boundary deal.
 //!
 //! [`run_codec_pipeline`] is generic over the compute step (a closure),
 //! which keeps it independent of PJRT — the order-preservation and
@@ -31,7 +32,7 @@ use crate::metrics::ByteCounter;
 use crate::netem::Link;
 use crate::serial::{Codec, CodecRuntime};
 use crate::threadpool::{pipe, WorkerPool};
-use crate::topology::wiring::DealSender;
+use crate::topology::wiring::FrameSink;
 use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
 use crate::wire::{Message, MessageType};
@@ -89,13 +90,14 @@ fn describe(stage: &str, e: &DeferError) -> DeferError {
 /// costs are paid once per batch, not once per frame.
 pub fn run_codec_pipeline<F>(
     rx: crate::threadpool::PipeReceiver<Message>,
-    mut out: DealSender,
+    out: impl Into<FrameSink>,
     ctx: PipelineCtx,
     mut compute: F,
 ) -> Result<()>
 where
     F: FnMut(Vec<f32>, usize) -> Result<Vec<f32>>,
 {
+    let mut out = out.into();
     if !ctx.pipelined {
         // Legacy inline loop: one thread does everything per frame.
         while let Some(msg) = rx.recv() {
@@ -306,6 +308,7 @@ mod tests {
     use crate::coordinator::transport::Conn;
     use crate::serial::Serialization;
     use crate::threadpool::PipeSender;
+    use crate::topology::wiring::DealSender;
 
     fn sink(conn: Conn) -> DealSender {
         DealSender::single(conn, "test sink")

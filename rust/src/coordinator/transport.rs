@@ -95,6 +95,102 @@ impl Conn {
         })
     }
 
+    /// [`Conn::tcp_accept`] with a deadline, mirroring
+    /// [`Conn::tcp_connect_with_deadline`]: a peer that never dials must
+    /// not park the wiring forever. `peer` names the *expected* dialer
+    /// (e.g. `node1.0 data socket`) for the error message.
+    pub fn tcp_accept_with_deadline(
+        listener: &TcpListener,
+        peer: &str,
+        deadline: std::time::Duration,
+    ) -> Result<Conn> {
+        let t_end = std::time::Instant::now() + deadline;
+        let mut backoff = std::time::Duration::from_millis(1);
+        let max_backoff = std::time::Duration::from_millis(100);
+        listener.set_nonblocking(true)?;
+        let result = loop {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    // Accepted sockets are blocking by default on Linux,
+                    // but make it explicit: the nonblocking flag belongs
+                    // to the listener, not the connection.
+                    s.set_nonblocking(false)?;
+                    s.set_nodelay(true).ok();
+                    let reader = BufReader::new(s.try_clone()?);
+                    break Ok(Conn::Tcp {
+                        writer: BufWriter::new(s),
+                        reader,
+                    });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    let now = std::time::Instant::now();
+                    if now >= t_end {
+                        let addr = listener
+                            .local_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "?".into());
+                        break Err(DeferError::Coordinator(format!(
+                            "no connection from {peer} on {addr} within {deadline:?}"
+                        )));
+                    }
+                    std::thread::sleep(backoff.min(t_end - now));
+                    backoff = (backoff * 2).min(max_backoff);
+                }
+                Err(e) => break Err(e.into()),
+            }
+        };
+        // Leave the listener as we found it for any further accepts.
+        listener.set_nonblocking(false)?;
+        result
+    }
+
+    /// Consume this connection into its nonblocking read side for
+    /// reactor registration. Any bytes the buffered reader already held
+    /// are preserved as `residue` so no wire data is lost at the split.
+    pub fn into_read_half(self) -> Result<ReadHalf> {
+        match self {
+            Conn::Tcp { reader, writer } => {
+                drop(writer); // the reader's clone keeps the socket open
+                let residue = reader.buffer().to_vec();
+                let stream = reader.into_inner();
+                stream.set_nonblocking(true)?;
+                Ok(ReadHalf::Tcp { stream, residue })
+            }
+            Conn::Local {
+                rx,
+                pending,
+                frames,
+                tx,
+            } => {
+                drop(tx);
+                Ok(ReadHalf::Local {
+                    rx,
+                    pending,
+                    frames,
+                })
+            }
+        }
+    }
+
+    /// Consume this connection into its nonblocking write side for
+    /// reactor registration (flushes any buffered output first).
+    pub fn into_write_half(self) -> Result<WriteHalf> {
+        match self {
+            Conn::Tcp { reader, writer } => {
+                drop(reader);
+                let stream = writer
+                    .into_inner()
+                    .map_err(|e| DeferError::Io(e.into_error()))?;
+                stream.set_nonblocking(true)?;
+                Ok(WriteHalf::Tcp { stream })
+            }
+            Conn::Local { tx, frames, .. } => Ok(WriteHalf::Local { tx, frames }),
+        }
+    }
+
     /// An in-process bidirectional pair (a <-> b) with bounded depth.
     pub fn local_pair(depth: usize) -> (Conn, Conn) {
         let (atx, brx) = pipe::<Vec<u8>>(depth);
@@ -167,6 +263,36 @@ impl Conn {
             }
         }
     }
+}
+
+/// The read side of a split [`Conn`], ready for readiness-driven I/O:
+/// the TCP arm is a nonblocking stream (registered with epoll), the
+/// local arm keeps the pipe receiver (a virtual readiness source via its
+/// data waker).
+pub enum ReadHalf {
+    Tcp {
+        stream: TcpStream,
+        /// Bytes the pre-split buffered reader had already pulled off
+        /// the socket; must be consumed before fresh socket reads.
+        residue: Vec<u8>,
+    },
+    Local {
+        rx: PipeReceiver<Vec<u8>>,
+        /// Partially consumed inbound buffer (same role as
+        /// [`Conn::Local`]'s field).
+        pending: Vec<u8>,
+        frames: Arc<BufPool>,
+    },
+}
+
+/// The write side of a split [`Conn`]: nonblocking TCP stream or the
+/// local pipe sender (readiness via its space waker).
+pub enum WriteHalf {
+    Tcp { stream: TcpStream },
+    Local {
+        tx: PipeSender<Vec<u8>>,
+        frames: Arc<BufPool>,
+    },
 }
 
 /// A shared, cloneable link handle (chain stages share one shaper per hop).
@@ -272,6 +398,101 @@ mod tests {
         let msg = format!("{err}");
         assert!(msg.contains("node3 weights socket"), "{msg}");
         assert!(msg.contains(&addr), "{msg}");
+    }
+
+    #[test]
+    fn accept_deadline_names_expected_peer() {
+        // No one ever dials: the accept must give up at the deadline and
+        // say who it was waiting for.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t0 = std::time::Instant::now();
+        let err = Conn::tcp_accept_with_deadline(
+            &listener,
+            "node1.0 data socket",
+            std::time::Duration::from_millis(120),
+        )
+        .unwrap_err();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+        let msg = format!("{err}");
+        assert!(msg.contains("node1.0 data socket"), "{msg}");
+
+        // A dialer that does show up is accepted, and the listener is
+        // back in blocking mode for the next accept.
+        let addr = listener.local_addr().unwrap().to_string();
+        let dial = std::thread::spawn(move || {
+            let mut c = Conn::tcp_connect(&addr, "acceptor").unwrap();
+            c.send(&data_msg(9, 64), &Link::ideal(), &ByteCounter::new())
+                .unwrap();
+        });
+        let mut server = Conn::tcp_accept_with_deadline(
+            &listener,
+            "late dialer",
+            std::time::Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(server.recv(&ByteCounter::new()).unwrap().frame, 9);
+        dial.join().unwrap();
+    }
+
+    #[test]
+    fn split_halves_carry_the_stream_intact() {
+        // TCP: a message sent through a WriteHalf's raw stream must be
+        // readable through the peer's ReadHalf via the frame assembler.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            Conn::tcp_accept(&listener).unwrap().into_read_half().unwrap()
+        });
+        let client = Conn::tcp_connect(&addr, "split peer").unwrap();
+        let wh = client.into_write_half().unwrap();
+        let read_half = h.join().unwrap();
+
+        let msg = data_msg(5, 300);
+        let mut wire = Vec::new();
+        crate::wire::write_message(&mut wire, &msg, &Link::ideal(), &ByteCounter::new())
+            .unwrap();
+        let WriteHalf::Tcp { stream } = &wh else {
+            unreachable!()
+        };
+        // A one-shot blocking write is fine here: the payload fits the
+        // socket buffer.
+        stream.set_nonblocking(false).unwrap();
+        use std::io::Write as _;
+        let mut w: &TcpStream = stream;
+        w.write_all(&wire).unwrap();
+
+        let ReadHalf::Tcp { stream, residue } = read_half else {
+            unreachable!()
+        };
+        assert!(residue.is_empty(), "unread bytes at split");
+        let mut asm = crate::wire::FrameAssembler::new();
+        use std::io::Read as _;
+        loop {
+            match asm
+                .poll(&mut |buf: &mut [u8]| (&stream).read(buf), None)
+                .unwrap()
+            {
+                Some(m) => {
+                    assert_eq!(m, msg);
+                    break;
+                }
+                None => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+
+        // Local: the halves keep the pipe ends; a buffer pushed by the
+        // write half arrives on the read half's receiver.
+        let (a, b) = Conn::local_pair(4);
+        let wh = a.into_write_half().unwrap();
+        let rh = b.into_read_half().unwrap();
+        let WriteHalf::Local { tx, .. } = &wh else {
+            unreachable!()
+        };
+        tx.send(vec![1, 2, 3]).unwrap();
+        let ReadHalf::Local { rx, .. } = &rh else {
+            unreachable!()
+        };
+        assert_eq!(rx.recv(), Some(vec![1, 2, 3]));
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod error;
 pub mod metrics;
 pub mod model;
 pub mod netem;
+pub mod netio;
 pub mod placement;
 pub mod repartition;
 pub mod runtime;

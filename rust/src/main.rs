@@ -44,6 +44,7 @@ const SWITCHES: &[&str] = &[
     "codec-measure",
     "relay-junctions",
     "batch-adaptive",
+    "blocking-io",
 ];
 
 fn usage() -> &'static str {
@@ -116,6 +117,10 @@ RUN OPTIONS:
   --batch-overhead-us U    per-frame fixed overhead at B=1 for the planner's
                            batch pricing, amortized as U/B (0 = batching
                            not priced, planner keeps B=1)
+  --io-threads N           reactor I/O shards for the data plane (default:
+                           0 = auto, min(2, cores))
+  --blocking-io            legacy data plane: one parked thread per mesh
+                           connection instead of the sharded reactor
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
   --slowdown F             legacy multiplicative compute emulation (>=1)
@@ -178,6 +183,17 @@ fn print_report(r: &RunReport) {
     );
     if r.queue_high_water > 0 {
         println!("  send queue high water: {}", r.queue_high_water);
+    }
+    if r.data_plane_threads > 0 {
+        println!("  data-plane threads: {}", r.data_plane_threads);
+    }
+    if !r.io_shards.is_empty() {
+        let shards: Vec<String> = r
+            .io_shards
+            .iter()
+            .map(|(w, d)| format!("{w}w/{d}d"))
+            .collect();
+        println!("  io shards (wakeups/dispatches): {}", shards.join(", "));
     }
     if let Some(err) = r.reference_error {
         println!("  max |err| vs python reference: {err:.3e}");

@@ -310,6 +310,18 @@ mod tests {
     }
 
     #[test]
+    fn io_plane_stats_share_state_across_clones() {
+        let m = RunMetrics::new();
+        let io = m.io.clone();
+        io.set_threads(3);
+        io.set_shards(vec![(10, 40), (7, 25)]);
+        assert_eq!(m.io.threads(), 3);
+        assert_eq!(m.io.shards(), vec![(10, 40), (7, 25)]);
+        assert_eq!(m.io.dispatches(), 65);
+        assert_eq!(RunMetrics::new().io.shards(), Vec::new());
+    }
+
+    #[test]
     fn throughput_clock() {
         let t = ThroughputClock::new();
         for _ in 0..10 {
@@ -351,6 +363,50 @@ impl TrafficBreakdown {
     }
 }
 
+/// Data-plane I/O accounting: how many dedicated I/O threads the run
+/// spawned (parked per-connection readers/writers on the blocking plane,
+/// reactor shards otherwise) plus each reactor shard's final
+/// `(wakeups, dispatches)` counters. Clones share state, like
+/// [`ByteCounter`].
+#[derive(Clone, Default)]
+pub struct IoPlaneStats {
+    threads: Arc<AtomicU64>,
+    shards: Arc<Mutex<Vec<(u64, u64)>>>,
+}
+
+impl IoPlaneStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record how many data-plane threads the run spawned.
+    pub fn set_threads(&self, n: u64) {
+        self.threads.store(n, Ordering::Relaxed);
+    }
+
+    pub fn threads(&self) -> u64 {
+        self.threads.load(Ordering::Relaxed)
+    }
+
+    /// Record the final `(wakeups, dispatches)` snapshot per reactor
+    /// shard (empty on the blocking plane).
+    pub fn set_shards(&self, snapshot: Vec<(u64, u64)>) {
+        *self.shards.lock().unwrap_or_else(|e| e.into_inner()) = snapshot;
+    }
+
+    pub fn shards(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Total machine steps dispatched across all shards.
+    pub fn dispatches(&self) -> u64 {
+        self.shards().iter().map(|(_, d)| d).sum()
+    }
+}
+
 /// Aggregated per-run metrics snapshot used by examples and benches.
 pub struct RunMetrics {
     pub clock: ThroughputClock,
@@ -361,6 +417,8 @@ pub struct RunMetrics {
     /// High-water depth of the dispatcher's bounded send queue — the
     /// observable backpressure signal behind micro-batching.
     pub queue_depth: QueueDepthGauge,
+    /// Data-plane thread count and per-shard reactor counters.
+    pub io: IoPlaneStats,
     /// Results that failed integrity/shape checks.
     pub errors: Arc<Mutex<Vec<String>>>,
 }
@@ -379,6 +437,7 @@ impl RunMetrics {
             traffic: TrafficBreakdown::new(),
             overhead: crate::util::timer::SharedTimer::new(),
             queue_depth: QueueDepthGauge::new(),
+            io: IoPlaneStats::new(),
             errors: Arc::new(Mutex::new(Vec::new())),
         }
     }

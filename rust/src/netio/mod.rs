@@ -1,0 +1,1094 @@
+//! Sharded readiness-driven data plane (the reactor).
+//!
+//! The blocking data plane parks one thread per connection endpoint: a
+//! worker at a `u -> d` boundary owns `u` reader + `d` writer sides, so
+//! a replicated mesh costs `O(u + d)` threads per replica. The reactor
+//! collapses all of that onto a small fixed pool of event-loop shards
+//! (`--io-threads`, default `min(2, cores)`): every ingress (merge) and
+//! egress (deal) endpoint set becomes one *state machine* registered
+//! with a shard, and the shard steps machines only when their sources
+//! report readiness.
+//!
+//! Two readiness sources feed a shard:
+//!
+//! * **epoll** — nonblocking TCP sockets, armed one-shot
+//!   ([`sys::EPOLLONESHOT`]) for exactly the event the machine is
+//!   blocked on. Every fd of a machine carries the machine's token, so
+//!   any readiness steps the whole machine.
+//! * **pipe wakers** — in-process [`crate::threadpool`] pipes (the
+//!   `Conn::Local` transport and the machines' own hand-off pipes) fire
+//!   a registered callback on data/space transitions. The callback
+//!   pushes the machine's token onto the shard's ready queue and bumps
+//!   the shard's eventfd, which lives in the same epoll set.
+//!
+//! # Schedule and byte-accounting parity
+//!
+//! The machines re-run the *identical* deal/merge schedules as the
+//! blocking [`crate::topology::wiring`] endpoints: an ingress machine
+//! reads only the connection that owns the next global frame (kernel
+//! socket buffers and bounded pipes hold the rest, exactly like a
+//! parked blocking reader), and an egress machine drains a FIFO queue
+//! of `(conn, bytes)` pairs the producer serialized *in schedule
+//! order*. Serialization, link shaping (which sleeps!) and byte
+//! accounting all stay on the producer thread inside [`DealSink`] —
+//! the shards move already-shaped bytes only — so wire traffic, byte
+//! totals and per-frame metrics are bit-identical across planes.
+//!
+//! # Failure surfacing
+//!
+//! A machine that hits a wire error stashes a labelled
+//! [`DeferError`] in its shared error slot and retires; dropping its
+//! pipe endpoint unblocks the attached producer/consumer, which
+//! collects the stashed error. Labels match the blocking plane's
+//! (`send to {peer}: ...` / `recv from {peer}: ...`).
+
+pub mod sys;
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::transport::{ReadHalf, WriteHalf};
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::netem::Link;
+use crate::threadpool::{pipe, PipeReceiver, PipeSender, TryRecv, TrySend};
+use crate::topology::wiring::{DealSender, MergeReceiver};
+use crate::util::bufpool::BufPool;
+use crate::wire::{write_message, FrameAssembler, Message, MessageType};
+
+/// Shared slot a machine stashes its terminal error in; the attached
+/// producer/consumer takes it once the machine's pipe closes.
+pub type ErrSlot = Arc<Mutex<Option<DeferError>>>;
+
+/// Epoll token reserved for the shard's own eventfd.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+// ------------------------------------------------------------- ShardSignal
+
+/// Registration command queued to a shard.
+enum Command {
+    Attach { token: u64, machine: Machine },
+}
+
+/// The cross-thread face of one shard: wakers and registration threads
+/// hold a strong `Arc` to it, so the eventfd stays open for as long as
+/// anything might still signal it (fd reuse after close would otherwise
+/// let a stale waker poke an unrelated fd).
+struct ShardSignal {
+    efd: RawFd,
+    ready: Mutex<Vec<u64>>,
+    commands: Mutex<Vec<Command>>,
+    shutdown: AtomicBool,
+    /// Monotonic machine-token allocator. Tokens are never reused, so a
+    /// stale token in the ready queue (its machine already retired) is
+    /// harmlessly skipped.
+    next_token: AtomicU64,
+}
+
+impl ShardSignal {
+    fn wake(&self) {
+        sys::eventfd_signal(self.efd);
+    }
+
+    fn push_ready(&self, token: u64) {
+        self.ready.lock().unwrap().push(token);
+        self.wake();
+    }
+
+    fn attach(&self, token: u64, machine: Machine) {
+        self.commands
+            .lock()
+            .unwrap()
+            .push(Command::Attach { token, machine });
+        self.wake();
+    }
+}
+
+impl Drop for ShardSignal {
+    fn drop(&mut self) {
+        sys::close_fd(self.efd);
+    }
+}
+
+/// Per-shard activity counters (exposed via [`Reactor::shard_stats`]).
+#[derive(Default)]
+struct ShardStats {
+    wakeups: AtomicU64,
+    dispatches: AtomicU64,
+}
+
+// ----------------------------------------------------------- state machines
+
+enum Step {
+    Idle,
+    Done,
+}
+
+enum Machine {
+    Ingress(IngressMachine),
+    Egress(EgressMachine),
+}
+
+impl Machine {
+    fn tcp_fds(&self) -> Vec<RawFd> {
+        match self {
+            Machine::Ingress(m) => m
+                .conns
+                .iter()
+                .filter_map(|c| match &c.io {
+                    IngressIo::Tcp { stream, .. } => Some(stream.as_raw_fd()),
+                    IngressIo::Local { .. } => None,
+                })
+                .collect(),
+            Machine::Egress(m) => m
+                .conns
+                .iter()
+                .filter_map(|c| match &c.io {
+                    EgressIo::Tcp { stream } => Some(stream.as_raw_fd()),
+                    EgressIo::Local { .. } => None,
+                })
+                .collect(),
+        }
+    }
+
+    fn step(&mut self, epfd: RawFd, token: u64) -> Step {
+        match self {
+            Machine::Ingress(m) => m.step(epfd, token),
+            Machine::Egress(m) => m.step(epfd, token),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- ingress
+
+/// One merge-side connection adopted by the reactor.
+struct IngressConn {
+    io: IngressIo,
+    label: String,
+}
+
+enum IngressIo {
+    Tcp {
+        stream: TcpStream,
+        /// Bytes the pre-split buffered reader had already consumed off
+        /// the socket; served to the assembler before fresh reads.
+        residue: Vec<u8>,
+        asm: FrameAssembler,
+    },
+    Local {
+        rx: PipeReceiver<Vec<u8>>,
+        pending: Vec<u8>,
+        frames: Arc<BufPool>,
+    },
+}
+
+enum IngressState {
+    /// Normal operation: read the scheduled connection only.
+    Running,
+    /// Scheduled conn delivered `Shutdown`; read the one pending
+    /// `Shutdown` off every other conn (the deal invariant guarantees
+    /// they hold nothing else) before forwarding the merged marker.
+    Draining {
+        drained: Vec<bool>,
+        pending: Option<Message>,
+    },
+    /// Merged `Shutdown` parked/flushed; close the pipe and retire.
+    Finishing,
+}
+
+/// Schedule-preserving merge as a state machine: reads only the conn
+/// that owns the next global frame, forwards complete messages into a
+/// bounded pipe, parks on pipe backpressure, and reproduces the
+/// blocking [`MergeReceiver`]'s shutdown drain and error labels.
+struct IngressMachine {
+    conns: Vec<IngressConn>,
+    next: usize,
+    step_by: usize,
+    out: PipeSender<Message>,
+    parked: Option<Message>,
+    pool: Option<Arc<BufPool>>,
+    err: ErrSlot,
+    state: IngressState,
+}
+
+impl IngressMachine {
+    fn step(&mut self, epfd: RawFd, token: u64) -> Step {
+        loop {
+            // Flush a message the full pipe parked on a previous step.
+            if let Some(msg) = self.parked.take() {
+                match self.out.try_send(msg) {
+                    TrySend::Ok => {}
+                    TrySend::Full(m) => {
+                        self.parked = Some(m);
+                        return Step::Idle; // space waker re-steps us
+                    }
+                    // Consumer gone (teardown): finish quietly, like a
+                    // blocked reader thread whose pipe send fails last.
+                    TrySend::Closed(_) => return Step::Done,
+                }
+            }
+            if matches!(self.state, IngressState::Finishing) {
+                self.out.close();
+                return Step::Done;
+            }
+            if matches!(self.state, IngressState::Running) {
+                let idx = self.next;
+                match self.poll_conn(idx, epfd, token) {
+                    Err(e) => return self.fail(idx, e),
+                    Ok(None) => return Step::Idle,
+                    Ok(Some(msg)) => {
+                        if msg.msg_type == MessageType::Shutdown {
+                            let mut drained = vec![false; self.conns.len()];
+                            drained[idx] = true;
+                            self.state = IngressState::Draining {
+                                drained,
+                                pending: Some(msg),
+                            };
+                        } else {
+                            self.next = (self.next + self.step_by) % self.conns.len();
+                            self.parked = Some(msg);
+                        }
+                    }
+                }
+                continue;
+            }
+            // Draining: collect one Shutdown from every remaining conn.
+            // Order across conns is irrelevant (each holds exactly one
+            // final message), so all blocked conns stay armed at once.
+            let (mut drained, mut pending) =
+                match std::mem::replace(&mut self.state, IngressState::Finishing) {
+                    IngressState::Draining { drained, pending } => (drained, pending),
+                    _ => unreachable!("only Draining reaches here"),
+                };
+            let mut blocked = false;
+            for i in 0..self.conns.len() {
+                if drained[i] {
+                    continue;
+                }
+                match self.poll_conn(i, epfd, token) {
+                    Err(e) => return self.fail(i, e),
+                    Ok(None) => blocked = true,
+                    Ok(Some(m)) => {
+                        if m.msg_type == MessageType::Shutdown {
+                            drained[i] = true;
+                        } else {
+                            return self.fail_raw(DeferError::Coordinator(format!(
+                                "{} sent {:?} after the merged stream ended",
+                                self.conns[i].label, m.msg_type
+                            )));
+                        }
+                    }
+                }
+            }
+            if blocked {
+                self.state = IngressState::Draining { drained, pending };
+                return Step::Idle;
+            }
+            self.parked = pending.take();
+            // state is already Finishing; loop flushes the parked marker.
+        }
+    }
+
+    /// Try to produce one complete message from conn `idx`. `Ok(None)`
+    /// means the source would block (and, for TCP, the fd has been
+    /// re-armed for the machine's token). Errors are unlabelled; the
+    /// caller wraps them with the peer label.
+    fn poll_conn(&mut self, idx: usize, epfd: RawFd, token: u64) -> Result<Option<Message>> {
+        let pool = self.pool.clone();
+        let conn = &mut self.conns[idx];
+        match &mut conn.io {
+            IngressIo::Tcp {
+                stream,
+                residue,
+                asm,
+            } => {
+                let res = {
+                    let sock = &*stream;
+                    let mut read = |buf: &mut [u8]| -> std::io::Result<usize> {
+                        if !residue.is_empty() {
+                            let n = residue.len().min(buf.len());
+                            buf[..n].copy_from_slice(&residue[..n]);
+                            residue.drain(..n);
+                            return Ok(n);
+                        }
+                        let mut s: &TcpStream = sock;
+                        s.read(buf)
+                    };
+                    asm.poll(&mut read, pool.as_deref())
+                };
+                match res {
+                    Ok(Some(msg)) => Ok(Some(msg)),
+                    Ok(None) => {
+                        sys::epoll_mod(
+                            epfd,
+                            stream.as_raw_fd(),
+                            sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLONESHOT,
+                            token,
+                        )?;
+                        Ok(None)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            IngressIo::Local {
+                rx,
+                pending,
+                frames,
+            } => {
+                if pending.is_empty() {
+                    match rx.try_recv() {
+                        TryRecv::Item(buf) => *pending = buf,
+                        // The permanent data waker re-steps us on arrival.
+                        TryRecv::Empty => return Ok(None),
+                        TryRecv::Closed => {
+                            return Err(DeferError::ChannelClosed("local conn recv"))
+                        }
+                    }
+                }
+                // Mirror `Conn::recv_pooled`: parse one message off the
+                // pending buffer (receive side always uses a throwaway
+                // counter — the sender already counted the hop).
+                let mut cursor = std::io::Cursor::new(pending.as_slice());
+                let msg =
+                    crate::wire::read_message_pooled(&mut cursor, &ByteCounter::new(), pool.as_deref())?;
+                let consumed = cursor.position() as usize;
+                pending.drain(..consumed);
+                if pending.is_empty() {
+                    frames.put(std::mem::take(pending));
+                }
+                Ok(Some(msg))
+            }
+        }
+    }
+
+    fn fail(&mut self, idx: usize, e: DeferError) -> Step {
+        let label = &self.conns[idx].label;
+        self.fail_raw(DeferError::Coordinator(format!("recv from {label}: {e}")))
+    }
+
+    fn fail_raw(&mut self, e: DeferError) -> Step {
+        *self.err.lock().unwrap() = Some(e);
+        self.out.close();
+        Step::Done
+    }
+}
+
+// ------------------------------------------------------------------ egress
+
+/// One deal-side connection adopted by the reactor.
+struct EgressConn {
+    io: EgressIo,
+    label: String,
+}
+
+enum EgressIo {
+    Tcp { stream: TcpStream },
+    Local { tx: PipeSender<Vec<u8>> },
+}
+
+enum WriteOut {
+    Flushed,
+    Pending(Vec<u8>, usize),
+    Failed(DeferError),
+}
+
+/// Drains a FIFO queue of pre-serialized `(conn, bytes)` buffers onto
+/// the wire, resuming partial TCP writes across readiness events. FIFO
+/// consumption preserves the producer's schedule order exactly.
+struct EgressMachine {
+    queue: PipeReceiver<(usize, Vec<u8>)>,
+    conns: Vec<EgressConn>,
+    /// A buffer mid-write: `(conn idx, bytes, bytes already written)`.
+    in_flight: Option<(usize, Vec<u8>, usize)>,
+    err: ErrSlot,
+}
+
+impl EgressMachine {
+    fn step(&mut self, epfd: RawFd, token: u64) -> Step {
+        loop {
+            if let Some((idx, buf, written)) = self.in_flight.take() {
+                match write_step(&mut self.conns[idx], epfd, token, buf, written) {
+                    WriteOut::Flushed => {}
+                    WriteOut::Pending(buf, written) => {
+                        self.in_flight = Some((idx, buf, written));
+                        return Step::Idle;
+                    }
+                    WriteOut::Failed(e) => return self.fail(idx, e),
+                }
+            }
+            match self.queue.try_recv() {
+                TryRecv::Item((idx, buf)) => self.in_flight = Some((idx, buf, 0)),
+                // The queue's data waker re-steps us on the next enqueue.
+                TryRecv::Empty => return Step::Idle,
+                // Producer done and everything flushed: retire.
+                TryRecv::Closed => return Step::Done,
+            }
+        }
+    }
+
+    /// Stash a labelled error and retire. Dropping the machine drops the
+    /// queue receiver, so the producer's next enqueue fails and it
+    /// collects the stashed error from the slot.
+    fn fail(&mut self, idx: usize, e: DeferError) -> Step {
+        let label = &self.conns[idx].label;
+        *self.err.lock().unwrap() =
+            Some(DeferError::Coordinator(format!("send to {label}: {e}")));
+        Step::Done
+    }
+}
+
+/// Push as much of `buf` as the conn accepts. TCP would-block arms
+/// `EPOLLOUT` one-shot; a full local pipe relies on its space waker.
+fn write_step(
+    conn: &mut EgressConn,
+    epfd: RawFd,
+    token: u64,
+    buf: Vec<u8>,
+    mut written: usize,
+) -> WriteOut {
+    match &mut conn.io {
+        EgressIo::Tcp { stream } => loop {
+            if written == buf.len() {
+                return WriteOut::Flushed;
+            }
+            let mut s: &TcpStream = &*stream;
+            match s.write(&buf[written..]) {
+                Ok(0) => {
+                    return WriteOut::Failed(DeferError::Io(
+                        std::io::ErrorKind::WriteZero.into(),
+                    ))
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Err(e) = sys::epoll_mod(
+                        epfd,
+                        stream.as_raw_fd(),
+                        sys::EPOLLOUT | sys::EPOLLONESHOT,
+                        token,
+                    ) {
+                        return WriteOut::Failed(e.into());
+                    }
+                    return WriteOut::Pending(buf, written);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return WriteOut::Failed(e.into()),
+            }
+        },
+        EgressIo::Local { tx } => match tx.try_send(buf) {
+            TrySend::Ok => WriteOut::Flushed,
+            TrySend::Full(b) => WriteOut::Pending(b, 0),
+            TrySend::Closed(_) => {
+                WriteOut::Failed(DeferError::ChannelClosed("local conn send"))
+            }
+        },
+    }
+}
+
+// ---------------------------------------------------------------- DealSink
+
+/// Producer-side handle for a reactor-registered egress set: the
+/// blocking [`DealSender`]'s API, but `send_data` serializes, shapes and
+/// counts on *this* thread and enqueues the finished bytes for the
+/// shard to write. The bounded queue is the backpressure window.
+pub struct DealSink {
+    queue: PipeSender<(usize, Vec<u8>)>,
+    labels: Vec<String>,
+    next: usize,
+    step: usize,
+    err: ErrSlot,
+}
+
+impl DealSink {
+    /// Number of successor connections.
+    pub fn fan(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Serialized messages not yet handed to the wire (adaptive-batching
+    /// signal, same role as the encoder pipe depth).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Send one data message per the deal schedule (see
+    /// [`DealSender::send_data`]). Shaping sleeps and byte accounting
+    /// happen here, before the enqueue, so metrics and pacing are
+    /// identical to the blocking plane.
+    pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let idx = self.next;
+        let mut buf = Vec::with_capacity(msg.wire_size() as usize);
+        write_message(&mut buf, msg, link, counter)?;
+        if self.queue.send((idx, buf)).is_err() {
+            return Err(self.writer_error(idx));
+        }
+        self.next = (self.next + self.step) % self.labels.len();
+        Ok(())
+    }
+
+    /// Broadcast `Shutdown` to every successor with the blocking plane's
+    /// byte accounting: one shaped/counted copy (index 0), the fan-out
+    /// rest over an ideal link into a throwaway counter.
+    pub fn broadcast_shutdown(&mut self, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let msg = Message::control(MessageType::Shutdown);
+        let null = ByteCounter::new();
+        let ideal = Link::ideal();
+        for idx in 0..self.labels.len() {
+            let (l, c) = if idx == 0 { (link, counter) } else { (&ideal, &null) };
+            let mut buf = Vec::with_capacity(msg.wire_size() as usize);
+            write_message(&mut buf, &msg, l, c)?;
+            if self.queue.send((idx, buf)).is_err() {
+                let e = self.writer_error(idx);
+                return Err(DeferError::Coordinator(format!(
+                    "shutdown broadcast failed: {e}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The queue closed under us: the writer machine retired. Prefer its
+    /// stashed (labelled) error; a missing slot means plain teardown.
+    fn writer_error(&self, idx: usize) -> DeferError {
+        self.err.lock().unwrap().take().unwrap_or_else(|| {
+            DeferError::Coordinator(format!(
+                "send to {}: data-plane writer retired",
+                self.labels[idx]
+            ))
+        })
+    }
+}
+
+// ----------------------------------------------------------------- Reactor
+
+struct Shard {
+    signal: Arc<ShardSignal>,
+    stats: Arc<ShardStats>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// The sharded event-loop runtime. Create once per deployment, register
+/// every data-plane endpoint set, and drop after the run drains (drop
+/// joins the shard threads). Registrations round-robin across shards.
+pub struct Reactor {
+    shards: Vec<Shard>,
+    next_shard: AtomicUsize,
+}
+
+impl Reactor {
+    /// Spawn `io_threads` shard event loops (at least one).
+    pub fn new(io_threads: usize) -> Result<Arc<Reactor>> {
+        let n = io_threads.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let efd = sys::eventfd_new()?;
+            let signal = Arc::new(ShardSignal {
+                efd,
+                ready: Mutex::new(Vec::new()),
+                commands: Mutex::new(Vec::new()),
+                shutdown: AtomicBool::new(false),
+                next_token: AtomicU64::new(0),
+            });
+            let stats = Arc::new(ShardStats::default());
+            let (sig, st) = (Arc::clone(&signal), Arc::clone(&stats));
+            let thread = std::thread::Builder::new()
+                .name(format!("netio-shard{i}"))
+                .spawn(move || run_shard(sig, st))
+                .map_err(DeferError::Io)?;
+            shards.push(Shard {
+                signal,
+                stats,
+                thread: Some(thread),
+            });
+        }
+        Ok(Arc::new(Reactor {
+            shards,
+            next_shard: AtomicUsize::new(0),
+        }))
+    }
+
+    /// Default shard count: `min(2, cores)` — mesh I/O is memcpy-bound,
+    /// two shards saturate loopback while keeping the thread bill fixed.
+    pub fn default_io_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(2)
+    }
+
+    /// Number of shard threads.
+    pub fn io_threads(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard `(wakeups, dispatches)` counters: epoll returns and
+    /// machine steps, respectively.
+    pub fn shard_stats(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| {
+                (
+                    s.stats.wakeups.load(Ordering::Relaxed),
+                    s.stats.dispatches.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    fn pick_shard(&self) -> &Shard {
+        let i = self.next_shard.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        &self.shards[i]
+    }
+
+    /// Adopt a merge set: the machine feeds the identical in-order
+    /// message stream (ending in one merged `Shutdown`) into `out`, then
+    /// closes it. A machine failure closes `out` early and parks the
+    /// labelled error in the returned slot.
+    pub fn register_ingress(
+        &self,
+        source: MergeReceiver,
+        out: PipeSender<Message>,
+        pool: Option<Arc<BufPool>>,
+    ) -> Result<ErrSlot> {
+        let shard = self.pick_shard();
+        let token = shard.signal.next_token.fetch_add(1, Ordering::Relaxed);
+        let waker: Arc<dyn Fn() + Send + Sync> = {
+            let sig = Arc::clone(&shard.signal);
+            Arc::new(move || sig.push_ready(token))
+        };
+        let (conns, labels, next, step) = source.into_parts();
+        let mut iconns = Vec::with_capacity(conns.len());
+        for (conn, label) in conns.into_iter().zip(labels) {
+            let io = match conn.into_read_half()? {
+                ReadHalf::Tcp { stream, residue } => IngressIo::Tcp {
+                    stream,
+                    residue,
+                    asm: FrameAssembler::new(),
+                },
+                ReadHalf::Local {
+                    rx,
+                    pending,
+                    frames,
+                } => {
+                    rx.set_data_waker(Arc::clone(&waker));
+                    IngressIo::Local {
+                        rx,
+                        pending,
+                        frames,
+                    }
+                }
+            };
+            iconns.push(IngressConn { io, label });
+        }
+        out.set_space_waker(Arc::clone(&waker));
+        let err: ErrSlot = Arc::new(Mutex::new(None));
+        let machine = Machine::Ingress(IngressMachine {
+            conns: iconns,
+            next,
+            step_by: step,
+            out,
+            parked: None,
+            pool,
+            err: Arc::clone(&err),
+            state: IngressState::Running,
+        });
+        shard.signal.attach(token, machine);
+        Ok(err)
+    }
+
+    /// Adopt a deal set: returns the producer-side [`DealSink`] whose
+    /// bounded queue (`depth` messages) replaces the inline blocking
+    /// writes as the backpressure window.
+    pub fn register_egress(&self, sender: DealSender, depth: usize) -> Result<DealSink> {
+        let shard = self.pick_shard();
+        let token = shard.signal.next_token.fetch_add(1, Ordering::Relaxed);
+        let waker: Arc<dyn Fn() + Send + Sync> = {
+            let sig = Arc::clone(&shard.signal);
+            Arc::new(move || sig.push_ready(token))
+        };
+        let (conns, labels, next, step) = sender.into_parts();
+        let (queue_tx, queue_rx) = pipe::<(usize, Vec<u8>)>(depth.max(1));
+        queue_rx.set_data_waker(Arc::clone(&waker));
+        let mut econns = Vec::with_capacity(conns.len());
+        for (conn, label) in conns.into_iter().zip(labels.iter()) {
+            let io = match conn.into_write_half()? {
+                WriteHalf::Tcp { stream } => EgressIo::Tcp { stream },
+                WriteHalf::Local { tx, .. } => {
+                    tx.set_space_waker(Arc::clone(&waker));
+                    EgressIo::Local { tx }
+                }
+            };
+            econns.push(EgressConn {
+                io,
+                label: label.clone(),
+            });
+        }
+        let err: ErrSlot = Arc::new(Mutex::new(None));
+        let machine = Machine::Egress(EgressMachine {
+            queue: queue_rx,
+            conns: econns,
+            in_flight: None,
+            err: Arc::clone(&err),
+        });
+        shard.signal.attach(token, machine);
+        Ok(DealSink {
+            queue: queue_tx,
+            labels,
+            next,
+            step,
+            err,
+        })
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            s.signal.shutdown.store(true, Ordering::Release);
+            s.signal.wake();
+        }
+        for s in &mut self.shards {
+            if let Some(t) = s.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- shard loop
+
+fn run_shard(signal: Arc<ShardSignal>, stats: Arc<ShardStats>) {
+    let epfd = match sys::epoll_create() {
+        Ok(fd) => fd,
+        Err(_) => return,
+    };
+    // The eventfd is level-triggered: wakes queued while we're stepping
+    // machines are observed by the next wait, so no wakeup is ever lost.
+    if sys::epoll_add(epfd, signal.efd, sys::EPOLLIN, WAKE_TOKEN).is_err() {
+        sys::close_fd(epfd);
+        return;
+    }
+    let mut machines: HashMap<u64, Machine> = HashMap::new();
+    let mut run_queue: Vec<u64> = Vec::new();
+    let mut events = [sys::EpollEvent { events: 0, data: 0 }; 64];
+    loop {
+        // Adopt newly registered machines. Their TCP fds enter the wait
+        // set disarmed-one-shot (no IN/OUT interest; the implicit
+        // ERR/HUP delivery is one-shot too, so a dead fd cannot storm),
+        // and the machine runs once immediately to make initial
+        // progress and arm what it blocks on.
+        let commands = std::mem::take(&mut *signal.commands.lock().unwrap());
+        for Command::Attach { token, machine } in commands {
+            for fd in machine.tcp_fds() {
+                let _ = sys::epoll_add(epfd, fd, sys::EPOLLONESHOT, token);
+            }
+            machines.insert(token, machine);
+            run_queue.push(token);
+        }
+        // Collect tokens pushed by pipe wakers, fold in epoll readiness
+        // carried over from the previous wait, and step each machine
+        // once per batch.
+        run_queue.extend(std::mem::take(&mut *signal.ready.lock().unwrap()));
+        run_queue.sort_unstable();
+        run_queue.dedup();
+        for token in run_queue.drain(..) {
+            if let Some(m) = machines.get_mut(&token) {
+                stats.dispatches.fetch_add(1, Ordering::Relaxed);
+                if matches!(m.step(epfd, token), Step::Done) {
+                    // Dropping the machine closes its conns; closed fds
+                    // leave the epoll set automatically.
+                    machines.remove(&token);
+                }
+            }
+        }
+        if signal.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let n = match sys::epoll_pwait(epfd, &mut events, -1) {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        stats.wakeups.fetch_add(1, Ordering::Relaxed);
+        for ev in events.iter().take(n) {
+            // Copy out of the (possibly packed) struct before use.
+            let data = { ev.data };
+            if data == WAKE_TOKEN {
+                sys::eventfd_drain(signal.efd);
+            } else {
+                run_queue.push(data);
+            }
+        }
+    }
+    drop(machines);
+    sys::close_fd(epfd);
+}
+
+// ------------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::Conn;
+
+    fn data_msg(frame: u64) -> Message {
+        Message {
+            msg_type: MessageType::Data,
+            frame,
+            serialized_len: 4,
+            count: 0,
+            batch: 1,
+            payload: vec![frame as u8; 4],
+        }
+    }
+
+    #[test]
+    fn ingress_restores_round_robin_order_over_local_conns() {
+        let reactor = Reactor::new(2).unwrap();
+        let u = 3;
+        let mut up = Vec::new();
+        let mut ins = Vec::new();
+        for _ in 0..u {
+            let (a, b) = Conn::local_pair(8);
+            up.push(a);
+            ins.push(b);
+        }
+        let labels = (0..u).map(|i| format!("peer{i}")).collect();
+        let merge = MergeReceiver::new(ins, labels, 0, 1);
+        let (tx, rx) = pipe::<Message>(4);
+        let err = reactor.register_ingress(merge, tx, None).unwrap();
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..7u64 {
+            up[(f as usize) % u].send(&data_msg(f), &link, &c).unwrap();
+        }
+        for conn in up.iter_mut() {
+            conn.send(&Message::control(MessageType::Shutdown), &link, &c)
+                .unwrap();
+        }
+        for f in 0..7u64 {
+            assert_eq!(rx.recv().unwrap().frame, f);
+        }
+        assert_eq!(rx.recv().unwrap().msg_type, MessageType::Shutdown);
+        assert!(rx.recv().is_none(), "pipe closes after the merged marker");
+        assert!(err.lock().unwrap().is_none());
+        let stats = reactor.shard_stats();
+        assert!(stats.iter().any(|&(_, d)| d > 0), "machine was stepped");
+    }
+
+    #[test]
+    fn egress_deals_on_schedule_with_blocking_byte_accounting() {
+        let reactor = Reactor::new(1).unwrap();
+        let d = 3;
+        let mut outs = Vec::new();
+        let mut downs = Vec::new();
+        for _ in 0..d {
+            let (a, b) = Conn::local_pair(8);
+            outs.push(a);
+            downs.push(b);
+        }
+        let labels = (0..d).map(|j| format!("replica{j}")).collect();
+        let sender = DealSender::new(outs, labels, 0, 1);
+        let mut sink = reactor.register_egress(sender, 8).unwrap();
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..7u64 {
+            sink.send_data(&data_msg(f), &link, &c).unwrap();
+        }
+        sink.broadcast_shutdown(&link, &c).unwrap();
+        for (j, down) in downs.iter_mut().enumerate() {
+            let mut expect = j as u64;
+            loop {
+                let m = down.recv(&ByteCounter::new()).unwrap();
+                if m.msg_type == MessageType::Shutdown {
+                    break;
+                }
+                assert_eq!(m.frame, expect, "replica {j}");
+                expect += d as u64;
+            }
+            assert!(expect >= 7, "replica {j} starved");
+        }
+        // Identical accounting to the blocking DealSender: 7 data frames
+        // plus exactly one counted shutdown marker.
+        let shutdown_wire = Message::control(MessageType::Shutdown).wire_size();
+        let data_wire = data_msg(0).wire_size();
+        assert_eq!(c.total(), 7 * data_wire + shutdown_wire);
+    }
+
+    #[test]
+    fn tcp_round_trip_through_both_machines() {
+        // sink -> TCP socket -> ingress machine -> pipe, with payloads
+        // big enough to exercise partial-write/partial-read resume.
+        let reactor = Reactor::new(2).unwrap();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dial = Conn::tcp_connect(&addr, "ingress side").unwrap();
+        let accepted = Conn::tcp_accept(&listener).unwrap();
+
+        let sender = DealSender::single(dial, "ingress side");
+        let mut sink = reactor.register_egress(sender, 4).unwrap();
+        let merge = MergeReceiver::single(accepted, "egress side");
+        let (tx, rx) = pipe::<Message>(4);
+        let err = reactor.register_ingress(merge, tx, None).unwrap();
+
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        let payload: Vec<u8> = (0..200_000u32).map(|i| (i * 7 + 13) as u8).collect();
+        for f in 0..5u64 {
+            let msg = Message {
+                msg_type: MessageType::Data,
+                frame: f,
+                serialized_len: payload.len() as u64,
+                count: 0,
+                batch: 1,
+                payload: payload.clone(),
+            };
+            sink.send_data(&msg, &link, &c).unwrap();
+        }
+        sink.broadcast_shutdown(&link, &c).unwrap();
+        for f in 0..5u64 {
+            let m = rx.recv().unwrap();
+            assert_eq!(m.frame, f);
+            assert_eq!(m.payload, payload, "frame {f} corrupted in flight");
+        }
+        assert_eq!(rx.recv().unwrap().msg_type, MessageType::Shutdown);
+        assert!(rx.recv().is_none());
+        assert!(err.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn zero_frame_shutdown_drains_cleanly() {
+        let reactor = Reactor::new(1).unwrap();
+        let (a, b) = Conn::local_pair(4);
+        let mut sink = reactor
+            .register_egress(DealSender::single(a, "downstream"), 4)
+            .unwrap();
+        let (tx, rx) = pipe::<Message>(4);
+        let err = reactor
+            .register_ingress(MergeReceiver::single(b, "upstream"), tx, None)
+            .unwrap();
+        sink.broadcast_shutdown(&Link::ideal(), &ByteCounter::new())
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().msg_type, MessageType::Shutdown);
+        assert!(rx.recv().is_none());
+        assert!(err.lock().unwrap().is_none());
+    }
+
+    #[test]
+    fn dead_peer_errors_name_the_peer() {
+        // Egress side: the consuming endpoint disappears mid-stream.
+        let reactor = Reactor::new(1).unwrap();
+        let (a, b) = Conn::local_pair(1);
+        let mut sink = reactor
+            .register_egress(DealSender::single(a, "node1.1 data socket"), 1)
+            .unwrap();
+        drop(b);
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        let mut last = None;
+        for f in 0..100u64 {
+            match sink.send_data(&data_msg(f), &link, &c) {
+                Ok(()) => std::thread::sleep(std::time::Duration::from_millis(1)),
+                Err(e) => {
+                    last = Some(e);
+                    break;
+                }
+            }
+        }
+        let e = last.expect("writer must fail once the machine retires");
+        assert!(
+            format!("{e}").contains("node1.1 data socket"),
+            "unlabelled error: {e}"
+        );
+
+        // Ingress side: the sending endpoint disappears mid-stream.
+        let (a, b) = Conn::local_pair(1);
+        let (tx, rx) = pipe::<Message>(4);
+        let err = reactor
+            .register_ingress(MergeReceiver::single(b, "node0 data socket"), tx, None)
+            .unwrap();
+        drop(a);
+        assert!(rx.recv().is_none(), "pipe closes on machine failure");
+        let e = err.lock().unwrap().take().expect("error stashed");
+        assert!(
+            format!("{e}").contains("node0 data socket"),
+            "unlabelled error: {e}"
+        );
+    }
+
+    #[test]
+    fn replicated_mesh_preserves_fifo_end_to_end() {
+        // dispatcher -> 2 replicas -> dispatcher, all four machine sets
+        // on the reactor: sink deals to the replicas, each replica's
+        // ingress feeds a relay thread that re-emits through its own
+        // sink, and the final ingress restores global order.
+        let reactor = Reactor::new(2).unwrap();
+        let u = 2;
+        let mut to_replica = Vec::new();
+        let mut replica_in = Vec::new();
+        for _ in 0..u {
+            let (a, b) = Conn::local_pair(4);
+            to_replica.push(a);
+            replica_in.push(b);
+        }
+        let mut replica_out = Vec::new();
+        let mut ret = Vec::new();
+        for _ in 0..u {
+            let (a, b) = Conn::local_pair(4);
+            replica_out.push(a);
+            ret.push(b);
+        }
+        let labels: Vec<String> = (0..u).map(|i| format!("replica{i}")).collect();
+        let mut sink = reactor
+            .register_egress(DealSender::new(to_replica, labels.clone(), 0, 1), 4)
+            .unwrap();
+
+        let mut relays = Vec::new();
+        for (inn, out) in replica_in.into_iter().zip(replica_out.into_iter()) {
+            let (tx, rx) = pipe::<Message>(4);
+            reactor
+                .register_ingress(MergeReceiver::single(inn, "dispatcher"), tx, None)
+                .unwrap();
+            let mut out_sink = reactor
+                .register_egress(
+                    DealSender::single(out, "dispatcher return socket"),
+                    4,
+                )
+                .unwrap();
+            relays.push(std::thread::spawn(move || {
+                let link = Link::ideal();
+                let c = ByteCounter::new();
+                while let Some(msg) = rx.recv() {
+                    if msg.msg_type == MessageType::Shutdown {
+                        out_sink.broadcast_shutdown(&link, &c).unwrap();
+                        break;
+                    }
+                    out_sink.send_data(&msg, &link, &c).unwrap();
+                }
+            }));
+        }
+
+        let (tx, rx) = pipe::<Message>(8);
+        // merge_schedule(0, u=2, d=1) = (0, 1): alternate the replicas.
+        let err = reactor
+            .register_ingress(MergeReceiver::new(ret, labels, 0, 1), tx, None)
+            .unwrap();
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        for f in 0..9u64 {
+            sink.send_data(&data_msg(f), &link, &c).unwrap();
+        }
+        sink.broadcast_shutdown(&link, &c).unwrap();
+        for f in 0..9u64 {
+            assert_eq!(rx.recv().unwrap().frame, f, "global FIFO broken");
+        }
+        assert_eq!(rx.recv().unwrap().msg_type, MessageType::Shutdown);
+        for r in relays {
+            r.join().unwrap();
+        }
+        assert!(err.lock().unwrap().is_none());
+    }
+}

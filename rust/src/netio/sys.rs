@@ -1,0 +1,189 @@
+//! Thin epoll/eventfd FFI for the reactor data plane.
+//!
+//! The reactor needs exactly two kernel facilities: readiness
+//! notification for nonblocking TCP sockets (`epoll`) and a cheap
+//! cross-thread wakeup primitive that can live in the same wait set
+//! (`eventfd`). Rust's standard library already links libc on Linux, so
+//! the handful of syscall wrappers here declare their own `extern "C"`
+//! prototypes instead of pulling in the `libc` crate — no new
+//! dependencies, per the repo's constraints.
+//!
+//! Everything returns `io::Result` with `errno` captured via
+//! `io::Error::last_os_error()`, and `epoll_wait` retries `EINTR`
+//! internally so callers never see spurious interrupts.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+pub const EPOLL_CTL_ADD: i32 = 1;
+pub const EPOLL_CTL_DEL: i32 = 2;
+pub const EPOLL_CTL_MOD: i32 = 3;
+
+pub const EPOLLIN: u32 = 0x1;
+pub const EPOLLOUT: u32 = 0x4;
+pub const EPOLLERR: u32 = 0x8;
+pub const EPOLLHUP: u32 = 0x10;
+pub const EPOLLRDHUP: u32 = 0x2000;
+pub const EPOLLONESHOT: u32 = 1 << 30;
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+
+/// Mirrors the kernel's `struct epoll_event`. On x86-64 the kernel ABI
+/// packs it (no padding between `events` and `data`); other
+/// architectures use natural alignment.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+}
+
+/// Create a close-on-exec epoll instance.
+pub fn epoll_create() -> io::Result<RawFd> {
+    let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+fn ctl(epfd: RawFd, op: i32, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    let mut ev = EpollEvent { events, data };
+    let rc = unsafe { epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Register `fd` with interest `events`, tagging readiness with `data`.
+pub fn epoll_add(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    ctl(epfd, EPOLL_CTL_ADD, fd, events, data)
+}
+
+/// Re-arm or change interest for an already-registered `fd`.
+pub fn epoll_mod(epfd: RawFd, fd: RawFd, events: u32, data: u64) -> io::Result<()> {
+    ctl(epfd, EPOLL_CTL_MOD, fd, events, data)
+}
+
+/// Remove `fd` from the wait set (closing the fd does this implicitly).
+pub fn epoll_del(epfd: RawFd, fd: RawFd) -> io::Result<()> {
+    ctl(epfd, EPOLL_CTL_DEL, fd, 0, 0)
+}
+
+/// Block until at least one event is ready (or `timeout_ms` elapses;
+/// `-1` = forever). Retries `EINTR`. Returns the number of events
+/// written into `events`.
+pub fn epoll_pwait(epfd: RawFd, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe {
+            epoll_wait(
+                epfd,
+                events.as_mut_ptr(),
+                events.len().min(i32::MAX as usize) as i32,
+                timeout_ms,
+            )
+        };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Create a nonblocking close-on-exec eventfd (counter starts at 0).
+pub fn eventfd_new() -> io::Result<RawFd> {
+    let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(fd)
+}
+
+/// Bump the eventfd counter, waking any epoll waiter that has it
+/// registered for `EPOLLIN`. Errors are deliberately ignored: the only
+/// failure modes are a full counter (still readable, so the wakeup is
+/// not lost) or a racing close during teardown (the waiter is gone).
+pub fn eventfd_signal(fd: RawFd) {
+    let one: u64 = 1;
+    let buf = one.to_ne_bytes();
+    let _ = unsafe { write(fd, buf.as_ptr(), buf.len()) };
+}
+
+/// Drain the eventfd counter back to zero. Nonblocking: `EAGAIN`
+/// (already zero) is not an error.
+pub fn eventfd_drain(fd: RawFd) {
+    let mut buf = [0u8; 8];
+    let _ = unsafe { read(fd, buf.as_mut_ptr(), buf.len()) };
+}
+
+/// Close a raw fd acquired from [`epoll_create`] or [`eventfd_new`].
+pub fn close_fd(fd: RawFd) {
+    let _ = unsafe { close(fd) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signal_wakes_epoll_with_token() {
+        let ep = epoll_create().unwrap();
+        let ev = eventfd_new().unwrap();
+        epoll_add(ep, ev, EPOLLIN, 0xDEAD_BEEF).unwrap();
+        // Nothing pending yet: a zero-timeout wait returns no events.
+        let mut events = [EpollEvent { events: 0, data: 0 }; 4];
+        assert_eq!(epoll_pwait(ep, &mut events, 0).unwrap(), 0);
+        // Signal from this thread, then wait: the token comes back.
+        eventfd_signal(ev);
+        let n = epoll_pwait(ep, &mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        // Copy fields out of the (possibly packed) struct before use.
+        let data = { events[0].data };
+        let bits = { events[0].events };
+        assert_eq!(data, 0xDEAD_BEEF);
+        assert!(bits & EPOLLIN != 0);
+        // Drain resets the counter; the level-triggered source goes idle.
+        eventfd_drain(ev);
+        assert_eq!(epoll_pwait(ep, &mut events, 0).unwrap(), 0);
+        epoll_del(ep, ev).unwrap();
+        close_fd(ev);
+        close_fd(ep);
+    }
+
+    #[test]
+    fn cross_thread_signal_wakes_a_blocked_wait() {
+        let ep = epoll_create().unwrap();
+        let ev = eventfd_new().unwrap();
+        epoll_add(ep, ev, EPOLLIN, 7).unwrap();
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            eventfd_signal(ev);
+        });
+        let mut events = [EpollEvent { events: 0, data: 0 }; 1];
+        let n = epoll_pwait(ep, &mut events, 5000).unwrap();
+        assert_eq!(n, 1);
+        let data = { events[0].data };
+        assert_eq!(data, 7);
+        waker.join().unwrap();
+        eventfd_drain(ev);
+        close_fd(ev);
+        close_fd(ep);
+    }
+}

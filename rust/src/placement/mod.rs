@@ -79,9 +79,16 @@
 //!    picks the candidate `interconnect` link with the smallest modeled
 //!    transfer time for that hop's boundary bytes (first candidate wins
 //!    ties).
-//! 2. **Devices.** Stages ranked by FLOPs (descending, index ascending
-//!    on ties) claim devices from the pool sorted fastest-first (name
-//!    ascending on ties): the heaviest stage gets the fastest devices.
+//! 2. **Devices.** Stages claim *contiguous blocks* of the pool sorted
+//!    fastest-first (name ascending on ties). Only the slowest device
+//!    of a block gates its stage (round-robin dealing), so an optimal
+//!    matching always exists among contiguous partitions of the
+//!    fastest `sum(replicas)` devices; a subset DP picks the exact
+//!    block order minimizing the pipeline gate (`O(2^s * s)`, stages
+//!    `s <= 16`). Homogeneous pools — and wider problems — keep the
+//!    legacy fastest-to-heaviest rank order (heaviest stage by FLOPs
+//!    descending, index ascending, gets the fastest block), which the
+//!    DP reproduces on ties.
 //! 3. **Replication.** Starting from one replica per stage, repeatedly
 //!    add a replica to the current bottleneck stage while the worker
 //!    budget allows, the stage's own service time strictly shrinks, and
@@ -93,10 +100,10 @@
 //!
 //! Greedily replicating the bottleneck is exact for homogeneous pools
 //! (only lowering the max stage occupancy can raise throughput); with
-//! heterogeneous devices the fastest-to-heaviest assignment is a
-//! deterministic heuristic, re-evaluated from scratch after every move
-//! so a replica that would drag its stage's `f_min` down (and therefore
-//! not pay for itself) is rejected.
+//! heterogeneous devices the block DP makes each *assignment* exact for
+//! the chosen replica vector, re-evaluated from scratch after every
+//! move so a replica that would drag its stage's `f_min` down (and
+//! therefore not pay for itself) is rejected.
 //!
 //! Everything here is pure and deterministic — no RNG, no clocks, no
 //! artifact reads — so planner output is byte-stable across runs and
@@ -648,7 +655,48 @@ struct Eval {
 /// inputs.
 fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], batch: usize) -> Eval {
     let s = p.stages.len();
-    // Heaviest stage claims the fastest devices (deterministic ranks).
+    // Per-frame fixed overhead, amortized over the frames sharing one
+    // wire message. Charged after the pipelined max — per-message work
+    // does not overlap the phases it frames.
+    let batch_charge = p.batch.per_frame(batch);
+
+    // Per-stage cost terms that do not depend on the device assignment.
+    let mut dec = vec![0.0f64; s];
+    let mut enc = vec![0.0f64; s];
+    let mut egress = vec![0.0f64; s];
+    let mut relayed_flags = vec![false; s];
+    for i in 0..s {
+        // Legacy relay model: a replicated *interior* boundary detours
+        // through the coordinator host, so the frame crosses the hop
+        // twice (sender -> relay, relay -> receiver). The uplink and
+        // return hops never double — the relay is co-located with the
+        // dispatcher. Worker-owned wiring (the default) is one direct
+        // crossing.
+        let relayed = p.relay_junctions && i + 1 < s && (replicas[i] > 1 || replicas[i + 1] > 1);
+        let hop_crossings = if relayed { 2.0 } else { 1.0 };
+        relayed_flags[i] = relayed;
+        egress[i] = hop_crossings * transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
+        // Codec charges (zero under the pre-calibration model): a
+        // replica decodes its input and encodes its output every frame.
+        dec[i] = p.codec.dec_secs_per_byte * p.stages[i].input_bytes as f64;
+        enc[i] = p.codec.enc_secs_per_byte * p.stages[i].output_bytes as f64;
+    }
+    // A stage's service time as a function of its slowest device — the
+    // one quantity the device assignment controls (round-robin dealing
+    // gates every replica on the block's f_min).
+    let service_of = |i: usize, f_min: f64| -> f64 {
+        let compute = p.stages[i].flops as f64 / f_min;
+        let busy = if p.codec.pipelined && !p.codec.charges_nothing() {
+            // Software-pipelined phases overlap; the slowest gates.
+            dec[i].max(compute).max(enc[i] + egress[i])
+        } else {
+            dec[i] + compute + enc[i] + egress[i]
+        } + batch_charge;
+        busy / replicas[i] as f64
+    };
+
+    // Deterministic ranks: stages by FLOPs (descending, index ascending)
+    // and the pool fastest-first (name ascending on ties).
     let mut stage_order: Vec<usize> = (0..s).collect();
     stage_order.sort_by(|&a, &b| p.stages[b].flops.cmp(&p.stages[a].flops).then(a.cmp(&b)));
     let mut pool: Vec<&DeviceProfile> = p.devices.iter().collect();
@@ -658,17 +706,8 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], ba
             .unwrap_or(std::cmp::Ordering::Equal)
             .then_with(|| a.name.cmp(&b.name))
     });
-    let mut assigned: Vec<Vec<&DeviceProfile>> = vec![Vec::new(); s];
-    let mut cursor = 0usize;
-    for &i in &stage_order {
-        assigned[i] = pool[cursor..cursor + replicas[i]].to_vec();
-        cursor += replicas[i];
-    }
+    let assigned = assign_blocks(&stage_order, &pool, replicas, &service_of);
 
-    // Per-frame fixed overhead, amortized over the frames sharing one
-    // wire message. Charged after the pipelined max — per-message work
-    // does not overlap the phases it frames.
-    let batch_charge = p.batch.per_frame(batch);
     let uplink_secs = uplink_occupancy(p, &hop_links[0]) + batch_charge;
     let mut gate = uplink_secs;
     let mut bottleneck = Bottleneck::Uplink;
@@ -679,26 +718,7 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], ba
             .map(|d| d.flops_per_sec())
             .fold(f64::INFINITY, f64::min);
         let compute = p.stages[i].flops as f64 / f_min;
-        // Legacy relay model: a replicated *interior* boundary detours
-        // through the coordinator host, so the frame crosses the hop
-        // twice (sender -> relay, relay -> receiver). The uplink and
-        // return hops never double — the relay is co-located with the
-        // dispatcher. Worker-owned wiring (the default) is one direct
-        // crossing.
-        let relayed = p.relay_junctions && i + 1 < s && (replicas[i] > 1 || replicas[i + 1] > 1);
-        let hop_crossings = if relayed { 2.0 } else { 1.0 };
-        let egress = hop_crossings * transfer_secs(&hop_links[i + 1], p.stages[i].output_bytes);
-        // Codec charges (zero under the pre-calibration model): a
-        // replica decodes its input and encodes its output every frame.
-        let dec = p.codec.dec_secs_per_byte * p.stages[i].input_bytes as f64;
-        let enc = p.codec.enc_secs_per_byte * p.stages[i].output_bytes as f64;
-        let busy = if p.codec.pipelined && !p.codec.charges_nothing() {
-            // Software-pipelined phases overlap; the slowest gates.
-            dec.max(compute).max(enc + egress)
-        } else {
-            dec + compute + enc + egress
-        } + batch_charge;
-        let service = busy / replicas[i] as f64;
+        let service = service_of(i, f_min);
         if service > gate {
             gate = service;
             bottleneck = Bottleneck::Stage(i);
@@ -707,9 +727,9 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], ba
             replicas: replicas[i],
             devices: assigned[i].iter().map(|d| d.name.clone()).collect(),
             compute: Duration::from_secs_f64(compute),
-            codec: Duration::from_secs_f64(dec + enc),
-            egress: Duration::from_secs_f64(egress),
-            relayed,
+            codec: Duration::from_secs_f64(dec[i] + enc[i]),
+            egress: Duration::from_secs_f64(egress[i]),
+            relayed: relayed_flags[i],
             batch: Duration::from_secs_f64(batch_charge),
             service: Duration::from_secs_f64(service),
         });
@@ -719,6 +739,105 @@ fn evaluate(p: &PlacementProblem, hop_links: &[LinkSpec], replicas: &[usize], ba
         gate,
         bottleneck,
     }
+}
+
+/// Stage count past which the subset DP is skipped (`2^s` states).
+const MAX_DP_STAGES: usize = 16;
+
+/// Partition the speed-sorted pool into one contiguous block of
+/// `replicas[i]` devices per stage. Only the slowest device of a block
+/// gates its stage, so an optimal device matching always exists among
+/// the contiguous partitions of the fastest `sum(replicas)` devices
+/// (swapping any device for a faster unused one never raises a block's
+/// f_min, and uncrossing two interleaved blocks never lowers either
+/// f_min). A DP over stage subsets then picks the exact block order
+/// minimizing the pipeline gate in `O(2^s * s)`. Homogeneous pools,
+/// single stages and problems past [`MAX_DP_STAGES`] keep the legacy
+/// fastest-to-heaviest rank order, which the DP reproduces on ties.
+fn assign_blocks<'a>(
+    stage_order: &[usize],
+    pool: &[&'a DeviceProfile],
+    replicas: &[usize],
+    service_of: &dyn Fn(usize, f64) -> f64,
+) -> Vec<Vec<&'a DeviceProfile>> {
+    let s = replicas.len();
+    let total: usize = replicas.iter().sum();
+    let greedy = || {
+        // Heaviest stage claims the fastest devices (deterministic ranks).
+        let mut assigned: Vec<Vec<&DeviceProfile>> = vec![Vec::new(); s];
+        let mut cursor = 0usize;
+        for &i in stage_order {
+            assigned[i] = pool[cursor..cursor + replicas[i]].to_vec();
+            cursor += replicas[i];
+        }
+        assigned
+    };
+    let homogeneous = pool[..total].windows(2).all(|w| w[0].mflops == w[1].mflops);
+    if s <= 1 || s > MAX_DP_STAGES || homogeneous {
+        return greedy();
+    }
+
+    // dp[mask] = smallest achievable max service over the stages in
+    // `mask`, laid out (in some order) over the first `cnt[mask]` pool
+    // slots. The prefix length is mask-determined — block sizes are
+    // fixed per stage — so the state is just the subset.
+    let full = (1usize << s) - 1;
+    let mut cnt = vec![0usize; full + 1];
+    for mask in 1..=full {
+        let lsb = mask.trailing_zeros() as usize;
+        cnt[mask] = cnt[mask & (mask - 1)] + replicas[lsb];
+    }
+    let mut dp = vec![f64::INFINITY; full + 1];
+    dp[0] = 0.0;
+    for mask in 0..full {
+        if !dp[mask].is_finite() {
+            continue;
+        }
+        for i in 0..s {
+            if mask & (1 << i) != 0 {
+                continue;
+            }
+            let f_min = pool[cnt[mask] + replicas[i] - 1].flops_per_sec();
+            let cost = dp[mask].max(service_of(i, f_min));
+            let next = mask | (1 << i);
+            if cost < dp[next] {
+                dp[next] = cost;
+            }
+        }
+    }
+
+    // Walk the optimum back to an assignment, slowest block first.
+    // Among optimum-achieving choices take the stage the greedy order
+    // ranks last, so ties reproduce the legacy fastest-to-heaviest
+    // layout and plans stay byte-stable.
+    const EPS: f64 = 1e-12;
+    let mut rank = vec![0usize; s];
+    for (r, &i) in stage_order.iter().enumerate() {
+        rank[i] = r;
+    }
+    let mut assigned: Vec<Vec<&DeviceProfile>> = vec![Vec::new(); s];
+    let mut mask = full;
+    while mask != 0 {
+        let mut pick: Option<usize> = None;
+        for i in 0..s {
+            if mask & (1 << i) == 0 {
+                continue;
+            }
+            let prev = mask & !(1 << i);
+            let f_min = pool[cnt[prev] + replicas[i] - 1].flops_per_sec();
+            if dp[prev].max(service_of(i, f_min)) <= dp[mask] + EPS {
+                pick = match pick {
+                    Some(j) if rank[j] >= rank[i] => Some(j),
+                    _ => Some(i),
+                };
+            }
+        }
+        let i = pick.expect("an optimal DP path always exists");
+        let prev = mask & !(1 << i);
+        assigned[i] = pool[cnt[prev]..cnt[prev] + replicas[i]].to_vec();
+        mask = prev;
+    }
+    assigned
 }
 
 /// Modeled occupancy of the shared dispatcher uplink: the shaped
@@ -963,6 +1082,64 @@ mod tests {
         let plan = plan(&p).unwrap();
         assert_eq!(plan.replica_counts(), vec![1]);
         assert_eq!(plan.stages[0].devices, vec!["fast".to_string()]);
+    }
+
+    #[test]
+    fn dp_matching_beats_fastest_to_heaviest_greedy() {
+        // Two stages (196 and 100 MFLOP), devices at 90/88/86 MFLOP/s,
+        // budget 3. Replication settles on [2, 1]; the assignment then
+        // decides the gate. Fastest-to-heaviest would give stage 0 (the
+        // heaviest) {d90, d88} and stage 1 {d86}: gate = 100/86 =
+        // 1.1628 s on stage 1. The exact DP instead hands stage 1 the
+        // single fastest device and stage 0 the {d88, d86} block:
+        // gate = max(196/(2*86), 100/90) = 1.1395 s on stage 0 — the
+        // configuration greedy ranking can never reach.
+        let p = PlacementProblem {
+            stages: vec![
+                StageCost {
+                    flops: 196_000_000,
+                    input_bytes: 1_000,
+                    output_bytes: 1_000,
+                },
+                StageCost {
+                    flops: 100_000_000,
+                    input_bytes: 1_000,
+                    output_bytes: 1_000,
+                },
+            ],
+            devices: vec![
+                DeviceProfile {
+                    name: "d90".into(),
+                    mflops: 90.0,
+                },
+                DeviceProfile {
+                    name: "d88".into(),
+                    mflops: 88.0,
+                },
+                DeviceProfile {
+                    name: "d86".into(),
+                    mflops: 86.0,
+                },
+            ],
+            worker_budget: 3,
+            uplink: LinkSpec::ideal(),
+            interconnect: vec![],
+            codec: CodecCost::default(),
+            relay_junctions: false,
+            batch: BatchCost::ZERO,
+        };
+        let plan = plan(&p).unwrap();
+        assert_eq!(plan.replica_counts(), vec![2, 1]);
+        assert_eq!(
+            plan.stages[0].devices,
+            vec!["d88".to_string(), "d86".to_string()]
+        );
+        assert_eq!(plan.stages[1].devices, vec!["d90".to_string()]);
+        assert_eq!(plan.bottleneck, Bottleneck::Stage(0));
+        let gate = 1.0 / plan.predicted_throughput;
+        assert!((gate - 196.0 / (2.0 * 86.0)).abs() < 1e-9, "{gate}");
+        // Strictly better than the greedy layout's 100/86 s gate.
+        assert!(gate < 100.0 / 86.0 - 1e-9, "{gate}");
     }
 
     #[test]

@@ -15,6 +15,25 @@ use crate::error::{DeferError, Result};
 
 // ------------------------------------------------------------------ Pipe
 
+/// Outcome of a nonblocking [`PipeSender::try_send`]; the rejected item
+/// comes back to the caller instead of being dropped.
+pub enum TrySend<T> {
+    Ok,
+    Full(T),
+    Closed(T),
+}
+
+/// Outcome of a nonblocking [`PipeReceiver::try_recv`].
+pub enum TryRecv<T> {
+    Item(T),
+    Empty,
+    Closed,
+}
+
+/// Edge-notification callback for the reactor data plane: fired (outside
+/// the pipe's lock) when the event it watches may have occurred.
+type PipeWaker = Arc<dyn Fn() + Send + Sync>;
+
 struct PipeState<T> {
     queue: VecDeque<T>,
     closed: bool,
@@ -30,6 +49,32 @@ struct PipeShared<T> {
     /// to read before this handle's own decrement): the sender whose
     /// drop brings this to zero closes the pipe.
     senders: AtomicUsize,
+    /// Fired when data arrives (or the pipe closes) — a receiver-side
+    /// readiness hook for the reactor's virtual local sources.
+    data_waker: Mutex<Option<PipeWaker>>,
+    /// Fired when space frees up (or the pipe closes) — a sender-side
+    /// hook so a parked nonblocking producer can retry.
+    space_waker: Mutex<Option<PipeWaker>>,
+}
+
+impl<T> PipeShared<T> {
+    /// Clone the waker out of its slot, then invoke it *after* releasing
+    /// every pipe lock — wakers take their own locks (shard signal
+    /// queues) and must never nest inside ours.
+    fn fire(slot: &Mutex<Option<PipeWaker>>) {
+        let waker = slot.lock().unwrap().clone();
+        if let Some(w) = waker {
+            w();
+        }
+    }
+
+    fn fire_data(&self) {
+        Self::fire(&self.data_waker);
+    }
+
+    fn fire_space(&self) {
+        Self::fire(&self.space_waker);
+    }
 }
 
 /// Sending half of a bounded pipe.
@@ -62,6 +107,8 @@ pub fn pipe<T>(capacity: usize) -> (PipeSender<T>, PipeReceiver<T>) {
         not_empty: Condvar::new(),
         capacity: capacity.max(1),
         senders: AtomicUsize::new(1),
+        data_waker: Mutex::new(None),
+        space_waker: Mutex::new(None),
     });
     (
         PipeSender {
@@ -74,24 +121,66 @@ pub fn pipe<T>(capacity: usize) -> (PipeSender<T>, PipeReceiver<T>) {
 impl<T> PipeSender<T> {
     /// Blocking send; applies backpressure when the pipe is full.
     pub fn send(&self, item: T) -> Result<()> {
-        let mut st = self.shared.state.lock().unwrap();
-        while st.queue.len() >= self.shared.capacity && !st.closed {
-            st = self.shared.not_full.wait(st).unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.queue.len() >= self.shared.capacity && !st.closed {
+                st = self.shared.not_full.wait(st).unwrap();
+            }
+            if st.closed {
+                return Err(DeferError::ChannelClosed("pipe send"));
+            }
+            st.queue.push_back(item);
+            self.shared.not_empty.notify_one();
         }
-        if st.closed {
-            return Err(DeferError::ChannelClosed("pipe send"));
-        }
-        st.queue.push_back(item);
-        self.shared.not_empty.notify_one();
+        self.shared.fire_data();
         Ok(())
+    }
+
+    /// Nonblocking send: hands the item back instead of waiting when the
+    /// pipe is full or closed.
+    pub fn try_send(&self, item: T) -> TrySend<T> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.closed {
+                return TrySend::Closed(item);
+            }
+            if st.queue.len() >= self.shared.capacity {
+                return TrySend::Full(item);
+            }
+            st.queue.push_back(item);
+            self.shared.not_empty.notify_one();
+        }
+        self.shared.fire_data();
+        TrySend::Ok
+    }
+
+    /// Current depth — the sender-side view of the queue, used by the
+    /// adaptive batcher to size coalescing to what is already waiting.
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Register the callback fired whenever space may have freed up (an
+    /// item was consumed, or the pipe closed). Replaces any previous
+    /// waker; fired outside the pipe's locks.
+    pub fn set_space_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *self.shared.space_waker.lock().unwrap() = Some(waker);
     }
 
     /// Close the pipe; receivers drain whatever remains, then get `None`.
     pub fn close(&self) {
-        let mut st = self.shared.state.lock().unwrap();
-        st.closed = true;
-        self.shared.not_empty.notify_all();
-        self.shared.not_full.notify_all();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+        self.shared.fire_data();
+        self.shared.fire_space();
     }
 }
 
@@ -115,27 +204,60 @@ impl<T> Drop for PipeReceiver<T> {
         // closed: pending and future `send`s fail fast with
         // `ChannelClosed`, which is how a downstream pipeline stage's
         // death unwinds its upstream.
-        let mut st = self.shared.state.lock().unwrap();
-        st.closed = true;
-        self.shared.not_full.notify_all();
-        self.shared.not_empty.notify_all();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            self.shared.not_full.notify_all();
+            self.shared.not_empty.notify_all();
+        }
+        self.shared.fire_data();
+        self.shared.fire_space();
     }
 }
 
 impl<T> PipeReceiver<T> {
     /// Blocking receive; `None` after close + drain.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.state.lock().unwrap();
-        loop {
-            if let Some(item) = st.queue.pop_front() {
-                self.shared.not_full.notify_one();
-                return Some(item);
+        let item = {
+            let mut st = self.shared.state.lock().unwrap();
+            loop {
+                if let Some(item) = st.queue.pop_front() {
+                    self.shared.not_full.notify_one();
+                    break item;
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.shared.not_empty.wait(st).unwrap();
             }
-            if st.closed {
-                return None;
+        };
+        self.shared.fire_space();
+        Some(item)
+    }
+
+    /// Nonblocking receive: distinguishes "nothing yet" from "closed and
+    /// drained" so a reactor state machine knows whether to park or end.
+    pub fn try_recv(&self) -> TryRecv<T> {
+        let item = {
+            let mut st = self.shared.state.lock().unwrap();
+            match st.queue.pop_front() {
+                Some(item) => {
+                    self.shared.not_full.notify_one();
+                    item
+                }
+                None if st.closed => return TryRecv::Closed,
+                None => return TryRecv::Empty,
             }
-            st = self.shared.not_empty.wait(st).unwrap();
-        }
+        };
+        self.shared.fire_space();
+        TryRecv::Item(item)
+    }
+
+    /// Register the callback fired whenever data may have arrived (an
+    /// item was queued, or the pipe closed). Replaces any previous
+    /// waker; fired outside the pipe's locks.
+    pub fn set_data_waker(&self, waker: Arc<dyn Fn() + Send + Sync>) {
+        *self.shared.data_waker.lock().unwrap() = Some(waker);
     }
 
     /// Current depth (for pipeline-balance diagnostics).
@@ -556,6 +678,79 @@ mod tests {
             h.fetch_add(1, Ordering::SeqCst);
         }) as Box<dyn FnOnce() + Send>]);
         assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn try_send_and_try_recv_report_full_empty_closed() {
+        let (tx, rx) = pipe::<u32>(1);
+        assert!(matches!(rx.try_recv(), TryRecv::Empty));
+        assert!(matches!(tx.try_send(1), TrySend::Ok));
+        // Full: the rejected item comes back intact.
+        match tx.try_send(2) {
+            TrySend::Full(v) => assert_eq!(v, 2),
+            _ => panic!("expected Full"),
+        }
+        assert_eq!(tx.len(), 1);
+        assert!(matches!(rx.try_recv(), TryRecv::Item(1)));
+        assert!(matches!(tx.try_send(3), TrySend::Ok));
+        tx.close();
+        // Close drains first, then reports Closed.
+        assert!(matches!(rx.try_recv(), TryRecv::Item(3)));
+        assert!(matches!(rx.try_recv(), TryRecv::Closed));
+        match tx.try_send(4) {
+            TrySend::Closed(v) => assert_eq!(v, 4),
+            _ => panic!("expected Closed"),
+        }
+    }
+
+    #[test]
+    fn wakers_fire_on_data_space_and_close() {
+        let (tx, rx) = pipe::<u32>(1);
+        let data_hits = Arc::new(AtomicUsize::new(0));
+        let space_hits = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&data_hits);
+        rx.set_data_waker(Arc::new(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        }));
+        let s = Arc::clone(&space_hits);
+        tx.set_space_waker(Arc::new(move || {
+            s.fetch_add(1, Ordering::SeqCst);
+        }));
+        tx.send(1).unwrap();
+        assert_eq!(data_hits.load(Ordering::SeqCst), 1);
+        assert_eq!(space_hits.load(Ordering::SeqCst), 0);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(space_hits.load(Ordering::SeqCst), 1);
+        // try_* paths fire the same hooks.
+        assert!(matches!(tx.try_send(2), TrySend::Ok));
+        assert_eq!(data_hits.load(Ordering::SeqCst), 2);
+        assert!(matches!(rx.try_recv(), TryRecv::Item(2)));
+        assert_eq!(space_hits.load(Ordering::SeqCst), 2);
+        // Close fires both, so parked machines on either side wake.
+        tx.close();
+        assert!(data_hits.load(Ordering::SeqCst) >= 3);
+        assert!(space_hits.load(Ordering::SeqCst) >= 3);
+    }
+
+    #[test]
+    fn waker_reentrancy_safe_with_blocking_peer() {
+        // A waker that immediately try_recv's on the same pipe must not
+        // deadlock against the send that fired it (wakers run outside
+        // the pipe's locks).
+        let (tx, rx) = pipe::<u32>(4);
+        let rx = Arc::new(rx);
+        let seen = Arc::new(AtomicUsize::new(0));
+        let rx2 = Arc::clone(&rx);
+        let seen2 = Arc::clone(&seen);
+        rx.set_data_waker(Arc::new(move || {
+            if let TryRecv::Item(_) = rx2.try_recv() {
+                seen2.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), 5);
     }
 
     #[test]

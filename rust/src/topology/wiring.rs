@@ -64,12 +64,14 @@
 //! identical across both data planes.
 
 use std::net::{SocketAddr, TcpListener};
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::transport::Conn;
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
-use crate::threadpool::WorkerPool;
+use crate::netio::DealSink;
+use crate::threadpool::{PipeReceiver, WorkerPool};
 use crate::topology::{StageView, Topology};
 use crate::wire::{Message, MessageType};
 
@@ -168,6 +170,13 @@ impl DealSender {
         }
         Ok(())
     }
+
+    /// Decompose into `(conns, labels, start, step)` so the reactor data
+    /// plane can adopt the connections and re-run the identical schedule
+    /// as a write state machine.
+    pub fn into_parts(self) -> (Vec<Conn>, Vec<String>, usize, usize) {
+        (self.conns, self.labels, self.next, self.step)
+    }
 }
 
 /// FIFO-restoring merging side of a worker-owned boundary: one FIFO
@@ -259,6 +268,118 @@ impl MergeReceiver {
         }
         self.next = (self.next + self.step) % self.conns.len();
         Ok(msg)
+    }
+
+    /// Decompose into `(conns, labels, start, step)` so the reactor data
+    /// plane can adopt the connections and re-run the identical schedule
+    /// as a read state machine. Only a fresh (undrained) receiver may be
+    /// handed over.
+    pub fn into_parts(self) -> (Vec<Conn>, Vec<String>, usize, usize) {
+        debug_assert!(!self.drained, "cannot adopt a drained merge receiver");
+        (self.conns, self.labels, self.next, self.step)
+    }
+}
+
+/// Producer-facing egress handle: either the blocking [`DealSender`]
+/// (thread-per-connection plane, writes complete inline) or a
+/// reactor-backed [`DealSink`] (serialization, shaping and byte
+/// accounting stay on the producer thread; the wire writes move to the
+/// shared event loop). Call sites take `impl Into<FrameSink>` so both
+/// planes flow through the same code unchanged.
+pub enum FrameSink {
+    Direct(DealSender),
+    Queued(DealSink),
+}
+
+impl FrameSink {
+    /// Send one data message per the deal schedule (see
+    /// [`DealSender::send_data`]).
+    pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
+        match self {
+            FrameSink::Direct(s) => s.send_data(msg, link, counter),
+            FrameSink::Queued(s) => s.send_data(msg, link, counter),
+        }
+    }
+
+    /// Broadcast `Shutdown` to every successor (see
+    /// [`DealSender::broadcast_shutdown`]).
+    pub fn broadcast_shutdown(&mut self, link: &Link, counter: &ByteCounter) -> Result<()> {
+        match self {
+            FrameSink::Direct(s) => s.broadcast_shutdown(link, counter),
+            FrameSink::Queued(s) => s.broadcast_shutdown(link, counter),
+        }
+    }
+
+    /// Messages serialized but not yet on the wire. The blocking plane
+    /// reports 0 — its sends complete inline — so adaptive batching can
+    /// add this to its pipe-depth signal without changing behaviour
+    /// there.
+    pub fn queue_len(&self) -> usize {
+        match self {
+            FrameSink::Direct(_) => 0,
+            FrameSink::Queued(s) => s.queue_len(),
+        }
+    }
+}
+
+impl From<DealSender> for FrameSink {
+    fn from(s: DealSender) -> FrameSink {
+        FrameSink::Direct(s)
+    }
+}
+
+impl From<DealSink> for FrameSink {
+    fn from(s: DealSink) -> FrameSink {
+        FrameSink::Queued(s)
+    }
+}
+
+/// Consumer-facing ingress handle: either the blocking
+/// [`MergeReceiver`] or the message pipe fed by a reactor ingress
+/// machine. Both deliver the identical merged FIFO stream ending in one
+/// `Shutdown`; the reactor side surfaces its machine's failure (if any)
+/// through the shared error slot once the pipe closes.
+pub enum FrameSource {
+    Direct(MergeReceiver),
+    Queued {
+        rx: PipeReceiver<Message>,
+        err: Arc<Mutex<Option<DeferError>>>,
+    },
+}
+
+impl FrameSource {
+    /// Receive the next in-order message (see [`MergeReceiver::recv`]).
+    pub fn recv(&mut self, counter: &ByteCounter) -> Result<Message> {
+        self.recv_pooled(counter, None)
+    }
+
+    /// [`FrameSource::recv`] with payload buffers drawn from `pool`.
+    /// The queued variant ignores both arguments: bytes were counted by
+    /// the original sender (the receive side always uses a throwaway
+    /// counter) and its payloads were pooled by the ingress machine.
+    pub fn recv_pooled(
+        &mut self,
+        counter: &ByteCounter,
+        pool: Option<&crate::util::bufpool::BufPool>,
+    ) -> Result<Message> {
+        match self {
+            FrameSource::Direct(m) => m.recv_pooled(counter, pool),
+            FrameSource::Queued { rx, err } => match rx.recv() {
+                Some(msg) => Ok(msg),
+                None => {
+                    if let Some(e) = err.lock().unwrap().take() {
+                        return Err(e);
+                    }
+                    Err(DeferError::ChannelClosed("merge receiver drained"))
+                }
+            },
+        }
+    }
+}
+
+impl From<MergeReceiver> for FrameSource {
+    fn from(m: MergeReceiver) -> FrameSource {
+        FrameSource::Direct(m)
     }
 }
 
@@ -669,8 +790,12 @@ fn build_tcp(topo: &Topology, base_port: Option<u16>, relay: bool) -> Result<Wir
                 ));
             }
             let mut jin = Vec::with_capacity(u);
-            for (l, _) in &jls {
-                jin.push(Conn::tcp_accept(l)?);
+            for (r, (l, _)) in jls.iter().enumerate() {
+                jin.push(Conn::tcp_accept_with_deadline(
+                    l,
+                    &format!("hop {b} junction input {r}"),
+                    Conn::CONNECT_DEADLINE,
+                )?);
             }
             let mut jout = Vec::with_capacity(d);
             for (addr, peer) in down_addrs.iter().zip(&down_labels) {
@@ -714,19 +839,41 @@ fn build_tcp(topo: &Topology, base_port: Option<u16>, relay: bool) -> Result<Wir
     let mut workers = Vec::with_capacity(views.len());
     for (widx, view) in views.into_iter().enumerate() {
         let l = &listeners[widx];
-        let config = Conn::tcp_accept(&l.config)?;
-        let weights = Conn::tcp_accept(&l.weights)?;
+        let config = Conn::tcp_accept_with_deadline(
+            &l.config,
+            &format!("dispatcher ({} config dial)", view.name),
+            Conn::CONNECT_DEADLINE,
+        )?;
+        let weights = Conn::tcp_accept_with_deadline(
+            &l.weights,
+            &format!("dispatcher ({} weights dial)", view.name),
+            Conn::CONNECT_DEADLINE,
+        )?;
         let b = view.stage;
         let (u, d) = boundary_fan(topo, b);
         let data_in = if relay && (u > 1 || d > 1) {
-            MergeReceiver::single(Conn::tcp_accept(&l.data)?, &format!("hop {b} junction"))
+            MergeReceiver::single(
+                Conn::tcp_accept_with_deadline(
+                    &l.data,
+                    &format!("hop {b} junction"),
+                    Conn::CONNECT_DEADLINE,
+                )?,
+                &format!("hop {b} junction"),
+            )
         } else {
+            // Accepts attribute connections in dial order, so the
+            // expected peer for the k-th accept is upstream endpoint k.
+            let up_labels = upstream_labels(topo, b);
             let mut conns = Vec::with_capacity(u);
-            for _ in 0..u {
-                conns.push(Conn::tcp_accept(&l.data)?);
+            for peer in &up_labels {
+                conns.push(Conn::tcp_accept_with_deadline(
+                    &l.data,
+                    peer,
+                    Conn::CONNECT_DEADLINE,
+                )?);
             }
             let (start, step) = merge_schedule(view.replica, u, d);
-            MergeReceiver::new(conns, upstream_labels(topo, b), start, step)
+            MergeReceiver::new(conns, up_labels, start, step)
         };
         let dout = data_out[widx]
             .take()
@@ -742,16 +889,25 @@ fn build_tcp(topo: &Topology, base_port: Option<u16>, relay: bool) -> Result<Wir
     let (u, d) = boundary_fan(topo, s);
     let from_last = if relay && (u > 1 || d > 1) {
         MergeReceiver::single(
-            Conn::tcp_accept(&ret_listener)?,
+            Conn::tcp_accept_with_deadline(
+                &ret_listener,
+                &format!("hop {s} junction"),
+                Conn::CONNECT_DEADLINE,
+            )?,
             &format!("hop {s} junction"),
         )
     } else {
+        let up_labels = upstream_labels(topo, s);
         let mut conns = Vec::with_capacity(u);
-        for _ in 0..u {
-            conns.push(Conn::tcp_accept(&ret_listener)?);
+        for peer in &up_labels {
+            conns.push(Conn::tcp_accept_with_deadline(
+                &ret_listener,
+                peer,
+                Conn::CONNECT_DEADLINE,
+            )?);
         }
         let (start, step) = merge_schedule(0, u, d);
-        MergeReceiver::new(conns, upstream_labels(topo, s), start, step)
+        MergeReceiver::new(conns, up_labels, start, step)
     };
 
     Ok(Wiring {
@@ -902,6 +1058,39 @@ mod tests {
             format!("{err}").contains("node0 data socket"),
             "unlabelled error: {err}"
         );
+    }
+
+    #[test]
+    fn frame_sink_and_source_wrap_the_blocking_endpoints() {
+        let (a, b) = Conn::local_pair(4);
+        let mut sink: FrameSink = DealSender::single(a, "downstream").into();
+        let mut source: FrameSource = MergeReceiver::single(b, "upstream").into();
+        assert_eq!(sink.queue_len(), 0, "blocking sends complete inline");
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        sink.send_data(&data_msg(3), &link, &c).unwrap();
+        sink.broadcast_shutdown(&link, &c).unwrap();
+        assert_eq!(source.recv(&c).unwrap().frame, 3);
+        assert_eq!(source.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+        assert!(source.recv(&c).is_err(), "stream already drained");
+    }
+
+    #[test]
+    fn into_parts_returns_the_schedule_verbatim() {
+        let mut conns = Vec::new();
+        let mut peers = Vec::new();
+        for _ in 0..3 {
+            let (a, b) = Conn::local_pair(2);
+            conns.push(a);
+            peers.push(b);
+        }
+        let labels: Vec<String> = (0..3).map(|i| format!("peer{i}")).collect();
+        let sender = DealSender::new(conns, labels.clone(), 2, 1);
+        let (conns, got_labels, start, step) = sender.into_parts();
+        assert_eq!(conns.len(), 3);
+        assert_eq!(got_labels, labels);
+        assert_eq!((start, step), (2, 1));
+        drop(peers);
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Reactor-vs-blocking data-plane acceptance suite (artifact-free).
+//!
+//! The reactor (`netio::Reactor`) must be an *invisible* replacement
+//! for the thread-per-connection plane: same wire bytes, same frame
+//! order, same error labels, fewer parked threads. Coverage:
+//!
+//! 1. Bit-identity: the same inference run on both planes records
+//!    exactly 0.0 reference error and identical byte totals — at the
+//!    dispatcher and at every worker — on both transports, through
+//!    replicated meshes.
+//! 2. FIFO: hand-built mixed-size batches through a replicated mesh
+//!    driven end-to-end by reactor endpoints come back in global frame
+//!    order, with the merged shutdown marker trailing.
+//! 3. Failure labels: a dead peer surfaces as `send to {peer}` /
+//!    `recv from {peer}`, exactly like the blocking plane.
+//! 4. Teardown: a zero-frame run drains its shutdown broadcast cleanly.
+//! 5. Thread bill: a u=d=4 mesh runs on 2 shards where the blocking
+//!    plane parks one reader per worker.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use defer::compress::Compression;
+use defer::coordinator::dispatcher::{run_inference, DispatcherStats, InferenceOptions};
+use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
+use defer::energy::EnergyModel;
+use defer::metrics::ByteCounter;
+use defer::netem::{Link, LinkSpec};
+use defer::netio::Reactor;
+use defer::serial::{Codec, CodecRuntime, Serialization};
+use defer::tensor::Tensor;
+use defer::threadpool::pipe;
+use defer::topology::wiring::{
+    build, DealSender, FrameSink, FrameSource, MergeReceiver, TransportOptions, Wiring,
+    WorkerConns,
+};
+use defer::topology::Topology;
+use defer::util::timer::SharedTimer;
+use defer::wire::{Message, MessageType};
+
+const ELEMS: usize = 64;
+
+/// Spawn one synthetic worker (elementwise `v -> 2v + 1`). On the
+/// blocking plane it parks a boundary-reader thread, exactly like the
+/// legacy compute node; on the reactor plane the same pipe is fed by a
+/// shard-owned ingress machine and the egress deal retires through a
+/// queued sink — mirroring `compute_node`'s two branches.
+fn spawn_worker(
+    wc: WorkerConns,
+    codec: Codec,
+    rt: CodecRuntime,
+    data_tx: ByteCounter,
+    reactor: Option<Arc<Reactor>>,
+) -> std::thread::JoinHandle<defer::Result<()>> {
+    std::thread::spawn(move || {
+        let WorkerConns {
+            view,
+            config: _config,
+            weights: _weights,
+            data_in,
+            data_out,
+        } = wc;
+        let (tx, rx) = pipe::<Message>(4);
+        let mut ingress_err = None;
+        let mut reader = None;
+        let out: FrameSink = match &reactor {
+            Some(r) => {
+                ingress_err = Some(r.register_ingress(data_in, tx, None)?);
+                r.register_egress(data_out, 4)?.into()
+            }
+            None => {
+                let mut in_conn = data_in;
+                reader = Some(std::thread::spawn(move || loop {
+                    match in_conn.recv(&ByteCounter::new()) {
+                        Ok(msg) => {
+                            let stop = msg.msg_type == MessageType::Shutdown;
+                            if tx.send(msg).is_err() || stop {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                }));
+                data_out.into()
+            }
+        };
+        let replica = view.replica;
+        let ctx = PipelineCtx {
+            name: view.name.clone(),
+            codec,
+            rt,
+            overhead: SharedTimer::new(),
+            data_tx,
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined: true,
+            pipe_depth: 4,
+            payload_pool: None,
+        };
+        let result = run_codec_pipeline(rx, out, ctx, move |values, _batch| {
+            assert_eq!(values.len() % ELEMS, 0, "partial frame in batch");
+            // Jitter per replica so a lost ordering guarantee would
+            // actually scramble arrivals.
+            std::thread::sleep(Duration::from_micros((replica as u64 % 3) * 400));
+            Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
+        });
+        if let Some(h) = reader {
+            h.join().expect("reader thread");
+        }
+        // A reactor ingress failure reaches the pipeline as a bare
+        // closed-pipe error; prefer the labelled root cause.
+        if result.is_err() {
+            let stashed = ingress_err.as_ref().and_then(|s| s.lock().unwrap().take());
+            if let Some(e) = stashed {
+                return Err(e);
+            }
+        }
+        result
+    })
+}
+
+struct Harness {
+    to_first: DealSender,
+    from_last: MergeReceiver,
+    workers: Vec<std::thread::JoinHandle<defer::Result<()>>>,
+    junctions: defer::threadpool::WorkerPool,
+    /// Per-worker data-egress byte counters, in spawn order.
+    worker_tx: Vec<ByteCounter>,
+    stages: usize,
+}
+
+fn harness(replicas: &[usize], tcp: bool, reactor: Option<&Arc<Reactor>>) -> Harness {
+    let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
+    let topo = Topology::new(replicas, hop_links).unwrap();
+    let Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+        },
+    )
+    .unwrap();
+    drop(control); // no configuration phase for synthetic workers
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let mut worker_tx = Vec::new();
+    let workers: Vec<_> = workers
+        .into_iter()
+        .map(|wc| {
+            let counter = ByteCounter::new();
+            worker_tx.push(counter.clone());
+            spawn_worker(wc, codec, CodecRuntime::serial(), counter, reactor.cloned())
+        })
+        .collect();
+    Harness {
+        to_first,
+        from_last,
+        workers,
+        junctions,
+        worker_tx,
+        stages: replicas.len(),
+    }
+}
+
+/// Each stage applies v -> 2v + 1; fold that over the chain depth.
+fn expect_value(input: f32, stages: usize) -> f32 {
+    let mut v = input;
+    for _ in 0..stages {
+        v = v * 2.0 + 1.0;
+    }
+    v
+}
+
+/// Run `run_inference` end to end on one plane. Returns the dispatcher
+/// stats, the per-worker egress byte totals (spawn order), and the
+/// reactor (when one drove the run) for shard-level assertions.
+fn run_plane(
+    replicas: &[usize],
+    tcp: bool,
+    blocking: bool,
+    io_threads: usize,
+    frames: u64,
+    batch: usize,
+) -> (Arc<DispatcherStats>, Vec<u64>, Option<Arc<Reactor>>) {
+    let reactor = if blocking {
+        None
+    } else {
+        Some(Reactor::new(io_threads).unwrap())
+    };
+    let Harness {
+        to_first,
+        from_last,
+        workers,
+        junctions,
+        worker_tx,
+        stages,
+    } = harness(replicas, tcp, reactor.as_ref());
+    let input = Tensor::new(vec![ELEMS], vec![3.0; ELEMS]).unwrap();
+    let expected =
+        Tensor::new(vec![ELEMS], vec![expect_value(3.0, stages); ELEMS]).unwrap();
+    let stats = Arc::new(DispatcherStats::new(EnergyModel::default()));
+    let opts = InferenceOptions {
+        pipelined: true,
+        pipe_depth: 4,
+        batch,
+        batch_adaptive: false,
+        ..InferenceOptions::default()
+    };
+    match &reactor {
+        Some(r) => {
+            // Mirror the deployment chain: dispatcher egress becomes a
+            // queued sink, dispatcher ingress a machine-fed pipe.
+            let sink: FrameSink = r.register_egress(to_first, 4).unwrap().into();
+            let (res_tx, res_rx) = pipe::<Message>(4);
+            let err = r.register_ingress(from_last, res_tx, None).unwrap();
+            let source = FrameSource::Queued { rx: res_rx, err };
+            run_inference(
+                input,
+                frames,
+                sink,
+                source,
+                opts,
+                Arc::new(Link::ideal()),
+                Arc::clone(&stats),
+                Some(expected),
+                vec![ELEMS],
+            )
+            .unwrap();
+        }
+        None => {
+            run_inference(
+                input,
+                frames,
+                to_first,
+                from_last,
+                opts,
+                Arc::new(Link::ideal()),
+                Arc::clone(&stats),
+                Some(expected),
+                vec![ELEMS],
+            )
+            .unwrap();
+        }
+    }
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    junctions.join().unwrap();
+    let tx_totals = worker_tx.iter().map(|c| c.total()).collect();
+    (stats, tx_totals, reactor)
+}
+
+/// The acceptance property: both planes must produce bit-identical
+/// results (0.0 recorded reference error) and move *exactly* the same
+/// bytes at every endpoint.
+fn assert_planes_identical(replicas: &[usize], tcp: bool, frames: u64, batch: usize) {
+    let (blocking, blocking_tx, _) = run_plane(replicas, tcp, true, 0, frames, batch);
+    let (reactor, reactor_tx, _) = run_plane(replicas, tcp, false, 2, frames, batch);
+    for (stats, plane) in [(&blocking, "blocking"), (&reactor, "reactor")] {
+        assert_eq!(stats.clock.cycles(), frames, "{plane} cycles");
+        assert_eq!(stats.latency.count(), frames, "{plane} latency count");
+        assert_eq!(
+            *stats.reference_error.lock().unwrap(),
+            Some(0.0),
+            "{plane} plane not bit-exact"
+        );
+    }
+    assert_eq!(
+        blocking.data_tx.total(),
+        reactor.data_tx.total(),
+        "dispatcher byte totals diverge across planes"
+    );
+    assert_eq!(
+        blocking_tx, reactor_tx,
+        "worker byte totals diverge across planes"
+    );
+}
+
+#[test]
+fn reactor_matches_blocking_on_local_pipes() {
+    assert_planes_identical(&[1, 3, 2], false, 24, 2);
+}
+
+#[test]
+fn reactor_matches_blocking_over_tcp() {
+    assert_planes_identical(&[2, 2], true, 12, 3);
+}
+
+#[test]
+fn zero_frames_drain_the_reactor_plane() {
+    let (stats, _, _) = run_plane(&[1, 2], false, false, 2, 0, 4);
+    assert_eq!(stats.clock.cycles(), 0);
+    assert_eq!(stats.latency.count(), 0);
+    assert_eq!(*stats.reference_error.lock().unwrap(), None);
+}
+
+#[test]
+fn reactor_replaces_parked_readers_at_u4_d4() {
+    // Blocking would park one reader thread per worker (8 at u=d=4)
+    // plus the dispatcher's result reader; the reactor runs the same
+    // mesh on 2 shards, and both shards actually move traffic.
+    let workers: usize = [4usize, 4].iter().sum();
+    let (stats, _, reactor) = run_plane(&[4, 4], false, false, 2, 16, 1);
+    assert_eq!(*stats.reference_error.lock().unwrap(), Some(0.0));
+    let reactor = reactor.expect("reactor plane");
+    assert_eq!(reactor.io_threads(), 2);
+    assert!(reactor.io_threads() < workers + 1, "no thread reduction");
+    let shards = reactor.shard_stats();
+    assert_eq!(shards.len(), 2);
+    let (wakeups, dispatches) = shards
+        .iter()
+        .fold((0, 0), |(w, d), s| (w + s.0, d + s.1));
+    assert!(wakeups > 0, "shards never woke");
+    assert!(dispatches > 0, "shards never stepped a machine");
+}
+
+// ---------------------------------------------------------------------
+// FIFO through a replicated mesh, reactor endpoints end to end.
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_batches_preserve_fifo_through_reactor_mesh() {
+    let pattern = [1usize, 2, 3];
+    let frames = 24u64;
+    let reactor = Reactor::new(2).unwrap();
+    let Harness {
+        to_first,
+        from_last,
+        workers,
+        junctions,
+        worker_tx: _,
+        stages,
+    } = harness(&[1, 3, 2], false, Some(&reactor));
+    let mut sink = reactor.register_egress(to_first, 4).unwrap();
+    let (res_tx, res_rx) = pipe::<Message>(4);
+    let err = reactor.register_ingress(from_last, res_tx, None).unwrap();
+    let mut source = FrameSource::Queued { rx: res_rx, err };
+
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let rt = CodecRuntime::serial();
+    let link = Link::ideal();
+    let counter = ByteCounter::new();
+
+    let mut sent = 0u64;
+    let mut step = 0usize;
+    while sent < frames {
+        let b = pattern[step % pattern.len()]
+            .min((frames - sent) as usize)
+            .max(1);
+        step += 1;
+        // Stack b frames, each filled with its own frame id.
+        let mut values = Vec::with_capacity(ELEMS * b);
+        for f in sent..sent + b as u64 {
+            values.extend(std::iter::repeat(f as f32).take(ELEMS));
+        }
+        let (payload, mid) = codec.encode_frame(&values, &rt, None);
+        sink.send_data(
+            &Message {
+                msg_type: MessageType::Data,
+                frame: sent,
+                serialized_len: mid as u64,
+                count: values.len() as u64,
+                batch: b as u32,
+                payload,
+            },
+            &link,
+            &counter,
+        )
+        .unwrap();
+        sent += b as u64;
+    }
+    sink.broadcast_shutdown(&link, &counter).unwrap();
+
+    // Frames must come back in global FIFO order, whole batches intact.
+    let mut next = 0u64;
+    while next < frames {
+        let msg = source.recv(&counter).unwrap();
+        assert_eq!(msg.msg_type, MessageType::Data);
+        assert_eq!(msg.frame, next, "batches out of order");
+        let b = msg.batch.max(1) as usize;
+        let values = codec
+            .decode_frame(
+                &msg.payload,
+                msg.serialized_len as usize,
+                msg.count as usize,
+                &rt,
+                None,
+            )
+            .unwrap();
+        assert_eq!(values.len(), ELEMS * b);
+        for (i, sub) in values.chunks(ELEMS).enumerate() {
+            let expect = expect_value((next + i as u64) as f32, stages);
+            assert_eq!(sub, vec![expect; ELEMS], "frame {}", next + i as u64);
+        }
+        next += b as u64;
+    }
+    // The ingress machine drains the mesh and forwards one merged marker.
+    assert_eq!(
+        source.recv(&counter).unwrap().msg_type,
+        MessageType::Shutdown
+    );
+    for h in workers {
+        h.join().unwrap().unwrap();
+    }
+    junctions.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Dead peers surface with the blocking plane's labels.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dead_egress_peer_error_names_the_peer() {
+    let topo = Topology::new(&[1], vec![LinkSpec::ideal(); 2]).unwrap();
+    let Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp: false,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+        },
+    )
+    .unwrap();
+    drop(control);
+    drop(workers); // the peer dies before reading anything
+    drop(from_last);
+    let reactor = Reactor::new(1).unwrap();
+    let mut sink = reactor.register_egress(to_first, 4).unwrap();
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let values = vec![1.0f32; ELEMS];
+    let (payload, mid) = codec.encode_frame(&values, &CodecRuntime::serial(), None);
+    let msg = Message {
+        msg_type: MessageType::Data,
+        frame: 0,
+        serialized_len: mid as u64,
+        count: values.len() as u64,
+        batch: 1,
+        payload,
+    };
+    let link = Link::ideal();
+    let counter = ByteCounter::new();
+    let mut last = Ok(());
+    for _ in 0..64 {
+        last = sink.send_data(&msg, &link, &counter);
+        if last.is_err() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let err = last.expect_err("dead peer must surface an error");
+    let text = format!("{err}");
+    assert!(
+        text.contains("send to node0 data socket"),
+        "unlabelled error: {text}"
+    );
+    junctions.join().unwrap();
+}
+
+#[test]
+fn dead_ingress_peer_error_names_the_peer() {
+    let topo = Topology::new(&[1], vec![LinkSpec::ideal(); 2]).unwrap();
+    let Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp: false,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+        },
+    )
+    .unwrap();
+    drop(control);
+    drop(workers); // the peer dies without sending anything
+    drop(to_first);
+    let reactor = Reactor::new(1).unwrap();
+    let (res_tx, res_rx) = pipe::<Message>(4);
+    let err = reactor.register_ingress(from_last, res_tx, None).unwrap();
+    let mut source = FrameSource::Queued { rx: res_rx, err };
+    let e = source
+        .recv(&ByteCounter::new())
+        .expect_err("dead peer must surface an error");
+    let text = format!("{e}");
+    assert!(
+        text.contains("recv from node0 data socket"),
+        "unlabelled error: {text}"
+    );
+    junctions.join().unwrap();
+}
