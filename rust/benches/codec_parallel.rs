@@ -1,8 +1,10 @@
 //! Chunk-parallel codec + pipelined-chain throughput bench.
 //!
 //! Part 1 (artifact-free): serial vs chunk-parallel encode/decode GB/s
-//! for every `Codec::paper_sweep()` arm on a MiB-scale activation
-//! payload, plus the byte-identity check the container guarantees.
+//! for every `Codec::paper_sweep()` arm × ZFP kernel (scalar reference
+//! vs batched lane-parallel) on a MiB-scale activation payload, plus
+//! the byte-identity checks the container and the kernel A/B guarantee:
+//! parallel == serial AND batched == scalar, to the byte.
 //!
 //! Part 2 (needs `make artifacts`): chain throughput on a codec-bound
 //! configuration (ZFP+LZ4 data path, ideal links) with the inline loop
@@ -22,7 +24,7 @@ use defer::bench::{bench, Table};
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
 use defer::netem::LinkSpec;
-use defer::serial::{chunked, Codec, CodecRuntime};
+use defer::serial::{chunked, Codec, CodecKernel, CodecRuntime};
 use defer::threadpool::CodecPool;
 use defer::util::prng::Rng;
 
@@ -47,6 +49,7 @@ fn main() {
     );
     let mut table = Table::new(&[
         "codec",
+        "kernel",
         "serial enc GB/s",
         "parallel enc GB/s",
         "serial dec GB/s",
@@ -57,40 +60,53 @@ fn main() {
     let mut rows_json = Vec::new();
     let gbs = |secs: f64| raw_bytes as f64 / 1e9 / secs;
     for codec in Codec::paper_sweep() {
-        let serial_rt = CodecRuntime::chunked(chunk, None).unwrap();
-        let par_rt = CodecRuntime::chunked(chunk, Some(Arc::clone(&pool))).unwrap();
-        let (wire_s, mid_s) = codec.encode_frame(&data, &serial_rt, None);
-        let (wire_p, mid_p) = codec.encode_frame(&data, &par_rt, None);
-        let identical = wire_s == wire_p && mid_s == mid_p;
-
-        let enc_serial = bench(1, 5, || codec.encode_frame(&data, &serial_rt, None));
-        let enc_par = bench(1, 5, || codec.encode_frame(&data, &par_rt, None));
-        let dec_serial = bench(1, 5, || {
-            codec
-                .decode_frame(&wire_s, mid_s, n, &serial_rt, None)
+        // Scalar-kernel serial bytes are the reference: every kernel ×
+        // runtime combination must reproduce them exactly.
+        let ref_rt = CodecRuntime::chunked(chunk, None)
+            .unwrap()
+            .with_kernel(CodecKernel::Scalar);
+        let (wire_ref, mid_ref) = codec.encode_frame(&data, &ref_rt, None);
+        for kernel in [CodecKernel::Scalar, CodecKernel::Batched] {
+            let serial_rt = CodecRuntime::chunked(chunk, None).unwrap().with_kernel(kernel);
+            let par_rt = CodecRuntime::chunked(chunk, Some(Arc::clone(&pool)))
                 .unwrap()
-        });
-        let dec_par = bench(1, 5, || {
-            codec.decode_frame(&wire_p, mid_p, n, &par_rt, None).unwrap()
-        });
+                .with_kernel(kernel);
+            let (wire_s, mid_s) = codec.encode_frame(&data, &serial_rt, None);
+            let (wire_p, mid_p) = codec.encode_frame(&data, &par_rt, None);
+            let identical =
+                wire_s == wire_p && mid_s == mid_p && wire_s == wire_ref && mid_s == mid_ref;
 
-        let se = gbs(enc_serial.mean.as_secs_f64());
-        let pe = gbs(enc_par.mean.as_secs_f64());
-        let sd = gbs(dec_serial.mean.as_secs_f64());
-        let pd = gbs(dec_par.mean.as_secs_f64());
-        table.row(&[
-            codec.label(),
-            format!("{se:.3}"),
-            format!("{pe:.3}"),
-            format!("{sd:.3}"),
-            format!("{pd:.3}"),
-            format!("{:.2}x", pe / se),
-            identical.to_string(),
-        ]);
-        rows_json.push(format!(
-            r#"    {{"codec": "{}", "serial_enc_gbps": {se:.4}, "parallel_enc_gbps": {pe:.4}, "serial_dec_gbps": {sd:.4}, "parallel_dec_gbps": {pd:.4}, "bytes_identical": {identical}}}"#,
-            codec.label()
-        ));
+            let enc_serial = bench(1, 5, || codec.encode_frame(&data, &serial_rt, None));
+            let enc_par = bench(1, 5, || codec.encode_frame(&data, &par_rt, None));
+            let dec_serial = bench(1, 5, || {
+                codec
+                    .decode_frame(&wire_s, mid_s, n, &serial_rt, None)
+                    .unwrap()
+            });
+            let dec_par = bench(1, 5, || {
+                codec.decode_frame(&wire_p, mid_p, n, &par_rt, None).unwrap()
+            });
+
+            let se = gbs(enc_serial.mean.as_secs_f64());
+            let pe = gbs(enc_par.mean.as_secs_f64());
+            let sd = gbs(dec_serial.mean.as_secs_f64());
+            let pd = gbs(dec_par.mean.as_secs_f64());
+            table.row(&[
+                codec.label(),
+                kernel.name().into(),
+                format!("{se:.3}"),
+                format!("{pe:.3}"),
+                format!("{sd:.3}"),
+                format!("{pd:.3}"),
+                format!("{:.2}x", pe / se),
+                identical.to_string(),
+            ]);
+            rows_json.push(format!(
+                r#"    {{"codec": "{}", "kernel": "{}", "serial_enc_gbps": {se:.4}, "parallel_enc_gbps": {pe:.4}, "serial_dec_gbps": {sd:.4}, "parallel_dec_gbps": {pd:.4}, "bytes_identical": {identical}}}"#,
+                codec.label(),
+                kernel.name()
+            ));
+        }
     }
     print!("{}", table.render());
 

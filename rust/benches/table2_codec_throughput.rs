@@ -12,14 +12,15 @@
 //! Env: DEFER_FRAMES (default 10), DEFER_PROFILE (default edge),
 //!      DEFER_LINK (default wifi — constrained wireless edge),
 //!      DEFER_EMULATED_MFLOPS (default 400 — light device emulation so
-//!      codec costs stay visible against compute, as in the paper's regime).
+//!      codec costs stay visible against compute, as in the paper's regime),
+//!      DEFER_CODEC_KERNEL (scalar|batched — ZFP kernel A/B, default batched).
 
 use defer::bench::Table;
 use defer::config::DeferConfig;
 use defer::coordinator::chain::ChainRunner;
 use defer::netem::LinkSpec;
 use defer::runtime::Engine;
-use defer::serial::Codec;
+use defer::serial::{Codec, CodecKernel};
 
 fn main() {
     let frames: u64 = std::env::var("DEFER_FRAMES")
@@ -29,6 +30,9 @@ fn main() {
     let profile = std::env::var("DEFER_PROFILE").unwrap_or_else(|_| "edge".into());
     let link = LinkSpec::parse(&std::env::var("DEFER_LINK").unwrap_or_else(|_| "wifi".into()))
         .expect("link spec");
+    let kernel = std::env::var("DEFER_CODEC_KERNEL")
+        .map(|s| CodecKernel::parse(&s).expect("DEFER_CODEC_KERNEL"))
+        .unwrap_or_default();
     let engine = Engine::cpu().expect("PJRT cpu client");
 
     println!(
@@ -50,6 +54,7 @@ fn main() {
             .unwrap_or(400.0);
         cfg.codecs.data = codec;
         cfg.codecs.weights = codec;
+        cfg.codec_kernel = kernel;
         let report = ChainRunner::with_engine(cfg, engine.clone())
             .expect("artifacts present (make artifacts)")
             .run_frames(frames)

@@ -1,0 +1,51 @@
+//! Fuzz the reactor's `FrameAssembler` state machine: the fuzz input is
+//! treated as a hostile byte stream delivered in small reads with
+//! interleaved WouldBlock events, exactly like a slow or malicious peer
+//! on a nonblocking socket.
+#![no_main]
+
+use std::cell::Cell;
+
+use defer::wire::{FrameAssembler, Header, HEADER_SIZE};
+use libfuzzer_sys::fuzz_target;
+
+const MAX_FUZZ_PAYLOAD: u64 = 1 << 20;
+
+fuzz_target!(|data: &[u8]| {
+    // Skip inputs whose valid header demands a huge payload allocation:
+    // that path is exercised (and capped) in fuzz_wire_header.
+    if data.len() >= HEADER_SIZE {
+        let raw: [u8; HEADER_SIZE] = data[..HEADER_SIZE].try_into().unwrap();
+        if let Ok(h) = Header::parse(&raw) {
+            if h.wire_len > MAX_FUZZ_PAYLOAD {
+                return;
+            }
+        }
+    }
+    let mut asm = FrameAssembler::new();
+    let cursor = Cell::new(0usize);
+    let block_next = Cell::new(false);
+    let mut read = |buf: &mut [u8]| -> std::io::Result<usize> {
+        if block_next.replace(false) {
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        let at = cursor.get();
+        if at >= data.len() {
+            return Ok(0);
+        }
+        let n = buf.len().min(data.len() - at).min(7);
+        buf[..n].copy_from_slice(&data[at..at + n]);
+        cursor.set(at + n);
+        block_next.set(true);
+        Ok(n)
+    };
+    for _ in 0..data.len() * 2 + 8 {
+        match asm.poll(&mut read, None) {
+            Ok(_) => {}
+            Err(_) => break,
+        }
+        if cursor.get() >= data.len() && asm.at_boundary() {
+            break;
+        }
+    }
+});

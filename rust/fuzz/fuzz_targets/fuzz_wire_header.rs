@@ -1,0 +1,25 @@
+//! Fuzz `wire::Header::parse` + `Header::into_message`: the first code
+//! that touches bytes from a peer. Parse must reject hostile headers
+//! before any allocation; into_message must verify the CRC over header
+//! and payload without panicking on any split of the input.
+#![no_main]
+
+use defer::wire::{Header, HEADER_SIZE};
+use libfuzzer_sys::fuzz_target;
+
+/// Headers whose (attacker-controlled) payload length survives parsing
+/// can legitimately demand up to 8 GiB; cap what the harness actually
+/// materializes so the fuzzer measures crashes, not RSS.
+const MAX_FUZZ_PAYLOAD: u64 = 1 << 20;
+
+fuzz_target!(|data: &[u8]| {
+    if data.len() < HEADER_SIZE {
+        return;
+    }
+    let raw: [u8; HEADER_SIZE] = data[..HEADER_SIZE].try_into().unwrap();
+    if let Ok(h) = Header::parse(&raw) {
+        if h.wire_len <= MAX_FUZZ_PAYLOAD {
+            let _ = h.into_message(data[HEADER_SIZE..].to_vec());
+        }
+    }
+});

@@ -1,0 +1,27 @@
+//! Fuzz `zfp::decode` with both kernels. Beyond crash-freedom, this
+//! target asserts the PR 8 equivalence invariant on every input the
+//! decoder accepts: the scalar and batched kernels must produce
+//! bit-identical values even for streams no encoder ever emitted.
+#![no_main]
+
+use defer::serial::zfp;
+use defer::serial::CodecKernel;
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let scalar = zfp::decode_kernel(data, CodecKernel::Scalar);
+    let batched = zfp::decode_kernel(data, CodecKernel::Batched);
+    match (scalar, batched) {
+        (Ok(a), Ok(b)) => {
+            let a: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "kernels diverged on a decodable stream");
+        }
+        (Err(_), Err(_)) => {}
+        (a, b) => panic!(
+            "kernels disagree on decodability: scalar={:?} batched={:?}",
+            a.is_ok(),
+            b.is_ok()
+        ),
+    }
+});

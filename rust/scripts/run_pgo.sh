@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Profile-guided build of the defer binary and benches.
+#
+# PGO helps exactly where this repo is hot: the codec kernels are tight
+# loops whose branch mix (plane population, LZ4 match density) the
+# compiler cannot guess. The recipe is the standard three-step:
+#
+#   1. build instrumented          (RUSTFLAGS=-Cprofile-generate)
+#   2. run the codec + chain benches to collect .profraw samples
+#   3. merge with llvm-profdata and rebuild with -Cprofile-use
+#
+# Usage:  rust/scripts/run_pgo.sh [profile-data-dir]
+#
+# Requires llvm-profdata (rustup component llvm-tools-preview, or any
+# system LLVM matching the rustc major). Wire bytes are unaffected —
+# PGO changes code layout, never codec output (the kernel-equivalence
+# suite still applies to the optimized binary).
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${1:-$PWD/target/pgo-data}"
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+# Prefer the rustup-shipped llvm-profdata so versions always match rustc.
+LLVM_PROFDATA="llvm-profdata"
+if ! command -v "$LLVM_PROFDATA" >/dev/null 2>&1; then
+    TOOLS=$(dirname "$(rustc --print target-libdir)")/bin
+    if [ -x "$TOOLS/llvm-profdata" ]; then
+        LLVM_PROFDATA="$TOOLS/llvm-profdata"
+    else
+        echo "error: llvm-profdata not found (rustup component add llvm-tools-preview)" >&2
+        exit 1
+    fi
+fi
+
+echo "== step 1/3: instrumented build"
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" cargo build --release
+
+echo "== step 2/3: profiling run (codec benches; chain bench if artifacts exist)"
+# Small payloads/frame counts: PGO needs representative branches, not
+# statistically significant timings.
+RUSTFLAGS="-Cprofile-generate=$PGO_DIR" DEFER_PAYLOAD_MB=2 DEFER_FRAMES=4 \
+    cargo bench --bench codec_parallel
+if [ -f artifacts/manifest.json ]; then
+    RUSTFLAGS="-Cprofile-generate=$PGO_DIR" DEFER_FRAMES=30 \
+        cargo bench --bench table2_codec_throughput
+    RUSTFLAGS="-Cprofile-generate=$PGO_DIR" DEFER_FRAMES=100 \
+        cargo bench --bench batch_throughput
+else
+    echo "   (artifacts absent: chain benches skipped, codec profile only)"
+fi
+
+echo "== step 3/3: merge + optimized rebuild"
+"$LLVM_PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" cargo build --release
+
+echo "done: PGO-optimized binary at target/release/defer"
+echo "      rerun benches under the same RUSTFLAGS to measure the delta"

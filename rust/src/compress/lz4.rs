@@ -12,6 +12,16 @@
 //! match extension — the same structure as the reference `LZ4_compress_fast`
 //! path. Compression ratio on float payloads lands in the same band the
 //! paper reports (~25% on weight arrays), which is what Tables I/II need.
+//!
+//! Hot paths are word-level (§Perf): match extension compares eight bytes
+//! per step via XOR + `trailing_zeros`, and the hash table lives in a
+//! reusable [`Lz4Scratch`] whose epoch base makes "clearing" it a single
+//! add instead of re-zeroing 256 KiB per frame ([`ScratchPool`] shares
+//! warm tables across codec workers). All of it is byte-identical to the
+//! byte-at-a-time/fresh-table code it replaced.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::error::{DeferError, Result};
 
@@ -30,7 +40,12 @@ fn hash4(v: u32) -> usize {
 
 #[inline]
 fn read_u32(b: &[u8], i: usize) -> u32 {
-    u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]])
+    u32::from_le_bytes(b[i..i + 4].try_into().unwrap())
+}
+
+#[inline]
+fn read_u64(b: &[u8], i: usize) -> u64 {
+    u64::from_le_bytes(b[i..i + 8].try_into().unwrap())
 }
 
 fn write_length(out: &mut Vec<u8>, mut len: usize) {
@@ -39,6 +54,93 @@ fn write_length(out: &mut Vec<u8>, mut len: usize) {
         len -= 255;
     }
     out.push(len as u8);
+}
+
+/// Reusable compressor state: the prefix hash table plus an epoch base.
+/// Entries are stored as `base + position + 1` and trusted only when
+/// `entry > base`, so starting a new compression is one add — stale
+/// entries from earlier payloads read as empty without touching memory.
+/// Equivalent by construction to a freshly zeroed table (`base == 0`
+/// degenerates to exactly the old layout).
+pub struct Lz4Scratch {
+    table: Vec<u32>,
+    base: u32,
+}
+
+impl Default for Lz4Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Lz4Scratch {
+    pub fn new() -> Self {
+        Lz4Scratch {
+            table: vec![0u32; 1 << HASH_LOG],
+            base: 0,
+        }
+    }
+
+    /// Open a new epoch for an `n`-byte input and return its base.
+    /// Positions stored this call reach `base + n + 1`; if that would
+    /// wrap u32, fall back to a real re-zero (rare: once per ~4 GiB of
+    /// compressed input per scratch).
+    fn begin(&mut self, n: usize) -> u32 {
+        let span = (n as u64).min(u32::MAX as u64) as u32;
+        if self.base as u64 + span as u64 + 1 > u32::MAX as u64 {
+            self.table.fill(0);
+            self.base = 0;
+        }
+        let base = self.base;
+        self.base = base + span + 1;
+        base
+    }
+}
+
+/// Bounded pool of warm [`Lz4Scratch`] tables shared by codec workers —
+/// the per-frame hot path draws one instead of allocating and zeroing
+/// 256 KiB per call (`tests/codec_kernels.rs` asserts the steady state
+/// stops missing). `misses()` counts draws that built a new table.
+#[derive(Default)]
+pub struct ScratchPool {
+    pool: Mutex<Vec<Lz4Scratch>>,
+    misses: AtomicU64,
+}
+
+/// Tables retained by a [`ScratchPool`]: enough for every codec worker
+/// plus the coordinator threads of a busy node.
+const SCRATCH_POOL_CAP: usize = 32;
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn take(&self) -> Lz4Scratch {
+        if let Some(s) = self.pool.lock().unwrap().pop() {
+            return s;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Lz4Scratch::new()
+    }
+
+    pub fn put(&self, scratch: Lz4Scratch) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(scratch);
+        }
+    }
+
+    /// Tables currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+
+    /// Draws that had to allocate because the pool was empty. A steady
+    /// per-frame loop must stop incrementing this after warm-up.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
 }
 
 /// Compress `src` into a fresh LZ4 block.
@@ -51,6 +153,12 @@ pub fn compress(src: &[u8]) -> Vec<u8> {
 /// Compress `src` into `out` (cleared first), reusing its capacity —
 /// the pooled-buffer variant of [`compress`] for the per-frame hot path.
 pub fn compress_into(src: &[u8], out: &mut Vec<u8>) {
+    compress_with(src, out, &mut Lz4Scratch::new());
+}
+
+/// [`compress_into`] with caller-owned scratch: identical output bytes,
+/// no per-call table allocation.
+pub fn compress_with(src: &[u8], out: &mut Vec<u8>, scratch: &mut Lz4Scratch) {
     out.clear();
     let n = src.len();
     if n == 0 {
@@ -58,7 +166,8 @@ pub fn compress_into(src: &[u8], out: &mut Vec<u8>) {
         out.push(0);
         return;
     }
-    let mut table = vec![0u32; 1 << HASH_LOG]; // position + 1 (0 = empty)
+    let base = scratch.begin(n);
+    let table = &mut scratch.table;
     let mut anchor = 0usize; // start of pending literals
     let mut i = 0usize;
 
@@ -66,28 +175,36 @@ pub fn compress_into(src: &[u8], out: &mut Vec<u8>) {
         let match_limit = n - MF_LIMIT;
         while i <= match_limit {
             let h = hash4(read_u32(src, i));
-            let cand = table[h] as usize;
-            table[h] = (i + 1) as u32;
-            let found = cand > 0 && {
-                let c = cand - 1;
+            let entry = table[h];
+            table[h] = base + i as u32 + 1;
+            let found = entry > base && {
+                let c = (entry - base - 1) as usize;
                 i - c <= MAX_OFFSET && read_u32(src, c) == read_u32(src, i)
             };
             if !found {
                 i += 1;
                 continue;
             }
-            let cand = cand - 1;
+            let cand = (entry - base - 1) as usize;
 
-            // Extend the match forward (input ends with LAST_LITERALS
-            // literals, so cap the extension).
+            // Extend the match forward, eight bytes per step: a nonzero
+            // XOR's trailing zeros count the matching low-order bytes of
+            // the little-endian loads. The input ends with LAST_LITERALS
+            // literals, so the extension is capped and every word load
+            // stays in bounds (`i + max_len == n - 5`, `cand < i`).
             let mut mlen = MIN_MATCH;
             let max_len = n - LAST_LITERALS - i;
+            while mlen + 8 <= max_len {
+                let x = read_u64(src, cand + mlen) ^ read_u64(src, i + mlen);
+                if x != 0 {
+                    mlen += (x.trailing_zeros() >> 3) as usize;
+                    break;
+                }
+                mlen += 8;
+            }
+            // Byte-wise tail (no-op if the word loop ended on a mismatch).
             while mlen < max_len && src[cand + mlen] == src[i + mlen] {
                 mlen += 1;
-            }
-            if mlen < MIN_MATCH {
-                i += 1;
-                continue;
             }
 
             // Emit sequence: literals [anchor, i) + match (offset, mlen).
@@ -109,7 +226,7 @@ pub fn compress_into(src: &[u8], out: &mut Vec<u8>) {
             let step = ((mlen / 8).max(1)).min(7);
             let mut j = i + 1;
             while j + 4 <= i + mlen && j <= match_limit {
-                table[hash4(read_u32(src, j))] = (j + 1) as u32;
+                table[hash4(read_u32(src, j))] = base + j as u32 + 1;
                 j += step;
             }
 
@@ -181,11 +298,17 @@ pub fn decompress(src: &[u8], expected: usize) -> Result<Vec<u8>> {
                 }
             }
         }
-        // Overlapping copy must be byte-wise.
         let start = out.len() - offset;
-        for k in 0..mlen {
-            let b = out[start + k];
-            out.push(b);
+        if offset >= mlen {
+            // Disjoint source and destination: one bulk copy.
+            out.extend_from_within(start..start + mlen);
+        } else {
+            // Overlapping copy must be byte-wise (it *generates* runs).
+            out.reserve(mlen);
+            for k in 0..mlen {
+                let b = out[start + k];
+                out.push(b);
+            }
         }
         if out.len() > expected {
             return Err(err("output exceeds expected size"));
@@ -257,6 +380,59 @@ mod tests {
         // "abcabcabc..." forces offset < match-length copies.
         let data: Vec<u8> = b"abc".iter().copied().cycle().take(10_000).collect();
         round_trip(&data);
+    }
+
+    #[test]
+    fn reused_scratch_matches_fresh_table() {
+        // The epoch-base trick must be invisible in the output: one
+        // scratch carried across many payloads produces byte-for-byte
+        // what a fresh table produces for each.
+        let mut rng = Rng::new(15);
+        let mut scratch = Lz4Scratch::new();
+        let mut out = Vec::new();
+        for round in 0..50 {
+            let n = rng.range(0, 8000);
+            let data = if rng.below(2) == 0 {
+                rng.bytes(n)
+            } else {
+                rng.compressible_bytes(n.max(1))
+            };
+            compress_with(&data, &mut out, &mut scratch);
+            assert_eq!(out, compress(&data), "round {round} n {n}");
+            assert_eq!(decompress(&out, data.len()).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn scratch_epoch_wraparound_rezeros() {
+        // Force the u32 epoch base to the wraparound path: output must
+        // still match a fresh table exactly.
+        let mut rng = Rng::new(16);
+        let data = rng.compressible_bytes(4096);
+        let expect = compress(&data);
+        let mut scratch = Lz4Scratch::new();
+        scratch.base = u32::MAX - 100; // stale garbage above any new base
+        scratch.table.fill(u32::MAX - 50);
+        let mut out = Vec::new();
+        compress_with(&data, &mut out, &mut scratch);
+        assert_eq!(out, expect);
+        assert_eq!(scratch.base, 4096 + 1);
+        // And the epoch after the reset still matches.
+        compress_with(&data, &mut out, &mut scratch);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_tables() {
+        let pool = ScratchPool::new();
+        assert_eq!(pool.misses(), 0);
+        let a = pool.take();
+        assert_eq!(pool.misses(), 1);
+        pool.put(a);
+        assert_eq!(pool.pooled(), 1);
+        let _b = pool.take();
+        assert_eq!(pool.misses(), 1, "second take must hit the pool");
+        assert_eq!(pool.pooled(), 0);
     }
 
     #[test]

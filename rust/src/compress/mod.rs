@@ -50,11 +50,31 @@ impl Compression {
     /// `scratch` when provided (reusing its capacity) and returns it,
     /// handing `data` back through `reclaimed` so a pool can recycle it.
     pub fn compress_vec(self, data: Vec<u8>, scratch: Option<Vec<u8>>) -> (Vec<u8>, Option<Vec<u8>>) {
+        self.compress_vec_with(data, scratch, None)
+    }
+
+    /// [`Compression::compress_vec`] drawing the LZ4 hash table from a
+    /// shared [`lz4::ScratchPool`] instead of zeroing a fresh 256 KiB
+    /// per call — the allocation-free steady state of the frame path.
+    /// Identical output bytes with or without the pool.
+    pub fn compress_vec_with(
+        self,
+        data: Vec<u8>,
+        scratch: Option<Vec<u8>>,
+        tables: Option<&lz4::ScratchPool>,
+    ) -> (Vec<u8>, Option<Vec<u8>>) {
         match self {
             Compression::None => (data, scratch),
             Compression::Lz4 => {
                 let mut out = scratch.unwrap_or_default();
-                lz4::compress_into(&data, &mut out);
+                match tables {
+                    Some(pool) => {
+                        let mut table = pool.take();
+                        lz4::compress_with(&data, &mut out, &mut table);
+                        pool.put(table);
+                    }
+                    None => lz4::compress_into(&data, &mut out),
+                }
                 (out, Some(data))
             }
         }

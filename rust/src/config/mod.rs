@@ -8,7 +8,7 @@ use crate::compress::Compression;
 use crate::energy::EnergyModel;
 use crate::error::{DeferError, Result};
 use crate::netem::LinkSpec;
-use crate::serial::{json::Json, Codec, Serialization};
+use crate::serial::{json::Json, Codec, CodecKernel, Serialization};
 
 /// Per-socket codec configuration (architecture / weights / data), exactly
 /// the three rows of the paper's Table I sweep.
@@ -112,6 +112,11 @@ pub struct DeferConfig {
     /// positive multiple of 4 (ZFP block alignment). Default 128 Ki
     /// values = 512 KiB raw, the paper's transfer-chunk granularity.
     pub codec_chunk_elems: usize,
+    /// ZFP kernel implementation (`--codec-kernel scalar|batched`).
+    /// Both produce byte-identical wire streams; `scalar` is the
+    /// reference block-at-a-time coder kept as the A/B fallback,
+    /// `batched` (default) is the lane-parallel SIMD-friendly kernel.
+    pub codec_kernel: CodecKernel,
     /// Software-pipeline decode | compute | encode inside every compute
     /// node (and encode/send + read/decode in the dispatcher). `false`
     /// restores the paper's inline loop (`--inline-codec`) for A/B runs.
@@ -181,6 +186,7 @@ impl Default for DeferConfig {
             device_profile: None,
             codec_threads: 0,
             codec_chunk_elems: crate::serial::chunked::DEFAULT_CHUNK_ELEMS,
+            codec_kernel: CodecKernel::default(),
             codec_pipeline: true,
             codec_gbps: None,
             codec_measure: false,
@@ -285,6 +291,9 @@ impl DeferConfig {
         if let Some(x) = obj.get("codec_chunk_elems") {
             cfg.codec_chunk_elems = x.as_usize()?;
         }
+        if let Some(x) = obj.get("codec_kernel") {
+            cfg.codec_kernel = CodecKernel::parse(x.as_str()?)?;
+        }
         if let Some(x) = obj.get("codec_pipeline") {
             cfg.codec_pipeline = matches!(x, Json::Bool(true));
         }
@@ -388,6 +397,9 @@ impl DeferConfig {
         self.codec_threads = args.get_usize("codec-threads", self.codec_threads)?;
         self.codec_chunk_elems =
             args.get_usize("codec-chunk-elems", self.codec_chunk_elems)?;
+        if let Some(k) = args.get("codec-kernel") {
+            self.codec_kernel = CodecKernel::parse(k)?;
+        }
         if args.has("inline-codec") {
             self.codec_pipeline = false;
         }
@@ -750,6 +762,25 @@ mod tests {
         assert_eq!(cfg.codec_threads, 8);
         assert!(!cfg.codec_pipeline);
         assert_eq!(cfg.codec_gbps, Some(0.0));
+    }
+
+    #[test]
+    fn codec_kernel_surface_round_trip() {
+        let cfg = DeferConfig::from_json_str(r#"{"codec_kernel": "scalar"}"#).unwrap();
+        assert_eq!(cfg.codec_kernel, CodecKernel::Scalar);
+        let cfg = DeferConfig::from_json_str(r#"{"codec_kernel": "Batched"}"#).unwrap();
+        assert_eq!(cfg.codec_kernel, CodecKernel::Batched);
+        assert!(DeferConfig::from_json_str(r#"{"codec_kernel": "avx9000"}"#).is_err());
+        // The batched kernel is the default; scalar is the A/B fallback.
+        assert_eq!(DeferConfig::default().codec_kernel, CodecKernel::Batched);
+        // CLI spelling.
+        let raw: Vec<String> = ["run", "--codec-kernel", "scalar"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&raw, &["tcp"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert_eq!(cfg.codec_kernel, CodecKernel::Scalar);
     }
 
     #[test]

@@ -222,8 +222,9 @@ impl ChainRunner {
         };
         let codec_rt = if self.cfg.codec_threads > 0 {
             CodecRuntime::chunked(self.cfg.codec_chunk_elems, codec_pool)?
+                .with_kernel(self.cfg.codec_kernel)
         } else {
-            CodecRuntime::serial()
+            CodecRuntime::serial().with_kernel(self.cfg.codec_kernel)
         };
         let mut pool = WorkerPool::new();
         for (wc, stats) in workers.into_iter().zip(&node_stats) {

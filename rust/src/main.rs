@@ -94,6 +94,9 @@ RUN OPTIONS:
                            worker threads (0 = legacy single-buffer codec)
   --codec-chunk-elems N    f32 values per codec chunk (default 131072 =
                            512 KiB raw; must be a multiple of 4)
+  --codec-kernel K         ZFP kernel: batched (default, lane-parallel)
+                           or scalar (reference A/B fallback); both emit
+                           byte-identical wire streams
   --inline-codec           disable codec/compute software pipelining (run
                            the paper's decode+compute+encode inline loop)
   --codec-gbps R           planner codec rate in GB/s of raw activation

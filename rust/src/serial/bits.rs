@@ -1,12 +1,22 @@
 //! Bit-level I/O for the ZFP codec: MSB-first writer/reader over a byte
 //! buffer.
+//!
+//! Both directions are word-level (§Perf): the writer accumulates into a
+//! u64 and flushes eight bytes at a time, the reader serves most calls
+//! from a single unaligned big-endian u64 load. The bit *stream* is a
+//! pure function of the `write` call sequence — flush boundaries never
+//! leak into the bytes — so these fast paths are byte-identical to the
+//! per-byte loops they replaced (`tests/codec_kernels.rs` proves it
+//! against a reference bit-at-a-time model).
 
 /// MSB-first bit writer.
 #[derive(Default)]
 pub struct BitWriter {
     buf: Vec<u8>,
-    /// Bits already used in the trailing byte (0..8, 0 = byte boundary).
-    used: u8,
+    /// Pending bits, right-aligned (the low `acc_bits` bits).
+    acc: u64,
+    /// Number of pending bits in `acc` (0..=63; 64 forces a flush).
+    acc_bits: u32,
 }
 
 impl BitWriter {
@@ -21,26 +31,39 @@ impl BitWriter {
     /// counts the pre-existing bytes, so block accounting must be
     /// relative (the ZFP coder's is).
     pub fn over(buf: Vec<u8>) -> Self {
-        BitWriter { buf, used: 0 }
+        BitWriter {
+            buf,
+            acc: 0,
+            acc_bits: 0,
+        }
     }
 
     /// Append the low `n` bits of `v`, most significant first. `n <= 64`.
     #[inline]
     pub fn write(&mut self, v: u64, n: u8) {
         debug_assert!(n <= 64);
-        let mut remaining = n;
-        while remaining > 0 {
-            if self.used == 0 {
-                self.buf.push(0);
-            }
-            let space = 8 - self.used;
-            let take = space.min(remaining);
-            let shift = remaining - take;
-            let bits = ((v >> shift) & ((1u64 << take) - 1)) as u8;
-            let last = self.buf.last_mut().unwrap();
-            *last |= bits << (space - take);
-            self.used = (self.used + take) % 8;
-            remaining -= take;
+        if n == 0 {
+            return;
+        }
+        let n = n as u32;
+        let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+        let total = self.acc_bits + n;
+        if total < 64 {
+            self.acc = (self.acc << n) | v;
+            self.acc_bits = total;
+        } else {
+            // Flush one full big-endian word: the pending bits left-aligned,
+            // then the high `n - spill` bits of `v`.
+            let spill = total - 64;
+            let head = if self.acc_bits == 0 {
+                0
+            } else {
+                self.acc << (64 - self.acc_bits)
+            };
+            let word = head | (v >> spill);
+            self.buf.extend_from_slice(&word.to_be_bytes());
+            self.acc = if spill == 0 { 0 } else { v & ((1u64 << spill) - 1) };
+            self.acc_bits = spill;
         }
     }
 
@@ -51,11 +74,7 @@ impl BitWriter {
 
     /// Total bits written so far.
     pub fn bit_len(&self) -> usize {
-        if self.used == 0 {
-            self.buf.len() * 8
-        } else {
-            (self.buf.len() - 1) * 8 + self.used as usize
-        }
+        self.buf.len() * 8 + self.acc_bits as usize
     }
 
     /// Zero-pad to exactly `target` bits (target >= bit_len).
@@ -73,7 +92,13 @@ impl BitWriter {
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
-        self.buf
+        let mut buf = self.buf;
+        if self.acc_bits > 0 {
+            // Left-align the pending bits and emit only the bytes they span.
+            let word = (self.acc << (64 - self.acc_bits)).to_be_bytes();
+            buf.extend_from_slice(&word[..(self.acc_bits as usize).div_ceil(8)]);
+        }
+        buf
     }
 }
 
@@ -90,12 +115,32 @@ impl<'a> BitReader<'a> {
 
     /// Read `n` bits MSB-first; out-of-range reads return zeros (the ZFP
     /// decoder relies on implicit zero-fill past the fixed-rate budget).
-    /// Byte-batched (§Perf: the per-bit loop was the decode bottleneck).
+    /// One unaligned u64 load serves the whole call whenever the request
+    /// fits the word at the current byte (§Perf: the per-byte loop was
+    /// the decode bottleneck).
     #[inline]
     pub fn read(&mut self, n: u8) -> u64 {
         debug_assert!(n <= 64);
+        if n == 0 {
+            return 0;
+        }
+        let n = n as usize;
+        let byte = self.pos / 8;
+        let offset = self.pos % 8;
+        if offset + n <= 64 && byte + 8 <= self.buf.len() {
+            let word = u64::from_be_bytes(self.buf[byte..byte + 8].try_into().unwrap());
+            self.pos += n;
+            return (word << offset) >> (64 - n);
+        }
+        self.read_slow(n)
+    }
+
+    /// Byte-at-a-time fallback: near the end of the buffer (zero-fill
+    /// semantics) or a 64-bit read straddling nine bytes.
+    #[cold]
+    fn read_slow(&mut self, n: usize) -> u64 {
         let mut out = 0u64;
-        let mut remaining = n as usize;
+        let mut remaining = n;
         while remaining > 0 {
             let byte = self.buf.get(self.pos / 8).copied().unwrap_or(0);
             let offset = self.pos % 8; // bits already consumed in this byte
@@ -163,6 +208,27 @@ mod tests {
     }
 
     #[test]
+    fn full_width_writes_round_trip() {
+        // 64-bit writes at every accumulator fill level (the flush path
+        // with spill 0..=63), then reads straddling word boundaries.
+        for lead in 0u8..=63 {
+            let mut w = BitWriter::new();
+            if lead > 0 {
+                w.write(0x5555_5555_5555_5555 & ((1 << lead) - 1), lead);
+            }
+            w.write(0xDEAD_BEEF_CAFE_F00D, 64);
+            w.write(0xABCD, 16);
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            if lead > 0 {
+                r.read(lead);
+            }
+            assert_eq!(r.read(64), 0xDEAD_BEEF_CAFE_F00D, "lead {lead}");
+            assert_eq!(r.read(16), 0xABCD, "lead {lead}");
+        }
+    }
+
+    #[test]
     fn pad_and_seek() {
         let mut w = BitWriter::new();
         w.write(0b101, 3);
@@ -182,5 +248,17 @@ mod tests {
         let mut r = BitReader::new(&bytes);
         assert_eq!(r.read(8), 0xFF);
         assert_eq!(r.read(16), 0);
+    }
+
+    #[test]
+    fn over_preserves_prefix_bytes() {
+        let mut w = BitWriter::over(vec![0xAA, 0xBB]);
+        assert_eq!(w.bit_len(), 16);
+        w.write(0x1F, 5);
+        let bytes = w.into_bytes();
+        assert_eq!(&bytes[..2], &[0xAA, 0xBB]);
+        let mut r = BitReader::new(&bytes);
+        r.seek(16);
+        assert_eq!(r.read(5), 0x1F);
     }
 }

@@ -42,8 +42,9 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::compress::lz4;
 use crate::error::{DeferError, Result};
-use crate::serial::Codec;
+use crate::serial::{Codec, CodecKernel};
 use crate::threadpool::CodecPool;
 use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
@@ -75,6 +76,12 @@ pub struct CodecRuntime {
     pool: Option<Arc<CodecPool>>,
     /// Scratch buffers for serialize/compress outputs.
     buffers: Option<Arc<BufPool>>,
+    /// ZFP kernel implementation (`--codec-kernel`); byte-invisible A/B.
+    kernel: CodecKernel,
+    /// Warm LZ4 hash tables shared by every thread using this runtime
+    /// (coordinator + codec workers), so the steady-state frame path
+    /// never zeroes a fresh 256 KiB table.
+    lz4: Arc<lz4::ScratchPool>,
 }
 
 impl CodecRuntime {
@@ -95,13 +102,20 @@ impl CodecRuntime {
         Ok(CodecRuntime {
             chunk_elems,
             pool,
-            buffers: None,
+            ..CodecRuntime::default()
         })
     }
 
     /// Attach a scratch-buffer pool (typically one per worker/connection).
     pub fn with_buffers(mut self, buffers: Arc<BufPool>) -> Self {
         self.buffers = Some(buffers);
+        self
+    }
+
+    /// Select the ZFP kernel implementation (default [`CodecKernel::Batched`];
+    /// the bytes are identical either way, only throughput changes).
+    pub fn with_kernel(mut self, kernel: CodecKernel) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -120,6 +134,17 @@ impl CodecRuntime {
 
     pub fn buffers(&self) -> Option<&BufPool> {
         self.buffers.as_deref()
+    }
+
+    pub fn kernel(&self) -> CodecKernel {
+        self.kernel
+    }
+
+    /// The shared LZ4 hash-table pool (always present; cloning the
+    /// runtime shares it, so chunk workers and coordinator threads all
+    /// draw from one warm set).
+    pub fn lz4_scratch(&self) -> &lz4::ScratchPool {
+        &self.lz4
     }
 }
 
@@ -178,7 +203,7 @@ pub fn encode_frame(
         // itself — a serial CRC sweep afterwards would floor large-frame
         // encode throughput at single-thread CRC speed.
         let encoded: Vec<(Vec<u8>, usize, u32)> = par_map(rt.pool(), chunks, |_, chunk| {
-            let (wire, mid) = codec.encode_f32s_pooled(chunk, rt.buffers(), None);
+            let (wire, mid) = codec.encode_f32s_rt(chunk, rt, None);
             let crc = crate::wire::crc32::crc32(&wire);
             (wire, mid, crc)
         });
@@ -300,7 +325,7 @@ pub fn decode_frame(
                          (crc {actual:#010x} != {expect:#010x})"
                     )));
                 }
-                codec.decode_f32s(bytes, mid, chunk_count, None)
+                codec.decode_f32s_rt(bytes, mid, chunk_count, rt, None)
             });
         let mut out = Vec::with_capacity(count);
         for part in decoded {
@@ -349,6 +374,46 @@ mod tests {
             assert_eq!(seq, par, "{}", codec.label());
             assert_eq!(seq_mid, par_mid);
         }
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_container_bytes() {
+        let data = Rng::new(97).normal_vec(5000);
+        for codec in Codec::paper_sweep() {
+            let (batched, m1) = encode_frame(&codec, &data, &rt(1024, 2), None);
+            let scalar_rt = rt(1024, 2).with_kernel(CodecKernel::Scalar);
+            let (scalar, m2) = encode_frame(&codec, &data, &scalar_rt, None);
+            assert_eq!(batched, scalar, "{}", codec.label());
+            assert_eq!(m1, m2);
+            let a = decode_frame(&codec, &batched, m1, 5000, &rt(1024, 0), None).unwrap();
+            let b = decode_frame(&codec, &batched, m1, 5000, &scalar_rt, None).unwrap();
+            let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "{}", codec.label());
+        }
+    }
+
+    #[test]
+    fn lz4_table_pool_warms_up() {
+        // One runtime shared across frames: after the first frame the
+        // scratch pool must serve every later compression without a
+        // fresh table allocation.
+        let data = Rng::new(98).normal_vec(4096);
+        let codec = Codec::default(); // ZFP + LZ4
+        let rt = CodecRuntime::chunked(1024, None).unwrap();
+        let (first, mid) = encode_frame(&codec, &data, &rt, None);
+        let after_first = rt.lz4_scratch().misses();
+        assert!(after_first >= 1);
+        for _ in 0..5 {
+            let (again, m) = encode_frame(&codec, &data, &rt, None);
+            assert_eq!(again, first);
+            assert_eq!(m, mid);
+        }
+        assert_eq!(
+            rt.lz4_scratch().misses(),
+            after_first,
+            "steady state must reuse pooled lz4 tables"
+        );
     }
 
     #[test]

@@ -12,10 +12,42 @@ pub mod zfp;
 
 pub use chunked::CodecRuntime;
 
-use crate::compress::Compression;
+use crate::compress::{lz4, Compression};
 use crate::error::{DeferError, Result};
 use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
+
+/// Which ZFP kernel implementation codes blocks (`--codec-kernel`).
+/// Both produce byte-identical streams — the flag exists for A/B speed
+/// comparison and as a fallback; `Batched` is the default everywhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum CodecKernel {
+    /// Reference block-at-a-time coder.
+    Scalar,
+    /// Lane-batched SIMD-friendly coder (groups of 16 blocks in
+    /// structure-of-arrays form, transposed bit-plane emission).
+    #[default]
+    Batched,
+}
+
+impl CodecKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecKernel::Scalar => "scalar",
+            CodecKernel::Batched => "batched",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(CodecKernel::Scalar),
+            "batched" => Ok(CodecKernel::Batched),
+            other => Err(DeferError::Config(format!(
+                "unknown codec kernel {other:?} (want scalar|batched)"
+            ))),
+        }
+    }
+}
 
 /// How f32 payloads are serialized before (optional) compression.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -161,11 +193,11 @@ impl Codec {
     }
 
     /// Serialize `data` into `out` (cleared first), no compression.
-    fn serialize_into(&self, data: &[f32], out: &mut Vec<u8>) {
+    fn serialize_into(&self, data: &[f32], out: &mut Vec<u8>, kernel: CodecKernel) {
         match self.serialization {
             Serialization::Json => json::encode_f32s_into(data, out),
             Serialization::Zfp(rate) => {
-                zfp::encode_into(data, rate, out).expect("validated rate")
+                zfp::encode_into_kernel(data, rate, out, kernel).expect("validated rate")
             }
             Serialization::Binary => {
                 out.clear();
@@ -198,9 +230,32 @@ impl Codec {
         bufs: Option<&BufPool>,
         overhead: Option<&SharedTimer>,
     ) -> (Vec<u8>, usize) {
+        self.encode_inner(data, bufs, CodecKernel::default(), None, overhead)
+    }
+
+    /// [`Codec::encode_f32s_pooled`] under a [`CodecRuntime`]: draws the
+    /// kernel selection, scratch buffers and the LZ4 table pool from the
+    /// runtime the coordinator threads share. Byte-identical output.
+    pub fn encode_f32s_rt(
+        &self,
+        data: &[f32],
+        rt: &CodecRuntime,
+        overhead: Option<&SharedTimer>,
+    ) -> (Vec<u8>, usize) {
+        self.encode_inner(data, rt.buffers(), rt.kernel(), Some(rt.lz4_scratch()), overhead)
+    }
+
+    fn encode_inner(
+        &self,
+        data: &[f32],
+        bufs: Option<&BufPool>,
+        kernel: CodecKernel,
+        tables: Option<&lz4::ScratchPool>,
+        overhead: Option<&SharedTimer>,
+    ) -> (Vec<u8>, usize) {
         let work = || {
             let mut serialized = bufs.map(|p| p.take()).unwrap_or_default();
-            self.serialize_into(data, &mut serialized);
+            self.serialize_into(data, &mut serialized, kernel);
             let mid = serialized.len();
             // Only Lz4 needs a second buffer; the None arm passes the
             // serialized buffer through untouched (zero-copy).
@@ -208,7 +263,8 @@ impl Codec {
                 Compression::None => None,
                 Compression::Lz4 => bufs.map(|p| p.take()),
             };
-            let (payload, reclaimed) = self.compression.compress_vec(serialized, scratch);
+            let (payload, reclaimed) =
+                self.compression.compress_vec_with(serialized, scratch, tables);
             if let (Some(p), Some(r)) = (bufs, reclaimed) {
                 p.put(r);
             }
@@ -231,11 +287,36 @@ impl Codec {
         count: usize,
         overhead: Option<&SharedTimer>,
     ) -> Result<Vec<f32>> {
+        self.decode_inner(wire, serialized_len, count, CodecKernel::default(), overhead)
+    }
+
+    /// [`Codec::decode_f32s`] under a [`CodecRuntime`] (kernel selection
+    /// travels with the runtime, not the wire — both kernels accept any
+    /// stream). Identical output.
+    pub fn decode_f32s_rt(
+        &self,
+        wire: &[u8],
+        serialized_len: usize,
+        count: usize,
+        rt: &CodecRuntime,
+        overhead: Option<&SharedTimer>,
+    ) -> Result<Vec<f32>> {
+        self.decode_inner(wire, serialized_len, count, rt.kernel(), overhead)
+    }
+
+    fn decode_inner(
+        &self,
+        wire: &[u8],
+        serialized_len: usize,
+        count: usize,
+        kernel: CodecKernel,
+        overhead: Option<&SharedTimer>,
+    ) -> Result<Vec<f32>> {
         let work = || -> Result<Vec<f32>> {
             let serialized = self.compression.decompress_cow(wire, serialized_len)?;
             let out = match self.serialization {
                 Serialization::Json => json::decode_f32s(&serialized)?,
-                Serialization::Zfp(_) => zfp::decode(&serialized)?,
+                Serialization::Zfp(_) => zfp::decode_kernel(&serialized, kernel)?,
                 Serialization::Binary => f32s_from_le(&serialized)?,
             };
             if out.len() != count {
@@ -265,7 +346,7 @@ impl Codec {
         if rt.is_chunked() {
             chunked::encode_frame(self, data, rt, overhead)
         } else {
-            self.encode_f32s_pooled(data, rt.buffers(), overhead)
+            self.encode_f32s_rt(data, rt, overhead)
         }
     }
 
@@ -282,7 +363,7 @@ impl Codec {
         if rt.is_chunked() {
             chunked::decode_frame(self, wire, serialized_len, count, rt, overhead)
         } else {
-            self.decode_f32s(wire, serialized_len, count, overhead)
+            self.decode_f32s_rt(wire, serialized_len, count, rt, overhead)
         }
     }
 }
@@ -323,6 +404,37 @@ mod tests {
                 for (a, b) in data.iter().zip(&dec) {
                     assert!((a - b).abs() < 2e-3, "{}: {a} vs {b}", codec.label());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_kernel_names() {
+        assert_eq!(CodecKernel::parse("scalar").unwrap(), CodecKernel::Scalar);
+        assert_eq!(CodecKernel::parse("Batched").unwrap(), CodecKernel::Batched);
+        assert_eq!(CodecKernel::default(), CodecKernel::Batched);
+        assert!(CodecKernel::parse("avx512").is_err());
+        assert_eq!(CodecKernel::Scalar.name(), "scalar");
+        assert_eq!(CodecKernel::Batched.name(), "batched");
+    }
+
+    #[test]
+    fn runtime_kernel_selection_is_byte_invisible() {
+        // Both kernels and both lz4 scratch modes must produce the
+        // pooled/default bytes exactly.
+        let data = payload(3000, 46);
+        for codec in Codec::paper_sweep() {
+            let (base, mid) = codec.encode_f32s(&data, None);
+            for kernel in [CodecKernel::Scalar, CodecKernel::Batched] {
+                let rt = CodecRuntime::serial().with_kernel(kernel);
+                let (wire, m) = codec.encode_f32s_rt(&data, &rt, None);
+                assert_eq!(wire, base, "{} {}", codec.label(), kernel.name());
+                assert_eq!(m, mid);
+                let dec = codec.decode_f32s_rt(&wire, m, data.len(), &rt, None).unwrap();
+                let plain = codec.decode_f32s(&base, mid, data.len(), None).unwrap();
+                let dec_bits: Vec<u32> = dec.iter().map(|x| x.to_bits()).collect();
+                let plain_bits: Vec<u32> = plain.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(dec_bits, plain_bits, "{}", codec.label());
             }
         }
     }

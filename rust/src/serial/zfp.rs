@@ -23,9 +23,24 @@
 //! payload of raw f32. Every block costs exactly `4 * rate` bits, so
 //! payload size is `ceil(n/4) * rate * 4 / 8` bytes + a 12-byte header —
 //! the deterministic-size property the dispatcher relies on.
+//!
+//! # Kernels
+//!
+//! Two implementations produce the byte stream: the reference scalar
+//! block-at-a-time coder ([`CodecKernel::Scalar`]) and a lane-batched
+//! kernel ([`CodecKernel::Batched`], the default) that transforms
+//! [`GROUP_BLOCKS`] blocks at once in structure-of-arrays form —
+//! sanitize (SSE2 on x86_64), quantize, lift and the negabinary map as
+//! straight-line loops the compiler autovectorizes, with bit-plane
+//! emission reading nibbles out of a bit-transposed u128 instead of 32
+//! shift-and-test iterations per block. The two are **byte-identical**
+//! by construction (shared exponent/scale helpers, verbatim quantize
+//! expression, same bit sequence); `tests/codec_kernels.rs` proves it
+//! across adversarial exponent edges.
 
 use crate::error::{DeferError, Result};
 use crate::serial::bits::{BitReader, BitWriter};
+use crate::serial::CodecKernel;
 
 /// Fixed-point fraction bits under the block exponent. Two lifting levels
 /// grow magnitudes by <= 2 bits, so 28 + 2 = 30 bits stays inside i32.
@@ -33,6 +48,10 @@ const INT_PREC: i32 = 28;
 /// Exponent bias for the 8-bit stored exponent (f32 exponent range).
 const EXP_BIAS: i32 = 127;
 const MAGIC: u32 = 0x5A46_5031; // "ZFP1"
+
+/// Blocks transformed together by the batched kernel (64 f32 lanes).
+const GROUP_BLOCKS: usize = 16;
+const GROUP_VALS: usize = GROUP_BLOCKS * 4;
 
 /// Encode parameters: bits per value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -91,6 +110,82 @@ fn uint2int(u: u32) -> i32 {
     (u ^ 0xAAAA_AAAA).wrapping_sub(0xAAAA_AAAA) as i32
 }
 
+/// Exact frexp-style binary exponent of a positive finite f32: the unique
+/// `e` with `x` in `[2^(e-1), 2^e)`, read straight from the bit pattern.
+/// Exponent extraction used to go through `log2().floor() + 1`, whose
+/// libm rounding pushes values just below a power of two into the wrong
+/// bucket; both kernels now share this exact form (the stored exponent
+/// still travels in the stream, so decode never depends on the choice).
+#[inline]
+fn block_exponent(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let biased = (bits >> 23) & 0xFF;
+    if biased != 0 {
+        biased as i32 - EXP_BIAS + 1
+    } else {
+        // Subnormal: x = mantissa * 2^-149, so the top set mantissa bit
+        // k puts x in [2^(k-149), 2^(k-148)).
+        (31 - (bits & 0x007F_FFFF).leading_zeros() as i32) - 148
+    }
+}
+
+/// 2^n as f32, exact — bit-assembled instead of libm `exp2f` so encode
+/// and decode (and both kernels) scale with literally the same factor.
+/// Saturates to `inf` above the f32 range and flushes to 0 below the
+/// smallest subnormal, matching correctly-rounded `exp2f` on integers.
+#[inline]
+fn exp2i(n: i32) -> f32 {
+    if n >= 128 {
+        f32::INFINITY
+    } else if n >= -126 {
+        f32::from_bits(((n + EXP_BIAS) as u32) << 23)
+    } else if n >= -149 {
+        f32::from_bits(1u32 << (n + 149))
+    } else {
+        0.0
+    }
+}
+
+/// Copy `src` into `dst` replacing non-finite lanes with zero; bit-exact
+/// passthrough for every finite input (-0.0 and subnormals included).
+fn sanitize_into(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    sanitize_sse2(src, dst);
+    #[cfg(not(target_arch = "x86_64"))]
+    for (d, x) in dst.iter_mut().zip(src.iter()) {
+        *d = if x.is_finite() { *x } else { 0.0 };
+    }
+}
+
+/// SSE2 sanitize (baseline on x86_64, no runtime dispatch needed):
+/// `(v & 0x7FFFFFFF) < inf` selects exactly the finite lanes — NaN and
+/// ±inf compare false, subnormals compare true (Rust never enables
+/// DAZ/FTZ) — and the mask either passes a lane through bit-exactly or
+/// zeroes it, so this equals the portable `is_finite` branch.
+#[cfg(target_arch = "x86_64")]
+fn sanitize_sse2(src: &[f32], dst: &mut [f32]) {
+    use core::arch::x86_64::*;
+    let n = src.len();
+    let mut i = 0;
+    // SAFETY: SSE2 is part of the x86_64 baseline; every load/store
+    // stays inside the `i + 4 <= n` bound, which holds for both slices.
+    unsafe {
+        let abs_mask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+        let inf = _mm_castsi128_ps(_mm_set1_epi32(0x7F80_0000));
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(src.as_ptr().add(i));
+            let finite = _mm_cmplt_ps(_mm_and_ps(v, abs_mask), inf);
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_and_ps(v, finite));
+            i += 4;
+        }
+    }
+    for (d, x) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d = if x.is_finite() { *x } else { 0.0 };
+    }
+}
+
 fn encode_block(w: &mut BitWriter, block: &[f32; 4], rate: ZfpRate) {
     let start = w.bit_len();
     let budget = rate.block_bits();
@@ -98,9 +193,7 @@ fn encode_block(w: &mut BitWriter, block: &[f32; 4], rate: ZfpRate) {
     // Sanitize first (non-finite values encode as zero), THEN take the
     // block exponent from the max finite magnitude.
     let mut vals = [0.0f32; 4];
-    for (i, x) in block.iter().enumerate() {
-        vals[i] = if x.is_finite() { *x } else { 0.0 };
-    }
+    sanitize_into(block, &mut vals);
     let max_abs = vals.iter().fold(0.0f32, |m, x| m.max(x.abs()));
     if max_abs == 0.0 {
         // All-zero block: single 0 flag.
@@ -109,17 +202,15 @@ fn encode_block(w: &mut BitWriter, block: &[f32; 4], rate: ZfpRate) {
         return;
     }
     w.write_bit(true);
-    // frexp-style exponent: max_abs = m * 2^e, m in [0.5, 1).
-    let e = max_abs.log2().floor() as i32 + 1;
+    let e = block_exponent(max_abs);
     let e_biased = (e + EXP_BIAS).clamp(0, 255) as u64;
     w.write(e_biased, 8);
 
     // Fixed-point conversion under the shared exponent.
-    let scale = (INT_PREC - e) as f32;
-    let factor = scale.exp2();
+    let factor = exp2i(INT_PREC - e);
     let mut v = [0i32; 4];
-    for (i, val) in vals.iter().enumerate() {
-        v[i] = (val * factor).round().clamp(-(1i64 << 30) as f32, ((1i64 << 30) - 1) as f32)
+    for (q, val) in v.iter_mut().zip(&vals) {
+        *q = (val * factor).round().clamp(-(1i64 << 30) as f32, ((1i64 << 30) - 1) as f32)
             as i32;
     }
     fwd_lift(&mut v);
@@ -182,19 +273,217 @@ fn decode_block(r: &mut BitReader, rate: ZfpRate) -> [f32; 4] {
                 break;
             }
             let bits = r.read(4) as u32;
-            for i in 0..4 {
-                u[i] |= ((bits >> (3 - i)) & 1) << plane;
+            for (i, slot) in u.iter_mut().enumerate() {
+                *slot |= ((bits >> (3 - i)) & 1) << plane;
             }
         }
     }
     let mut v = [uint2int(u[0]), uint2int(u[1]), uint2int(u[2]), uint2int(u[3])];
     inv_lift(&mut v);
-    let factor = ((e - INT_PREC) as f32).exp2();
-    for i in 0..4 {
-        out[i] = v[i] as f32 * factor;
+    let factor = exp2i(e - INT_PREC);
+    for (o, x) in out.iter_mut().zip(&v) {
+        *o = *x as f32 * factor;
     }
     r.seek(start + budget);
     out
+}
+
+/// Spread each bit of a 32-bit lane to every 4th bit of a u128
+/// (bit `p` -> bit `4p`): two interleave-by-two steps of the standard
+/// Morton spread.
+#[inline]
+fn spread4(x: u32) -> u128 {
+    let mut x = x as u64;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    let mut y = x as u128;
+    y = (y | (y << 32)) & 0x0000_0000_FFFF_FFFF_0000_0000_FFFF_FFFF;
+    y = (y | (y << 16)) & 0x0000_FFFF_0000_FFFF_0000_FFFF_0000_FFFF;
+    y = (y | (y << 8)) & 0x00FF_00FF_00FF_00FF_00FF_00FF_00FF_00FF;
+    y = (y | (y << 4)) & 0x0F0F_0F0F_0F0F_0F0F_0F0F_0F0F_0F0F_0F0F;
+    y = (y | (y << 2)) & 0x3333_3333_3333_3333_3333_3333_3333_3333;
+    y = (y | (y << 1)) & 0x5555_5555_5555_5555_5555_5555_5555_5555;
+    y
+}
+
+/// Emit one nonzero block's bit planes from a bit-transposed u128: bit
+/// `4p + (3 - lane)` of `planes` is bit `p` of lane `lane`, so plane
+/// `p`'s group-test nibble is `(planes >> 4p) & 0xF` — the scalar
+/// coder's shift-and-or expression, computed once per block. The leading
+/// all-zero planes (1 flag bit each) go out as a single masked write.
+fn emit_planes(w: &mut BitWriter, u: &[u32], budget: usize, start: usize) {
+    let or = u[0] | u[1] | u[2] | u[3];
+    let planes =
+        spread4(u[3]) | (spread4(u[2]) << 1) | (spread4(u[1]) << 2) | (spread4(u[0]) << 3);
+    let mut used = 9usize; // flag + exponent already written
+    // A nonzero block always keeps or != 0 (the quantized max is at
+    // least 2^27), but clamp to the budget defensively.
+    let zeros = (or.leading_zeros() as usize).min(budget - used);
+    if zeros > 0 {
+        w.write(0, zeros as u8);
+        used += zeros;
+    }
+    let top = 32 - or.leading_zeros() as usize;
+    let mut acc: u64 = 0;
+    let mut acc_bits: u8 = 0;
+    for plane in (0..top).rev() {
+        let bits = ((planes >> (4 * plane)) & 0xF) as u64;
+        let cost: usize = if bits == 0 { 1 } else { 5 };
+        if used + cost > budget {
+            break;
+        }
+        if bits == 0 {
+            acc <<= 1;
+            acc_bits += 1;
+        } else {
+            acc = (acc << 5) | 0x10 | bits;
+            acc_bits += 5;
+        }
+        used += cost;
+        if acc_bits > 59 {
+            w.write(acc, acc_bits);
+            acc = 0;
+            acc_bits = 0;
+        }
+    }
+    if acc_bits > 0 {
+        w.write(acc, acc_bits);
+    }
+    w.pad_to(start + budget);
+}
+
+/// Lane-batched encoder: transform up to [`GROUP_BLOCKS`] blocks in
+/// structure-of-arrays form (straight-line lane loops), then emit each
+/// block's planes from the transposed nibble word. Byte-identical to
+/// [`encode_block`]: shared `block_exponent`/`exp2i`, the quantize
+/// expression verbatim (kept portable — `_mm_cvtps_epi32` rounds ties
+/// to even where `f32::round` rounds away from zero), same bit order.
+fn encode_group(w: &mut BitWriter, group: &[f32], rate: ZfpRate) {
+    let nb = group.len().div_ceil(4);
+    let budget = rate.block_bits();
+
+    // Tail lanes beyond the group stay zero, matching the scalar coder's
+    // zero-padded final block.
+    let mut vals = [0.0f32; GROUP_VALS];
+    sanitize_into(group, &mut vals[..group.len()]);
+
+    // Per-block max magnitude.
+    let mut max_abs = [0.0f32; GROUP_BLOCKS];
+    for (b, m) in max_abs.iter_mut().enumerate().take(nb) {
+        *m = vals[b * 4..b * 4 + 4]
+            .iter()
+            .fold(0.0f32, |acc, x| acc.max(x.abs()));
+    }
+
+    // Exponent, fixed-point quantize, lift, negabinary map — lane loops.
+    let mut e = [0i32; GROUP_BLOCKS];
+    let mut u = [0u32; GROUP_VALS];
+    for b in 0..nb {
+        if max_abs[b] == 0.0 {
+            continue;
+        }
+        e[b] = block_exponent(max_abs[b]);
+        let factor = exp2i(INT_PREC - e[b]);
+        let mut v = [0i32; 4];
+        for (q, val) in v.iter_mut().zip(&vals[b * 4..b * 4 + 4]) {
+            *q = (val * factor)
+                .round()
+                .clamp(-(1i64 << 30) as f32, ((1i64 << 30) - 1) as f32) as i32;
+        }
+        fwd_lift(&mut v);
+        for (slot, x) in u[b * 4..b * 4 + 4].iter_mut().zip(v) {
+            *slot = int2uint(x);
+        }
+    }
+
+    // Wire order is per block: emit headers + planes serially.
+    for b in 0..nb {
+        let start = w.bit_len();
+        if max_abs[b] == 0.0 {
+            w.write_bit(false);
+            w.pad_to(start + budget);
+            continue;
+        }
+        let e_biased = (e[b] + EXP_BIAS).clamp(0, 255) as u64;
+        // Flag bit + 8 exponent bits in one call (same 9-bit prefix).
+        w.write(0x100 | e_biased, 9);
+        emit_planes(w, &u[b * 4..b * 4 + 4], budget, start);
+    }
+}
+
+/// Lane-batched decoder mirror: parse each block's header and planes out
+/// of a left-aligned u128 window (two bulk word reads instead of up to
+/// 64 flag/nibble reads), scatter into lanes, then run uint2int /
+/// inv_lift / dequantize as straight-line loops over the group.
+fn decode_group(r: &mut BitReader, nb: usize, rate: ZfpRate, out: &mut Vec<f32>) {
+    let budget = rate.block_bits();
+    let mut u = [0u32; GROUP_VALS];
+    let mut e = [0i32; GROUP_BLOCKS];
+    let mut coded = [false; GROUP_BLOCKS];
+    for b in 0..nb {
+        let start = r.bit_pos();
+        if !r.read_bit() {
+            r.seek(start + budget);
+            continue;
+        }
+        coded[b] = true;
+        e[b] = r.read(8) as i32 - EXP_BIAS;
+        // Pull the remaining block bits (<= 119) into the window; the
+        // reader zero-fills past the buffer end exactly like the
+        // incremental reads would.
+        let rem = budget - 9;
+        let n1 = rem.min(64);
+        let mut win = (r.read(n1 as u8) as u128) << (128 - n1);
+        if rem > 64 {
+            let n2 = rem - 64;
+            win |= (r.read(n2 as u8) as u128) << (64 - n2);
+        }
+        let lanes = &mut u[b * 4..b * 4 + 4];
+        let mut used = 9usize;
+        for plane in (0..32).rev() {
+            if used + 1 > budget {
+                break;
+            }
+            let present = (win >> 127) != 0;
+            win <<= 1;
+            used += 1;
+            if present {
+                if used + 4 > budget {
+                    break;
+                }
+                let bits = (win >> 124) as u32;
+                win <<= 4;
+                used += 4;
+                lanes[0] |= ((bits >> 3) & 1) << plane;
+                lanes[1] |= ((bits >> 2) & 1) << plane;
+                lanes[2] |= ((bits >> 1) & 1) << plane;
+                lanes[3] |= (bits & 1) << plane;
+            }
+        }
+        r.seek(start + budget);
+    }
+    for b in 0..nb {
+        if !coded[b] {
+            out.extend_from_slice(&[0.0; 4]);
+            continue;
+        }
+        let mut v = [0i32; 4];
+        for (slot, x) in v.iter_mut().zip(&u[b * 4..b * 4 + 4]) {
+            *slot = uint2int(*x);
+        }
+        inv_lift(&mut v);
+        let factor = exp2i(e[b] - INT_PREC);
+        let lanes = [
+            v[0] as f32 * factor,
+            v[1] as f32 * factor,
+            v[2] as f32 * factor,
+            v[3] as f32 * factor,
+        ];
+        out.extend_from_slice(&lanes);
+    }
 }
 
 /// Encode an f32 slice at the given fixed rate.
@@ -210,6 +499,17 @@ pub fn encode(data: &[f32], rate: ZfpRate) -> Result<Vec<u8>> {
 /// variant for the per-frame hot path. Output bytes are identical to
 /// [`encode`].
 pub fn encode_into(data: &[f32], rate: ZfpRate, out: &mut Vec<u8>) -> Result<()> {
+    encode_into_kernel(data, rate, out, CodecKernel::default())
+}
+
+/// [`encode_into`] with an explicit kernel selection (`--codec-kernel`);
+/// both kernels produce the same bytes, the choice only changes speed.
+pub fn encode_into_kernel(
+    data: &[f32],
+    rate: ZfpRate,
+    out: &mut Vec<u8>,
+    kernel: CodecKernel,
+) -> Result<()> {
     let rate = rate.validate()?;
     let n = data.len();
     if n as u64 > u32::MAX as u64 {
@@ -222,14 +522,23 @@ pub fn encode_into(data: &[f32], rate: ZfpRate, out: &mut Vec<u8>) -> Result<()>
     out.push(rate.0);
     out.extend_from_slice(&[0u8; 3]);
     // Emit block bits straight after the header in the (reused) output
-    // buffer — no separate body allocation, no copy. Block accounting in
-    // encode_block is relative to the writer's running bit_len, so the
-    // 96 header bits underneath do not disturb the fixed-rate budgets.
+    // buffer — no separate body allocation, no copy. Block accounting is
+    // relative to the writer's running bit_len, so the 96 header bits
+    // underneath do not disturb the fixed-rate budgets.
     let mut w = BitWriter::over(std::mem::take(out));
-    for chunk in data.chunks(4) {
-        let mut block = [0.0f32; 4];
-        block[..chunk.len()].copy_from_slice(chunk);
-        encode_block(&mut w, &block, rate);
+    match kernel {
+        CodecKernel::Scalar => {
+            for chunk in data.chunks(4) {
+                let mut block = [0.0f32; 4];
+                block[..chunk.len()].copy_from_slice(chunk);
+                encode_block(&mut w, &block, rate);
+            }
+        }
+        CodecKernel::Batched => {
+            for group in data.chunks(GROUP_VALS) {
+                encode_group(&mut w, group, rate);
+            }
+        }
     }
     *out = w.into_bytes();
     Ok(())
@@ -237,6 +546,11 @@ pub fn encode_into(data: &[f32], rate: ZfpRate, out: &mut Vec<u8>) -> Result<()>
 
 /// Decode a buffer produced by [`encode`].
 pub fn decode(bytes: &[u8]) -> Result<Vec<f32>> {
+    decode_kernel(bytes, CodecKernel::default())
+}
+
+/// [`decode`] with an explicit kernel selection; identical output.
+pub fn decode_kernel(bytes: &[u8], kernel: CodecKernel) -> Result<Vec<f32>> {
     if bytes.len() < 12 {
         return Err(DeferError::Codec("zfp: truncated header".into()));
     }
@@ -256,8 +570,20 @@ pub fn decode(bytes: &[u8]) -> Result<Vec<f32>> {
     }
     let mut r = BitReader::new(&bytes[12..]);
     let mut out = Vec::with_capacity(n_blocks * 4);
-    for _ in 0..n_blocks {
-        out.extend_from_slice(&decode_block(&mut r, rate));
+    match kernel {
+        CodecKernel::Scalar => {
+            for _ in 0..n_blocks {
+                out.extend_from_slice(&decode_block(&mut r, rate));
+            }
+        }
+        CodecKernel::Batched => {
+            let mut remaining = n_blocks;
+            while remaining > 0 {
+                let nb = remaining.min(GROUP_BLOCKS);
+                decode_group(&mut r, nb, rate, &mut out);
+                remaining -= nb;
+            }
+        }
     }
     out.truncate(n);
     Ok(out)
@@ -276,7 +602,7 @@ pub fn error_bound(max_abs: f32, rate: ZfpRate) -> f32 {
     if max_abs == 0.0 {
         return 0.0;
     }
-    let e = max_abs.log2().floor() as i32 + 1;
+    let e = block_exponent(max_abs);
     // Bits available for planes after flag+exponent; each coded plane costs
     // <= 5 bits, so at least this many significant planes survive:
     let planes = ((rate.block_bits() - 9) / 5) as i32;
@@ -311,6 +637,110 @@ mod tests {
     fn int_uint_bijection() {
         for x in [0i32, 1, -1, 1234567, -7654321, i32::MAX / 2, i32::MIN / 2] {
             assert_eq!(uint2int(int2uint(x)), x);
+        }
+    }
+
+    #[test]
+    fn block_exponent_is_exact_frexp() {
+        // The defining property: x in [2^(e-1), 2^e), checked at every
+        // adversarial edge the old log2-based form got wrong or nearly
+        // wrong: exact powers of two, the largest value below each power,
+        // subnormals, and the extremes of the f32 range.
+        let mut cases: Vec<f32> = vec![
+            f32::MIN_POSITIVE,                  // 2^-126
+            f32::from_bits(1),                  // smallest subnormal, 2^-149
+            f32::from_bits(0x007F_FFFF),        // largest subnormal
+            f32::from_bits(0x0000_0100),        // mid subnormal
+            f32::MAX,
+            1.0,
+            1.5,
+            2.0,
+        ];
+        for k in -140i32..=120 {
+            let p = exp2i(k);
+            cases.push(p);
+            cases.push(f32::from_bits(p.to_bits() - 1)); // just below 2^k
+            cases.push(f32::from_bits(p.to_bits() + 1)); // just above 2^k
+        }
+        let mut rng = Rng::new(37);
+        for _ in 0..1000 {
+            cases.push(rng.normal_f32().abs().max(f32::MIN_POSITIVE));
+        }
+        for x in cases {
+            if x <= 0.0 || !x.is_finite() {
+                continue;
+            }
+            let e = block_exponent(x);
+            assert!(exp2i(e - 1) <= x, "2^{} > {x:e}", e - 1);
+            assert!(x < exp2i(e), "{x:e} >= 2^{e}");
+        }
+    }
+
+    #[test]
+    fn exp2i_matches_libm() {
+        for n in -148i32..=127 {
+            assert_eq!(
+                exp2i(n).to_bits(),
+                (n as f32).exp2().to_bits(),
+                "exp2i({n})"
+            );
+        }
+        assert_eq!(exp2i(128), f32::INFINITY);
+        assert_eq!(exp2i(1000), f32::INFINITY);
+        assert_eq!(exp2i(-149), f32::from_bits(1));
+        assert_eq!(exp2i(-150), 0.0);
+        assert_eq!(exp2i(i32::MIN + 200), 0.0);
+    }
+
+    #[test]
+    fn spread4_transposes_planes() {
+        let mut rng = Rng::new(38);
+        for _ in 0..200 {
+            let u: [u32; 4] = [
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+            ];
+            let planes = spread4(u[3])
+                | (spread4(u[2]) << 1)
+                | (spread4(u[1]) << 2)
+                | (spread4(u[0]) << 3);
+            for plane in 0..32 {
+                let expect = (((u[0] >> plane) & 1) << 3)
+                    | (((u[1] >> plane) & 1) << 2)
+                    | (((u[2] >> plane) & 1) << 1)
+                    | ((u[3] >> plane) & 1);
+                assert_eq!(
+                    ((planes >> (4 * plane)) & 0xF) as u32,
+                    expect,
+                    "plane {plane}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_bitstream_identical_smoke() {
+        // Quick in-module check; the adversarial-edge property suite
+        // lives in tests/codec_kernels.rs.
+        let mut rng = Rng::new(39);
+        for rate in [3u8, 8, 16, 24, 32] {
+            for n in [0usize, 1, 4, 63, 64, 65, 1000] {
+                let data: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let mut scalar = Vec::new();
+                let mut batched = Vec::new();
+                encode_into_kernel(&data, ZfpRate(rate), &mut scalar, CodecKernel::Scalar)
+                    .unwrap();
+                encode_into_kernel(&data, ZfpRate(rate), &mut batched, CodecKernel::Batched)
+                    .unwrap();
+                assert_eq!(scalar, batched, "rate {rate} n {n}");
+                let ds = decode_kernel(&scalar, CodecKernel::Scalar).unwrap();
+                let db = decode_kernel(&scalar, CodecKernel::Batched).unwrap();
+                let sb: Vec<u32> = ds.iter().map(|x| x.to_bits()).collect();
+                let bb: Vec<u32> = db.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, bb, "decode rate {rate} n {n}");
+            }
         }
     }
 

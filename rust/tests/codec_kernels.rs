@@ -1,0 +1,306 @@
+//! Kernel-equivalence property suite (PR 8).
+//!
+//! The batched lane-parallel ZFP kernel must be *byte-identical* to the
+//! scalar reference coder on every input — the wire format is frozen by
+//! the DFCK/plan goldens, so the SIMD-friendly rewrite is only admissible
+//! if no downstream consumer can tell the kernels apart. These tests
+//! hammer that invariant across random shapes/rates and the adversarial
+//! exponent edges where a bit-level exponent extraction could diverge
+//! from the float it replaces, then do the same word-vs-bit check for
+//! the u64-accumulator bit I/O underneath.
+
+use defer::compress::lz4;
+use defer::serial::bits::{BitReader, BitWriter};
+use defer::serial::zfp::{self, ZfpRate};
+use defer::serial::CodecKernel;
+use defer::util::prng::Rng;
+
+const RATES: [u8; 7] = [3, 4, 7, 8, 16, 24, 32];
+
+/// Encode with both kernels, demand identical bytes, then demand that
+/// both kernels decode those bytes to identical bit patterns.
+fn assert_kernels_agree(data: &[f32], rate: u8) {
+    let rate = ZfpRate(rate);
+    let mut scalar = Vec::new();
+    let mut batched = Vec::new();
+    zfp::encode_into_kernel(data, rate, &mut scalar, CodecKernel::Scalar).unwrap();
+    zfp::encode_into_kernel(data, rate, &mut batched, CodecKernel::Batched).unwrap();
+    assert_eq!(
+        scalar, batched,
+        "wire bytes diverged (n={}, rate={})",
+        data.len(),
+        rate.0
+    );
+    let d_scalar = zfp::decode_kernel(&scalar, CodecKernel::Scalar).unwrap();
+    let d_batched = zfp::decode_kernel(&scalar, CodecKernel::Batched).unwrap();
+    let s_bits: Vec<u32> = d_scalar.iter().map(|x| x.to_bits()).collect();
+    let b_bits: Vec<u32> = d_batched.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(
+        s_bits, b_bits,
+        "decoded values diverged (n={}, rate={})",
+        data.len(),
+        rate.0
+    );
+}
+
+#[test]
+fn random_shapes_and_rates_are_bit_identical() {
+    let mut rng = Rng::new(8101);
+    for _ in 0..60 {
+        let n = rng.range(0, 2000);
+        let scale = (rng.f32() * 60.0 - 30.0).exp2();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32() * scale).collect();
+        let rate = RATES[rng.below(RATES.len() as u64) as usize];
+        assert_kernels_agree(&data, rate);
+    }
+}
+
+#[test]
+fn group_boundary_shapes_are_bit_identical() {
+    // GROUP_BLOCKS = 16 blocks of 4 values → the batched kernel's group
+    // is 64 values; probe every alignment around that boundary.
+    let mut rng = Rng::new(8102);
+    for n in [1usize, 3, 4, 5, 63, 64, 65, 127, 128, 129, 1024, 1027] {
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        for rate in RATES {
+            assert_kernels_agree(&data, rate);
+        }
+    }
+}
+
+/// Exponent edges: exact powers of two and the ulp on either side are
+/// exactly where a `log2`-based exponent would misclassify.
+#[test]
+fn power_of_two_edges_are_bit_identical() {
+    let mut edges = Vec::new();
+    for k in -140i32..=120 {
+        let p = (k as f32).exp2();
+        if p == 0.0 || p.is_infinite() {
+            continue;
+        }
+        edges.push(p);
+        edges.push(f32::from_bits(p.to_bits() + 1));
+        if p.to_bits() > 0 {
+            edges.push(f32::from_bits(p.to_bits() - 1));
+        }
+        edges.push(-p);
+    }
+    for rate in RATES {
+        assert_kernels_agree(&edges, rate);
+    }
+}
+
+#[test]
+fn subnormals_zeros_and_specials_are_bit_identical() {
+    let specials = [
+        0.0f32,
+        -0.0,
+        f32::MIN_POSITIVE,                   // smallest normal
+        -f32::MIN_POSITIVE,
+        f32::from_bits(1),                   // smallest subnormal
+        f32::from_bits(0x8000_0001),         // -smallest subnormal
+        f32::from_bits(0x007F_FFFF),         // largest subnormal
+        f32::from_bits(0x0040_0000),         // mid subnormal
+        f32::NAN,
+        -f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MAX,
+        f32::MIN,
+        1.0,
+        -1.0,
+    ];
+    for rate in RATES {
+        assert_kernels_agree(&specials, rate);
+    }
+    // Interleave specials with ordinary values so sanitize and max-abs
+    // see mixed lanes inside one block.
+    let mut rng = Rng::new(8103);
+    for _ in 0..20 {
+        let data: Vec<f32> = (0..97)
+            .map(|i| {
+                if rng.below(4) == 0 {
+                    specials[i % specials.len()]
+                } else {
+                    rng.normal_f32() * 1e4
+                }
+            })
+            .collect();
+        for rate in [3u8, 8, 32] {
+            assert_kernels_agree(&data, rate);
+        }
+    }
+}
+
+/// Values whose quantized magnitude brushes the ±2^30 clamp, plus blocks
+/// whose shared exponent saturates the 8-bit biased-exponent field.
+#[test]
+fn clamp_and_exponent_saturation_are_bit_identical() {
+    let mut rng = Rng::new(8104);
+    for _ in 0..20 {
+        let huge: Vec<f32> = (0..64)
+            .map(|_| {
+                let m = 1.0 + rng.f32();
+                let s = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                // Spread across the top of the exponent range so some
+                // blocks clamp the biased exponent and some quantized
+                // lanes hit the i32 clamp.
+                s * m * ((rng.range(100, 128) as f32).exp2())
+            })
+            .collect();
+        for rate in RATES {
+            assert_kernels_agree(&huge, rate);
+        }
+        let tiny: Vec<f32> = (0..64)
+            .map(|_| rng.normal_f32() * (-(rng.range(120, 149) as f32)).exp2())
+            .collect();
+        for rate in RATES {
+            assert_kernels_agree(&tiny, rate);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit I/O: word-accumulator writer/reader vs a bit-at-a-time reference.
+// ---------------------------------------------------------------------
+
+/// Dead-simple reference model: one bool per bit.
+#[derive(Default)]
+struct RefBits {
+    bits: Vec<bool>,
+}
+
+impl RefBits {
+    fn write(&mut self, v: u64, n: u8) {
+        for i in (0..n).rev() {
+            self.bits.push((v >> i) & 1 == 1);
+        }
+    }
+
+    fn pad_to(&mut self, target: usize) {
+        while self.bits.len() < target {
+            self.bits.push(false);
+        }
+    }
+
+    fn bytes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.bits.len().div_ceil(8)];
+        for (i, &b) in self.bits.iter().enumerate() {
+            if b {
+                out[i / 8] |= 0x80 >> (i % 8);
+            }
+        }
+        out
+    }
+
+    fn read(&self, pos: &mut usize, n: u8) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..n {
+            let bit = self.bits.get(*pos).copied().unwrap_or(false);
+            v = (v << 1) | bit as u64;
+            *pos += 1;
+        }
+        v
+    }
+}
+
+#[test]
+fn bit_writer_matches_bit_at_a_time_reference() {
+    let mut rng = Rng::new(8105);
+    for round in 0..40 {
+        let mut w = BitWriter::new();
+        let mut model = RefBits::default();
+        for _ in 0..rng.range(1, 400) {
+            match rng.below(10) {
+                0 => {
+                    // Occasional pad to a random future boundary.
+                    let target = w.bit_len() + rng.range(0, 70);
+                    w.pad_to(target);
+                    model.pad_to(target);
+                }
+                1 => {
+                    let bit = rng.below(2) == 1;
+                    w.write_bit(bit);
+                    model.write(bit as u64, 1);
+                }
+                _ => {
+                    let n = rng.range(1, 64) as u8;
+                    let v = if n == 64 {
+                        rng.next_u64()
+                    } else {
+                        rng.next_u64() & ((1u64 << n) - 1)
+                    };
+                    w.write(v, n);
+                    model.write(v, n);
+                }
+            }
+            assert_eq!(w.bit_len(), model.bits.len(), "round {round}");
+        }
+        assert_eq!(w.into_bytes(), model.bytes(), "round {round}");
+    }
+}
+
+#[test]
+fn bit_reader_matches_bit_at_a_time_reference() {
+    let mut rng = Rng::new(8106);
+    for _ in 0..40 {
+        let buf = rng.bytes(rng.range(0, 200));
+        let mut model = RefBits::default();
+        for &b in &buf {
+            model.write(b as u64, 8);
+        }
+        let mut r = BitReader::new(&buf);
+        let mut pos = 0usize;
+        // Read well past the end: the reader zero-fills, like the model.
+        while pos < buf.len() * 8 + 130 {
+            if rng.below(8) == 0 {
+                // Random seek within (and slightly past) the buffer.
+                let target = rng.range(0, buf.len() * 8 + 64);
+                r.seek(target);
+                pos = target;
+            }
+            let n = rng.range(1, 64) as u8;
+            let expect = model.read(&mut pos, n);
+            assert_eq!(r.read(n), expect);
+            assert_eq!(r.bit_pos(), pos);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// LZ4 scratch pool: steady state must be allocation-free (no re-zeroed
+// hash tables) once warm, without changing output bytes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn scratch_pool_steady_state_is_allocation_free() {
+    let mut rng = Rng::new(8107);
+    let pool = lz4::ScratchPool::new();
+    let frames: Vec<Vec<u8>> = (0..8).map(|_| rng.compressible_bytes(40_000)).collect();
+
+    // Warm-up: the first take per concurrency level builds a table.
+    for f in &frames {
+        let mut scratch = pool.take();
+        let mut out = Vec::new();
+        lz4::compress_with(f, &mut out, &mut scratch);
+        pool.put(scratch);
+        assert_eq!(out, lz4::compress(f), "pooled output must match fresh");
+    }
+    let warm_misses = pool.misses();
+    assert!(warm_misses >= 1);
+    assert_eq!(pool.pooled(), 1, "serial use should park exactly one table");
+
+    // Steady state: hundreds of frames, zero further table builds.
+    for round in 0..300 {
+        let f = &frames[round % frames.len()];
+        let mut scratch = pool.take();
+        let mut out = Vec::new();
+        lz4::compress_with(f, &mut out, &mut scratch);
+        pool.put(scratch);
+    }
+    assert_eq!(
+        pool.misses(),
+        warm_misses,
+        "steady state allocated a fresh hash table"
+    );
+}

@@ -1,0 +1,281 @@
+//! Deterministic fuzz-corpus replay (PR 8).
+//!
+//! `rust/fuzz/` carries real cargo-fuzz targets for the parsers on the
+//! hostile-input boundary (wire headers, frame assembly, the DFCK chunk
+//! container, ZFP and LZ4 decode). CI cannot run a coverage-guided
+//! fuzzer, so this test regenerates the seed corpus those targets start
+//! from — valid artifacts plus systematic truncations and deterministic
+//! byte/bit flips — and replays every case through the same entry
+//! points. The contract under replay is crash-freedom: every input must
+//! come back `Ok` or `Err`, never a panic, out-of-bounds, or runaway
+//! allocation.
+
+use defer::compress::lz4;
+use defer::serial::chunked::{self, CodecRuntime};
+use defer::serial::zfp::{self, ZfpRate};
+use defer::serial::{Codec, CodecKernel};
+use defer::util::prng::Rng;
+use defer::wire::{crc32, FrameAssembler, Header, HEADER_SIZE};
+
+/// Refuse to let a mutated length field turn the replay into an OOM:
+/// corpus cases whose parsed payload length exceeds this are still fed
+/// to `Header::parse` (which must not allocate) but not to the
+/// allocating assembler. The real fuzz targets apply the same guard.
+const MAX_REPLAY_PAYLOAD: u64 = 1 << 20;
+
+/// Mirror of the wire header layout (see `wire::encode_header`): the
+/// corpus builder must not depend on the code under test for framing.
+fn build_wire_frame(
+    msg_type: u8,
+    frame: u64,
+    batch_minus_1: u32,
+    count: u64,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut h = [0u8; HEADER_SIZE];
+    h[0..4].copy_from_slice(&0x4445_4652u32.to_le_bytes()); // "DEFR"
+    h[4] = msg_type;
+    h[5..8].copy_from_slice(&batch_minus_1.to_le_bytes()[..3]);
+    h[8..16].copy_from_slice(&frame.to_le_bytes());
+    h[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    h[32..40].copy_from_slice(&count.to_le_bytes());
+    let crc = crc32::finish(crc32::update(
+        crc32::update(crc32::init(), &h[0..40]),
+        payload,
+    ));
+    h[40..44].copy_from_slice(&crc.to_le_bytes());
+    let mut out = h.to_vec();
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Systematic mutations of one seed: the seed itself, truncations at
+/// structurally interesting lengths, single-byte flips at every offset
+/// (for short seeds) or rng-chosen offsets (for long ones), and a few
+/// multi-flip cases.
+fn mutations(seed: &[u8], rng: &mut Rng) -> Vec<Vec<u8>> {
+    let mut out = vec![seed.to_vec()];
+    let cuts: Vec<usize> = if seed.len() <= 64 {
+        (0..seed.len()).collect()
+    } else {
+        let mut c: Vec<usize> = (0..48).map(|_| rng.range(0, seed.len())).collect();
+        c.extend([0, 1, 3, 4, 11, 12, 43, 44, seed.len() - 1]);
+        c
+    };
+    for cut in cuts {
+        out.push(seed[..cut.min(seed.len())].to_vec());
+    }
+    let flips: Vec<usize> = if seed.len() <= 96 {
+        (0..seed.len()).collect()
+    } else {
+        (0..96).map(|_| rng.range(0, seed.len() - 1)).collect()
+    };
+    for pos in flips {
+        let mut m = seed.to_vec();
+        m[pos] ^= 1 << rng.below(8);
+        out.push(m);
+    }
+    for _ in 0..16 {
+        let mut m = seed.to_vec();
+        for _ in 0..rng.range(2, 8) {
+            if m.is_empty() {
+                break;
+            }
+            let pos = rng.range(0, m.len() - 1);
+            m[pos] = rng.next_u64() as u8;
+        }
+        out.push(m);
+    }
+    out
+}
+
+/// Mirror of `fuzz_targets/fuzz_wire_header.rs`.
+fn replay_wire_header(case: &[u8]) {
+    if case.len() < HEADER_SIZE {
+        return;
+    }
+    let raw: [u8; HEADER_SIZE] = case[..HEADER_SIZE].try_into().unwrap();
+    if let Ok(h) = Header::parse(&raw) {
+        if h.wire_len <= MAX_REPLAY_PAYLOAD {
+            let _ = h.into_message(case[HEADER_SIZE..].to_vec());
+        }
+    }
+}
+
+/// Mirror of `fuzz_targets/fuzz_frame_assembler.rs`: feed the stream in
+/// adversarially sized slices with interleaved WouldBlock events.
+fn replay_frame_assembler(case: &[u8]) {
+    if case.len() >= HEADER_SIZE {
+        let raw: [u8; HEADER_SIZE] = case[..HEADER_SIZE].try_into().unwrap();
+        if let Ok(h) = Header::parse(&raw) {
+            if h.wire_len > MAX_REPLAY_PAYLOAD {
+                return;
+            }
+        }
+    }
+    let mut asm = FrameAssembler::new();
+    let cursor = std::cell::Cell::new(0usize);
+    let block_next = std::cell::Cell::new(false);
+    let mut read = |buf: &mut [u8]| -> std::io::Result<usize> {
+        if block_next.replace(false) {
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        let at = cursor.get();
+        if at >= case.len() {
+            return Ok(0); // EOF — the assembler must surface an error
+        }
+        let n = buf.len().min(case.len() - at).min(7);
+        buf[..n].copy_from_slice(&case[at..at + n]);
+        cursor.set(at + n);
+        block_next.set(true);
+        Ok(n)
+    };
+    // Drain until the assembler errors (EOF or protocol) or the stream
+    // is exhausted with a clean boundary.
+    for _ in 0..case.len() * 2 + 8 {
+        match asm.poll(&mut read, None) {
+            Ok(Some(_)) => {}
+            Ok(None) => {}
+            Err(_) => break,
+        }
+        if cursor.get() >= case.len() && asm.at_boundary() {
+            break;
+        }
+    }
+}
+
+fn replay_chunk_container(
+    case: &[u8],
+    codec: &Codec,
+    rt: &CodecRuntime,
+    serialized_len: usize,
+    count: usize,
+) {
+    // serialized_len / count cross-checks come from the outer header in
+    // production; replay with the truthful values (so mutations reach
+    // the per-chunk CRC and codec layers) and with lying ones.
+    let _ = chunked::decode_frame(codec, case, serialized_len, count, rt, None);
+    let _ = chunked::decode_frame(codec, case, case.len(), 1024, rt, None);
+    let _ = chunked::decode_frame(codec, case, 1, 7, rt, None);
+}
+
+fn replay_zfp(case: &[u8]) {
+    for kernel in [CodecKernel::Scalar, CodecKernel::Batched] {
+        let _ = zfp::decode_kernel(case, kernel);
+    }
+}
+
+fn replay_lz4(case: &[u8]) {
+    for expected in [0usize, 1, 100, 4096, 100_000] {
+        let _ = lz4::decompress(case, expected);
+    }
+}
+
+#[test]
+fn wire_header_and_assembler_survive_corpus() {
+    let mut rng = Rng::new(8201);
+    let mut seeds = Vec::new();
+    // Valid frames across message types, batches, and payload shapes.
+    for (ty, batch_m1, n) in [
+        (3u8, 0u32, 0usize),
+        (3, 0, 1),
+        (3, 7, 4096),
+        (1, 0, 300),
+        (2, 0, 64),
+        (4, 0, 17),
+        (5, 0, 0),
+        (6, 0, 0),
+        (9, 0, 16), // invalid type survives as a parse error
+    ] {
+        let payload = rng.bytes(n);
+        seeds.push(build_wire_frame(ty, rng.next_u64(), batch_m1, n as u64 / 4, &payload));
+    }
+    // Raw noise never shaped like a frame at all.
+    seeds.push(rng.bytes(200));
+    seeds.push(vec![0u8; HEADER_SIZE]);
+    for seed in &seeds {
+        for case in mutations(seed, &mut rng) {
+            replay_wire_header(&case);
+            replay_frame_assembler(&case);
+        }
+    }
+}
+
+#[test]
+fn chunk_container_survives_corpus() {
+    let mut rng = Rng::new(8202);
+    let rt = CodecRuntime::chunked(1024, None).unwrap();
+    for codec in Codec::paper_sweep() {
+        let count = 3000usize;
+        let data: Vec<f32> = (0..count).map(|_| rng.normal_f32()).collect();
+        let (container, mid) = chunked::encode_frame(&codec, &data, &rt, None);
+        let seeds = vec![container, rng.bytes(100)];
+        for seed in &seeds {
+            for case in mutations(seed, &mut rng) {
+                replay_chunk_container(&case, &codec, &rt, mid, count);
+            }
+        }
+    }
+}
+
+#[test]
+fn zfp_and_lz4_decode_survive_corpus() {
+    let mut rng = Rng::new(8203);
+    let mut seeds = Vec::new();
+    for (n, rate) in [(0usize, 8u8), (5, 3), (1000, 8), (257, 32)] {
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 100.0).collect();
+        let mut enc = Vec::new();
+        zfp::encode_into_kernel(&data, ZfpRate(rate), &mut enc, CodecKernel::Batched).unwrap();
+        seeds.push(enc);
+    }
+    for seed in &seeds {
+        for case in mutations(seed, &mut rng) {
+            replay_zfp(&case);
+        }
+    }
+
+    let lz_seeds = vec![
+        lz4::compress(&rng.compressible_bytes(5000)),
+        lz4::compress(&rng.bytes(700)),
+        lz4::compress(b""),
+        rng.bytes(300),
+    ];
+    for seed in &lz_seeds {
+        for case in mutations(seed, &mut rng) {
+            replay_lz4(&case);
+        }
+    }
+}
+
+/// Round-trip sanity so the corpus is known to contain *accepted* cases
+/// too — a replay suite that only ever exercises rejection paths would
+/// silently stop covering the happy path.
+#[test]
+fn unmutated_seeds_still_parse() {
+    let mut rng = Rng::new(8204);
+    let payload = rng.bytes(512);
+    let frame = build_wire_frame(3, 42, 0, 128, &payload);
+    let raw: [u8; HEADER_SIZE] = frame[..HEADER_SIZE].try_into().unwrap();
+    let h = Header::parse(&raw).unwrap();
+    assert_eq!(h.wire_len, 512);
+    let msg = h.into_message(frame[HEADER_SIZE..].to_vec()).unwrap();
+    assert_eq!(msg.frame, 42);
+    assert_eq!(msg.count, 128);
+
+    let mut asm = FrameAssembler::new();
+    let mut cursor = 0usize;
+    let mut read = |buf: &mut [u8]| -> std::io::Result<usize> {
+        let n = buf.len().min(frame.len() - cursor).min(13);
+        buf[..n].copy_from_slice(&frame[cursor..cursor + n]);
+        cursor += n;
+        Ok(n)
+    };
+    let msg = loop {
+        if let Some(m) = asm.poll(&mut read, None).unwrap() {
+            break m;
+        }
+    };
+    assert_eq!(msg.payload, payload);
+    assert!(asm.at_boundary());
+}
