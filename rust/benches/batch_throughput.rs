@@ -97,6 +97,7 @@ fn spawn_worker(
             pipelined: true,
             pipe_depth: 8,
             payload_pool: None,
+            recovery: None,
         };
         let result = run_codec_pipeline(rx, out, ctx, |values, _batch| {
             Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
@@ -136,6 +137,7 @@ fn run_chain(
             base_port: None,
             pipe_depth: 8,
             relay_junctions: false,
+            recovery: None,
         },
     )
     .unwrap();

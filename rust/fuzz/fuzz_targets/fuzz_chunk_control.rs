@@ -1,0 +1,51 @@
+//! Fuzz the recovery control-frame path introduced with chunk-level
+//! retry: `wire::parse_chunk_control` on arbitrary NACK/retry messages,
+//! then `chunked::chunk_payload_span` with the parsed (hostile) chunk
+//! index and bytes — the exact surface a misbehaving peer reaches by
+//! sending traffic on the retry control mesh.
+#![no_main]
+
+use defer::serial::chunked::chunk_payload_span;
+use defer::wire::{parse_chunk_control, Header, Message, MessageType, HEADER_SIZE};
+use libfuzzer_sys::fuzz_target;
+
+/// Same RSS guard as the other wire-facing targets: lengths that parse
+/// but would demand gigabytes are not materialized.
+const MAX_FUZZ_PAYLOAD: u64 = 1 << 20;
+
+fuzz_target!(|data: &[u8]| {
+    // Path 1: full wire decode (CRC-gated), as a TCP control peer.
+    if data.len() >= HEADER_SIZE {
+        let raw: [u8; HEADER_SIZE] = data[..HEADER_SIZE].try_into().unwrap();
+        if let Ok(h) = Header::parse(&raw) {
+            if h.wire_len <= MAX_FUZZ_PAYLOAD {
+                if let Ok(msg) = h.into_message(data[HEADER_SIZE..].to_vec()) {
+                    if let Ok((idx, span)) = parse_chunk_control(&msg) {
+                        let _ = chunk_payload_span(span, idx as usize);
+                    }
+                }
+            }
+        }
+    }
+    // Path 2: the in-process control mesh hands `Message` structs over
+    // without re-framing (no CRC gate); drive the parser and the span
+    // cutter directly so every mutation reaches them.
+    if data.len() >= 13 {
+        let msg_type = if data[0] & 1 == 0 {
+            MessageType::ChunkNack
+        } else {
+            MessageType::ChunkRetry
+        };
+        let msg = Message {
+            msg_type,
+            frame: u64::from_le_bytes(data[1..9].try_into().unwrap()),
+            serialized_len: 0,
+            count: 0,
+            batch: 1,
+            payload: data[9..].to_vec(),
+        };
+        if let Ok((idx, span)) = parse_chunk_control(&msg) {
+            let _ = chunk_payload_span(span, idx as usize);
+        }
+    }
+});

@@ -160,6 +160,19 @@ pub struct DeferConfig {
     /// Keep the legacy blocking thread-per-connection data plane instead
     /// of the sharded reactor. A/B escape hatch — off by default.
     pub blocking_io: bool,
+    /// Self-healing data plane: replica death degrades the mesh and the
+    /// dispatcher re-dispatches lost frames; corrupt chunks are patched
+    /// in place via NACK/retry. Off by default (fail-fast, byte-identical
+    /// wire traffic). Implied by a non-empty `faults` list.
+    pub recovery: bool,
+    /// Bounded in-flight window for the recovery dispatcher: how many
+    /// dispatched messages may be unacknowledged at once.
+    pub recovery_window: usize,
+    /// Deterministic fault schedule (`netem::FaultPlan` grammar), e.g.
+    /// `kill:node1.1@frame=40`, `truncate:node2.1@frame=10`,
+    /// `corrupt-chunk:p=0.01[,seed=7]`. Non-empty implies `recovery`.
+    /// On the CLI, `--fault` takes specs separated by `;`.
+    pub faults: Vec<String>,
 }
 
 impl Default for DeferConfig {
@@ -197,6 +210,9 @@ impl Default for DeferConfig {
             batch_overhead_us: 0.0,
             io_threads: 0,
             blocking_io: false,
+            recovery: false,
+            recovery_window: crate::runtime::recovery::DEFAULT_WINDOW,
+            faults: Vec::new(),
         }
     }
 }
@@ -324,6 +340,19 @@ impl DeferConfig {
         if let Some(x) = obj.get("blocking_io") {
             cfg.blocking_io = matches!(x, Json::Bool(true));
         }
+        if let Some(x) = obj.get("recovery") {
+            cfg.recovery = matches!(x, Json::Bool(true));
+        }
+        if let Some(x) = obj.get("recovery_window") {
+            cfg.recovery_window = x.as_usize()?;
+        }
+        if let Some(x) = obj.get("faults") {
+            cfg.faults = x
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+        }
         if let Some(x) = obj.get("base_port") {
             let p = x.as_usize()?;
             if p > u16::MAX as usize {
@@ -423,6 +452,19 @@ impl DeferConfig {
         self.io_threads = args.get_usize("io-threads", self.io_threads)?;
         if args.has("blocking-io") {
             self.blocking_io = true;
+        }
+        if args.has("recovery") {
+            self.recovery = true;
+        }
+        self.recovery_window = args.get_usize("recovery-window", self.recovery_window)?;
+        if let Some(v) = args.get("fault") {
+            // Semicolon-separated: the spec grammar itself uses commas
+            // (`corrupt-chunk:p=0.01,seed=7`).
+            self.faults = v
+                .split(';')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
         }
         if let Some(p) = args.get("base-port") {
             self.base_port = Some(p.parse().map_err(|_| {
@@ -560,7 +602,26 @@ impl DeferConfig {
                 self.batch_overhead_us
             )));
         }
+        if self.recovery_window == 0 {
+            return Err(DeferError::Config("recovery_window must be >= 1".into()));
+        }
+        // Fail at config time with the fault grammar, not mid-run.
+        crate::netem::FaultPlan::parse(&self.faults)?;
+        if (self.recovery || !self.faults.is_empty()) && self.relay_junctions {
+            return Err(DeferError::Config(
+                "recovery/faults are incompatible with relay_junctions (the \
+                 legacy relay threads have no self-healing path)"
+                    .into(),
+            ));
+        }
         Ok(())
+    }
+
+    /// Self-healing mode is on when asked for explicitly or implied by a
+    /// fault schedule (an injected fault without recovery would just be a
+    /// guaranteed run failure).
+    pub fn recovery_enabled(&self) -> bool {
+        self.recovery || !self.faults.is_empty()
     }
 }
 
@@ -869,6 +930,56 @@ mod tests {
         assert_eq!(cfg.batch_latency_ms, 1.5);
         assert!(cfg.batch_adaptive);
         assert_eq!(cfg.batch_overhead_us, 80.0);
+    }
+
+    #[test]
+    fn recovery_surface_round_trip() {
+        let text = r#"{
+            "recovery": true,
+            "recovery_window": 16,
+            "faults": ["kill:node1.1@frame=40", "corrupt-chunk:p=0.01"]
+        }"#;
+        let cfg = DeferConfig::from_json_str(text).unwrap();
+        assert!(cfg.recovery);
+        assert!(cfg.recovery_enabled());
+        assert_eq!(cfg.recovery_window, 16);
+        assert_eq!(cfg.faults.len(), 2);
+        // Defaults: fail-fast data plane, default window, no faults.
+        let d = DeferConfig::default();
+        assert!(!d.recovery);
+        assert!(!d.recovery_enabled());
+        assert_eq!(d.recovery_window, crate::runtime::recovery::DEFAULT_WINDOW);
+        assert!(d.faults.is_empty());
+        // A fault schedule implies recovery without the explicit flag.
+        let cfg =
+            DeferConfig::from_json_str(r#"{"faults": ["corrupt-chunk:p=0.5"]}"#).unwrap();
+        assert!(!cfg.recovery);
+        assert!(cfg.recovery_enabled());
+        // Bad grammar, zero window, and the relay conflict fail early.
+        assert!(DeferConfig::from_json_str(r#"{"faults": ["explode:everything"]}"#).is_err());
+        assert!(DeferConfig::from_json_str(r#"{"recovery_window": 0}"#).is_err());
+        assert!(DeferConfig::from_json_str(
+            r#"{"recovery": true, "relay_junctions": true}"#
+        )
+        .is_err());
+        // CLI spelling (semicolon-separated --fault list, since the spec
+        // grammar itself uses commas; --recovery switch).
+        let raw: Vec<String> = [
+            "run",
+            "--recovery",
+            "--recovery-window",
+            "4",
+            "--fault",
+            "kill:node1.1@frame=40; corrupt-chunk:p=0.01,seed=7",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = Args::parse(&raw, &["tcp", "recovery"]).unwrap();
+        let cfg = DeferConfig::default().apply_args(&args).unwrap();
+        assert!(cfg.recovery);
+        assert_eq!(cfg.recovery_window, 4);
+        assert_eq!(cfg.faults.len(), 2);
     }
 
     #[test]

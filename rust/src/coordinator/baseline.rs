@@ -115,6 +115,9 @@ impl SingleDevice {
             queue_high_water: 0,
             data_plane_threads: 0,
             io_shards: Vec::new(),
+            frames_redispatched: 0,
+            chunks_retried: 0,
+            replicas_lost: 0,
         })
     }
 }

@@ -45,7 +45,10 @@ use crate::coordinator::compute_node::{run_compute_node, ComputeOptions, NodeSta
 use crate::coordinator::dispatcher::{
     configure_nodes, run_inference, DispatcherStats, InferenceOptions, WorkerAssignment,
 };
+use crate::coordinator::pipeline::PipelineRecovery;
 use crate::coordinator::RunReport;
+use crate::netem::FaultPlan;
+use crate::runtime::recovery::RecoverySupervisor;
 use crate::error::{DeferError, Result};
 use crate::model::{PartitionPlan, ReferenceVectors, StageSpec};
 use crate::netem::Link;
@@ -178,6 +181,18 @@ impl ChainRunner {
             .map(|_| Arc::new(NodeStats::new(self.cfg.energy)))
             .collect();
 
+        // ---- self-healing supervisor (recovery mode) ----
+        // One supervisor per run: every endpoint reports deaths to it,
+        // the dispatcher re-dispatches from it, and the fault schedule
+        // (if any) rides along so both I/O planes inject identically.
+        let supervisor: Option<std::sync::Arc<RecoverySupervisor>> =
+            if self.cfg.recovery_enabled() {
+                let plan = FaultPlan::parse(&self.cfg.faults)?;
+                Some(RecoverySupervisor::new(self.cfg.recovery_window, plan))
+            } else {
+                None
+            };
+
         // ---- wire: connection bundles for either transport ----
         let wiring::Wiring {
             mut control,
@@ -192,6 +207,7 @@ impl ChainRunner {
                 base_port: self.cfg.base_port,
                 pipe_depth: self.cfg.pipe_depth,
                 relay_junctions: self.cfg.relay_junctions,
+                recovery: supervisor.clone(),
             },
         )?;
 
@@ -280,6 +296,9 @@ impl ChainRunner {
         // the return merge feeds a pipe via a shard-owned ingress
         // machine; serialization/shaping/accounting still happen on the
         // dispatcher's own threads, so wire traffic is byte-identical.
+        // The dispatcher's own chunk-retry client (result boundary) must
+        // be extracted before the endpoints are converted/registered.
+        let dispatcher_client = from_last.chunk_client();
         let (to_first, from_last): (FrameSink, FrameSource) = match &reactor {
             Some(r) => {
                 let sink = r.register_egress(to_first, self.cfg.pipe_depth)?.into();
@@ -310,6 +329,10 @@ impl ChainRunner {
                 batch: self.cfg.batch,
                 batch_latency_ms: self.cfg.batch_latency_ms,
                 batch_adaptive: self.cfg.batch_adaptive,
+                recovery: supervisor.as_ref().map(|s| PipelineRecovery {
+                    supervisor: Arc::clone(s),
+                    client: dispatcher_client.clone(),
+                }),
             },
             uplink,
             Arc::clone(&dstats),
@@ -364,6 +387,11 @@ impl ChainRunner {
             queue_high_water: dstats.queue_depth.high_water() as u64,
             data_plane_threads,
             io_shards,
+            frames_redispatched: supervisor
+                .as_ref()
+                .map_or(0, |s| s.frames_redispatched()),
+            chunks_retried: supervisor.as_ref().map_or(0, |s| s.chunks_retried()),
+            replicas_lost: supervisor.as_ref().map_or(0, |s| s.replicas_lost()),
         })
     }
 }

@@ -36,7 +36,7 @@
 use std::sync::Arc;
 
 use crate::config::CodecConfig;
-use crate::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
+use crate::coordinator::pipeline::{run_codec_pipeline, PipelineCtx, PipelineRecovery};
 use crate::energy::{EnergyMeter, EnergyModel};
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
@@ -325,6 +325,13 @@ pub fn run_compute_node(
     let payload_pool = Arc::new(BufPool::new(opts.pipe_depth + 2));
     let mut pool = WorkerPool::new();
     let reader_pool = Arc::clone(&payload_pool);
+    // Self-healing hooks travel with the wiring: the merge receiver
+    // carries the run supervisor and this replica's chunk-retry client
+    // when recovery is enabled (see `topology::wiring::enable_recovery`).
+    let recovery = in_conn.recovery_handle().map(|supervisor| PipelineRecovery {
+        supervisor,
+        client: in_conn.chunk_client(),
+    });
     let mut ingress_err = None;
     let out: FrameSink = if let Some(reactor) = &opts.reactor {
         // Reactor plane: the shard-owned ingress machine replaces the
@@ -336,8 +343,24 @@ pub fn run_compute_node(
         reactor.register_egress(out_conn, opts.pipe_depth)?.into()
     } else {
         let mut in_conn = in_conn;
+        let reader_recovery = recovery.as_ref().map(|r| Arc::clone(&r.supervisor));
+        let reader_name = view.name.clone();
         pool.spawn(&format!("{}-reader", view.name), move || loop {
             let msg = in_conn.recv_pooled(&ByteCounter::new(), Some(&reader_pool))?;
+            // Injected kill: the node dies the moment it *observes* the
+            // scheduled frame — the reader returns, dropping the ingress
+            // conns and the pipe, so peers see EOF exactly as they would
+            // for a crashed process.
+            if let Some(sup) = &reader_recovery {
+                if let Some(k) = sup.faults().kill_frame(&reader_name) {
+                    if msg.msg_type == MessageType::Data && msg.frame + u64::from(msg.batch) > k
+                    {
+                        return Err(DeferError::FaultInjected(format!(
+                            "{reader_name} killed at frame {k}"
+                        )));
+                    }
+                }
+            }
             let stop = msg.msg_type == MessageType::Shutdown;
             tx.send(msg)
                 .map_err(|_| DeferError::ChannelClosed("node reader pipe"))?;
@@ -372,6 +395,7 @@ pub fn run_compute_node(
         pipelined: opts.pipelined,
         pipe_depth: opts.pipe_depth,
         payload_pool: Some(Arc::clone(&payload_pool)),
+        recovery,
     };
     let per_frame_elems: usize = in_shape.iter().product();
     let node_name = view.name.clone();
@@ -447,17 +471,28 @@ pub fn run_compute_node(
     let take_ingress_err = |slot: &Option<crate::netio::ErrSlot>| {
         slot.as_ref().and_then(|s| s.lock().unwrap().take())
     };
-    if result.is_err() {
+    if let Err(e) = &result {
         // Do not wait for the reader: it may be blocked on the incoming
         // socket, which only closes when the peer tears down. Detach it —
         // it exits when its connection drops — and surface the real error.
         pool.detach();
+        // A *scheduled* death is not a failure of the run: the replica
+        // simply disappears (its conns drop on return) and the supervisor
+        // re-dispatches whatever it still owed to the survivors.
+        if e.is_fault_injection() {
+            return Ok(());
+        }
         if let Some(e) = take_ingress_err(&ingress_err) {
             return Err(e);
         }
         return result;
     }
-    pool.join()?;
+    match pool.join() {
+        Ok(()) => {}
+        // Blocking-plane injected kill surfaces from the reader thread.
+        Err(e) if e.is_fault_injection() => return Ok(()),
+        Err(e) => return Err(e),
+    }
     if let Some(e) = take_ingress_err(&ingress_err) {
         return Err(e);
     }

@@ -31,6 +31,7 @@ use crate::error::{DeferError, Result};
 use crate::metrics::{ByteCounter, Histogram, QueueDepthGauge, ThroughputClock};
 use crate::model::StageSpec;
 use crate::netem::Link;
+use crate::runtime::recovery::decode_with_retry;
 use crate::serial::CodecRuntime;
 use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
@@ -39,7 +40,12 @@ use crate::util::bufpool::BufPool;
 use crate::wire::{Message, MessageType};
 
 use super::compute_node::encode_stage_architecture;
+use super::pipeline::PipelineRecovery;
 use super::transport::Conn;
+
+/// How long the re-dispatch loop tolerates zero progress (no completion,
+/// death, or escalation) before declaring the recovery run wedged.
+const REDISPATCH_STALL: Duration = Duration::from_secs(30);
 
 /// Dispatcher-side instrumentation.
 pub struct DispatcherStats {
@@ -229,6 +235,11 @@ pub struct InferenceOptions {
     /// up to the cap. The inline path has no queue and uses the fixed
     /// batch size.
     pub batch_adaptive: bool,
+    /// Self-healing mode: bounded in-flight window, per-frame completion
+    /// tracking, and re-dispatch of frames lost to replica death or an
+    /// exhausted chunk-retry budget. `None` keeps the legacy fail-fast
+    /// data plane (byte-identical wire traffic).
+    pub recovery: Option<PipelineRecovery>,
 }
 
 impl Default for InferenceOptions {
@@ -241,6 +252,7 @@ impl Default for InferenceOptions {
             batch: 1,
             batch_latency_ms: 0.0,
             batch_adaptive: false,
+            recovery: None,
         }
     }
 }
@@ -324,6 +336,7 @@ pub fn run_inference(
     let send_times: Arc<Mutex<HashMap<u64, Instant>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let codecs = opts.codecs;
+    let recovery = opts.recovery;
     // Encode scratch + payload recycling for the dispatcher's side.
     let rt = opts
         .rt
@@ -378,6 +391,7 @@ pub fn run_inference(
             let rt = rt.clone();
             let b_max = opts.batch.max(1);
             let adaptive = opts.batch_adaptive;
+            let recovery = recovery.clone();
             pool.spawn("dispatcher-encoder", move || {
                 let mut scratch: Vec<f32> = Vec::new();
                 let mut sent = 0u64;
@@ -393,6 +407,13 @@ pub fn run_inference(
                         b_max
                     };
                     let b = (want as u64).min(frames - sent).max(1) as usize;
+                    if let Some(rec) = &recovery {
+                        // Bounded in-flight window: a new message takes a
+                        // slot; re-dispatches below reuse the one their
+                        // frame already holds.
+                        rec.supervisor.acquire_slot()?;
+                        rec.supervisor.note_sent(sent, b as u32);
+                    }
                     let values = stack_input(input.data(), b, &mut scratch);
                     let (payload, mid) = codecs
                         .data
@@ -401,6 +422,45 @@ pub fn run_inference(
                         .send((sent, b as u32, payload, mid))
                         .map_err(|_| DeferError::ChannelClosed("dispatcher encode pipe"))?;
                     sent += b as u64;
+                }
+                if let Some(rec) = &recovery {
+                    // Re-dispatch loop: replay any message lost to a
+                    // replica death or an exhausted chunk-retry budget.
+                    // The dispatcher replays one input tensor per frame,
+                    // so re-encoding from the input is exact. Closing the
+                    // pipe (on return) releases the sender to broadcast
+                    // shutdown — only after everything completed.
+                    let sup = &rec.supervisor;
+                    let mut last_probe = sup.progress_probe();
+                    let mut last_change = Instant::now();
+                    while !sup.all_complete() {
+                        if let Some((frame, batch)) = sup.take_redispatch() {
+                            let b = batch.max(1) as usize;
+                            let values = stack_input(input.data(), b, &mut scratch);
+                            let (payload, mid) = codecs
+                                .data
+                                .encode_frame(values, &rt, Some(&stats.meter.codec));
+                            sup.count_frame_redispatched(b as u64);
+                            enc_tx
+                                .send((frame, b as u32, payload, mid))
+                                .map_err(|_| {
+                                    DeferError::ChannelClosed("dispatcher encode pipe")
+                                })?;
+                            last_change = Instant::now();
+                            continue;
+                        }
+                        sup.wait_progress(Duration::from_millis(100));
+                        let probe = sup.progress_probe();
+                        if probe != last_probe {
+                            last_probe = probe;
+                            last_change = Instant::now();
+                        } else if last_change.elapsed() > REDISPATCH_STALL {
+                            return Err(DeferError::Coordinator(format!(
+                                "dispatcher: recovery stalled — no frame completed, \
+                                 re-dispatched, or escalated for {REDISPATCH_STALL:?}"
+                            )));
+                        }
+                    }
                 }
                 Ok(())
             });
@@ -411,6 +471,7 @@ pub fn run_inference(
         let link = Arc::clone(&link);
         let rt = rt.clone();
         let b_max = opts.batch.max(1);
+        let recovery = recovery.clone();
         pool.spawn("dispatcher-sender", move || {
             let count = input.len() as u64;
             let mut scratch: Vec<f32> = Vec::new();
@@ -419,6 +480,10 @@ pub fn run_inference(
                 // Inline mode has no send queue to adapt to; it uses
                 // the fixed batch size (tail flushes short).
                 let b = (b_max as u64).min(frames - sent).max(1) as usize;
+                if let Some(rec) = &recovery {
+                    rec.supervisor.acquire_slot()?;
+                    rec.supervisor.note_sent(sent, b as u32);
+                }
                 let values = stack_input(input.data(), b, &mut scratch);
                 let (payload, mid) = codecs
                     .data
@@ -437,6 +502,49 @@ pub fn run_inference(
                 )?;
                 sent += b as u64;
             }
+            if let Some(rec) = &recovery {
+                // Re-dispatch loop (inline flavour): same contract as the
+                // pipelined encoder's — replay lost messages until every
+                // sent frame completed, then let shutdown travel.
+                let sup = &rec.supervisor;
+                let mut last_probe = sup.progress_probe();
+                let mut last_change = Instant::now();
+                while !sup.all_complete() {
+                    if let Some((frame, batch)) = sup.take_redispatch() {
+                        let b = batch.max(1) as usize;
+                        let values = stack_input(input.data(), b, &mut scratch);
+                        let (payload, mid) = codecs
+                            .data
+                            .encode_frame(values, &rt, Some(&stats.meter.codec));
+                        sup.count_frame_redispatched(b as u64);
+                        send_data_frame(
+                            &mut to_first,
+                            frame,
+                            b as u32,
+                            payload,
+                            mid,
+                            count * b as u64,
+                            &link,
+                            &stats,
+                            &send_times,
+                            &rt,
+                        )?;
+                        last_change = Instant::now();
+                        continue;
+                    }
+                    sup.wait_progress(Duration::from_millis(100));
+                    let probe = sup.progress_probe();
+                    if probe != last_probe {
+                        last_probe = probe;
+                        last_change = Instant::now();
+                    } else if last_change.elapsed() > REDISPATCH_STALL {
+                        return Err(DeferError::Coordinator(format!(
+                            "dispatcher: recovery stalled — no frame completed, \
+                             re-dispatched, or escalated for {REDISPATCH_STALL:?}"
+                        )));
+                    }
+                }
+            }
             // FIFO: shutdown travels behind the last frame, broadcast
             // to every stage-0 replica.
             to_first.broadcast_shutdown(&link, &stats.data_tx)?;
@@ -449,22 +557,60 @@ pub fn run_inference(
     // FIFO: each gets its own latency sample, throughput cycle, and
     // reference check, so per-frame metrics stay batch-size-invariant.
     let out_elems: usize = output_shape.iter().product();
+    // Returns how many logical frames this message newly completed (0 for
+    // a duplicate delivery of a re-dispatched frame, or a corrupt result
+    // escalated back to the re-dispatch queue).
     let decode_one = {
         let stats = Arc::clone(&stats);
         let send_times = Arc::clone(&send_times);
         let rt = rt.clone();
-        move |msg: Message| -> Result<()> {
-            let b = msg.batch.max(1) as usize;
-            let first = msg.frame;
-            let values = codecs.data.decode_frame(
-                &msg.payload,
-                msg.serialized_len as usize,
-                msg.count as usize,
-                &rt,
-                Some(&stats.meter.codec),
-            )?;
+        let recovery = recovery.clone();
+        move |msg: Message| -> Result<u64> {
+            let Message {
+                frame: first,
+                batch,
+                serialized_len,
+                count,
+                mut payload,
+                ..
+            } = msg;
+            let b = batch.max(1) as usize;
+            if let Some(rec) = &recovery {
+                if rec.supervisor.is_frame_done(first) {
+                    // Duplicate delivery: the original arrived after its
+                    // frame was already re-dispatched. Drop it.
+                    if let Some(p) = rt.buffers() {
+                        p.put(payload);
+                    }
+                    return Ok(0);
+                }
+            }
+            let client = recovery.as_ref().and_then(|r| r.client.as_deref());
+            let decoded = decode_with_retry(client, first, &mut payload, |bytes| {
+                codecs.data.decode_frame(
+                    bytes,
+                    serialized_len as usize,
+                    count as usize,
+                    &rt,
+                    Some(&stats.meter.codec),
+                )
+            });
+            let values = match decoded {
+                Ok(v) => v,
+                Err(DeferError::CorruptChunk { .. }) if recovery.is_some() => {
+                    // Retry budget exhausted at the result boundary:
+                    // escalate to a whole-message re-dispatch.
+                    let rec = recovery.as_ref().unwrap();
+                    rec.supervisor.escalate_frame(first, batch.max(1));
+                    if let Some(p) = rt.buffers() {
+                        p.put(payload);
+                    }
+                    return Ok(0);
+                }
+                Err(e) => return Err(e),
+            };
             if let Some(p) = rt.buffers() {
-                p.put(msg.payload);
+                p.put(payload);
             }
             if values.len() != out_elems * b {
                 return Err(DeferError::Coordinator(format!(
@@ -488,18 +634,26 @@ pub fn run_inference(
                 Ok(())
             };
             if b == 1 {
-                finish(first, Tensor::new(output_shape.clone(), values)?)
+                finish(first, Tensor::new(output_shape.clone(), values)?)?;
             } else {
                 for (i, sub) in values.chunks(out_elems).enumerate() {
                     let result = Tensor::new(output_shape.clone(), sub.to_vec())?;
                     finish(first + i as u64, result)?;
                 }
-                Ok(())
             }
+            if let Some(rec) = &recovery {
+                rec.supervisor.mark_frame_done(first);
+            }
+            Ok(b as u64)
         }
     };
 
     let direct = matches!(from_last, FrameSource::Direct(_));
+    // Recovery runs cannot terminate on a frame count: re-dispatched
+    // messages may arrive more than once, so both the reader and the
+    // receiver run until the chain relays shutdown (which the sender
+    // broadcasts only once every frame completed), deduping by frame id.
+    let recovering = recovery.is_some();
     if opts.pipelined && direct {
         // Blocking plane: a dedicated reader thread pulls framed bytes
         // off the merge set so socket waits overlap with decode.
@@ -507,7 +661,7 @@ pub fn run_inference(
         let reader_rt = rt.clone();
         pool.spawn("dispatcher-reader", move || {
             let mut data_seen = 0u64;
-            while data_seen < frames {
+            while recovering || data_seen < frames {
                 // Payload buffers come from the dispatcher's pool (the
                 // decode side puts them back once decoded).
                 let msg = from_last.recv_pooled(&ByteCounter::new(), reader_rt.buffers())?;
@@ -531,15 +685,13 @@ pub fn run_inference(
         });
         pool.spawn("dispatcher-receiver", move || {
             let mut received = 0u64;
-            while received < frames {
+            while recovering || received < frames {
                 let Some(msg) = res_rx.recv() else {
                     return Err(DeferError::ChannelClosed("dispatcher result pipe"));
                 };
                 match msg.msg_type {
                     MessageType::Data | MessageType::ResultMsg => {
-                        let b = msg.batch.max(1) as u64;
-                        decode_one(msg)?;
-                        received += b;
+                        received += decode_one(msg)?;
                     }
                     MessageType::Shutdown => break,
                     other => {
@@ -548,6 +700,11 @@ pub fn run_inference(
                         )))
                     }
                 }
+            }
+            if recovering && received != frames {
+                return Err(DeferError::Coordinator(format!(
+                    "dispatcher: recovery run completed {received} of {frames} frames"
+                )));
             }
             Ok(())
         });
@@ -558,13 +715,11 @@ pub fn run_inference(
         // thread.
         pool.spawn("dispatcher-receiver", move || {
             let mut received = 0u64;
-            while received < frames {
+            while recovering || received < frames {
                 let msg = from_last.recv_pooled(&ByteCounter::new(), rt.buffers())?;
                 match msg.msg_type {
                     MessageType::Data | MessageType::ResultMsg => {
-                        let b = msg.batch.max(1) as u64;
-                        decode_one(msg)?;
-                        received += b;
+                        received += decode_one(msg)?;
                     }
                     MessageType::Shutdown => break,
                     other => {
@@ -574,10 +729,16 @@ pub fn run_inference(
                     }
                 }
             }
+            if recovering && received != frames {
+                return Err(DeferError::Coordinator(format!(
+                    "dispatcher: recovery run completed {received} of {frames} frames"
+                )));
+            }
             // Drain the trailing shutdown if the chain relays it (the
             // reactor ingress machine drains its own mesh, so only the
-            // blocking source holds one).
-            if direct && received == frames {
+            // blocking source holds one; a recovery run already consumed
+            // it as its loop terminator).
+            if direct && !recovering && received == frames {
                 let _ = from_last.recv(&ByteCounter::new());
             }
             Ok(())

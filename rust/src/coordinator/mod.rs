@@ -87,6 +87,13 @@ pub struct RunReport {
     /// Final `(wakeups, dispatches)` counters per reactor shard; empty
     /// on the blocking plane and for the baseline.
     pub io_shards: Vec<(u64, u64)>,
+    /// Self-healing counters (all 0 when recovery is off or the run saw
+    /// no faults): logical frames replayed after a replica death or an
+    /// exhausted chunk-retry budget, corrupt chunks patched in place via
+    /// NACK/retry, and replicas declared dead mid-run.
+    pub frames_redispatched: u64,
+    pub chunks_retried: u64,
+    pub replicas_lost: u64,
 }
 
 impl RunReport {

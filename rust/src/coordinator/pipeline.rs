@@ -30,6 +30,8 @@ use std::sync::{Arc, Mutex};
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
+use crate::runtime::recovery::{decode_with_retry, ChunkRetryClient, RecoverySupervisor};
+use crate::serial::chunked::chunk_payload_span;
 use crate::serial::{Codec, CodecRuntime};
 use crate::threadpool::{pipe, WorkerPool};
 use crate::topology::wiring::FrameSink;
@@ -37,9 +39,20 @@ use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
 use crate::wire::{Message, MessageType};
 
+/// Self-healing hooks for one replica's codec pipeline: the run-wide
+/// supervisor (fault schedule, escalation) plus this replica's
+/// chunk-retry client (NACKs corrupt chunks to the producing upstream).
+#[derive(Clone)]
+pub struct PipelineRecovery {
+    pub supervisor: Arc<RecoverySupervisor>,
+    pub client: Option<Arc<ChunkRetryClient>>,
+}
+
 /// Everything the pipeline needs besides the connections and compute.
 pub struct PipelineCtx {
-    /// Stage name for thread labels and error messages.
+    /// Stage name for thread labels and error messages. In recovery mode
+    /// this is also the fault-schedule key (the node name, e.g.
+    /// `node1.1`).
     pub name: String,
     /// The data-socket codec.
     pub codec: Codec,
@@ -60,6 +73,112 @@ pub struct PipelineCtx {
     /// Recycles inbound payload buffers after decode (pair with the
     /// reader's `recv_pooled`).
     pub payload_pool: Option<Arc<BufPool>>,
+    /// Self-healing mode (fault injection, chunk retry, escalation).
+    /// `None` = fail-fast, byte-identical to the pre-recovery pipeline.
+    pub recovery: Option<PipelineRecovery>,
+}
+
+/// Flip one byte inside chunk 0's *body* (past the 12-byte per-chunk
+/// header) so the chunk CRC — not the container parser — detects the
+/// damage. Non-chunked payloads are left alone: `corrupt-chunk` models
+/// DFCK wire damage, which plain containers cannot carry per-chunk.
+fn corrupt_one_byte(payload: &mut [u8], entropy: u64) {
+    const CHUNK_HEADER: usize = 12;
+    if let Ok(span) = chunk_payload_span(payload, 0) {
+        if span.len() > CHUNK_HEADER {
+            let body = span.len() - CHUNK_HEADER;
+            let off = span.start + CHUNK_HEADER + (entropy as usize % body);
+            payload[off] ^= 0x40;
+        }
+    }
+}
+
+/// Decode one inbound data message under the recovery policy: injected
+/// faults first (kill aborts the replica, corruption flips a chunk
+/// byte — both deterministic per node + frame), then decode with
+/// chunk-level NACK/retry. A frame whose retry budget is exhausted is
+/// escalated for whole-frame re-dispatch and skipped (`Ok(None)`).
+fn decode_step(
+    codec: &Codec,
+    rt: &CodecRuntime,
+    overhead: &SharedTimer,
+    recovery: Option<&PipelineRecovery>,
+    name: &str,
+    msg: Message,
+    payload_pool: Option<&BufPool>,
+) -> Result<Option<(u64, u32, Vec<f32>)>> {
+    let Message {
+        frame,
+        batch,
+        serialized_len,
+        count,
+        mut payload,
+        ..
+    } = msg;
+    if let Some(rec) = recovery {
+        let faults = rec.supervisor.faults();
+        if let Some(k) = faults.kill_frame(name) {
+            if frame + u64::from(batch) > k {
+                return Err(DeferError::FaultInjected(format!(
+                    "{name} killed at frame {k}"
+                )));
+            }
+        }
+        if let Some(entropy) = faults.corrupt_roll(name, frame) {
+            corrupt_one_byte(&mut payload, entropy);
+        }
+    }
+    let client = recovery.and_then(|r| r.client.as_deref());
+    let res = decode_with_retry(client, frame, &mut payload, |bytes| {
+        codec.decode_frame(
+            bytes,
+            serialized_len as usize,
+            count as usize,
+            rt,
+            Some(overhead),
+        )
+    });
+    let values = match res {
+        Ok(v) => v,
+        Err(e @ DeferError::CorruptChunk { .. }) => match recovery {
+            Some(rec) => {
+                // Unrecoverable in place: the dispatcher re-encodes and
+                // re-deals this message; this replica skips it.
+                rec.supervisor.escalate_frame(frame, batch);
+                if let Some(p) = payload_pool {
+                    p.put(payload);
+                }
+                return Ok(None);
+            }
+            None => return Err(e),
+        },
+        Err(e) => return Err(e),
+    };
+    if let Some(p) = payload_pool {
+        p.put(payload);
+    }
+    Ok(Some((frame, batch, values)))
+}
+
+/// Injected-truncation check before an egress send: when the schedule
+/// says this node truncates at `frame`, write a half message and die.
+fn truncate_check(
+    out: &mut FrameSink,
+    recovery: Option<&PipelineRecovery>,
+    name: &str,
+    msg: &Message,
+) -> Result<()> {
+    let Some(rec) = recovery else { return Ok(()) };
+    let Some(t) = rec.supervisor.faults().truncate_frame(name) else {
+        return Ok(());
+    };
+    if msg.frame + u64::from(msg.batch) > t {
+        out.send_truncated(msg, msg.wire_size() as usize / 2)?;
+        return Err(DeferError::FaultInjected(format!(
+            "{name} truncated egress at frame {t} and died"
+        )));
+    }
+    Ok(())
 }
 
 /// A frame (or batch of frames) moving between pipeline phases, or the
@@ -72,8 +191,13 @@ enum Step<T> {
 
 /// Clone an error's message for cross-thread reporting (the underlying
 /// enum is not `Clone`; the text is what matters at the boundary).
+/// Injected faults keep their variant so the node driver can tell a
+/// scheduled death from a real failure.
 fn describe(stage: &str, e: &DeferError) -> DeferError {
-    DeferError::Coordinator(format!("{stage}: {e}"))
+    match e {
+        DeferError::FaultInjected(m) => DeferError::FaultInjected(format!("{stage}: {m}")),
+        _ => DeferError::Coordinator(format!("{stage}: {e}")),
+    }
 }
 
 /// Run one worker's inference phase: pull framed activations off `rx`
@@ -107,33 +231,36 @@ where
                     return Ok(());
                 }
                 MessageType::Data => {
-                    let values = ctx.codec.decode_frame(
-                        &msg.payload,
-                        msg.serialized_len as usize,
-                        msg.count as usize,
+                    let Some((frame, batch, values)) = decode_step(
+                        &ctx.codec,
                         &ctx.rt,
-                        Some(&ctx.overhead),
-                    )?;
-                    if let Some(p) = &ctx.payload_pool {
-                        p.put(msg.payload);
-                    }
-                    let output = compute(values, msg.batch as usize)?;
+                        &ctx.overhead,
+                        ctx.recovery.as_ref(),
+                        &ctx.name,
+                        msg,
+                        ctx.payload_pool.as_deref(),
+                    )?
+                    else {
+                        continue; // escalated for re-dispatch
+                    };
+                    let output = compute(values, batch as usize)?;
                     let (wire, mid) =
                         ctx.codec
                             .encode_frame(&output, &ctx.rt, Some(&ctx.overhead));
                     let out_msg = Message {
                         msg_type: MessageType::Data,
-                        frame: msg.frame,
+                        frame,
                         serialized_len: mid as u64,
                         count: output.len() as u64,
-                        batch: msg.batch,
+                        batch,
                         payload: wire,
                     };
+                    truncate_check(&mut out, ctx.recovery.as_ref(), &ctx.name, &out_msg)?;
                     out.send_data(&out_msg, &ctx.out_link, &ctx.data_tx)?;
                     if let Some(p) = &ctx.payload_pool {
                         p.put(out_msg.payload);
                     }
-                    ctx.frames.add(msg.batch as u64);
+                    ctx.frames.add(batch as u64);
                 }
                 other => {
                     return Err(DeferError::Coordinator(format!(
@@ -159,6 +286,7 @@ where
         let rt = ctx.rt.clone();
         let overhead = ctx.overhead.clone();
         let payload_pool = ctx.payload_pool.clone();
+        let recovery = ctx.recovery.clone();
         let name = ctx.name.clone();
         let slot = Arc::clone(&err_slot);
         pool.spawn(&format!("{}-decode", ctx.name), move || {
@@ -172,20 +300,22 @@ where
                             return Ok(());
                         }
                         MessageType::Data => {
-                            let values = codec.decode_frame(
-                                &msg.payload,
-                                msg.serialized_len as usize,
-                                msg.count as usize,
+                            let Some((frame, batch, values)) = decode_step(
+                                &codec,
                                 &rt,
-                                Some(&overhead),
-                            )?;
-                            if let Some(p) = &payload_pool {
-                                p.put(msg.payload);
-                            }
+                                &overhead,
+                                recovery.as_ref(),
+                                &name,
+                                msg,
+                                payload_pool.as_deref(),
+                            )?
+                            else {
+                                continue; // escalated for re-dispatch
+                            };
                             dec_tx
                                 .send(Step::Frame {
-                                    frame: msg.frame,
-                                    batch: msg.batch,
+                                    frame,
+                                    batch,
                                     data: values,
                                 })
                                 .map_err(|_| DeferError::ChannelClosed("decode pipe"))?;
@@ -213,6 +343,8 @@ where
         let data_tx = ctx.data_tx.clone();
         let frames = ctx.frames.clone();
         let payload_pool = ctx.payload_pool.clone();
+        let recovery = ctx.recovery.clone();
+        let name = ctx.name.clone();
         let slot = Arc::clone(&err_slot);
         pool.spawn(&format!("{}-encode", ctx.name), move || {
             let mut body = || -> Result<()> {
@@ -233,6 +365,7 @@ where
                                 batch,
                                 payload: wire,
                             };
+                            truncate_check(&mut out, recovery.as_ref(), &name, &out_msg)?;
                             out.send_data(&out_msg, &out_link, &data_tx)?;
                             if let Some(p) = &payload_pool {
                                 p.put(out_msg.payload);
@@ -326,6 +459,7 @@ mod tests {
             pipelined,
             pipe_depth: 4,
             payload_pool: None,
+            recovery: None,
         }
     }
 

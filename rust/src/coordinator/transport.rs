@@ -43,9 +43,12 @@ impl Conn {
     /// Default total deadline for [`Conn::tcp_connect`] retries.
     pub const CONNECT_DEADLINE: std::time::Duration = std::time::Duration::from_secs(10);
 
-    /// Connect to a TCP endpoint, retrying with exponential backoff (1 ms
-    /// doubling to 100 ms) until `deadline` elapses. `peer` names the
-    /// remote role/stage (e.g. `node1 data socket`) for the error message.
+    /// Connect to a TCP endpoint, retrying with jittered exponential
+    /// backoff (1 ms doubling to 100 ms, plus up to +50% deterministic
+    /// jitter so a fleet of dialers retrying the same listener
+    /// de-synchronizes) capped by the total `deadline`. `peer` names the
+    /// remote role/stage (e.g. `node1 data socket`) for the error
+    /// message, which also reports how many attempts were made.
     pub fn tcp_connect_with_deadline(
         addr: &str,
         peer: &str,
@@ -54,8 +57,19 @@ impl Conn {
         let t_end = std::time::Instant::now() + deadline;
         let mut backoff = std::time::Duration::from_millis(1);
         let max_backoff = std::time::Duration::from_millis(100);
+        // Jitter stream seeded per (addr, peer): deterministic for a
+        // given dialer, distinct across dialers — no shared RNG state.
+        let mut jitter = addr
+            .bytes()
+            .chain(peer.bytes())
+            .fold(0x9E37_79B9_7F4A_7C15u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+            })
+            | 1;
+        let mut attempts = 0u64;
         let mut last_err;
         loop {
+            attempts += 1;
             match TcpStream::connect(addr) {
                 Ok(s) => {
                     s.set_nodelay(true).ok();
@@ -70,10 +84,16 @@ impl Conn {
             let now = std::time::Instant::now();
             if now >= t_end {
                 return Err(DeferError::Coordinator(format!(
-                    "cannot connect to {peer} at {addr} within {deadline:?}: {last_err}"
+                    "cannot connect to {peer} at {addr} within {deadline:?} \
+                     ({attempts} attempts): {last_err}"
                 )));
             }
-            std::thread::sleep(backoff.min(t_end - now));
+            jitter ^= jitter << 13;
+            jitter ^= jitter >> 7;
+            jitter ^= jitter << 17;
+            let jitter_us = jitter % (backoff.as_micros() as u64 / 2 + 1);
+            let sleep = backoff + std::time::Duration::from_micros(jitter_us);
+            std::thread::sleep(sleep.min(t_end - now));
             backoff = (backoff * 2).min(max_backoff);
         }
     }
@@ -232,6 +252,67 @@ impl Conn {
     /// Receive one framed message, counting bytes.
     pub fn recv(&mut self, counter: &ByteCounter) -> Result<Message> {
         self.recv_pooled(counter, None)
+    }
+
+    /// Wait up to `timeout` for this conn to become readable, without
+    /// consuming anything: true when a `recv` now would not block (data
+    /// buffered, bytes in the pipe, the peer closed, or the socket is in
+    /// an error state a recv would surface). The recovery layer uses this
+    /// to poll idle connections for peer death instead of parking
+    /// indefinitely in `recv`.
+    pub fn wait_readable(&mut self, timeout: std::time::Duration) -> bool {
+        match self {
+            Conn::Local { rx, pending, .. } => {
+                !pending.is_empty() || rx.wait_readable(timeout)
+            }
+            Conn::Tcp { reader, .. } => {
+                if !reader.buffer().is_empty() {
+                    return true;
+                }
+                let stream = reader.get_ref();
+                let prev = stream.read_timeout().ok().flatten();
+                if stream.set_read_timeout(Some(timeout)).is_err() {
+                    return true;
+                }
+                let mut byte = [0u8; 1];
+                // peek never consumes, so a timed-out probe leaves the
+                // stream exactly as it found it; Ok(0) is EOF, which a
+                // recv would surface as an error — readable.
+                let ready = match stream.peek(&mut byte) {
+                    Ok(_) => true,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        false
+                    }
+                    Err(_) => true,
+                };
+                stream.set_read_timeout(prev).ok();
+                ready
+            }
+        }
+    }
+
+    /// Fault injection: write exactly the first `n` bytes of `msg`'s wire
+    /// encoding (at least 1, at most all-but-one), then stop — the caller
+    /// is about to die and the peer must observe a mid-message EOF.
+    pub fn send_truncated(&mut self, msg: &Message, n: usize) -> Result<()> {
+        let mut wire = Vec::new();
+        write_message(&mut wire, msg, &Link::ideal(), &ByteCounter::new())?;
+        wire.truncate(n.clamp(1, wire.len().saturating_sub(1)));
+        match self {
+            Conn::Tcp { writer, .. } => {
+                use std::io::Write as _;
+                writer.write_all(&wire)?;
+                writer.flush()?;
+            }
+            Conn::Local { tx, .. } => {
+                tx.send(wire)
+                    .map_err(|_| DeferError::ChannelClosed("local conn send"))?;
+            }
+        }
+        Ok(())
     }
 
     /// [`Conn::recv`] with the payload buffer drawn from `pool` — the

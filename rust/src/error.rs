@@ -40,6 +40,31 @@ pub enum DeferError {
 
     #[error("channel closed: {0}")]
     ChannelClosed(&'static str),
+
+    /// A DFCK chunk failed its CRC — structured so the recovery layer can
+    /// NACK exactly that chunk by index instead of string-matching the
+    /// rendered text. Display stays byte-compatible with the legacy
+    /// `Codec` message.
+    #[error("codec: chunk container: chunk {chunk} of {of} corrupt ({detail})")]
+    CorruptChunk {
+        chunk: usize,
+        of: usize,
+        detail: String,
+    },
+
+    /// A deliberate `--fault` trigger fired (replica kill, conn
+    /// truncation). Distinguished from real failures so the chain runner
+    /// treats the planned death as survivable instead of a root cause.
+    #[error("fault injected: {0}")]
+    FaultInjected(String),
+}
+
+impl DeferError {
+    /// True for errors raised by the fault injector itself (not by the
+    /// damage it causes downstream).
+    pub fn is_fault_injection(&self) -> bool {
+        matches!(self, DeferError::FaultInjected(_))
+    }
 }
 
 impl From<xla::Error> for DeferError {

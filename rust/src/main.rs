@@ -45,6 +45,7 @@ const SWITCHES: &[&str] = &[
     "relay-junctions",
     "batch-adaptive",
     "blocking-io",
+    "recovery",
 ];
 
 fn usage() -> &'static str {
@@ -124,6 +125,14 @@ RUN OPTIONS:
                            0 = auto, min(2, cores))
   --blocking-io            legacy data plane: one parked thread per mesh
                            connection instead of the sharded reactor
+  --recovery               self-healing data plane: replica death degrades
+                           the mesh and lost frames are re-dispatched;
+                           corrupt chunks are repaired by NACK/retry
+  --recovery-window N      max unacknowledged dispatched messages (default 8)
+  --fault SPEC[;SPEC...]   deterministic fault schedule (implies --recovery):
+                           kill:NODE@frame=N | truncate:NODE@frame=N |
+                           corrupt-chunk:p=P[,seed=S]
+                           e.g. --fault \"kill:node1.1@frame=40\"
   --emulated-mflops R      deterministic edge-device emulation: floor each
                            stage's compute to stage_flops/R us (0 = off)
   --slowdown F             legacy multiplicative compute emulation (>=1)
@@ -197,6 +206,13 @@ fn print_report(r: &RunReport) {
             .map(|(w, d)| format!("{w}w/{d}d"))
             .collect();
         println!("  io shards (wakeups/dispatches): {}", shards.join(", "));
+    }
+    if r.replicas_lost > 0 || r.frames_redispatched > 0 || r.chunks_retried > 0 {
+        println!(
+            "  recovery: {} replica(s) lost, {} frame(s) re-dispatched, \
+             {} chunk(s) retried",
+            r.replicas_lost, r.frames_redispatched, r.chunks_retried
+        );
     }
     if let Some(err) = r.reference_error {
         println!("  max |err| vs python reference: {err:.3e}");

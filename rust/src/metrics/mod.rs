@@ -294,6 +294,25 @@ mod tests {
     }
 
     #[test]
+    fn push_error_collapses_consecutive_duplicates() {
+        let m = RunMetrics::new();
+        m.push_error("frame 3 corrupt".into());
+        m.push_error("frame 3 corrupt".into());
+        m.push_error("frame 3 corrupt".into());
+        m.push_error("peer dead".into());
+        m.push_error("frame 3 corrupt".into());
+        let guard = m.errors.lock().unwrap();
+        assert_eq!(
+            *guard,
+            vec![
+                "frame 3 corrupt (x3)".to_string(),
+                "peer dead".to_string(),
+                "frame 3 corrupt".to_string(),
+            ]
+        );
+    }
+
+    #[test]
     fn queue_depth_gauge_tracks_last_and_high_water() {
         let g = QueueDepthGauge::new();
         assert_eq!(g.last(), 0);
@@ -445,10 +464,26 @@ impl RunMetrics {
     /// Record a failed-result message. Recovers a poisoned mutex (a
     /// worker that panicked mid-push during shutdown teardown must not
     /// cascade the panic into every other thread's error reporting).
+    /// Identical consecutive messages collapse into one entry with a
+    /// repetition count — fault-injection runs can emit the same
+    /// per-frame error hundreds of times.
     pub fn push_error(&self, msg: String) {
-        self.errors
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .push(msg);
+        let mut errors = self.errors.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(last) = errors.last_mut() {
+            if *last == msg {
+                *last = format!("{msg} (x2)");
+                return;
+            }
+            if let Some((head, tail)) = last.rsplit_once(" (x") {
+                if head == msg {
+                    if let Some(n) = tail.strip_suffix(')').and_then(|n| n.parse::<u64>().ok())
+                    {
+                        *last = format!("{msg} (x{})", n + 1);
+                        return;
+                    }
+                }
+            }
+        }
+        errors.push(msg);
     }
 }

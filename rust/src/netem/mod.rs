@@ -173,6 +173,172 @@ impl Link {
     }
 }
 
+// ------------------------------------------------------------- Faults
+//
+// `netem` can shape traffic; with fault schedules it can also *break*
+// it, deterministically, so the recovery layer is testable without real
+// hardware churn. A schedule is parsed from `--fault` specs:
+//
+// ```text
+// kill:node1.1@frame=40        replica node1.1 dies when it observes
+//                              global frame >= 40 (conns dropped, thread
+//                              exits — peers see EOF / closed pipes)
+// truncate:node1.1@frame=40    same trigger, but the replica's egress
+//                              writes half of one wire message first, so
+//                              peers see a mid-message EOF
+// corrupt-chunk:p=0.01         each received DFCK container is corrupted
+//                              (one payload byte flipped) with
+//                              probability p, seeded; detected by the
+//                              per-chunk CRC and repaired by NACK/retry
+// corrupt-chunk:p=0.01,seed=7  explicit seed for the corruption PRNG
+// ```
+//
+// All decisions are pure functions of (spec, node name, frame id), so a
+// fault run is reproducible across transports and I/O planes.
+
+/// One parsed `--fault` spec.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Node dies when it observes global frame >= `frame`.
+    Kill { node: String, frame: u64 },
+    /// Node truncates one egress message mid-write at `frame`, then dies.
+    Truncate { node: String, frame: u64 },
+    /// Flip one byte per received chunk container with probability `p`.
+    CorruptChunk { p: f64, seed: u64 },
+}
+
+fn parse_target(kind: &str, rest: &str) -> crate::error::Result<(String, u64)> {
+    let bad = |m: String| crate::error::DeferError::Config(m);
+    let (node, cond) = rest.split_once('@').ok_or_else(|| {
+        bad(format!("{kind} fault wants {kind}:NODE@frame=N, got {rest:?}"))
+    })?;
+    let frame = cond
+        .strip_prefix("frame=")
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| bad(format!("{kind} fault wants @frame=N, got {cond:?}")))?;
+    if node.is_empty() {
+        return Err(bad(format!("{kind} fault wants a node name before '@'")));
+    }
+    Ok((node.to_string(), frame))
+}
+
+impl FaultSpec {
+    pub fn parse(s: &str) -> crate::error::Result<Self> {
+        let bad = |m: String| crate::error::DeferError::Config(m);
+        let (kind, rest) = s
+            .split_once(':')
+            .ok_or_else(|| bad(format!("fault spec {s:?} wants kind:params")))?;
+        match kind {
+            "kill" => {
+                let (node, frame) = parse_target("kill", rest)?;
+                Ok(FaultSpec::Kill { node, frame })
+            }
+            "truncate" => {
+                let (node, frame) = parse_target("truncate", rest)?;
+                Ok(FaultSpec::Truncate { node, frame })
+            }
+            "corrupt-chunk" => {
+                let mut p = None;
+                let mut seed = 0xC0DEu64;
+                for part in rest.split(',') {
+                    match part.split_once('=') {
+                        Some(("p", v)) => {
+                            p = Some(v.parse::<f64>().map_err(|_| {
+                                bad(format!("corrupt-chunk p wants a number, got {v:?}"))
+                            })?)
+                        }
+                        Some(("seed", v)) => {
+                            seed = v.parse::<u64>().map_err(|_| {
+                                bad(format!("corrupt-chunk seed wants an int, got {v:?}"))
+                            })?
+                        }
+                        _ => {
+                            return Err(bad(format!(
+                                "corrupt-chunk wants p=0.01[,seed=N], got {part:?}"
+                            )))
+                        }
+                    }
+                }
+                let p = p.ok_or_else(|| bad("corrupt-chunk wants p=...".into()))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(bad(format!("corrupt-chunk p must be in [0,1], got {p}")));
+                }
+                Ok(FaultSpec::CorruptChunk { p, seed })
+            }
+            other => Err(bad(format!(
+                "unknown fault kind {other:?} (want kill|truncate|corrupt-chunk)"
+            ))),
+        }
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// A full fault schedule: every parsed spec, queryable by node + frame.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn parse(specs: &[String]) -> crate::error::Result<Self> {
+        Ok(FaultPlan {
+            specs: specs
+                .iter()
+                .map(|s| FaultSpec::parse(s))
+                .collect::<crate::error::Result<Vec<_>>>()?,
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Frame at which `node` is scheduled to die (kill fault).
+    pub fn kill_frame(&self, node: &str) -> Option<u64> {
+        self.specs.iter().find_map(|s| match s {
+            FaultSpec::Kill { node: n, frame } if n == node => Some(*frame),
+            _ => None,
+        })
+    }
+
+    /// Frame at which `node` truncates one egress write, then dies.
+    pub fn truncate_frame(&self, node: &str) -> Option<u64> {
+        self.specs.iter().find_map(|s| match s {
+            FaultSpec::Truncate { node: n, frame } if n == node => Some(*frame),
+            _ => None,
+        })
+    }
+
+    /// Deterministic corruption roll for a container received by `node`
+    /// for `frame`: `Some(entropy)` when this (node, frame) is corrupted,
+    /// with entropy bits for picking the byte to flip. A pure function of
+    /// the spec, so both I/O planes corrupt the same frames.
+    pub fn corrupt_roll(&self, node: &str, frame: u64) -> Option<u64> {
+        let (p, seed) = self.specs.iter().find_map(|s| match s {
+            FaultSpec::CorruptChunk { p, seed } => Some((*p, *seed)),
+            _ => None,
+        })?;
+        let h = splitmix64(seed ^ fnv1a(node) ^ frame.wrapping_mul(0x9E37_79B9));
+        // Top 53 bits -> uniform in [0, 1).
+        let roll = (h >> 11) as f64 / (1u64 << 53) as f64;
+        (roll < p).then(|| splitmix64(h))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

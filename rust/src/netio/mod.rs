@@ -44,7 +44,7 @@
 
 pub mod sys;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::os::unix::io::{AsRawFd, RawFd};
@@ -56,10 +56,25 @@ use crate::coordinator::transport::{ReadHalf, WriteHalf};
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
+use crate::runtime::recovery::{ChunkRetryClient, RecoverySupervisor, RetentionRing};
 use crate::threadpool::{pipe, PipeReceiver, PipeSender, TryRecv, TrySend};
-use crate::topology::wiring::{DealSender, MergeReceiver};
+use crate::topology::wiring::{frame_context, DealSender, MergeReceiver};
 use crate::util::bufpool::BufPool;
 use crate::wire::{write_message, FrameAssembler, Message, MessageType};
+
+/// `(is_data, frame, batch)` parsed off a serialized wire buffer's
+/// header — the egress machine reports routing per *delivered* buffer,
+/// and re-parses these three fields rather than threading a side
+/// channel through its queue.
+fn parse_buf_header(buf: &[u8]) -> Option<(bool, u64, u32)> {
+    if buf.len() < crate::wire::HEADER_SIZE {
+        return None;
+    }
+    let is_data = buf[4] == MessageType::Data as u8;
+    let batch = 1 + u32::from_le_bytes([buf[5], buf[6], buf[7], 0]);
+    let frame = u64::from_le_bytes(buf[8..16].try_into().ok()?);
+    Some((is_data, frame, batch))
+}
 
 /// Shared slot a machine stashes its terminal error in; the attached
 /// producer/consumer takes it once the machine's pipe closes.
@@ -197,6 +212,12 @@ enum IngressState {
         drained: Vec<bool>,
         pending: Option<Message>,
     },
+    /// Recovery mode after an observed death: arrival-order merge over
+    /// every conn not yet resolved (`done` = Shutdown seen or peer
+    /// dead), deduplicated via the machine's `seen` set. Ends in one
+    /// merged `Shutdown` once every conn resolved with at least one
+    /// clean Shutdown.
+    Degraded { done: Vec<bool>, shutdowns: usize },
     /// Merged `Shutdown` parked/flushed; close the pipe and retire.
     Finishing,
 }
@@ -204,7 +225,10 @@ enum IngressState {
 /// Schedule-preserving merge as a state machine: reads only the conn
 /// that owns the next global frame, forwards complete messages into a
 /// bounded pipe, parks on pipe backpressure, and reproduces the
-/// blocking [`MergeReceiver`]'s shutdown drain and error labels.
+/// blocking [`MergeReceiver`]'s shutdown drain and error labels. With a
+/// supervisor attached, any observed replica death (its own conns or a
+/// death elsewhere bumping the epoch) degrades a replicated merge to
+/// arrival order, mirroring [`MergeReceiver`]'s degraded mode.
 struct IngressMachine {
     conns: Vec<IngressConn>,
     next: usize,
@@ -214,9 +238,30 @@ struct IngressMachine {
     pool: Option<Arc<BufPool>>,
     err: ErrSlot,
     state: IngressState,
+    recovery: Option<Arc<RecoverySupervisor>>,
+    client: Option<Arc<ChunkRetryClient>>,
+    /// Frames already forwarded (recovery mode only): re-dispatch can
+    /// duplicate frames and duplicates must not be forwarded twice.
+    seen: HashSet<u64>,
+    /// Last global frame forwarded (error context).
+    last_frame: Option<u64>,
 }
 
 impl IngressMachine {
+    /// Note bookkeeping for a data message about to be forwarded.
+    /// Returns false when the frame is a re-dispatched duplicate that
+    /// must be dropped instead.
+    fn admit(&mut self, idx: usize, msg: &Message) -> bool {
+        if self.recovery.is_some() && self.conns.len() > 1 && !self.seen.insert(msg.frame) {
+            return false;
+        }
+        if let Some(client) = &self.client {
+            client.note_provenance(msg.frame, &self.conns[idx].label);
+        }
+        self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+        true
+    }
+
     fn step(&mut self, epfd: RawFd, token: u64) -> Step {
         loop {
             // Flush a message the full pipe parked on a previous step.
@@ -237,9 +282,34 @@ impl IngressMachine {
                 return Step::Done;
             }
             if matches!(self.state, IngressState::Running) {
+                // A death anywhere in the mesh scrambles global arrival
+                // order, so the positional schedule stops being
+                // trustworthy: switch to arrival order. The supervisor's
+                // registered waker re-steps this machine on mark_dead.
+                if let Some(sup) = &self.recovery {
+                    if self.conns.len() > 1 && sup.death_epoch() > 0 {
+                        self.state = IngressState::Degraded {
+                            done: vec![false; self.conns.len()],
+                            shutdowns: 0,
+                        };
+                        continue;
+                    }
+                }
                 let idx = self.next;
                 match self.poll_conn(idx, epfd, token) {
-                    Err(e) => return self.fail(idx, e),
+                    Err(e) => {
+                        if let Some(sup) = self.recovery.clone() {
+                            if self.conns.len() > 1 {
+                                // Scheduled predecessor died: survivable.
+                                sup.mark_dead(&self.conns[idx].label);
+                                let mut done = vec![false; self.conns.len()];
+                                done[idx] = true;
+                                self.state = IngressState::Degraded { done, shutdowns: 0 };
+                                continue;
+                            }
+                        }
+                        return self.fail(idx, e);
+                    }
                     Ok(None) => return Step::Idle,
                     Ok(Some(msg)) => {
                         if msg.msg_type == MessageType::Shutdown {
@@ -251,9 +321,66 @@ impl IngressMachine {
                             };
                         } else {
                             self.next = (self.next + self.step_by) % self.conns.len();
-                            self.parked = Some(msg);
+                            if self.admit(idx, &msg) {
+                                self.parked = Some(msg);
+                            }
                         }
                     }
+                }
+                continue;
+            }
+            if matches!(self.state, IngressState::Degraded { .. }) {
+                let (mut done, mut shutdowns) =
+                    match std::mem::replace(&mut self.state, IngressState::Finishing) {
+                        IngressState::Degraded { done, shutdowns } => (done, shutdowns),
+                        _ => unreachable!("only Degraded reaches here"),
+                    };
+                let mut forwarded = None;
+                let mut blocked = false;
+                'scan: for i in 0..self.conns.len() {
+                    if done[i] {
+                        continue;
+                    }
+                    match self.poll_conn(i, epfd, token) {
+                        Err(_) => {
+                            // Another death: report it, keep merging the
+                            // survivors.
+                            if let Some(sup) = &self.recovery {
+                                sup.mark_dead(&self.conns[i].label);
+                            }
+                            done[i] = true;
+                        }
+                        Ok(None) => blocked = true,
+                        Ok(Some(m)) => {
+                            if m.msg_type == MessageType::Shutdown {
+                                done[i] = true;
+                                shutdowns += 1;
+                            } else if self.admit(i, &m) {
+                                forwarded = Some(m);
+                                break 'scan;
+                            }
+                        }
+                    }
+                }
+                if let Some(m) = forwarded {
+                    self.parked = Some(m);
+                    self.state = IngressState::Degraded { done, shutdowns };
+                    continue;
+                }
+                if done.iter().all(|&d| d) {
+                    if shutdowns == 0 {
+                        return self.fail_raw(DeferError::Coordinator(format!(
+                            "recv{}: no live predecessor remains",
+                            frame_context(self.last_frame)
+                        )));
+                    }
+                    // state is already Finishing; park the merged marker.
+                    self.parked = Some(Message::control(MessageType::Shutdown));
+                    continue;
+                }
+                self.state = IngressState::Degraded { done, shutdowns };
+                if blocked {
+                    return Step::Idle;
                 }
                 continue;
             }
@@ -271,11 +398,26 @@ impl IngressMachine {
                     continue;
                 }
                 match self.poll_conn(i, epfd, token) {
-                    Err(e) => return self.fail(i, e),
+                    Err(e) => {
+                        // With a supervisor a peer may die between its
+                        // last frame and its Shutdown; the stream is
+                        // already complete, so report the death and keep
+                        // draining the rest.
+                        if let Some(sup) = &self.recovery {
+                            sup.mark_dead(&self.conns[i].label);
+                            drained[i] = true;
+                            continue;
+                        }
+                        return self.fail(i, e);
+                    }
                     Ok(None) => blocked = true,
                     Ok(Some(m)) => {
                         if m.msg_type == MessageType::Shutdown {
                             drained[i] = true;
+                        } else if self.recovery.is_some() {
+                            // A re-dispatched duplicate still in flight
+                            // when the stream completed: drop it and
+                            // keep draining toward this conn's Shutdown.
                         } else {
                             return self.fail_raw(DeferError::Coordinator(format!(
                                 "{} sent {:?} after the merged stream ended",
@@ -368,7 +510,10 @@ impl IngressMachine {
 
     fn fail(&mut self, idx: usize, e: DeferError) -> Step {
         let label = &self.conns[idx].label;
-        self.fail_raw(DeferError::Coordinator(format!("recv from {label}: {e}")))
+        let ctx = frame_context(self.last_frame);
+        self.fail_raw(DeferError::Coordinator(format!(
+            "recv from {label}{ctx}: {e}"
+        )))
     }
 
     fn fail_raw(&mut self, e: DeferError) -> Step {
@@ -394,35 +539,75 @@ enum EgressIo {
 enum WriteOut {
     Flushed,
     Pending(Vec<u8>, usize),
-    Failed(DeferError),
+    /// The buffer comes back with the error so a recovering machine can
+    /// reroute it to a surviving successor.
+    Failed(Vec<u8>, DeferError),
 }
 
 /// Drains a FIFO queue of pre-serialized `(conn, bytes)` buffers onto
 /// the wire, resuming partial TCP writes across readiness events. FIFO
 /// consumption preserves the producer's schedule order exactly.
+///
+/// With a supervisor attached, a failed write marks the peer dead and
+/// reroutes the buffer to the next live successor (a control buffer
+/// destined to a dead peer is dropped instead — shutdown markers are
+/// per-conn, not per-frame), and every delivered data buffer is
+/// reported to the supervisor as owed by its actual recipient.
 struct EgressMachine {
     queue: PipeReceiver<(usize, Vec<u8>)>,
     conns: Vec<EgressConn>,
     /// A buffer mid-write: `(conn idx, bytes, bytes already written)`.
     in_flight: Option<(usize, Vec<u8>, usize)>,
     err: ErrSlot,
+    recovery: Option<Arc<RecoverySupervisor>>,
+    /// Last global frame flushed (error context).
+    last_frame: Option<u64>,
 }
 
 impl EgressMachine {
     fn step(&mut self, epfd: RawFd, token: u64) -> Step {
         loop {
             if let Some((idx, buf, written)) = self.in_flight.take() {
+                // Parse before the write: a successful local send moves
+                // the buffer into the pipe.
+                let hdr = parse_buf_header(&buf);
                 match write_step(&mut self.conns[idx], epfd, token, buf, written) {
-                    WriteOut::Flushed => {}
+                    WriteOut::Flushed => {
+                        if let Some((true, frame, batch)) = hdr {
+                            if let Some(sup) = &self.recovery {
+                                sup.note_routed(&self.conns[idx].label, frame, batch);
+                            }
+                            self.last_frame = Some(frame + u64::from(batch.saturating_sub(1)));
+                        }
+                    }
                     WriteOut::Pending(buf, written) => {
                         self.in_flight = Some((idx, buf, written));
                         return Step::Idle;
                     }
-                    WriteOut::Failed(e) => return self.fail(idx, e),
+                    WriteOut::Failed(buf, e) => match self.reroute(idx, buf, e) {
+                        Ok(()) => {}
+                        Err(step) => return step,
+                    },
                 }
             }
             match self.queue.try_recv() {
-                TryRecv::Item((idx, buf)) => self.in_flight = Some((idx, buf, 0)),
+                TryRecv::Item((idx, buf)) => {
+                    // A buffer scheduled to an already-dead successor is
+                    // redirected (data) or dropped (control) up front.
+                    let dead = self
+                        .recovery
+                        .as_ref()
+                        .map(|sup| sup.is_dead(&self.conns[idx].label))
+                        .unwrap_or(false);
+                    if dead {
+                        match self.reroute(idx, buf, DeferError::ChannelClosed("peer dead")) {
+                            Ok(()) => {}
+                            Err(step) => return step,
+                        }
+                    } else {
+                        self.in_flight = Some((idx, buf, 0));
+                    }
+                }
                 // The queue's data waker re-steps us on the next enqueue.
                 TryRecv::Empty => return Step::Idle,
                 // Producer done and everything flushed: retire.
@@ -431,13 +616,50 @@ impl EgressMachine {
         }
     }
 
+    /// A write to `idx` failed (or `idx` is known dead). Without a
+    /// supervisor this retires the machine with a labelled error; with
+    /// one, the peer is marked dead and a data buffer moves to the next
+    /// live successor (control buffers are dropped — already delivered
+    /// per-conn to the survivors).
+    fn reroute(&mut self, idx: usize, buf: Vec<u8>, e: DeferError) -> std::result::Result<(), Step> {
+        let Some(sup) = self.recovery.clone() else {
+            return Err(self.fail(idx, e));
+        };
+        sup.mark_dead(&self.conns[idx].label);
+        let is_data = matches!(parse_buf_header(&buf), Some((true, _, _)));
+        if !is_data {
+            return Ok(());
+        }
+        let n = self.conns.len();
+        let live = (0..n)
+            .map(|k| (idx + 1 + k) % n)
+            .find(|&j| !sup.is_dead(&self.conns[j].label));
+        match live {
+            Some(j) => {
+                self.in_flight = Some((j, buf, 0));
+                Ok(())
+            }
+            None => Err(self.fail_raw(DeferError::Coordinator(format!(
+                "send to {}{}: all {n} successors dead: {e}",
+                self.conns[idx].label,
+                frame_context(self.last_frame)
+            )))),
+        }
+    }
+
     /// Stash a labelled error and retire. Dropping the machine drops the
     /// queue receiver, so the producer's next enqueue fails and it
     /// collects the stashed error from the slot.
     fn fail(&mut self, idx: usize, e: DeferError) -> Step {
         let label = &self.conns[idx].label;
-        *self.err.lock().unwrap() =
-            Some(DeferError::Coordinator(format!("send to {label}: {e}")));
+        let ctx = frame_context(self.last_frame);
+        self.fail_raw(DeferError::Coordinator(format!(
+            "send to {label}{ctx}: {e}"
+        )))
+    }
+
+    fn fail_raw(&mut self, e: DeferError) -> Step {
+        *self.err.lock().unwrap() = Some(e);
         Step::Done
     }
 }
@@ -459,9 +681,10 @@ fn write_step(
             let mut s: &TcpStream = &*stream;
             match s.write(&buf[written..]) {
                 Ok(0) => {
-                    return WriteOut::Failed(DeferError::Io(
-                        std::io::ErrorKind::WriteZero.into(),
-                    ))
+                    return WriteOut::Failed(
+                        buf,
+                        DeferError::Io(std::io::ErrorKind::WriteZero.into()),
+                    )
                 }
                 Ok(n) => written += n,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -471,19 +694,19 @@ fn write_step(
                         sys::EPOLLOUT | sys::EPOLLONESHOT,
                         token,
                     ) {
-                        return WriteOut::Failed(e.into());
+                        return WriteOut::Failed(buf, e.into());
                     }
                     return WriteOut::Pending(buf, written);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => return WriteOut::Failed(e.into()),
+                Err(e) => return WriteOut::Failed(buf, e.into()),
             }
         },
         EgressIo::Local { tx } => match tx.try_send(buf) {
             TrySend::Ok => WriteOut::Flushed,
             TrySend::Full(b) => WriteOut::Pending(b, 0),
-            TrySend::Closed(_) => {
-                WriteOut::Failed(DeferError::ChannelClosed("local conn send"))
+            TrySend::Closed(b) => {
+                WriteOut::Failed(b, DeferError::ChannelClosed("local conn send"))
             }
         },
     }
@@ -501,6 +724,9 @@ pub struct DealSink {
     next: usize,
     step: usize,
     err: ErrSlot,
+    recovery: Option<Arc<RecoverySupervisor>>,
+    ring: Option<Arc<RetentionRing>>,
+    last_frame: Option<u64>,
 }
 
 impl DealSink {
@@ -520,25 +746,61 @@ impl DealSink {
     /// happen here, before the enqueue, so metrics and pacing are
     /// identical to the blocking plane.
     pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
-        let idx = self.next;
+        let scheduled = self.next;
+        self.next = (self.next + self.step) % self.labels.len();
+        // Redirect a send scheduled to an already-dead successor before
+        // serialization so the shaped/counted copy targets a live peer
+        // (the machine re-checks at dequeue for deaths that land later).
+        let idx = match &self.recovery {
+            None => scheduled,
+            Some(sup) => {
+                let n = self.labels.len();
+                match (0..n)
+                    .map(|k| (scheduled + k) % n)
+                    .find(|&j| !sup.is_dead(&self.labels[j]))
+                {
+                    Some(j) => j,
+                    None => {
+                        return Err(DeferError::Coordinator(format!(
+                            "send to {}{}: all {n} successors dead",
+                            self.labels[scheduled],
+                            frame_context(self.last_frame)
+                        )))
+                    }
+                }
+            }
+        };
         let mut buf = Vec::with_capacity(msg.wire_size() as usize);
         write_message(&mut buf, msg, link, counter)?;
         if self.queue.send((idx, buf)).is_err() {
             return Err(self.writer_error(idx));
         }
-        self.next = (self.next + self.step) % self.labels.len();
+        if msg.msg_type == MessageType::Data {
+            if let Some(ring) = &self.ring {
+                ring.push(msg.frame, msg.payload.clone());
+            }
+            self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+        }
         Ok(())
     }
 
     /// Broadcast `Shutdown` to every successor with the blocking plane's
-    /// byte accounting: one shaped/counted copy (index 0), the fan-out
-    /// rest over an ideal link into a throwaway counter.
+    /// byte accounting: one shaped/counted copy (the first live
+    /// successor — index 0 when nothing died), the fan-out rest over an
+    /// ideal link into a throwaway counter. Dead successors are skipped.
     pub fn broadcast_shutdown(&mut self, link: &Link, counter: &ByteCounter) -> Result<()> {
         let msg = Message::control(MessageType::Shutdown);
         let null = ByteCounter::new();
         let ideal = Link::ideal();
+        let mut counted = false;
         for idx in 0..self.labels.len() {
-            let (l, c) = if idx == 0 { (link, counter) } else { (&ideal, &null) };
+            if let Some(sup) = &self.recovery {
+                if sup.is_dead(&self.labels[idx]) {
+                    continue;
+                }
+            }
+            let (l, c) = if counted { (&ideal, &null) } else { (link, counter) };
+            counted = true;
             let mut buf = Vec::with_capacity(msg.wire_size() as usize);
             write_message(&mut buf, &msg, l, c)?;
             if self.queue.send((idx, buf)).is_err() {
@@ -547,6 +809,22 @@ impl DealSink {
                     "shutdown broadcast failed: {e}"
                 )));
             }
+        }
+        Ok(())
+    }
+
+    /// Fault injection: enqueue the first `n` bytes of `msg`'s wire
+    /// encoding (at least 1, at most all-but-one) toward the scheduled
+    /// successor. The caller dies next, so the machine flushes the
+    /// partial message and the conns close — the peer observes a
+    /// mid-message EOF, same as the blocking plane.
+    pub fn send_truncated(&mut self, msg: &Message, n: usize) -> Result<()> {
+        let idx = self.next;
+        let mut buf = Vec::with_capacity(msg.wire_size() as usize);
+        write_message(&mut buf, msg, &Link::ideal(), &ByteCounter::new())?;
+        buf.truncate(n.clamp(1, buf.len().saturating_sub(1)));
+        if self.queue.send((idx, buf)).is_err() {
+            return Err(self.writer_error(idx));
         }
         Ok(())
     }
@@ -660,6 +938,14 @@ impl Reactor {
             let sig = Arc::clone(&shard.signal);
             Arc::new(move || sig.push_ready(token))
         };
+        let recovery = source.recovery_handle();
+        let client = source.chunk_client();
+        if let Some(sup) = &recovery {
+            // A death observed anywhere (even by a blocking endpoint)
+            // must re-step this machine so it notices the epoch bump and
+            // degrades its schedule.
+            sup.register_waker(Arc::clone(&waker));
+        }
         let (conns, labels, next, step) = source.into_parts();
         let mut iconns = Vec::with_capacity(conns.len());
         for (conn, label) in conns.into_iter().zip(labels) {
@@ -695,6 +981,10 @@ impl Reactor {
             pool,
             err: Arc::clone(&err),
             state: IngressState::Running,
+            recovery,
+            client,
+            seen: HashSet::new(),
+            last_frame: None,
         });
         shard.signal.attach(token, machine);
         Ok(err)
@@ -710,6 +1000,14 @@ impl Reactor {
             let sig = Arc::clone(&shard.signal);
             Arc::new(move || sig.push_ready(token))
         };
+        let recovery = sender.recovery_handle();
+        let ring = sender.retention_handle();
+        if let Some(sup) = &recovery {
+            // Deaths observed elsewhere must re-step this machine: a
+            // queued buffer destined to the dead peer needs rerouting
+            // even when no fd reports readiness.
+            sup.register_waker(Arc::clone(&waker));
+        }
         let (conns, labels, next, step) = sender.into_parts();
         let (queue_tx, queue_rx) = pipe::<(usize, Vec<u8>)>(depth.max(1));
         queue_rx.set_data_waker(Arc::clone(&waker));
@@ -733,6 +1031,8 @@ impl Reactor {
             conns: econns,
             in_flight: None,
             err: Arc::clone(&err),
+            recovery: recovery.clone(),
+            last_frame: None,
         });
         shard.signal.attach(token, machine);
         Ok(DealSink {
@@ -741,6 +1041,9 @@ impl Reactor {
             next,
             step,
             err,
+            recovery,
+            ring,
+            last_frame: None,
         })
     }
 }

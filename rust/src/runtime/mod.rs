@@ -11,5 +11,6 @@
 //! by every weight literal in manifest order and unwraps a 1-tuple.
 
 pub mod engine;
+pub mod recovery;
 
 pub use engine::{Engine, Executable};

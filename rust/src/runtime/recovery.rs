@@ -1,0 +1,690 @@
+//! Failure-recovery supervisor: replica death detection, frame
+//! re-dispatch bookkeeping, and chunk-level retry plumbing.
+//!
+//! DEFER replicates each partition across `u` nodes and deals frames
+//! round-robin (`f mod u`), so losing one replica loses a deterministic,
+//! reconstructible subset of in-flight frames. This module turns the
+//! data plane's dead-peer signals (EOF / ECONNRESET, labelled per conn
+//! since PR 7) into recovery instead of abort:
+//!
+//! * **[`RecoverySupervisor`]** — shared run-wide state. Deal/merge
+//!   endpoints report dead peers ([`RecoverySupervisor::mark_dead`]);
+//!   senders report actual routing ([`RecoverySupervisor::note_routed`])
+//!   so the lost set is *exact* (routing under degraded rotations is no
+//!   longer pure `f mod u` math); the dispatcher tracks per-message
+//!   completion and drains the re-dispatch queue. A bounded in-flight
+//!   window ([`RecoverySupervisor::acquire_slot`]) keeps the number of
+//!   unacknowledged frames small so a re-send burst is bounded too.
+//! * **[`RetentionRing`] + [`spawn_nack_responder`]** — the sender side
+//!   of chunk retry: each node retains its last few outbound DFCK
+//!   containers and answers `ChunkNack` control frames with the exact
+//!   chunk span re-sent as `ChunkRetry`.
+//! * **[`ChunkRetryClient`] + [`decode_with_retry`]** — the receiver
+//!   side: a CRC-failed chunk (detected as
+//!   [`DeferError::CorruptChunk`]) is NACKed back to the upstream that
+//!   produced the frame, the span is patched in place, and decode is
+//!   retried within [`CHUNK_RETRY_BUDGET`]; exhaustion escalates to
+//!   whole-frame re-dispatch.
+//!
+//! Frame identity makes ordering survivable: every message carries its
+//! first frame id and batch, so degraded merges deliver arrival order
+//! with dedup by frame id, and re-dispatched messages are byte-identical
+//! re-encodes of the originals (same `(first_frame, batch)` grouping).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::transport::Conn;
+use crate::error::{DeferError, Result};
+use crate::metrics::ByteCounter;
+use crate::netem::{FaultPlan, Link};
+use crate::serial::chunked::chunk_payload_span;
+use crate::threadpool::WorkerPool;
+use crate::wire::{chunk_nack, chunk_retry, parse_chunk_control, MessageType};
+
+/// Re-decodes attempted per corrupt frame before escalating to frame
+/// re-dispatch.
+pub const CHUNK_RETRY_BUDGET: u32 = 3;
+
+/// Default bounded in-flight window (dispatched, unacknowledged
+/// messages) when recovery is enabled.
+pub const DEFAULT_WINDOW: usize = 8;
+
+/// How long `acquire_slot`/`wait_progress` may park with zero progress
+/// before declaring the run wedged.
+const STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+#[derive(Default)]
+struct SupervisorState {
+    /// Labels of peers known dead (e.g. `node1.1 data socket`).
+    dead: HashSet<String>,
+    /// Actual routing: conn label -> messages sent on it, as
+    /// `(first_frame, batch)`. Exact, not schedule-reconstructed.
+    routed: HashMap<String, Vec<(u64, u32)>>,
+    /// Messages the dispatcher has sent and not yet seen complete.
+    sent: HashMap<u64, u32>,
+    /// First-frame ids of completed messages (dedup for duplicates).
+    completed: HashSet<u64>,
+    /// Messages awaiting re-dispatch.
+    redispatch: VecDeque<(u64, u32)>,
+}
+
+/// Run-wide recovery state shared by the dispatcher, every deal/merge
+/// endpoint, and both I/O planes. All methods are `&self`; one `Arc` is
+/// threaded through the wiring.
+pub struct RecoverySupervisor {
+    state: Mutex<SupervisorState>,
+    progress: Condvar,
+    /// Bumped on every death — cheap "did the topology change?" probe
+    /// for loops that must not take the lock per frame.
+    death_epoch: AtomicU64,
+    /// Readiness callbacks (reactor shard signals) fired on death so
+    /// parked machines re-poll their conn sets.
+    wakers: Mutex<Vec<Arc<dyn Fn() + Send + Sync>>>,
+    window: usize,
+    faults: FaultPlan,
+    /// Monotonic progress counter: completions, deaths, and escalations
+    /// bump it. Recovery loops snapshot it to enforce stall timeouts.
+    probe: AtomicU64,
+    frames_redispatched: AtomicU64,
+    chunks_retried: AtomicU64,
+    replicas_lost: AtomicU64,
+}
+
+impl RecoverySupervisor {
+    pub fn new(window: usize, faults: FaultPlan) -> Arc<RecoverySupervisor> {
+        Arc::new(RecoverySupervisor {
+            state: Mutex::new(SupervisorState::default()),
+            progress: Condvar::new(),
+            death_epoch: AtomicU64::new(0),
+            wakers: Mutex::new(Vec::new()),
+            window: window.max(1),
+            faults,
+            probe: AtomicU64::new(0),
+            frames_redispatched: AtomicU64::new(0),
+            chunks_retried: AtomicU64::new(0),
+            replicas_lost: AtomicU64::new(0),
+        })
+    }
+
+    /// The fault schedule for this run (empty when only recovery — not
+    /// injection — is enabled).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Bumped on every `mark_dead`; loops compare against a cached value
+    /// to notice topology changes without locking.
+    pub fn death_epoch(&self) -> u64 {
+        self.death_epoch.load(Ordering::Acquire)
+    }
+
+    pub fn is_dead(&self, label: &str) -> bool {
+        self.state.lock().unwrap().dead.contains(label)
+    }
+
+    /// Report a dead peer. Everything routed to it and not yet completed
+    /// moves to the re-dispatch queue; registered wakers fire so parked
+    /// reactor machines re-examine their conn sets. Idempotent per label.
+    pub fn mark_dead(&self, label: &str) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if !st.dead.insert(label.to_string()) {
+                return;
+            }
+            let lost: Vec<(u64, u32)> = st
+                .routed
+                .get(label)
+                .map(|v| {
+                    v.iter()
+                        .filter(|(f, _)| !st.completed.contains(f))
+                        .copied()
+                        .collect()
+                })
+                .unwrap_or_default();
+            for lf in lost {
+                if !st.redispatch.contains(&lf) {
+                    st.redispatch.push_back(lf);
+                }
+            }
+            self.replicas_lost.fetch_add(1, Ordering::Relaxed);
+            self.death_epoch.fetch_add(1, Ordering::Release);
+            self.probe.fetch_add(1, Ordering::Relaxed);
+            self.progress.notify_all();
+        }
+        let wakers: Vec<_> = self.wakers.lock().unwrap().clone();
+        for w in wakers {
+            w();
+        }
+    }
+
+    /// Register a readiness callback fired (outside the lock) whenever a
+    /// peer dies — the reactor shards hang their signal queues here.
+    pub fn register_waker(&self, w: Arc<dyn Fn() + Send + Sync>) {
+        self.wakers.lock().unwrap().push(w);
+    }
+
+    /// Dispatcher: record a dispatched message awaiting completion.
+    pub fn note_sent(&self, frame: u64, batch: u32) {
+        self.state.lock().unwrap().sent.insert(frame, batch);
+    }
+
+    /// Deal layer: record which conn actually carried a message, so a
+    /// later death of that conn's peer re-dispatches exactly these.
+    ///
+    /// A send can succeed into a peer's kernel buffer in the instant
+    /// after another endpoint reported that peer dead (TCP accepts
+    /// writes to a half-closed socket); such a message was not in the
+    /// routed set `mark_dead` drained, so it is queued for re-dispatch
+    /// here instead of leaking.
+    pub fn note_routed(&self, label: &str, frame: u64, batch: u32) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead.contains(label) {
+            if !st.completed.contains(&frame) && !st.redispatch.contains(&(frame, batch)) {
+                st.redispatch.push_back((frame, batch));
+                self.probe.fetch_add(1, Ordering::Relaxed);
+                self.progress.notify_all();
+            }
+            return;
+        }
+        st.routed
+            .entry(label.to_string())
+            .or_default()
+            .push((frame, batch));
+    }
+
+    /// Dispatcher result path: mark a message complete. Returns true when
+    /// newly completed (false = duplicate delivery, ignore it).
+    pub fn mark_frame_done(&self, frame: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let fresh = st.completed.insert(frame);
+        if fresh {
+            self.probe.fetch_add(1, Ordering::Relaxed);
+            self.progress.notify_all();
+        }
+        fresh
+    }
+
+    /// Monotonic progress counter (completions, deaths, escalations).
+    /// Recovery loops compare snapshots to enforce a stall timeout.
+    pub fn progress_probe(&self) -> u64 {
+        self.probe.load(Ordering::Relaxed)
+    }
+
+    pub fn is_frame_done(&self, frame: u64) -> bool {
+        self.state.lock().unwrap().completed.contains(&frame)
+    }
+
+    /// Chunk retry exhausted (or the frame is otherwise unrecoverable in
+    /// place): queue the whole message for re-dispatch.
+    pub fn escalate_frame(&self, frame: u64, batch: u32) {
+        let mut st = self.state.lock().unwrap();
+        if !st.completed.contains(&frame) && !st.redispatch.contains(&(frame, batch)) {
+            st.redispatch.push_back((frame, batch));
+            self.probe.fetch_add(1, Ordering::Relaxed);
+            self.progress.notify_all();
+        }
+    }
+
+    /// Pop the next message needing re-dispatch, skipping any that
+    /// completed while queued.
+    pub fn take_redispatch(&self) -> Option<(u64, u32)> {
+        let mut st = self.state.lock().unwrap();
+        while let Some((f, b)) = st.redispatch.pop_front() {
+            if !st.completed.contains(&f) {
+                return Some((f, b));
+            }
+        }
+        None
+    }
+
+    /// True once every `note_sent` message has completed.
+    pub fn all_complete(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.sent.keys().all(|f| st.completed.contains(f)) && st.redispatch.is_empty()
+    }
+
+    /// Bounded in-flight window: block until fewer than `window`
+    /// dispatched messages are unacknowledged. Errors if nothing makes
+    /// progress for [`STALL_TIMEOUT`] (a wedged run must not hang the
+    /// process forever).
+    pub fn acquire_slot(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let mut last_progress = Instant::now();
+        loop {
+            let in_flight = st
+                .sent
+                .keys()
+                .filter(|f| !st.completed.contains(f))
+                .count();
+            if in_flight < self.window {
+                return Ok(());
+            }
+            let (next, res) = self
+                .progress
+                .wait_timeout(st, Duration::from_millis(200))
+                .unwrap();
+            st = next;
+            if !res.timed_out() {
+                last_progress = Instant::now();
+            } else if last_progress.elapsed() > STALL_TIMEOUT {
+                return Err(DeferError::Coordinator(format!(
+                    "recovery window stalled: {} messages unacknowledged for {:?}",
+                    self.window, STALL_TIMEOUT
+                )));
+            }
+        }
+    }
+
+    /// Dispatcher recovery loop: park until there is a message to
+    /// re-dispatch, everything completed, or `timeout` elapsed.
+    pub fn wait_progress(&self, timeout: Duration) {
+        let st = self.state.lock().unwrap();
+        if !st.redispatch.is_empty() || st.sent.keys().all(|f| st.completed.contains(f)) {
+            return;
+        }
+        let _ = self.progress.wait_timeout(st, timeout).unwrap();
+    }
+
+    pub fn count_frame_redispatched(&self, frames: u64) {
+        self.frames_redispatched.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    pub fn count_chunk_retried(&self) {
+        self.chunks_retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frames_redispatched(&self) -> u64 {
+        self.frames_redispatched.load(Ordering::Relaxed)
+    }
+
+    pub fn chunks_retried(&self) -> u64 {
+        self.chunks_retried.load(Ordering::Relaxed)
+    }
+
+    pub fn replicas_lost(&self) -> u64 {
+        self.replicas_lost.load(Ordering::Relaxed)
+    }
+}
+
+// -------------------------------------------------------- Chunk retry
+
+/// Sender-side retention: the last `cap` outbound DFCK containers of one
+/// node, keyed by first frame id. The NACK responders cut chunk spans
+/// out of these to answer retries.
+pub struct RetentionRing {
+    inner: Mutex<VecDeque<(u64, Vec<u8>)>>,
+    cap: usize,
+}
+
+impl RetentionRing {
+    pub fn new(cap: usize) -> Arc<RetentionRing> {
+        Arc::new(RetentionRing {
+            inner: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Retain a just-sent container (evicting the oldest beyond `cap`).
+    pub fn push(&self, frame: u64, payload: Vec<u8>) {
+        let mut q = self.inner.lock().unwrap();
+        q.push_back((frame, payload));
+        while q.len() > self.cap {
+            q.pop_front();
+        }
+    }
+
+    /// The wire bytes of chunk `idx` of the retained container for
+    /// `frame`, if still retained.
+    pub fn chunk(&self, frame: u64, idx: u32) -> Option<Vec<u8>> {
+        let q = self.inner.lock().unwrap();
+        let (_, payload) = q.iter().rev().find(|(f, _)| *f == frame)?;
+        let span = chunk_payload_span(payload, idx as usize).ok()?;
+        Some(payload[span].to_vec())
+    }
+}
+
+/// Spawn the sender-side half of chunk retry: a thread that serves
+/// `ChunkNack` requests arriving on `conn` from retained containers,
+/// exiting cleanly when the control conn closes (run teardown).
+pub fn spawn_nack_responder(
+    pool: &mut WorkerPool,
+    name: &str,
+    mut conn: Conn,
+    ring: Arc<RetentionRing>,
+) {
+    let counter = ByteCounter::new();
+    let link = Link::ideal();
+    pool.spawn(name, move || {
+        loop {
+            let req = match conn.recv(&counter) {
+                Ok(m) => m,
+                // Control conn closed: the run is tearing down (or the
+                // requester died) — either way this responder is done.
+                Err(_) => return Ok(()),
+            };
+            if req.msg_type != MessageType::ChunkNack {
+                continue;
+            }
+            let Ok((idx, _)) = parse_chunk_control(&req) else {
+                continue;
+            };
+            let reply = match ring.chunk(req.frame, idx) {
+                Some(bytes) => chunk_retry(req.frame, idx, &bytes),
+                // Evicted or unknown: empty retry — the requester treats
+                // a length mismatch as escalation to frame re-dispatch.
+                None => chunk_retry(req.frame, idx, &[]),
+            };
+            if conn.send(&reply, &link, &counter).is_err() {
+                return Ok(());
+            }
+        }
+    });
+}
+
+/// Receiver-side half of chunk retry: one per consuming endpoint,
+/// holding a control conn per upstream producer plus the provenance map
+/// saying which upstream produced each frame.
+pub struct ChunkRetryClient {
+    conns: Mutex<HashMap<String, Conn>>,
+    provenance: Mutex<HashMap<u64, String>>,
+    supervisor: Arc<RecoverySupervisor>,
+}
+
+impl ChunkRetryClient {
+    pub fn new(supervisor: Arc<RecoverySupervisor>) -> Arc<ChunkRetryClient> {
+        Arc::new(ChunkRetryClient {
+            conns: Mutex::new(HashMap::new()),
+            provenance: Mutex::new(HashMap::new()),
+            supervisor,
+        })
+    }
+
+    pub fn supervisor(&self) -> &Arc<RecoverySupervisor> {
+        &self.supervisor
+    }
+
+    /// Wiring: register the control conn to upstream `label`.
+    pub fn add_upstream(&self, label: &str, conn: Conn) {
+        self.conns.lock().unwrap().insert(label.to_string(), conn);
+    }
+
+    /// Merge/ingress: remember which upstream produced `frame`, so a
+    /// later NACK goes to the right producer.
+    pub fn note_provenance(&self, frame: u64, label: &str) {
+        self.provenance
+            .lock()
+            .unwrap()
+            .insert(frame, label.to_string());
+    }
+
+    /// NACK chunk `idx` of `frame` to its producer and return the
+    /// re-sent span bytes (empty when the producer no longer retains it).
+    pub fn request_chunk(&self, frame: u64, idx: u32) -> Result<Vec<u8>> {
+        let label = self
+            .provenance
+            .lock()
+            .unwrap()
+            .get(&frame)
+            .cloned()
+            .ok_or_else(|| {
+                DeferError::Coordinator(format!("no provenance for frame {frame}"))
+            })?;
+        let mut conns = self.conns.lock().unwrap();
+        let conn = conns.get_mut(&label).ok_or_else(|| {
+            DeferError::Coordinator(format!("no control conn to {label}"))
+        })?;
+        let counter = ByteCounter::new();
+        conn.send(&chunk_nack(frame, idx), &Link::ideal(), &counter)?;
+        let reply = conn.recv(&counter)?;
+        if reply.msg_type != MessageType::ChunkRetry || reply.frame != frame {
+            return Err(DeferError::Wire(format!(
+                "unexpected chunk retry reply: {:?} frame {}",
+                reply.msg_type, reply.frame
+            )));
+        }
+        let (got_idx, bytes) = parse_chunk_control(&reply)?;
+        if got_idx != idx {
+            return Err(DeferError::Wire(format!(
+                "chunk retry answered index {got_idx}, wanted {idx}"
+            )));
+        }
+        Ok(bytes.to_vec())
+    }
+}
+
+/// Decode a DFCK container with chunk-level retry: a
+/// [`DeferError::CorruptChunk`] NACKs exactly that chunk to the frame's
+/// producer, patches the span in place, and re-decodes, up to
+/// [`CHUNK_RETRY_BUDGET`] times. Exhaustion (or a missing client /
+/// unpatchable span) returns the corrupt-chunk error for the caller to
+/// escalate to frame re-dispatch.
+pub fn decode_with_retry<T>(
+    client: Option<&ChunkRetryClient>,
+    frame: u64,
+    payload: &mut Vec<u8>,
+    decode: impl Fn(&[u8]) -> Result<T>,
+) -> Result<T> {
+    let mut budget = CHUNK_RETRY_BUDGET;
+    loop {
+        let err = match decode(payload) {
+            Ok(v) => return Ok(v),
+            Err(e) => e,
+        };
+        let (Some(client), DeferError::CorruptChunk { chunk, .. }) = (client, &err) else {
+            return Err(err);
+        };
+        if budget == 0 {
+            return Err(err);
+        }
+        budget -= 1;
+        let span = chunk_payload_span(payload, *chunk)?;
+        let fresh = client.request_chunk(frame, *chunk as u32)?;
+        if fresh.len() != span.len() {
+            // Producer no longer retains the container (or disagrees on
+            // geometry): unpatchable, escalate.
+            return Err(err);
+        }
+        payload[span].copy_from_slice(&fresh);
+        client.supervisor().count_chunk_retried();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn death_moves_uncompleted_routed_frames_to_redispatch() {
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        for f in 0..6u64 {
+            sup.note_sent(f, 1);
+        }
+        // Frames 0,2,4 went to node1.0; 1,3,5 to node1.1.
+        for f in [0u64, 2, 4] {
+            sup.note_routed("node1.0 data socket", f, 1);
+        }
+        for f in [1u64, 3, 5] {
+            sup.note_routed("node1.1 data socket", f, 1);
+        }
+        assert!(sup.mark_frame_done(1));
+        assert!(!sup.mark_frame_done(1), "duplicate completion detected");
+
+        sup.mark_dead("node1.1 data socket");
+        assert!(sup.is_dead("node1.1 data socket"));
+        assert_eq!(sup.death_epoch(), 1);
+        assert_eq!(sup.replicas_lost(), 1);
+
+        // Only the *uncompleted* frames routed to the dead peer queue up.
+        let mut lost = Vec::new();
+        while let Some(fb) = sup.take_redispatch() {
+            lost.push(fb);
+        }
+        assert_eq!(lost, vec![(3, 1), (5, 1)]);
+    }
+
+    #[test]
+    fn routing_to_an_already_dead_peer_queues_redispatch() {
+        // The send raced mark_dead: the liveness check passed, the write
+        // landed in a doomed kernel buffer, and the routing report came
+        // in after the dead peer's owed frames were drained. The report
+        // itself must queue the frame or it leaks (run stalls).
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        sup.note_sent(4, 1);
+        sup.mark_dead("node1.0 data socket");
+        sup.note_routed("node1.0 data socket", 4, 1);
+        assert_eq!(sup.take_redispatch(), Some((4, 1)));
+        // Completed frames are not resurrected.
+        sup.mark_frame_done(4);
+        sup.note_routed("node1.0 data socket", 4, 1);
+        assert_eq!(sup.take_redispatch(), None);
+    }
+
+    #[test]
+    fn mark_dead_is_idempotent_and_fires_wakers() {
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = Arc::clone(&hits);
+        sup.register_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        sup.mark_dead("node2.0 data socket");
+        sup.mark_dead("node2.0 data socket");
+        assert_eq!(sup.death_epoch(), 1);
+        assert_eq!(sup.replicas_lost(), 1);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn escalation_skips_completed_frames() {
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        sup.note_sent(7, 2);
+        sup.escalate_frame(7, 2);
+        sup.escalate_frame(7, 2); // dedup
+        assert!(!sup.all_complete());
+        assert_eq!(sup.take_redispatch(), Some((7, 2)));
+        assert_eq!(sup.take_redispatch(), None);
+        // Completed while queued: take skips it.
+        sup.escalate_frame(7, 2);
+        sup.mark_frame_done(7);
+        assert_eq!(sup.take_redispatch(), None);
+        assert!(sup.all_complete());
+    }
+
+    #[test]
+    fn window_blocks_until_completion() {
+        let sup = RecoverySupervisor::new(2, FaultPlan::default());
+        sup.note_sent(0, 1);
+        sup.note_sent(1, 1);
+        // Window full: a slot frees once a frame completes.
+        let s2 = Arc::clone(&sup);
+        let h = std::thread::spawn(move || s2.acquire_slot());
+        std::thread::sleep(Duration::from_millis(30));
+        sup.mark_frame_done(0);
+        h.join().unwrap().unwrap();
+    }
+
+    /// A lossless chunked codec + container for `data`, returning
+    /// `(runtime, wire bytes, serialized_len)`.
+    fn container(
+        data: &[f32],
+        chunk_elems: usize,
+    ) -> (crate::serial::Codec, crate::serial::CodecRuntime, Vec<u8>, usize) {
+        let codec = crate::serial::Codec::new(
+            crate::serial::Serialization::Binary,
+            crate::compress::Compression::None,
+        );
+        let rt = crate::serial::CodecRuntime::chunked(chunk_elems, None).unwrap();
+        let (wire, serialized_len) = codec.encode_frame(data, &rt, None);
+        (codec, rt, wire, serialized_len)
+    }
+
+    #[test]
+    fn retention_ring_serves_and_evicts() {
+        // Build a real container so chunk spans are meaningful.
+        let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let (_, _, wire, _) = container(&data, 256);
+        let ring = RetentionRing::new(2);
+        ring.push(10, wire.clone());
+        let span = chunk_payload_span(&wire, 1).unwrap();
+        assert_eq!(ring.chunk(10, 1).unwrap(), wire[span].to_vec());
+        assert!(ring.chunk(11, 0).is_none());
+        // Eviction beyond capacity drops the oldest.
+        ring.push(11, wire.clone());
+        ring.push(12, wire);
+        assert!(ring.chunk(10, 0).is_none());
+        assert!(ring.chunk(12, 0).is_some());
+    }
+
+    #[test]
+    fn nack_responder_round_trip_and_decode_retry() {
+        // A full receiver-side retry: corrupt one chunk byte, decode via
+        // decode_with_retry against a live responder, expect the
+        // original data and one counted retry.
+        let data: Vec<f32> = (0..5000).map(|i| (i % 71) as f32).collect();
+        let (codec, rt, wire, serialized_len) = container(&data, 1024);
+
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        let ring = RetentionRing::new(4);
+        ring.push(3, wire.clone());
+        let (resp_conn, client_conn) = Conn::local_pair(4);
+        let mut pool = WorkerPool::new();
+        spawn_nack_responder(&mut pool, "nack-responder", resp_conn, Arc::clone(&ring));
+
+        let client = ChunkRetryClient::new(Arc::clone(&sup));
+        client.add_upstream("node0 data socket", client_conn);
+        client.note_provenance(3, "node0 data socket");
+
+        let mut corrupted = wire.clone();
+        let span = chunk_payload_span(&wire, 2).unwrap();
+        // Flip a byte inside chunk 2's body (past its per-chunk header).
+        corrupted[span.start + 12 + 5] ^= 0xA5;
+        assert!(codec
+            .decode_frame(&corrupted, serialized_len, data.len(), &rt, None)
+            .is_err());
+
+        let decoded = decode_with_retry(Some(&client), 3, &mut corrupted, |bytes| {
+            codec.decode_frame(bytes, serialized_len, data.len(), &rt, None)
+        })
+        .unwrap();
+        assert_eq!(decoded, data);
+        assert_eq!(sup.chunks_retried(), 1);
+        assert_eq!(corrupted, wire, "patched container is byte-identical");
+
+        drop(client); // closes the control conn; responder exits
+        pool.join().unwrap();
+    }
+
+    #[test]
+    fn decode_retry_budget_escalates() {
+        // A responder that always re-sends the same corrupt span: the
+        // client must give up after CHUNK_RETRY_BUDGET attempts.
+        let data: Vec<f32> = (0..2000).map(|i| i as f32).collect();
+        let (codec, rt, wire, serialized_len) = container(&data, 512);
+        let mut corrupted = wire.clone();
+        let span = chunk_payload_span(&wire, 0).unwrap();
+        corrupted[span.start + 12] ^= 0xFF;
+
+        let sup = RecoverySupervisor::new(8, FaultPlan::default());
+        let ring = RetentionRing::new(4);
+        ring.push(9, corrupted.clone()); // retains the *corrupt* bytes
+        let (resp_conn, client_conn) = Conn::local_pair(4);
+        let mut pool = WorkerPool::new();
+        spawn_nack_responder(&mut pool, "nack-responder", resp_conn, ring);
+        let client = ChunkRetryClient::new(Arc::clone(&sup));
+        client.add_upstream("up", client_conn);
+        client.note_provenance(9, "up");
+
+        let err = decode_with_retry(Some(&client), 9, &mut corrupted, |bytes| {
+            codec.decode_frame(bytes, serialized_len, data.len(), &rt, None)
+        })
+        .unwrap_err();
+        assert!(matches!(err, DeferError::CorruptChunk { .. }));
+        assert_eq!(sup.chunks_retried(), CHUNK_RETRY_BUDGET as u64);
+
+        drop(client);
+        pool.join().unwrap();
+    }
+}

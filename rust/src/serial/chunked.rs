@@ -320,10 +320,13 @@ pub fn decode_frame(
             par_map(rt.pool(), parts, |i, (bytes, mid, chunk_count, expect)| {
                 let actual = crate::wire::crc32::crc32(bytes);
                 if actual != expect {
-                    return Err(DeferError::Codec(format!(
-                        "chunk container: chunk {i} of {n_chunks} corrupt \
-                         (crc {actual:#010x} != {expect:#010x})"
-                    )));
+                    // Structured (not a rendered `Codec` string) so the
+                    // recovery layer can NACK this chunk by index.
+                    return Err(DeferError::CorruptChunk {
+                        chunk: i,
+                        of: n_chunks,
+                        detail: format!("crc {actual:#010x} != {expect:#010x}"),
+                    });
                 }
                 codec.decode_f32s_rt(bytes, mid, chunk_count, rt, None)
             });
@@ -343,6 +346,40 @@ pub fn decode_frame(
         Some(t) => t.time(work),
         None => work(),
     }
+}
+
+/// Byte range of chunk `index`'s wire payload inside a container — the
+/// seam for chunk-level retransmission: the NACK responder extracts these
+/// bytes from its retained clean copy, and the receiver patches them over
+/// its corrupt copy. The spans are identical on both sides because the
+/// container layout is a pure function of the encoded data.
+pub fn chunk_payload_span(wire: &[u8], index: usize) -> Result<std::ops::Range<usize>> {
+    let err = |m: String| DeferError::Codec(format!("chunk container: {m}"));
+    if wire.len() < CONTAINER_HEADER || read_u32(wire, 0) != CHUNK_MAGIC as usize {
+        return Err(err("not a chunk container".into()));
+    }
+    let n_chunks = read_u32(wire, 4);
+    if n_chunks > (wire.len() - CONTAINER_HEADER) / PER_CHUNK_HEADER {
+        return Err(err(format!(
+            "{n_chunks} chunk(s) cannot fit in {} bytes",
+            wire.len()
+        )));
+    }
+    if index >= n_chunks {
+        return Err(err(format!("chunk {index} of {n_chunks} out of range")));
+    }
+    let mut off = CONTAINER_HEADER + n_chunks * PER_CHUNK_HEADER;
+    for i in 0..n_chunks {
+        let wire_len = read_u32(wire, CONTAINER_HEADER + i * PER_CHUNK_HEADER);
+        if wire.len() < off + wire_len {
+            return Err(err(format!("chunk {i} truncated")));
+        }
+        if i == index {
+            return Ok(off..off + wire_len);
+        }
+        off += wire_len;
+    }
+    unreachable!("index bounds checked above")
 }
 
 #[cfg(test)]

@@ -253,6 +253,33 @@ impl<T> PipeReceiver<T> {
         TryRecv::Item(item)
     }
 
+    /// Block until data is queued, the pipe closes, or `timeout` elapses.
+    /// Returns true when an item is ready or the pipe is closed (i.e. a
+    /// `try_recv` now would not report `Empty`); false on timeout. Used by
+    /// the recovery layer to poll a conn without consuming from it.
+    pub fn wait_readable(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() || st.closed {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (next, res) = self
+                .shared
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = next;
+            if res.timed_out() && st.queue.is_empty() && !st.closed {
+                return false;
+            }
+        }
+    }
+
     /// Register the callback fired whenever data may have arrived (an
     /// item was queued, or the pipe closed). Replaces any previous
     /// waker; fired outside the pipe's locks.

@@ -63,15 +63,20 @@
 //! totals are therefore replication-invariant per frame delivered, and
 //! identical across both data planes.
 
+use std::collections::HashSet;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::transport::Conn;
 use crate::error::{DeferError, Result};
 use crate::metrics::ByteCounter;
 use crate::netem::Link;
 use crate::netio::DealSink;
-use crate::threadpool::{PipeReceiver, WorkerPool};
+use crate::runtime::recovery::{
+    spawn_nack_responder, ChunkRetryClient, RecoverySupervisor, RetentionRing,
+};
+use crate::threadpool::{pipe, PipeReceiver, WorkerPool};
 use crate::topology::{StageView, Topology};
 use crate::wire::{Message, MessageType};
 
@@ -87,6 +92,12 @@ pub struct TransportOptions {
     /// replicated boundaries (A/B escape hatch). Default wiring is
     /// worker-owned deal/merge with no relay threads.
     pub relay_junctions: bool,
+    /// Self-healing mode: attach every endpoint to this supervisor
+    /// ([`enable_recovery`]) so replica death degrades the mesh instead
+    /// of failing the run, and wire the chunk-retry control mesh.
+    /// Incompatible with `relay_junctions`. `None` = fail-fast wiring,
+    /// byte-identical to pre-recovery builds.
+    pub recovery: Option<Arc<RecoverySupervisor>>,
 }
 
 impl Default for TransportOptions {
@@ -96,7 +107,23 @@ impl Default for TransportOptions {
             base_port: None,
             pipe_depth: 4,
             relay_junctions: false,
+            recovery: None,
         }
+    }
+}
+
+/// Data containers each sender retains for chunk-level re-send. Sized
+/// comfortably past any pipe depth in use, so a corrupt chunk detected
+/// one backpressure window downstream is still patchable.
+pub const RETENTION_FRAMES: usize = 16;
+
+/// ` (after frame N)` suffix for dead-peer errors: the last global
+/// frame this endpoint moved successfully, so a mid-run death is
+/// locatable in the frame stream without any log correlation.
+pub(crate) fn frame_context(last: Option<u64>) -> String {
+    match last {
+        Some(f) => format!(" (after frame {f})"),
+        None => String::new(),
     }
 }
 
@@ -110,6 +137,13 @@ pub struct DealSender {
     labels: Vec<String>,
     next: usize,
     step: usize,
+    /// Self-healing mode: dead successors are skipped and their
+    /// unacknowledged frames queued for re-dispatch. `None` = fail-fast.
+    recovery: Option<Arc<RecoverySupervisor>>,
+    /// Recent containers retained for chunk-level re-send.
+    ring: Option<Arc<RetentionRing>>,
+    /// Last global frame dealt successfully (error context).
+    last_frame: Option<u64>,
 }
 
 impl DealSender {
@@ -124,7 +158,31 @@ impl DealSender {
             labels,
             next: start % n,
             step: step % n,
+            recovery: None,
+            ring: None,
+            last_frame: None,
         }
+    }
+
+    /// Attach the self-healing supervisor (see [`enable_recovery`]).
+    pub fn set_recovery(&mut self, sup: Arc<RecoverySupervisor>) {
+        self.recovery = Some(sup);
+    }
+
+    /// Attach the retention ring serving chunk re-sends.
+    pub fn set_retention(&mut self, ring: Arc<RetentionRing>) {
+        self.ring = Some(ring);
+    }
+
+    /// The attached supervisor, if any (the reactor plane extracts it
+    /// before [`DealSender::into_parts`]).
+    pub fn recovery_handle(&self) -> Option<Arc<RecoverySupervisor>> {
+        self.recovery.clone()
+    }
+
+    /// The attached retention ring, if any.
+    pub fn retention_handle(&self) -> Option<Arc<RetentionRing>> {
+        self.ring.clone()
     }
 
     /// Wrap one connection (the unreplicated / relay-mode case).
@@ -144,12 +202,71 @@ impl DealSender {
     /// dealt round-robin exactly like single frames and the merge side
     /// restores FIFO order positionally, batch-size-blind. Errors name
     /// the dead peer.
+    ///
+    /// With a supervisor attached, a dead scheduled successor is skipped
+    /// (first live conn scanning forward from the scheduled slot), a
+    /// send that fails marks the peer dead and fails the message over to
+    /// the next live successor, and only when no successor survives does
+    /// the error surface. Routing and retention are reported so the
+    /// supervisor can reconstruct what a dead peer still owed.
     pub fn send_data(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
-        let idx = self.next;
-        self.conns[idx]
-            .send(msg, link, counter)
-            .map_err(|e| DeferError::Coordinator(format!("send to {}: {e}", self.labels[idx])))?;
+        let scheduled = self.next;
         self.next = (self.next + self.step) % self.conns.len();
+        match self.recovery.clone() {
+            None => {
+                self.conns[scheduled].send(msg, link, counter).map_err(|e| {
+                    DeferError::Coordinator(format!(
+                        "send to {}{}: {e}",
+                        self.labels[scheduled],
+                        frame_context(self.last_frame)
+                    ))
+                })?;
+            }
+            Some(sup) => {
+                let n = self.conns.len();
+                let mut at = scheduled;
+                let mut last_err: Option<DeferError> = None;
+                loop {
+                    // Scan +1 (not +step: the schedule step can be 0)
+                    // for the first live successor.
+                    let live = (0..n)
+                        .map(|k| (at + k) % n)
+                        .find(|&j| !sup.is_dead(&self.labels[j]));
+                    let Some(j) = live else {
+                        let detail = last_err
+                            .map(|e| format!(": {e}"))
+                            .unwrap_or_default();
+                        return Err(DeferError::Coordinator(format!(
+                            "send to {}{}: all {n} successors dead{detail}",
+                            self.labels[scheduled],
+                            frame_context(self.last_frame)
+                        )));
+                    };
+                    match self.conns[j].send(msg, link, counter) {
+                        Ok(()) => {
+                            if msg.msg_type == MessageType::Data {
+                                sup.note_routed(&self.labels[j], msg.frame, msg.batch);
+                                if let Some(ring) = &self.ring {
+                                    ring.push(msg.frame, msg.payload.clone());
+                                }
+                            }
+                            break;
+                        }
+                        Err(e) => {
+                            // Death detected mid-send: the supervisor
+                            // queues whatever this peer still owed for
+                            // re-dispatch; this message fails over now.
+                            sup.mark_dead(&self.labels[j]);
+                            last_err = Some(e);
+                            at = (j + 1) % n;
+                        }
+                    }
+                }
+            }
+        }
+        if msg.msg_type == MessageType::Data {
+            self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+        }
         Ok(())
     }
 
@@ -158,17 +275,43 @@ impl DealSender {
     /// hop); the fan-out replicas are wiring fabric and travel over an
     /// ideal link into a throwaway counter, keeping byte totals
     /// replication-invariant and identical to the relay data plane.
+    /// With a supervisor attached, dead successors are skipped (the
+    /// first *live* successor carries the counted copy) and a send that
+    /// fails marks the peer dead instead of failing the broadcast.
     pub fn broadcast_shutdown(&mut self, link: &Link, counter: &ByteCounter) -> Result<()> {
         let msg = Message::control(MessageType::Shutdown);
         let null = ByteCounter::new();
         let ideal = Link::ideal();
+        let mut counted = false;
         for (idx, conn) in self.conns.iter_mut().enumerate() {
-            let (l, c) = if idx == 0 { (link, counter) } else { (&ideal, &null) };
-            conn.send(&msg, l, c).map_err(|e| {
-                DeferError::Coordinator(format!("shutdown to {}: {e}", self.labels[idx]))
-            })?;
+            if let Some(sup) = &self.recovery {
+                if sup.is_dead(&self.labels[idx]) {
+                    continue;
+                }
+            }
+            let (l, c) = if counted { (&ideal, &null) } else { (link, counter) };
+            match conn.send(&msg, l, c) {
+                Ok(()) => counted = true,
+                Err(e) => match &self.recovery {
+                    Some(sup) => sup.mark_dead(&self.labels[idx]),
+                    None => {
+                        return Err(DeferError::Coordinator(format!(
+                            "shutdown to {}: {e}",
+                            self.labels[idx]
+                        )))
+                    }
+                },
+            }
         }
         Ok(())
+    }
+
+    /// Fault injection: write the first `n` bytes of `msg` to the
+    /// scheduled successor, then stop (see [`Conn::send_truncated`]) —
+    /// the caller is about to die and the peer must observe a
+    /// mid-message EOF.
+    pub fn send_truncated(&mut self, msg: &Message, n: usize) -> Result<()> {
+        self.conns[self.next].send_truncated(msg, n)
     }
 
     /// Decompose into `(conns, labels, start, step)` so the reactor data
@@ -192,6 +335,34 @@ pub struct MergeReceiver {
     step: usize,
     /// End of stream already reported (every predecessor shut down).
     drained: bool,
+    /// Self-healing mode: a dead predecessor degrades the merge to
+    /// arrival order instead of failing the run. `None` = fail-fast.
+    recovery: Option<Arc<RecoverySupervisor>>,
+    /// Chunk-retry client for this consuming endpoint (provenance is
+    /// noted per frame so a corrupt chunk can be NACKed to its producer).
+    client: Option<Arc<ChunkRetryClient>>,
+    /// Frames already delivered — re-dispatch can duplicate frames, and
+    /// duplicates must not be delivered twice. Only populated in
+    /// recovery mode on replicated merges.
+    seen: HashSet<u64>,
+    /// Arrival-order pump state, entered on the first observed death.
+    degraded: Option<DegradedMerge>,
+    /// Last global frame merged successfully (error context).
+    last_frame: Option<u64>,
+}
+
+/// Arrival-order merge: one detached pump thread per predecessor conn
+/// feeding a shared pipe. Entered when any replica dies — a death
+/// anywhere in the mesh detours frames around the dead peer, so global
+/// arrival order no longer matches the positional schedule and blocking
+/// on the scheduled conn would deadlock. FIFO *delivery* order is
+/// restored downstream by the dispatcher's completion tracking.
+struct DegradedMerge {
+    rx: PipeReceiver<(usize, Result<Message>)>,
+    /// Conns still expected to resolve (Shutdown or death).
+    open: usize,
+    /// Clean Shutdowns seen so far.
+    shutdowns: usize,
 }
 
 impl MergeReceiver {
@@ -207,7 +378,34 @@ impl MergeReceiver {
             next: start % n,
             step: step % n,
             drained: false,
+            recovery: None,
+            client: None,
+            seen: HashSet::new(),
+            degraded: None,
+            last_frame: None,
         }
+    }
+
+    /// Attach the self-healing supervisor (see [`enable_recovery`]).
+    pub fn set_recovery(&mut self, sup: Arc<RecoverySupervisor>) {
+        self.recovery = Some(sup);
+    }
+
+    /// Attach this endpoint's chunk-retry client.
+    pub fn set_chunk_client(&mut self, client: Arc<ChunkRetryClient>) {
+        self.client = Some(client);
+    }
+
+    /// The attached supervisor, if any (the reactor plane extracts it
+    /// before [`MergeReceiver::into_parts`]).
+    pub fn recovery_handle(&self) -> Option<Arc<RecoverySupervisor>> {
+        self.recovery.clone()
+    }
+
+    /// The attached chunk-retry client, if any (shared with the decode
+    /// stage, which issues the NACKs).
+    pub fn chunk_client(&self) -> Option<Arc<ChunkRetryClient>> {
+        self.client.clone()
     }
 
     /// Wrap one connection (the unreplicated / relay-mode case).
@@ -239,24 +437,87 @@ impl MergeReceiver {
         if self.drained {
             return Err(DeferError::ChannelClosed("merge receiver drained"));
         }
+        if self.degraded.is_some() {
+            return self.recv_degraded();
+        }
+        if let Some(sup) = self.recovery.clone() {
+            if self.conns.len() > 1 {
+                // Poll the scheduled conn with a timeout so a death
+                // anywhere in the mesh is noticed even while blocked on
+                // a quiet peer: frames detour around a dead replica, so
+                // the positional schedule stops matching arrival order
+                // and the merge must switch to arrival order or
+                // deadlock.
+                loop {
+                    if sup.death_epoch() > 0 {
+                        self.enter_degraded();
+                        return self.recv_degraded();
+                    }
+                    if self.conns[self.next].wait_readable(Duration::from_millis(50)) {
+                        break;
+                    }
+                }
+            }
+        }
         let idx = self.next;
-        let msg = self.conns[idx]
-            .recv_pooled(counter, pool)
-            .map_err(|e| DeferError::Coordinator(format!("recv from {}: {e}", self.labels[idx])))?;
+        let msg = match self.conns[idx].recv_pooled(counter, pool) {
+            Ok(m) => m,
+            Err(e) => {
+                if let Some(sup) = self.recovery.clone() {
+                    if self.conns.len() > 1 {
+                        // The scheduled predecessor died: survivable.
+                        sup.mark_dead(&self.labels[idx]);
+                        self.enter_degraded();
+                        return self.recv_degraded();
+                    }
+                }
+                return Err(DeferError::Coordinator(format!(
+                    "recv from {}{}: {e}",
+                    self.labels[idx],
+                    frame_context(self.last_frame)
+                )));
+            }
+        };
         if msg.msg_type == MessageType::Shutdown {
             // The deal is round-robin: a missing frame at this slot means
             // no later slot's frame exists either, so every other conn
             // holds exactly one pending Shutdown. Drain them so peers
             // never block on an unread socket at teardown.
             let labels = &self.labels;
+            let last_frame = self.last_frame;
+            let recovering = self.recovery.is_some();
             for (i, conn) in self.conns.iter_mut().enumerate() {
                 if i == idx {
                     continue;
                 }
-                let trailing = conn.recv(counter).map_err(|e| {
-                    DeferError::Coordinator(format!("recv from {}: {e}", labels[i]))
-                })?;
-                if trailing.msg_type != MessageType::Shutdown {
+                loop {
+                    let trailing = match conn.recv(counter) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            // With a supervisor a peer may die between
+                            // its last frame and its Shutdown; the
+                            // stream is already complete, so just
+                            // report the death.
+                            if let Some(sup) = &self.recovery {
+                                sup.mark_dead(&labels[i]);
+                                break;
+                            }
+                            return Err(DeferError::Coordinator(format!(
+                                "recv from {}{}: {e}",
+                                labels[i],
+                                frame_context(last_frame)
+                            )));
+                        }
+                    };
+                    if trailing.msg_type == MessageType::Shutdown {
+                        break;
+                    }
+                    if recovering {
+                        // A re-dispatched duplicate still in flight when
+                        // the stream completed: drop it and keep
+                        // draining toward this conn's Shutdown.
+                        continue;
+                    }
                     return Err(DeferError::Coordinator(format!(
                         "{} sent {:?} after the merged stream ended",
                         labels[i], trailing.msg_type
@@ -267,7 +528,106 @@ impl MergeReceiver {
             return Ok(msg);
         }
         self.next = (self.next + self.step) % self.conns.len();
+        if self.recovery.is_some() && self.conns.len() > 1 {
+            // Record delivery so a later degraded phase can recognize
+            // re-dispatched duplicates of frames already merged.
+            self.seen.insert(msg.frame);
+        }
+        if let Some(client) = &self.client {
+            client.note_provenance(msg.frame, &self.labels[idx]);
+        }
+        self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
         Ok(msg)
+    }
+
+    /// Switch to arrival-order merging: move every conn into a detached
+    /// pump thread feeding one shared pipe. Pumps exit on Shutdown, on
+    /// conn death, or when the receiver side is dropped.
+    fn enter_degraded(&mut self) {
+        let n = self.conns.len();
+        let (tx, rx) = pipe::<(usize, Result<Message>)>(n.max(4));
+        for (i, mut conn) in self.conns.drain(..).enumerate() {
+            let tx = tx.clone();
+            let name = format!("merge-pump-{}", self.labels[i]);
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || {
+                    let counter = ByteCounter::new();
+                    loop {
+                        match conn.recv(&counter) {
+                            Ok(msg) => {
+                                let stop = msg.msg_type == MessageType::Shutdown;
+                                if tx.send((i, Ok(msg))).is_err() || stop {
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = tx.send((i, Err(e)));
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn merge pump thread");
+        }
+        self.degraded = Some(DegradedMerge {
+            rx,
+            open: n,
+            shutdowns: 0,
+        });
+    }
+
+    /// Arrival-order receive: next frame from any live predecessor,
+    /// deduplicated against everything already merged. End of stream is
+    /// one merged `Shutdown` once every conn resolved (Shutdown or
+    /// death) with at least one clean Shutdown; all predecessors dying
+    /// without one is fatal (nothing can still deliver the stream).
+    fn recv_degraded(&mut self) -> Result<Message> {
+        loop {
+            let d = self.degraded.as_mut().expect("degraded merge state");
+            let Some((i, res)) = d.rx.recv() else {
+                return Err(DeferError::ChannelClosed("merge pumps exited"));
+            };
+            match res {
+                Ok(msg) if msg.msg_type == MessageType::Shutdown => {
+                    d.open -= 1;
+                    d.shutdowns += 1;
+                    if d.open == 0 {
+                        self.drained = true;
+                        return Ok(msg);
+                    }
+                }
+                Ok(msg) => {
+                    if !self.seen.insert(msg.frame) {
+                        continue; // re-dispatched duplicate
+                    }
+                    if let Some(client) = &self.client {
+                        client.note_provenance(msg.frame, &self.labels[i]);
+                    }
+                    self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+                    return Ok(msg);
+                }
+                Err(e) => {
+                    if let Some(sup) = &self.recovery {
+                        sup.mark_dead(&self.labels[i]);
+                    }
+                    d.open -= 1;
+                    if d.open == 0 {
+                        self.drained = true;
+                        if d.shutdowns == 0 {
+                            return Err(DeferError::Coordinator(format!(
+                                "recv from {}{}: {e} (no live predecessor remains)",
+                                self.labels[i],
+                                frame_context(self.last_frame)
+                            )));
+                        }
+                        // Every surviving predecessor already delivered
+                        // its Shutdown; this death ends the stream.
+                        return Ok(Message::control(MessageType::Shutdown));
+                    }
+                }
+            }
+        }
     }
 
     /// Decompose into `(conns, labels, start, step)` so the reactor data
@@ -318,6 +678,15 @@ impl FrameSink {
         match self {
             FrameSink::Direct(_) => 0,
             FrameSink::Queued(s) => s.queue_len(),
+        }
+    }
+
+    /// Fault injection: emit the first `n` bytes of `msg` toward the
+    /// scheduled successor, then stop mid-message (the caller dies next).
+    pub fn send_truncated(&mut self, msg: &Message, n: usize) -> Result<()> {
+        match self {
+            FrameSink::Direct(s) => s.send_truncated(msg, n),
+            FrameSink::Queued(s) => s.send_truncated(msg, n),
         }
     }
 }
@@ -414,10 +783,79 @@ pub struct Wiring {
 
 /// Establish every connection the topology needs, for either transport.
 pub fn build(topo: &Topology, opts: &TransportOptions) -> Result<Wiring> {
-    if opts.tcp {
-        build_tcp(topo, opts.base_port, opts.relay_junctions)
+    if opts.recovery.is_some() && opts.relay_junctions {
+        return Err(DeferError::Config(
+            "recovery needs the worker-owned data plane; drop --relay-junctions".into(),
+        ));
+    }
+    let mut w = if opts.tcp {
+        build_tcp(topo, opts.base_port, opts.relay_junctions)?
     } else {
-        build_local(topo, opts.pipe_depth, opts.relay_junctions)
+        build_local(topo, opts.pipe_depth, opts.relay_junctions)?
+    };
+    if let Some(sup) = &opts.recovery {
+        enable_recovery(&mut w, topo, sup, opts.pipe_depth);
+    }
+    Ok(w)
+}
+
+/// Self-healing post-pass over an assembled worker-owned wiring: attach
+/// the supervisor to every deal/merge endpoint and build the
+/// chunk-retry control mesh.
+///
+/// Per boundary, every sender entity gets one [`RetentionRing`] (its
+/// recent containers, serving re-sends) plus one NACK responder thread
+/// per downstream consumer, and every receiver entity gets a
+/// [`ChunkRetryClient`] holding one control conn per upstream producer.
+/// Control conns are in-process pipes even under TCP — the control
+/// plane is coordinator fabric like the config/weights exchange, not
+/// part of the measured data path (NACK traffic is neither shaped nor
+/// counted). Responder threads live in `Wiring::junctions` and exit
+/// when their client side drops at run teardown.
+fn enable_recovery(w: &mut Wiring, topo: &Topology, sup: &Arc<RecoverySupervisor>, depth: usize) {
+    let s = topo.num_stages();
+    // Worker index offsets per stage (stage-major layout).
+    let mut off = Vec::with_capacity(s);
+    let mut acc = 0usize;
+    for st in topo.stages() {
+        off.push(acc);
+        acc += st.replicas;
+    }
+    for b in 0..=s {
+        let (u, d) = boundary_fan(topo, b);
+        let up_labels = upstream_labels(topo, b);
+        let mut rings = Vec::with_capacity(u);
+        for i in 0..u {
+            let ring = RetentionRing::new(RETENTION_FRAMES);
+            let sender = if b == 0 {
+                &mut w.to_first
+            } else {
+                &mut w.workers[off[b - 1] + i].data_out
+            };
+            sender.set_recovery(Arc::clone(sup));
+            sender.set_retention(Arc::clone(&ring));
+            rings.push(ring);
+        }
+        for j in 0..d {
+            let client = ChunkRetryClient::new(Arc::clone(sup));
+            for (i, label) in up_labels.iter().enumerate() {
+                let (responder_end, client_end) = Conn::local_pair(depth.max(2));
+                client.add_upstream(label, client_end);
+                spawn_nack_responder(
+                    &mut w.junctions,
+                    &format!("nack-b{b}u{i}d{j}"),
+                    responder_end,
+                    Arc::clone(&rings[i]),
+                );
+            }
+            let receiver = if b == s {
+                &mut w.from_last
+            } else {
+                &mut w.workers[off[b] + j].data_in
+            };
+            receiver.set_recovery(Arc::clone(sup));
+            receiver.set_chunk_client(client);
+        }
     }
 }
 
@@ -1184,6 +1622,153 @@ mod tests {
         assert_eq!(from_last.recv(&c).unwrap().msg_type, MessageType::Shutdown);
         pool.join().unwrap();
         w.junctions.join().unwrap();
+    }
+
+    #[test]
+    fn deal_sender_fails_over_to_live_successor() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let (a0, mut b0) = Conn::local_pair(16);
+        let (a1, b1) = Conn::local_pair(16);
+        let labels = vec!["r0".to_string(), "r1".to_string()];
+        let mut deal = DealSender::new(vec![a0, a1], labels, 0, 1);
+        deal.set_recovery(Arc::clone(&sup));
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        deal.send_data(&data_msg(0), &link, &c).unwrap();
+        // r1 dies; frame 1 (scheduled to it) must fail over to r0, and
+        // the death must be reported exactly once.
+        drop(b1);
+        for f in 1..5u64 {
+            deal.send_data(&data_msg(f), &link, &c).unwrap();
+        }
+        assert!(sup.is_dead("r1"));
+        assert!(!sup.is_dead("r0"));
+        assert_eq!(sup.replicas_lost(), 1);
+        deal.broadcast_shutdown(&link, &c).unwrap();
+        // Every frame arrived at r0 exactly once, in send order.
+        for f in 0..5u64 {
+            assert_eq!(b0.recv(&c).unwrap().frame, f);
+        }
+        assert_eq!(b0.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+    }
+
+    #[test]
+    fn deal_sender_without_survivors_reports_all_dead() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let (a0, b0) = Conn::local_pair(4);
+        let mut deal = DealSender::new(vec![a0], vec!["r0".to_string()], 0, 0);
+        deal.set_recovery(sup);
+        drop(b0);
+        let err = deal
+            .send_data(&data_msg(0), &Link::ideal(), &ByteCounter::new())
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("all 1 successors dead"), "{msg}");
+        assert!(msg.contains("r0"), "{msg}");
+    }
+
+    #[test]
+    fn degraded_merge_survives_a_dead_predecessor() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let (mut a0, b0) = Conn::local_pair(16);
+        let (a1, b1) = Conn::local_pair(16);
+        let labels = vec!["p0".to_string(), "p1".to_string()];
+        let mut merge = MergeReceiver::new(vec![b0, b1], labels, 0, 1);
+        merge.set_recovery(Arc::clone(&sup));
+        let link = Link::ideal();
+        let c = ByteCounter::new();
+        // Frame 0 arrives positionally from p0.
+        a0.send(&data_msg(0), &link, &c).unwrap();
+        assert_eq!(merge.recv(&c).unwrap().frame, 0);
+        // p1 dies before delivering frame 1; the re-dispatched frames
+        // (plus a duplicate of frame 0) detour via p0.
+        drop(a1);
+        for f in [1u64, 2, 0, 3] {
+            a0.send(&data_msg(f), &link, &c).unwrap();
+        }
+        a0.send(&Message::control(MessageType::Shutdown), &link, &c)
+            .unwrap();
+        // Degraded merge: frames in arrival order, duplicate dropped,
+        // one merged Shutdown, no error.
+        for f in [1u64, 2, 3] {
+            assert_eq!(merge.recv(&c).unwrap().frame, f);
+        }
+        assert_eq!(merge.recv(&c).unwrap().msg_type, MessageType::Shutdown);
+        assert!(sup.is_dead("p1"));
+        assert!(merge.recv(&c).is_err(), "stream already drained");
+    }
+
+    #[test]
+    fn degraded_merge_with_no_survivors_is_fatal() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let (a0, b0) = Conn::local_pair(4);
+        let (a1, b1) = Conn::local_pair(4);
+        let labels = vec!["p0".to_string(), "p1".to_string()];
+        let mut merge = MergeReceiver::new(vec![b0, b1], labels, 0, 1);
+        merge.set_recovery(sup);
+        drop(a0);
+        drop(a1);
+        let err = merge.recv(&ByteCounter::new()).unwrap_err();
+        assert!(
+            format!("{err}").contains("no live predecessor remains"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn recovery_wiring_attaches_endpoints_and_control_mesh() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let topo = Topology::new(&[1, 2], vec![LinkSpec::ideal(); 3]).unwrap();
+        let w = build(
+            &topo,
+            &TransportOptions {
+                recovery: Some(Arc::clone(&sup)),
+                ..TransportOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(w.to_first.recovery_handle().is_some());
+        assert!(w.to_first.retention_handle().is_some());
+        assert!(w.from_last.chunk_client().is_some());
+        for wc in &w.workers {
+            assert!(wc.data_out.recovery_handle().is_some());
+            assert!(wc.data_in.chunk_client().is_some());
+        }
+        // One NACK responder per (producer, consumer) pair per
+        // boundary: 1x1 + 1x2 + 2x1 = 5.
+        assert_eq!(w.junctions.len(), 5);
+        // Responders exit once every client end drops.
+        let Wiring {
+            control,
+            to_first,
+            from_last,
+            workers,
+            junctions,
+        } = w;
+        drop((control, to_first, from_last, workers));
+        junctions.join().unwrap();
+    }
+
+    #[test]
+    fn recovery_rejects_relay_junctions() {
+        use crate::netem::FaultPlan;
+        let sup = crate::runtime::recovery::RecoverySupervisor::new(8, FaultPlan::default());
+        let topo = Topology::new(&[1, 2], vec![LinkSpec::ideal(); 3]).unwrap();
+        let err = build(
+            &topo,
+            &TransportOptions {
+                recovery: Some(sup),
+                relay_junctions: true,
+                ..TransportOptions::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("relay-junctions"), "{err}");
     }
 
     #[test]

@@ -63,6 +63,11 @@ pub enum MessageType {
     Shutdown = 5,
     /// Configuration acknowledged; node is ready.
     Ready = 6,
+    /// Recovery control: "re-send chunk `i` of frame `f`" (CRC failed).
+    /// Rides the control mesh only — never appears on a fault-free wire.
+    ChunkNack = 7,
+    /// Recovery control: the re-sent chunk bytes answering a NACK.
+    ChunkRetry = 8,
 }
 
 impl MessageType {
@@ -74,9 +79,65 @@ impl MessageType {
             4 => MessageType::ResultMsg,
             5 => MessageType::Shutdown,
             6 => MessageType::Ready,
+            7 => MessageType::ChunkNack,
+            8 => MessageType::ChunkRetry,
             other => return Err(DeferError::Wire(format!("bad message type {other}"))),
         })
     }
+}
+
+/// Build a chunk NACK: "frame `frame`, chunk `chunk` failed its CRC —
+/// re-send it". The chunk index travels in the payload (4 bytes LE) so
+/// the header keeps its standard layout.
+pub fn chunk_nack(frame: u64, chunk: u32) -> Message {
+    Message {
+        msg_type: MessageType::ChunkNack,
+        frame,
+        serialized_len: 0,
+        count: 0,
+        batch: 1,
+        payload: chunk.to_le_bytes().to_vec(),
+    }
+}
+
+/// Build the reply to a NACK: the retained wire bytes of exactly that
+/// chunk (per-chunk header + body, as cut by
+/// [`crate::serial::chunked::chunk_payload_span`]).
+pub fn chunk_retry(frame: u64, chunk: u32, bytes: &[u8]) -> Message {
+    let mut payload = Vec::with_capacity(4 + bytes.len());
+    payload.extend_from_slice(&chunk.to_le_bytes());
+    payload.extend_from_slice(bytes);
+    Message {
+        msg_type: MessageType::ChunkRetry,
+        frame,
+        serialized_len: bytes.len() as u64,
+        count: 0,
+        batch: 1,
+        payload,
+    }
+}
+
+/// Parse a `ChunkNack`/`ChunkRetry` payload into (chunk index, trailing
+/// bytes). For a NACK the trailing slice is empty; for a retry it is the
+/// re-sent chunk span. Anything else is a protocol violation.
+pub fn parse_chunk_control(msg: &Message) -> Result<(u32, &[u8])> {
+    if !matches!(
+        msg.msg_type,
+        MessageType::ChunkNack | MessageType::ChunkRetry
+    ) {
+        return Err(DeferError::Wire(format!(
+            "expected chunk control frame, got {:?}",
+            msg.msg_type
+        )));
+    }
+    if msg.payload.len() < 4 {
+        return Err(DeferError::Wire(format!(
+            "chunk control payload too short: {} bytes",
+            msg.payload.len()
+        )));
+    }
+    let chunk = u32::from_le_bytes(msg.payload[0..4].try_into().unwrap());
+    Ok((chunk, &msg.payload[4..]))
 }
 
 /// A framed message (header + owned payload).
@@ -491,6 +552,30 @@ mod tests {
             payload: rng.bytes(CHUNK_SIZE * 2 + 777),
         };
         assert_eq!(round_trip(&msg), msg);
+    }
+
+    #[test]
+    fn chunk_control_round_trip() {
+        let nack = chunk_nack(42, 7);
+        let got = round_trip(&nack);
+        assert_eq!(got, nack);
+        let (idx, rest) = parse_chunk_control(&got).unwrap();
+        assert_eq!((idx, rest.len()), (7, 0));
+
+        let retry = chunk_retry(42, 7, &[9, 8, 7, 6, 5]);
+        let got = round_trip(&retry);
+        let (idx, bytes) = parse_chunk_control(&got).unwrap();
+        assert_eq!(idx, 7);
+        assert_eq!(bytes, &[9, 8, 7, 6, 5]);
+    }
+
+    #[test]
+    fn chunk_control_rejects_wrong_type_and_short_payload() {
+        let msg = Message::control(MessageType::Data);
+        assert!(parse_chunk_control(&msg).is_err());
+        let mut short = Message::control(MessageType::ChunkNack);
+        short.payload = vec![1, 2];
+        assert!(parse_chunk_control(&short).is_err());
     }
 
     #[test]

@@ -76,6 +76,7 @@ fn spawn_worker(
             pipelined: true,
             pipe_depth: 4,
             payload_pool: None,
+            recovery: None,
         };
         let result = run_codec_pipeline(rx, data_out, ctx, move |values, batch| {
             // A batch arrives as one stacked payload: b whole frames.
@@ -118,6 +119,7 @@ fn harness(replicas: &[usize], tcp: bool) -> Harness {
             base_port: None,
             pipe_depth: 4,
             relay_junctions: false,
+            recovery: None,
         },
     )
     .unwrap();

@@ -67,6 +67,7 @@ fn spawn_worker(
             pipelined,
             pipe_depth: 4,
             payload_pool: None,
+            recovery: None,
         };
         let result = run_codec_pipeline(rx, data_out, ctx, move |values, _batch| {
             // Jitter compute per frame & replica so a lost ordering
@@ -108,6 +109,7 @@ fn run_topology(
             base_port: None,
             pipe_depth: 4,
             relay_junctions,
+            recovery: None,
         },
     )
     .unwrap();

@@ -1,0 +1,415 @@
+//! Self-healing data-plane suite: injected churn (artifact-free).
+//!
+//! Drives full inference runs — real topology wiring, synthetic
+//! pipelined workers, both transports, both I/O planes — under the
+//! `netem` fault schedules, and asserts the recovery contract from the
+//! module docs of `runtime::recovery`:
+//!
+//! * **Replica kill**: a scheduled replica death mid-run degrades the
+//!   mesh to the survivors, the supervisor re-dispatches every frame
+//!   the dead replica still owed, and the run completes with all frames
+//!   bit-identical to a fault-free run (0.0 recorded reference error).
+//! * **Chunk corruption**: a corrupt DFCK chunk is NACKed back to its
+//!   producer, patched in place from the retention ring, and decoded
+//!   within the retry budget — no frame loss, no re-dispatch needed.
+//! * **Egress truncation**: a replica that writes half a message and
+//!   dies surfaces as a mid-message EOF at its consumer and recovers
+//!   exactly like a kill.
+//! * **Inertness**: with recovery enabled but no faults scheduled, all
+//!   recovery counters stay zero and the run is just a run.
+//!
+//! Fault schedules are deterministic (seeded), so each test is exactly
+//! reproducible — no flaky churn.
+
+use std::sync::Arc;
+
+use defer::compress::Compression;
+use defer::coordinator::dispatcher::{run_inference, DispatcherStats, InferenceOptions};
+use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx, PipelineRecovery};
+use defer::energy::EnergyModel;
+use defer::metrics::ByteCounter;
+use defer::netem::{FaultPlan, Link, LinkSpec};
+use defer::netio::Reactor;
+use defer::runtime::recovery::RecoverySupervisor;
+use defer::serial::{Codec, CodecRuntime, Serialization};
+use defer::tensor::Tensor;
+use defer::threadpool::pipe;
+use defer::topology::wiring::{
+    build, FrameSink, FrameSource, TransportOptions, Wiring, WorkerConns,
+};
+use defer::topology::Topology;
+use defer::util::timer::SharedTimer;
+use defer::wire::{Message, MessageType};
+
+const ELEMS: usize = 64;
+
+/// Spawn one synthetic worker (elementwise `v -> 2v + 1`) with the
+/// self-healing hooks attached: the node name keys the fault schedule,
+/// and the chunk-retry client (extracted from the merge set before the
+/// conns move) lets its decode stage NACK corrupt chunks upstream. A
+/// scheduled death ([`defer::error::DeferError::FaultInjected`]) is a
+/// *planned* exit, not a failure — the worker reports success and lets
+/// its dropped conns carry the EOF the survivors react to.
+fn spawn_worker(
+    wc: WorkerConns,
+    codec: Codec,
+    rt: CodecRuntime,
+    sup: Arc<RecoverySupervisor>,
+    reactor: Option<Arc<Reactor>>,
+) -> std::thread::JoinHandle<defer::Result<()>> {
+    std::thread::spawn(move || {
+        let WorkerConns {
+            view,
+            config: _config,
+            weights: _weights,
+            data_in,
+            data_out,
+        } = wc;
+        let client = data_in.chunk_client();
+        let (tx, rx) = pipe::<Message>(4);
+        let mut reader = None;
+        let out: FrameSink = match &reactor {
+            Some(r) => {
+                r.register_ingress(data_in, tx, None)?;
+                r.register_egress(data_out, 4)?.into()
+            }
+            None => {
+                let mut in_conn = data_in;
+                reader = Some(std::thread::spawn(move || loop {
+                    match in_conn.recv(&ByteCounter::new()) {
+                        Ok(msg) => {
+                            let stop = msg.msg_type == MessageType::Shutdown;
+                            if tx.send(msg).is_err() || stop {
+                                return;
+                            }
+                        }
+                        Err(_) => return,
+                    }
+                }));
+                data_out.into()
+            }
+        };
+        let ctx = PipelineCtx {
+            name: view.name.clone(),
+            codec,
+            rt,
+            overhead: SharedTimer::new(),
+            data_tx: ByteCounter::new(),
+            frames: ByteCounter::new(),
+            out_link: Arc::new(Link::ideal()),
+            pipelined: true,
+            pipe_depth: 4,
+            payload_pool: None,
+            recovery: Some(PipelineRecovery {
+                supervisor: sup,
+                client,
+            }),
+        };
+        let result = run_codec_pipeline(rx, out, ctx, |values, _batch| {
+            Ok(values.iter().map(|v| v * 2.0 + 1.0).collect())
+        });
+        match result {
+            // A scheduled kill/truncation is the test harness at work.
+            Err(e) if e.is_fault_injection() => Ok(()),
+            other => {
+                if let Some(h) = reader {
+                    h.join().expect("reader thread");
+                }
+                other
+            }
+        }
+    })
+}
+
+/// Each stage applies v -> 2v + 1; fold that over the chain depth.
+fn expect_value(input: f32, stages: usize) -> f32 {
+    let mut v = input;
+    for _ in 0..stages {
+        v = v * 2.0 + 1.0;
+    }
+    v
+}
+
+/// Run one full recovery-mode inference under a fault schedule and
+/// assert it completes every frame bit-identically (0.0 recorded
+/// reference error). Returns the supervisor for counter assertions.
+fn run_with_faults(
+    replicas: &[usize],
+    tcp: bool,
+    blocking: bool,
+    frames: u64,
+    batch: usize,
+    specs: &[&str],
+    rt: CodecRuntime,
+) -> Arc<RecoverySupervisor> {
+    let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+    let plan = FaultPlan::parse(&specs).unwrap();
+    let sup = RecoverySupervisor::new(8, plan);
+    let reactor = if blocking {
+        None
+    } else {
+        Some(Reactor::new(2).unwrap())
+    };
+    let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
+    let topo = Topology::new(replicas, hop_links).unwrap();
+    let Wiring {
+        control,
+        to_first,
+        from_last,
+        workers,
+        junctions,
+    } = build(
+        &topo,
+        &TransportOptions {
+            tcp,
+            base_port: None,
+            pipe_depth: 4,
+            relay_junctions: false,
+            recovery: Some(Arc::clone(&sup)),
+        },
+    )
+    .unwrap();
+    drop(control); // no configuration phase for synthetic workers
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let workers: Vec<_> = workers
+        .into_iter()
+        .map(|wc| {
+            spawn_worker(wc, codec, rt.clone(), Arc::clone(&sup), reactor.clone())
+        })
+        .collect();
+
+    let stages = replicas.len();
+    let input = Tensor::new(vec![ELEMS], vec![3.0; ELEMS]).unwrap();
+    let expected =
+        Tensor::new(vec![ELEMS], vec![expect_value(3.0, stages); ELEMS]).unwrap();
+    let stats = Arc::new(DispatcherStats::new(EnergyModel::default()));
+    // The dispatcher's own decode path NACKs corrupt result chunks to
+    // the last stage through the merge set's retry client.
+    let dispatcher_client = from_last.chunk_client();
+    let opts = InferenceOptions {
+        rt: rt.clone(),
+        pipelined: true,
+        pipe_depth: 4,
+        batch,
+        recovery: Some(PipelineRecovery {
+            supervisor: Arc::clone(&sup),
+            client: dispatcher_client,
+        }),
+        ..InferenceOptions::default()
+    };
+    match &reactor {
+        Some(r) => {
+            let sink: FrameSink = r.register_egress(to_first, 4).unwrap().into();
+            let (res_tx, res_rx) = pipe::<Message>(4);
+            let err = r.register_ingress(from_last, res_tx, None).unwrap();
+            let source = FrameSource::Queued { rx: res_rx, err };
+            run_inference(
+                input,
+                frames,
+                sink,
+                source,
+                opts,
+                Arc::new(Link::ideal()),
+                Arc::clone(&stats),
+                Some(expected),
+                vec![ELEMS],
+            )
+            .unwrap();
+        }
+        None => {
+            run_inference(
+                input,
+                frames,
+                to_first,
+                from_last,
+                opts,
+                Arc::new(Link::ideal()),
+                Arc::clone(&stats),
+                Some(expected),
+                vec![ELEMS],
+            )
+            .unwrap();
+        }
+    }
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+    // Reactor first: its retired machines hold the chunk-retry clients,
+    // and the NACK responders in `junctions` exit only when those drop.
+    drop(reactor);
+    junctions.join().unwrap();
+
+    // Every frame completed exactly once, bit-identical to fault-free.
+    assert_eq!(stats.clock.cycles(), frames, "dropped or duplicated frames");
+    assert_eq!(stats.latency.count(), frames, "latency samples");
+    assert_eq!(
+        *stats.reference_error.lock().unwrap(),
+        Some(0.0),
+        "recovered frames not bit-exact"
+    );
+    sup
+}
+
+// ---------------------------------------------------------------------
+// Replica kill: u=2, one replica dies mid-run, all frames complete.
+// ---------------------------------------------------------------------
+
+/// The tentpole acceptance run: kill the second stage-0 replica once it
+/// observes frame 6 of 16. Frames dealt to it and not yet merged must
+/// be re-dispatched to the survivor, bit-identically.
+fn kill_mid_run(tcp: bool, blocking: bool) {
+    let sup = run_with_faults(
+        &[2],
+        tcp,
+        blocking,
+        16,
+        1,
+        &["kill:node0.1@frame=6"],
+        CodecRuntime::serial(),
+    );
+    assert_eq!(sup.replicas_lost(), 1, "death not detected");
+    assert!(
+        sup.frames_redispatched() >= 1,
+        "the killed replica's owed frames were never re-dispatched"
+    );
+    assert!(sup.is_dead("node0.1 data socket"));
+}
+
+#[test]
+fn replica_kill_recovers_local_blocking() {
+    kill_mid_run(false, true);
+}
+
+#[test]
+fn replica_kill_recovers_local_reactor() {
+    kill_mid_run(false, false);
+}
+
+#[test]
+fn replica_kill_recovers_tcp_blocking() {
+    kill_mid_run(true, true);
+}
+
+#[test]
+fn replica_kill_recovers_tcp_reactor() {
+    kill_mid_run(true, false);
+}
+
+#[test]
+fn replica_kill_recovers_with_batching() {
+    // Batched messages re-dispatch as whole (first_frame, batch) units.
+    let sup = run_with_faults(
+        &[2],
+        false,
+        true,
+        16,
+        4,
+        &["kill:node0.1@frame=6"],
+        CodecRuntime::serial(),
+    );
+    assert_eq!(sup.replicas_lost(), 1);
+    // The kill lands on a 4-frame message; its re-dispatch counts all 4.
+    assert!(sup.frames_redispatched() >= 4);
+}
+
+#[test]
+fn interior_replica_kill_degrades_downstream_merge() {
+    // [2, 1]: the *worker-side* merge (node1's ingress) detects the
+    // death and switches to arrival order; re-dispatched frames detour
+    // through the surviving replica and dedup downstream.
+    let sup = run_with_faults(
+        &[2, 1],
+        false,
+        true,
+        16,
+        1,
+        &["kill:node0.1@frame=5"],
+        CodecRuntime::serial(),
+    );
+    assert!(sup.replicas_lost() >= 1);
+    assert!(sup.frames_redispatched() >= 1);
+}
+
+// ---------------------------------------------------------------------
+// Chunk corruption: NACK + in-place patch inside the retry budget.
+// ---------------------------------------------------------------------
+
+/// Corrupt roughly half of all DFCK containers at the worker's ingress
+/// (deterministic seed). Every one must be patched from the producer's
+/// retention ring — zero frame loss, zero re-dispatch required.
+fn corrupt_chunks(blocking: bool) {
+    let rt = CodecRuntime::chunked(16, None).unwrap(); // 64 elems -> 4 chunks
+    let sup = run_with_faults(
+        &[1],
+        false,
+        blocking,
+        24,
+        1,
+        &["corrupt-chunk:p=0.5,seed=7"],
+        rt,
+    );
+    assert!(
+        sup.chunks_retried() >= 1,
+        "no chunk retry despite p=0.5 corruption"
+    );
+    assert_eq!(sup.replicas_lost(), 0);
+}
+
+#[test]
+fn corrupt_chunks_retry_in_place_blocking() {
+    corrupt_chunks(true);
+}
+
+#[test]
+fn corrupt_chunks_retry_in_place_reactor() {
+    corrupt_chunks(false);
+}
+
+// ---------------------------------------------------------------------
+// Egress truncation: half a message, then death — a mid-message EOF.
+// ---------------------------------------------------------------------
+
+#[test]
+fn truncated_egress_recovers_like_a_kill() {
+    let sup = run_with_faults(
+        &[2],
+        false,
+        true,
+        16,
+        1,
+        &["truncate:node0.0@frame=5"],
+        CodecRuntime::serial(),
+    );
+    assert_eq!(sup.replicas_lost(), 1, "mid-message EOF not detected");
+    assert!(sup.frames_redispatched() >= 1);
+    assert!(sup.is_dead("node0.0 data socket"));
+}
+
+// ---------------------------------------------------------------------
+// Inertness: recovery enabled, no faults scheduled.
+// ---------------------------------------------------------------------
+
+fn fault_free(blocking: bool) {
+    let sup = run_with_faults(
+        &[2, 1],
+        false,
+        blocking,
+        20,
+        2,
+        &[],
+        CodecRuntime::serial(),
+    );
+    assert_eq!(sup.replicas_lost(), 0);
+    assert_eq!(sup.frames_redispatched(), 0);
+    assert_eq!(sup.chunks_retried(), 0);
+}
+
+#[test]
+fn fault_free_recovery_run_counts_nothing_blocking() {
+    fault_free(true);
+}
+
+#[test]
+fn fault_free_recovery_run_counts_nothing_reactor() {
+    fault_free(false);
+}

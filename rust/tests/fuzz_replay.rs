@@ -2,7 +2,8 @@
 //!
 //! `rust/fuzz/` carries real cargo-fuzz targets for the parsers on the
 //! hostile-input boundary (wire headers, frame assembly, the DFCK chunk
-//! container, ZFP and LZ4 decode). CI cannot run a coverage-guided
+//! container, the recovery NACK/retry control frames, ZFP and LZ4
+//! decode). CI cannot run a coverage-guided
 //! fuzzer, so this test regenerates the seed corpus those targets start
 //! from — valid artifacts plus systematic truncations and deterministic
 //! byte/bit flips — and replays every case through the same entry
@@ -10,12 +11,14 @@
 //! come back `Ok` or `Err`, never a panic, out-of-bounds, or runaway
 //! allocation.
 
-use defer::compress::lz4;
+use defer::compress::{lz4, Compression};
 use defer::serial::chunked::{self, CodecRuntime};
 use defer::serial::zfp::{self, ZfpRate};
-use defer::serial::{Codec, CodecKernel};
+use defer::serial::{Codec, CodecKernel, Serialization};
 use defer::util::prng::Rng;
-use defer::wire::{crc32, FrameAssembler, Header, HEADER_SIZE};
+use defer::wire::{
+    crc32, parse_chunk_control, FrameAssembler, Header, Message, MessageType, HEADER_SIZE,
+};
 
 /// Refuse to let a mutated length field turn the replay into an OOM:
 /// corpus cases whose parsed payload length exceeds this are still fed
@@ -160,6 +163,42 @@ fn replay_chunk_container(
     let _ = chunked::decode_frame(codec, case, 1, 7, rt, None);
 }
 
+/// Mirror of `fuzz_targets/fuzz_chunk_control.rs`: the NACK/retry
+/// control-frame parser plus the chunk span cutter it feeds, via both
+/// the CRC-gated wire path and the in-process direct path.
+fn replay_chunk_control(case: &[u8]) {
+    if case.len() >= HEADER_SIZE {
+        let raw: [u8; HEADER_SIZE] = case[..HEADER_SIZE].try_into().unwrap();
+        if let Ok(h) = Header::parse(&raw) {
+            if h.wire_len <= MAX_REPLAY_PAYLOAD {
+                if let Ok(msg) = h.into_message(case[HEADER_SIZE..].to_vec()) {
+                    if let Ok((idx, span)) = parse_chunk_control(&msg) {
+                        let _ = chunked::chunk_payload_span(span, idx as usize);
+                    }
+                }
+            }
+        }
+    }
+    if case.len() >= 13 {
+        let msg_type = if case[0] & 1 == 0 {
+            MessageType::ChunkNack
+        } else {
+            MessageType::ChunkRetry
+        };
+        let msg = Message {
+            msg_type,
+            frame: u64::from_le_bytes(case[1..9].try_into().unwrap()),
+            serialized_len: 0,
+            count: 0,
+            batch: 1,
+            payload: case[9..].to_vec(),
+        };
+        if let Ok((idx, span)) = parse_chunk_control(&msg) {
+            let _ = chunked::chunk_payload_span(span, idx as usize);
+        }
+    }
+}
+
 fn replay_zfp(case: &[u8]) {
     for kernel in [CodecKernel::Scalar, CodecKernel::Batched] {
         let _ = zfp::decode_kernel(case, kernel);
@@ -215,6 +254,50 @@ fn chunk_container_survives_corpus() {
             for case in mutations(seed, &mut rng) {
                 replay_chunk_container(&case, &codec, &rt, mid, count);
             }
+        }
+    }
+}
+
+#[test]
+fn chunk_control_frames_survive_corpus() {
+    let mut rng = Rng::new(8205);
+    // A genuine retry answers a NACK with the retained wire bytes of
+    // exactly one chunk — cut a real span so the unmutated seed drives
+    // the accepted path end to end.
+    let rt = CodecRuntime::chunked(256, None).unwrap();
+    let codec = Codec::new(Serialization::Binary, Compression::None);
+    let data: Vec<f32> = (0..600).map(|_| rng.normal_f32()).collect();
+    let (container, _mid) = chunked::encode_frame(&codec, &data, &rt, None);
+    let span = chunked::chunk_payload_span(&container, 1).unwrap();
+    let mut retry_payload = 1u32.to_le_bytes().to_vec();
+    retry_payload.extend_from_slice(&container[span.clone()]);
+
+    // Positive path: the parser recovers the index and span verbatim.
+    let msg = defer::wire::chunk_retry(9, 1, &container[span.clone()]);
+    let (idx, bytes) = parse_chunk_control(&msg).unwrap();
+    assert_eq!(idx, 1);
+    assert_eq!(bytes, &container[span]);
+
+    let mut seeds = Vec::new();
+    // Wire-framed NACK (type 7) and retry (type 8).
+    seeds.push(build_wire_frame(7, 3, 0, 0, &1u32.to_le_bytes()));
+    seeds.push(build_wire_frame(8, 3, 0, 0, &retry_payload));
+    // Direct-path seeds: selector byte + frame id + control payload.
+    let mut direct = vec![1u8];
+    direct.extend_from_slice(&3u64.to_le_bytes());
+    direct.extend_from_slice(&retry_payload);
+    seeds.push(direct);
+    // A retry whose trailing bytes are a whole container (index aimed at
+    // the span cutter's bounds checks), and raw noise.
+    let mut whole = vec![1u8];
+    whole.extend_from_slice(&3u64.to_le_bytes());
+    whole.extend_from_slice(&u32::MAX.to_le_bytes());
+    whole.extend_from_slice(&container);
+    seeds.push(whole);
+    seeds.push(rng.bytes(64));
+    for seed in &seeds {
+        for case in mutations(seed, &mut rng) {
+            replay_chunk_control(&case);
         }
     }
 }

@@ -12,7 +12,9 @@
 //!    driven end-to-end by reactor endpoints come back in global frame
 //!    order, with the merged shutdown marker trailing.
 //! 3. Failure labels: a dead peer surfaces as `send to {peer}` /
-//!    `recv from {peer}`, exactly like the blocking plane.
+//!    `recv from {peer}`, exactly like the blocking plane — including a
+//!    peer that dies *mid-run*, which must fail fast with exactly one
+//!    root-cause error naming the peer and the last healthy frame.
 //! 4. Teardown: a zero-frame run drains its shutdown broadcast cleanly.
 //! 5. Thread bill: a u=d=4 mesh runs on 2 shards where the blocking
 //!    plane parks one reader per worker.
@@ -44,13 +46,16 @@ const ELEMS: usize = 64;
 /// blocking plane it parks a boundary-reader thread, exactly like the
 /// legacy compute node; on the reactor plane the same pipe is fed by a
 /// shard-owned ingress machine and the egress deal retires through a
-/// queued sink — mirroring `compute_node`'s two branches.
+/// queued sink — mirroring `compute_node`'s two branches. When
+/// `die_after` is set, the compute closure fails once that many frames
+/// have been processed — the mid-run death fixture.
 fn spawn_worker(
     wc: WorkerConns,
     codec: Codec,
     rt: CodecRuntime,
     data_tx: ByteCounter,
     reactor: Option<Arc<Reactor>>,
+    die_after: Option<u64>,
 ) -> std::thread::JoinHandle<defer::Result<()>> {
     std::thread::spawn(move || {
         let WorkerConns {
@@ -96,8 +101,18 @@ fn spawn_worker(
             pipelined: true,
             pipe_depth: 4,
             payload_pool: None,
+            recovery: None,
         };
-        let result = run_codec_pipeline(rx, out, ctx, move |values, _batch| {
+        let mut healthy = 0u64;
+        let result = run_codec_pipeline(rx, out, ctx, move |values, batch| {
+            if let Some(k) = die_after {
+                if healthy >= k {
+                    return Err(defer::DeferError::Runtime(format!(
+                        "synthetic mid-run death after {k} frames"
+                    )));
+                }
+            }
+            healthy += batch.max(1) as u64;
             assert_eq!(values.len() % ELEMS, 0, "partial frame in batch");
             // Jitter per replica so a lost ordering guarantee would
             // actually scramble arrivals.
@@ -130,6 +145,15 @@ struct Harness {
 }
 
 fn harness(replicas: &[usize], tcp: bool, reactor: Option<&Arc<Reactor>>) -> Harness {
+    harness_with(replicas, tcp, reactor, None)
+}
+
+fn harness_with(
+    replicas: &[usize],
+    tcp: bool,
+    reactor: Option<&Arc<Reactor>>,
+    die_after: Option<u64>,
+) -> Harness {
     let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
     let topo = Topology::new(replicas, hop_links).unwrap();
     let Wiring {
@@ -145,6 +169,7 @@ fn harness(replicas: &[usize], tcp: bool, reactor: Option<&Arc<Reactor>>) -> Har
             base_port: None,
             pipe_depth: 4,
             relay_junctions: false,
+            recovery: None,
         },
     )
     .unwrap();
@@ -156,7 +181,14 @@ fn harness(replicas: &[usize], tcp: bool, reactor: Option<&Arc<Reactor>>) -> Har
         .map(|wc| {
             let counter = ByteCounter::new();
             worker_tx.push(counter.clone());
-            spawn_worker(wc, codec, CodecRuntime::serial(), counter, reactor.cloned())
+            spawn_worker(
+                wc,
+                codec,
+                CodecRuntime::serial(),
+                counter,
+                reactor.cloned(),
+                die_after,
+            )
         })
         .collect();
     Harness {
@@ -432,6 +464,7 @@ fn dead_egress_peer_error_names_the_peer() {
             base_port: None,
             pipe_depth: 4,
             relay_junctions: false,
+            recovery: None,
         },
     )
     .unwrap();
@@ -486,6 +519,7 @@ fn dead_ingress_peer_error_names_the_peer() {
             base_port: None,
             pipe_depth: 4,
             relay_junctions: false,
+            recovery: None,
         },
     )
     .unwrap();
@@ -505,4 +539,110 @@ fn dead_ingress_peer_error_names_the_peer() {
         "unlabelled error: {text}"
     );
     junctions.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Mid-run death, fail-fast mode (no recovery): one root cause, named.
+// ---------------------------------------------------------------------
+
+/// A worker that dies *mid-run* without recovery enabled must abort the
+/// whole inference with exactly one root-cause error — the first in
+/// dispatcher spawn order — that names the dead peer's data socket and
+/// carries the last-healthy-frame context, the operator's breadcrumb
+/// for a restart point. Exercised on both transports and both planes.
+fn mid_run_death_names_peer(tcp: bool, blocking: bool) {
+    let reactor = if blocking {
+        None
+    } else {
+        Some(Reactor::new(1).unwrap())
+    };
+    let Harness {
+        to_first,
+        from_last,
+        workers,
+        junctions,
+        worker_tx: _,
+        stages: _,
+    } = harness_with(&[1], tcp, reactor.as_ref(), Some(3));
+    let input = Tensor::new(vec![ELEMS], vec![3.0; ELEMS]).unwrap();
+    let stats = Arc::new(DispatcherStats::new(EnergyModel::default()));
+    let opts = InferenceOptions {
+        pipelined: true,
+        pipe_depth: 4,
+        batch: 1,
+        batch_adaptive: false,
+        ..InferenceOptions::default()
+    };
+    let frames = 24u64;
+    let err = match &reactor {
+        Some(r) => {
+            let sink: FrameSink = r.register_egress(to_first, 4).unwrap().into();
+            let (res_tx, res_rx) = pipe::<Message>(4);
+            let ingress_err = r.register_ingress(from_last, res_tx, None).unwrap();
+            let source = FrameSource::Queued {
+                rx: res_rx,
+                err: ingress_err,
+            };
+            run_inference(
+                input,
+                frames,
+                sink,
+                source,
+                opts,
+                Arc::new(Link::ideal()),
+                Arc::clone(&stats),
+                None,
+                vec![ELEMS],
+            )
+            .expect_err("mid-run death must abort the run")
+        }
+        None => run_inference(
+            input,
+            frames,
+            to_first,
+            from_last,
+            opts,
+            Arc::new(Link::ideal()),
+            Arc::clone(&stats),
+            None,
+            vec![ELEMS],
+        )
+        .expect_err("mid-run death must abort the run"),
+    };
+    let text = format!("{err}");
+    assert!(
+        text.contains("node0 data socket"),
+        "root cause does not name the dead peer: {text}"
+    );
+    assert!(
+        text.contains("(after frame"),
+        "root cause lacks the last-healthy-frame context: {text}"
+    );
+    // The worker itself failed (the synthetic death, or the closed-pipe
+    // wake it triggers); either way the harness must not hang on join.
+    for w in workers {
+        w.join().unwrap().unwrap_err();
+    }
+    junctions.join().unwrap();
+    drop(reactor);
+}
+
+#[test]
+fn mid_run_death_names_peer_local_blocking() {
+    mid_run_death_names_peer(false, true);
+}
+
+#[test]
+fn mid_run_death_names_peer_tcp_blocking() {
+    mid_run_death_names_peer(true, true);
+}
+
+#[test]
+fn mid_run_death_names_peer_local_reactor() {
+    mid_run_death_names_peer(false, false);
+}
+
+#[test]
+fn mid_run_death_names_peer_tcp_reactor() {
+    mid_run_death_names_peer(true, false);
 }

@@ -40,6 +40,7 @@ fn opts(tcp: bool, base_port: Option<u16>, relay: bool) -> wiring::TransportOpti
         base_port,
         pipe_depth: 2,
         relay_junctions: relay,
+        recovery: None,
     }
 }
 
