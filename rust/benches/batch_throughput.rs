@@ -10,13 +10,23 @@
 //!
 //! A second section races the two data planes — thread-per-connection
 //! blocking I/O vs the sharded reactor — on a replicated u=d=4 mesh,
-//! where the blocking plane's thread bill is steepest.
+//! where the blocking plane's thread bill is steepest. A third drives
+//! >=4 MiB frames through a 2-stage chain on each plane: the regime
+//! where the zero-copy vectored egress path (one writev per frame, no
+//! assemble copy) shows up directly in MiB/s.
+//!
+//! Every row also reports the zero-copy counters for its run —
+//! `payload_copies` (serialize-path memcpys; 0 at steady state) and
+//! `egress_syscalls` (vectored wire writes; reactor TCP only) — so the
+//! copy bill is tracked across PRs alongside throughput.
 //!
 //! Emits `BENCH_batch.json` and `BENCH_io.json` (machine-readable)
 //! into the working directory so the perf trajectory is tracked
 //! across PRs.
 //!
-//! Env: DEFER_FRAMES (default 2000), DEFER_FRAME_ELEMS (default 64).
+//! Env: DEFER_FRAMES (default 2000), DEFER_FRAME_ELEMS (default 64),
+//! DEFER_LARGE_MB (default 4, min 4), DEFER_LARGE_FRAMES (default
+//! scales with DEFER_FRAMES).
 
 use std::io::Write as _;
 use std::sync::Arc;
@@ -27,7 +37,7 @@ use defer::compress::Compression;
 use defer::coordinator::dispatcher::{run_inference, DispatcherStats, InferenceOptions};
 use defer::coordinator::pipeline::{run_codec_pipeline, PipelineCtx};
 use defer::energy::EnergyModel;
-use defer::metrics::ByteCounter;
+use defer::metrics::{zerocopy, ByteCounter};
 use defer::netem::{Link, LinkSpec};
 use defer::netio::Reactor;
 use defer::serial::{Codec, CodecRuntime, Serialization};
@@ -35,6 +45,7 @@ use defer::tensor::Tensor;
 use defer::threadpool::pipe;
 use defer::topology::wiring::{build, FrameSink, FrameSource, TransportOptions, WorkerConns};
 use defer::topology::Topology;
+use defer::util::bufpool::BufPool;
 use defer::util::timer::SharedTimer;
 use defer::wire::{Message, MessageType};
 
@@ -48,7 +59,9 @@ fn env_usize(key: &str, default: usize) -> usize {
 /// Synthetic worker: elementwise `v -> 2v + 1` in place of the fused
 /// executables. Blocking plane parks a boundary-reader thread; the
 /// reactor plane registers the boundary with the shared event loop,
-/// mirroring `compute_node`'s two branches.
+/// mirroring `compute_node`'s two branches — including the shared
+/// payload pool that closes the recycle loop (ingest draws from it,
+/// encode draws from it, `WireFrame` drop returns to it).
 fn spawn_worker(
     wc: WorkerConns,
     codec: Codec,
@@ -63,17 +76,19 @@ fn spawn_worker(
             data_in,
             data_out,
         } = wc;
+        let pool = Arc::new(BufPool::new(8 + 2));
         let (tx, rx) = pipe::<Message>(8);
         let mut reader = None;
         let out: FrameSink = match &reactor {
             Some(r) => {
-                r.register_ingress(data_in, tx, None)?;
+                r.register_ingress(data_in, tx, Some(Arc::clone(&pool)))?;
                 r.register_egress(data_out, 8)?.into()
             }
             None => {
                 let mut in_conn = data_in;
+                let reader_pool = Arc::clone(&pool);
                 reader = Some(std::thread::spawn(move || loop {
-                    match in_conn.recv(&ByteCounter::new()) {
+                    match in_conn.recv_pooled(&ByteCounter::new(), Some(&reader_pool)) {
                         Ok(msg) => {
                             let stop = msg.msg_type == MessageType::Shutdown;
                             if tx.send(msg).is_err() || stop {
@@ -89,14 +104,14 @@ fn spawn_worker(
         let ctx = PipelineCtx {
             name: view.name.clone(),
             codec,
-            rt,
+            rt: rt.with_buffers(Arc::clone(&pool)),
             overhead: SharedTimer::new(),
             data_tx: ByteCounter::new(),
             frames: ByteCounter::new(),
             out_link: Arc::new(Link::ideal()),
             pipelined: true,
             pipe_depth: 8,
-            payload_pool: None,
+            payload_pool: Some(pool),
             recovery: None,
         };
         let result = run_codec_pipeline(rx, out, ctx, |values, _batch| {
@@ -109,10 +124,11 @@ fn spawn_worker(
     })
 }
 
-/// One timed run: `frames` small frames through a TCP chain of
+/// One timed run: `frames` frames of `elems` f32 through a TCP chain of
 /// `replicas` at the given batch size. `io_threads` selects the data
 /// plane: `Some(n)` runs everything on an n-shard reactor, `None` is
-/// the blocking thread-per-connection plane. Returns measured cycles/s.
+/// the blocking thread-per-connection plane. Returns measured cycles/s
+/// plus the run's zero-copy counter movement.
 fn run_chain(
     frames: u64,
     elems: usize,
@@ -120,7 +136,8 @@ fn run_chain(
     adaptive: bool,
     replicas: &[usize],
     io_threads: Option<usize>,
-) -> f64 {
+) -> (f64, zerocopy::Snapshot) {
+    let zc0 = zerocopy::snapshot();
     let reactor = io_threads.map(|n| Reactor::new(n).unwrap());
     let hop_links = vec![LinkSpec::ideal(); replicas.len() + 1];
     let topo = Topology::new(replicas, hop_links).unwrap();
@@ -186,12 +203,12 @@ fn run_chain(
     junctions.join().unwrap();
     drop(reactor);
     assert_eq!(stats.clock.cycles(), frames, "dropped frames at batch {batch}");
-    frames as f64 / secs
+    (frames as f64 / secs, zerocopy::snapshot().since(&zc0))
 }
 
 /// Batching section shape: default 2-stage unreplicated chain, blocking
 /// plane (the pre-reactor baseline the trajectory was recorded on).
-fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> f64 {
+fn run_once(frames: u64, elems: usize, batch: usize, adaptive: bool) -> (f64, zerocopy::Snapshot) {
     run_chain(frames, elems, batch, adaptive, &[1, 1], None)
 }
 
@@ -204,11 +221,11 @@ fn main() {
     // Warm up sockets/allocator so batch=1 is not penalized by order.
     let _ = run_once(frames.min(200), elems, 1, false);
 
-    let mut table = Table::new(&["batch", "cycles/s", "vs batch=1"]);
+    let mut table = Table::new(&["batch", "cycles/s", "vs batch=1", "copies", "syscalls"]);
     let mut rows_json = Vec::new();
     let mut base = 0.0f64;
     for batch in [1usize, 2, 4, 8, 16] {
-        let cps = run_once(frames, elems, batch, false);
+        let (cps, zc) = run_once(frames, elems, batch, false);
         if batch == 1 {
             base = cps;
         }
@@ -217,23 +234,30 @@ fn main() {
             batch.to_string(),
             format!("{cps:.1}"),
             format!("{speedup:.2}x"),
+            zc.payload_copies.to_string(),
+            zc.egress_syscalls.to_string(),
         ]);
         rows_json.push(format!(
-            r#"    {{"batch": {batch}, "cycles_per_sec": {cps:.2}, "speedup_vs_unbatched": {speedup:.3}}}"#
+            r#"    {{"batch": {batch}, "cycles_per_sec": {cps:.2}, "speedup_vs_unbatched": {speedup:.3}, "payload_copies": {}, "egress_syscalls": {}}}"#,
+            zc.payload_copies, zc.egress_syscalls
         ));
     }
-    let adaptive_cps = run_once(frames, elems, 8, true);
+    let (adaptive_cps, adaptive_zc) = run_once(frames, elems, 8, true);
     table.row(&[
         "adaptive(<=8)".into(),
         format!("{adaptive_cps:.1}"),
         format!("{:.2}x", adaptive_cps / base),
+        adaptive_zc.payload_copies.to_string(),
+        adaptive_zc.egress_syscalls.to_string(),
     ]);
     print!("{}", table.render());
 
     let json = format!(
-        "{{\n  \"frames\": {frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"stages\": 2,\n  \"rows\": [\n{}\n  ],\n  \"adaptive\": {{\"cap\": 8, \"cycles_per_sec\": {adaptive_cps:.2}, \"speedup_vs_unbatched\": {:.3}}}\n}}\n",
+        "{{\n  \"frames\": {frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"stages\": 2,\n  \"rows\": [\n{}\n  ],\n  \"adaptive\": {{\"cap\": 8, \"cycles_per_sec\": {adaptive_cps:.2}, \"speedup_vs_unbatched\": {:.3}, \"payload_copies\": {}, \"egress_syscalls\": {}}}\n}}\n",
         rows_json.join(",\n"),
-        adaptive_cps / base
+        adaptive_cps / base,
+        adaptive_zc.payload_copies,
+        adaptive_zc.egress_syscalls
     );
     match std::fs::File::create("BENCH_batch.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {
@@ -253,26 +277,72 @@ fn main() {
     println!(
         "\n# Data-plane I/O: u=d=4 replicated mesh over TCP, {io_frames} frames, batch {io_batch}"
     );
-    let blocking_cps = run_chain(io_frames, elems, io_batch, false, &io_replicas, None);
-    let reactor_cps = run_chain(io_frames, elems, io_batch, false, &io_replicas, Some(shards));
+    let (blocking_cps, blocking_zc) =
+        run_chain(io_frames, elems, io_batch, false, &io_replicas, None);
+    let (reactor_cps, reactor_zc) =
+        run_chain(io_frames, elems, io_batch, false, &io_replicas, Some(shards));
     let ratio = reactor_cps / blocking_cps;
-    let mut io_table = Table::new(&["plane", "data-plane threads", "cycles/s", "vs blocking"]);
+    let mut io_table = Table::new(&[
+        "plane",
+        "data-plane threads",
+        "cycles/s",
+        "vs blocking",
+        "copies",
+        "syscalls",
+    ]);
     io_table.row(&[
         "blocking".into(),
         blocking_threads.to_string(),
         format!("{blocking_cps:.1}"),
         "1.00x".into(),
+        blocking_zc.payload_copies.to_string(),
+        blocking_zc.egress_syscalls.to_string(),
     ]);
     io_table.row(&[
         "reactor".into(),
         shards.to_string(),
         format!("{reactor_cps:.1}"),
         format!("{ratio:.2}x"),
+        reactor_zc.payload_copies.to_string(),
+        reactor_zc.egress_syscalls.to_string(),
     ]);
     print!("{}", io_table.render());
 
+    // ---- large-frame vectored egress: >=4 MiB payloads per plane ----
+    let large_mb = env_usize("DEFER_LARGE_MB", 4).max(4);
+    let large_elems = large_mb * 1024 * 1024 / 4;
+    let large_frames =
+        env_usize("DEFER_LARGE_FRAMES", (frames as usize / 25).clamp(8, 64)) as u64;
+    println!(
+        "\n# Large-frame egress: {large_frames} frames of {large_mb} MiB over TCP, \
+         2-stage chain, batch 1"
+    );
+    let mut lf_table = Table::new(&["plane", "cycles/s", "MiB/s", "copies", "syscalls"]);
+    let mut lf_rows = Vec::new();
+    for (plane, io) in [("blocking", None), ("reactor", Some(shards))] {
+        let (cps, zc) = run_chain(large_frames, large_elems, 1, false, &[1, 1], io);
+        let mibs = cps * large_mb as f64;
+        lf_table.row(&[
+            plane.into(),
+            format!("{cps:.1}"),
+            format!("{mibs:.0}"),
+            zc.payload_copies.to_string(),
+            zc.egress_syscalls.to_string(),
+        ]);
+        lf_rows.push(format!(
+            r#"      {{"plane": "{plane}", "cycles_per_sec": {cps:.2}, "mib_per_sec": {mibs:.1}, "payload_copies": {}, "egress_syscalls": {}}}"#,
+            zc.payload_copies, zc.egress_syscalls
+        ));
+    }
+    print!("{}", lf_table.render());
+
     let io_json = format!(
-        "{{\n  \"frames\": {io_frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"replicas\": [4, 4],\n  \"batch\": {io_batch},\n  \"rows\": [\n    {{\"plane\": \"blocking\", \"data_plane_threads\": {blocking_threads}, \"cycles_per_sec\": {blocking_cps:.2}, \"vs_blocking\": 1.000}},\n    {{\"plane\": \"reactor\", \"data_plane_threads\": {shards}, \"cycles_per_sec\": {reactor_cps:.2}, \"vs_blocking\": {ratio:.3}}}\n  ]\n}}\n"
+        "{{\n  \"frames\": {io_frames},\n  \"frame_elems\": {elems},\n  \"transport\": \"tcp\",\n  \"replicas\": [4, 4],\n  \"batch\": {io_batch},\n  \"rows\": [\n    {{\"plane\": \"blocking\", \"data_plane_threads\": {blocking_threads}, \"cycles_per_sec\": {blocking_cps:.2}, \"vs_blocking\": 1.000, \"payload_copies\": {}, \"egress_syscalls\": {}}},\n    {{\"plane\": \"reactor\", \"data_plane_threads\": {shards}, \"cycles_per_sec\": {reactor_cps:.2}, \"vs_blocking\": {ratio:.3}, \"payload_copies\": {}, \"egress_syscalls\": {}}}\n  ],\n  \"large_frame\": {{\n    \"payload_mib\": {large_mb},\n    \"frames\": {large_frames},\n    \"batch\": 1,\n    \"rows\": [\n{}\n    ]\n  }}\n}}\n",
+        blocking_zc.payload_copies,
+        blocking_zc.egress_syscalls,
+        reactor_zc.payload_copies,
+        reactor_zc.egress_syscalls,
+        lf_rows.join(",\n")
     );
     match std::fs::File::create("BENCH_io.json").and_then(|mut f| f.write_all(io_json.as_bytes()))
     {

@@ -118,6 +118,7 @@ impl SingleDevice {
             frames_redispatched: 0,
             chunks_retried: 0,
             replicas_lost: 0,
+            zerocopy: crate::metrics::zerocopy::Snapshot::default(),
         })
     }
 }

@@ -315,6 +315,10 @@ impl ChainRunner {
             Some(r) => r.io_threads() as u64,
             None => views.len() as u64 + if self.cfg.codec_pipeline { 2 } else { 1 },
         };
+        // Scope the process-global zero-copy counters to this run's
+        // inference phase (config traffic rides the legacy copy path by
+        // design — it is one exchange per worker).
+        let zc0 = crate::metrics::zerocopy::snapshot();
         let t0 = std::time::Instant::now();
         run_inference(
             input,
@@ -340,6 +344,7 @@ impl ChainRunner {
             self.plan.output_shape().to_vec(),
         )?;
         let elapsed = t0.elapsed();
+        let zerocopy = crate::metrics::zerocopy::snapshot().since(&zc0);
         pool.join()?;
         junctions.join()?;
         // Snapshot the shard counters, then retire the reactor (workers
@@ -392,6 +397,7 @@ impl ChainRunner {
                 .map_or(0, |s| s.frames_redispatched()),
             chunks_retried: supervisor.as_ref().map_or(0, |s| s.chunks_retried()),
             replicas_lost: supervisor.as_ref().map_or(0, |s| s.replicas_lost()),
+            zerocopy,
         })
     }
 }

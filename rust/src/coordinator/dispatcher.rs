@@ -37,7 +37,7 @@ use crate::tensor::Tensor;
 use crate::threadpool::{pipe, WorkerPool};
 use crate::topology::wiring::{FrameSink, FrameSource};
 use crate::util::bufpool::BufPool;
-use crate::wire::{Message, MessageType};
+use crate::wire::{Message, MessageType, SharedPayload, WireFrame};
 
 use super::compute_node::encode_stage_architecture;
 use super::pipeline::PipelineRecovery;
@@ -260,8 +260,10 @@ impl Default for InferenceOptions {
 /// Send one encoded data message carrying `batch` coalesced frames
 /// (first id `frame`): stamp every member frame's send time, deal the
 /// whole batch to the stage-0 replica the round-robin schedule owns
-/// (through the shaped uplink with byte/energy accounting), and recycle
-/// the payload buffer. Shared by the pipelined and inline sender paths
+/// (through the shaped uplink with byte/energy accounting). The payload
+/// moves into a pooled [`WireFrame`] — its buffer returns to the
+/// dispatcher's pool when the last reference drops, with no serialize
+/// copy on the way out. Shared by the pipelined and inline sender paths
 /// so the accounting cannot diverge between them.
 #[allow(clippy::too_many_arguments)]
 fn send_data_frame(
@@ -276,14 +278,14 @@ fn send_data_frame(
     send_times: &Mutex<HashMap<u64, Instant>>,
     rt: &CodecRuntime,
 ) -> Result<()> {
-    let msg = Message {
-        msg_type: MessageType::Data,
+    let wf = WireFrame::new(
+        MessageType::Data,
         frame,
-        serialized_len: serialized_len as u64,
-        count,
         batch,
-        payload,
-    };
+        serialized_len as u64,
+        count,
+        SharedPayload::from_vec(payload, rt.buffers_arc()),
+    )?;
     let now = Instant::now();
     {
         let mut st = send_times.lock().unwrap();
@@ -291,11 +293,9 @@ fn send_data_frame(
             st.insert(f, now);
         }
     }
-    to_first.send_data(&msg, link, &stats.data_tx)?;
-    stats.meter.tx_bytes.add(msg.wire_size());
-    if let Some(p) = rt.buffers() {
-        p.put(msg.payload);
-    }
+    let wire_size = wf.wire_size();
+    to_first.send_frame(wf, link, &stats.data_tx)?;
+    stats.meter.tx_bytes.add(wire_size);
     Ok(())
 }
 

@@ -94,6 +94,11 @@ pub struct RunReport {
     pub frames_redispatched: u64,
     pub chunks_retried: u64,
     pub replicas_lost: u64,
+    /// Zero-copy data-plane counters scoped to the inference phase:
+    /// payload memcpys on the serialize/egress path (0 at steady state),
+    /// wire-write syscalls retired, and buffer-pool hit/miss movement.
+    /// All 0 for the single-device baseline (no data plane).
+    pub zerocopy: crate::metrics::zerocopy::Snapshot,
 }
 
 impl RunReport {

@@ -37,7 +37,7 @@ use crate::threadpool::{pipe, WorkerPool};
 use crate::topology::wiring::FrameSink;
 use crate::util::bufpool::BufPool;
 use crate::util::timer::SharedTimer;
-use crate::wire::{Message, MessageType};
+use crate::wire::{Message, MessageType, SharedPayload, WireFrame};
 
 /// Self-healing hooks for one replica's codec pipeline: the run-wide
 /// supervisor (fault schedule, escalation) plus this replica's
@@ -162,18 +162,21 @@ fn decode_step(
 
 /// Injected-truncation check before an egress send: when the schedule
 /// says this node truncates at `frame`, write a half message and die.
+/// The (counted) message materialization only happens when the fault
+/// actually fires — the steady-state path stays zero-copy.
 fn truncate_check(
     out: &mut FrameSink,
     recovery: Option<&PipelineRecovery>,
     name: &str,
-    msg: &Message,
+    wf: &WireFrame,
 ) -> Result<()> {
     let Some(rec) = recovery else { return Ok(()) };
     let Some(t) = rec.supervisor.faults().truncate_frame(name) else {
         return Ok(());
     };
-    if msg.frame + u64::from(msg.batch) > t {
-        out.send_truncated(msg, msg.wire_size() as usize / 2)?;
+    if wf.frame() + u64::from(wf.batch()) > t {
+        let msg = wf.to_message();
+        out.send_truncated(&msg, msg.wire_size() as usize / 2)?;
         return Err(DeferError::FaultInjected(format!(
             "{name} truncated egress at frame {t} and died"
         )));
@@ -247,19 +250,19 @@ where
                     let (wire, mid) =
                         ctx.codec
                             .encode_frame(&output, &ctx.rt, Some(&ctx.overhead));
-                    let out_msg = Message {
-                        msg_type: MessageType::Data,
+                    // One wire form, produced here, shared by every
+                    // consumer; the pooled buffer returns to the codec
+                    // pool when the last reference drops.
+                    let wf = WireFrame::new(
+                        MessageType::Data,
                         frame,
-                        serialized_len: mid as u64,
-                        count: output.len() as u64,
                         batch,
-                        payload: wire,
-                    };
-                    truncate_check(&mut out, ctx.recovery.as_ref(), &ctx.name, &out_msg)?;
-                    out.send_data(&out_msg, &ctx.out_link, &ctx.data_tx)?;
-                    if let Some(p) = &ctx.payload_pool {
-                        p.put(out_msg.payload);
-                    }
+                        mid as u64,
+                        output.len() as u64,
+                        SharedPayload::from_vec(wire, ctx.rt.buffers_arc()),
+                    )?;
+                    truncate_check(&mut out, ctx.recovery.as_ref(), &ctx.name, &wf)?;
+                    out.send_frame(wf, &ctx.out_link, &ctx.data_tx)?;
                     ctx.frames.add(batch as u64);
                 }
                 other => {
@@ -342,7 +345,6 @@ where
         let out_link = Arc::clone(&ctx.out_link);
         let data_tx = ctx.data_tx.clone();
         let frames = ctx.frames.clone();
-        let payload_pool = ctx.payload_pool.clone();
         let recovery = ctx.recovery.clone();
         let name = ctx.name.clone();
         let slot = Arc::clone(&err_slot);
@@ -357,19 +359,16 @@ where
                         Step::Frame { frame, batch, data } => {
                             let (wire, mid) =
                                 codec.encode_frame(&data, &rt, Some(&overhead));
-                            let out_msg = Message {
-                                msg_type: MessageType::Data,
+                            let wf = WireFrame::new(
+                                MessageType::Data,
                                 frame,
-                                serialized_len: mid as u64,
-                                count: data.len() as u64,
                                 batch,
-                                payload: wire,
-                            };
-                            truncate_check(&mut out, recovery.as_ref(), &name, &out_msg)?;
-                            out.send_data(&out_msg, &out_link, &data_tx)?;
-                            if let Some(p) = &payload_pool {
-                                p.put(out_msg.payload);
-                            }
+                                mid as u64,
+                                data.len() as u64,
+                                SharedPayload::from_vec(wire, rt.buffers_arc()),
+                            )?;
+                            truncate_check(&mut out, recovery.as_ref(), &name, &wf)?;
+                            out.send_frame(wf, &out_link, &data_tx)?;
                             frames.add(batch as u64);
                         }
                     }

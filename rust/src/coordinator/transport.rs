@@ -12,11 +12,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use crate::error::{DeferError, Result};
-use crate::metrics::ByteCounter;
+use crate::metrics::{zerocopy, ByteCounter};
 use crate::netem::Link;
 use crate::threadpool::{pipe, PipeReceiver, PipeSender};
 use crate::util::bufpool::BufPool;
-use crate::wire::{write_message, Message};
+use crate::wire::{write_message, Message, WireBuf, WireFrame};
 
 /// One directed connection endpoint.
 pub enum Conn {
@@ -25,10 +25,13 @@ pub enum Conn {
         reader: BufReader<TcpStream>,
     },
     Local {
-        tx: PipeSender<Vec<u8>>,
-        rx: PipeReceiver<Vec<u8>>,
-        /// Partially consumed inbound buffer (multiple messages per Vec are
-        /// not produced today, but keep reads robust).
+        /// Local pipes carry [`WireBuf`]s: structured frames hand the
+        /// shared payload across with no serialize copy; raw buffers
+        /// carry legacy control traffic and injected fault bytes.
+        tx: PipeSender<WireBuf>,
+        rx: PipeReceiver<WireBuf>,
+        /// Partially consumed inbound raw buffer (multiple messages per
+        /// buffer are not produced today, but keep reads robust).
         pending: Vec<u8>,
         /// Frame-buffer pool shared by both endpoints of the pair: the
         /// sender draws its outbound wire buffer here, the receiver puts
@@ -171,10 +174,24 @@ impl Conn {
     /// reactor registration. Any bytes the buffered reader already held
     /// are preserved as `residue` so no wire data is lost at the split.
     pub fn into_read_half(self) -> Result<ReadHalf> {
+        self.into_read_half_pooled(None)
+    }
+
+    /// [`Conn::into_read_half`] drawing the residue buffer from `pool`
+    /// when the pre-split reader actually held bytes. The common case —
+    /// a clean split at a message boundary — keeps the residue as the
+    /// empty `Vec` (no allocation, no copy at all).
+    pub fn into_read_half_pooled(self, pool: Option<&BufPool>) -> Result<ReadHalf> {
         match self {
             Conn::Tcp { reader, writer } => {
                 drop(writer); // the reader's clone keeps the socket open
-                let residue = reader.buffer().to_vec();
+                let residue = if reader.buffer().is_empty() {
+                    Vec::new()
+                } else {
+                    let mut buf = pool.map(|p| p.take()).unwrap_or_default();
+                    buf.extend_from_slice(reader.buffer());
+                    buf
+                };
                 let stream = reader.into_inner();
                 stream.set_nonblocking(true)?;
                 Ok(ReadHalf::Tcp { stream, residue })
@@ -213,8 +230,8 @@ impl Conn {
 
     /// An in-process bidirectional pair (a <-> b) with bounded depth.
     pub fn local_pair(depth: usize) -> (Conn, Conn) {
-        let (atx, brx) = pipe::<Vec<u8>>(depth);
-        let (btx, arx) = pipe::<Vec<u8>>(depth);
+        let (atx, brx) = pipe::<WireBuf>(depth);
+        let (btx, arx) = pipe::<WireBuf>(depth);
         // Bound the shared frame pool by what can be in flight across
         // both directions at once (pipe depth each way, plus slack for
         // the buffers the two endpoints hold while reading/writing).
@@ -236,16 +253,40 @@ impl Conn {
     }
 
     /// Send one framed message through the link shaper, counting bytes.
+    /// This is the legacy owned-payload path (control/config traffic);
+    /// per-frame data goes through [`Conn::send_frame`], which never
+    /// copies the payload.
     pub fn send(&mut self, msg: &Message, link: &Link, counter: &ByteCounter) -> Result<()> {
         match self {
             Conn::Tcp { writer, .. } => write_message(writer, msg, link, counter),
             Conn::Local { tx, frames, .. } => {
+                if !msg.payload.is_empty() {
+                    zerocopy::count_payload_copy();
+                }
                 let mut buf = frames.take();
                 buf.reserve(msg.wire_size() as usize);
                 write_message(&mut buf, msg, link, counter)?;
-                tx.send(buf)
+                tx.send(WireBuf::Raw(buf))
                     .map_err(|_| DeferError::ChannelClosed("local conn send"))
             }
+        }
+    }
+
+    /// Send one [`WireFrame`] — the zero-copy data path. TCP leaves via
+    /// vectored writes (header + payload gathered, no assemble copy);
+    /// local pipes move the frame itself, payload shared by reference.
+    /// Shaper and counter observe exactly [`Conn::send`]'s sequence.
+    pub fn send_frame(&mut self, wf: WireFrame, link: &Link, counter: &ByteCounter) -> Result<()> {
+        wf.charge(link, counter);
+        match self {
+            Conn::Tcp { writer, .. } => {
+                wf.write_to(writer)?;
+                writer.flush()?;
+                Ok(())
+            }
+            Conn::Local { tx, .. } => tx
+                .send(WireBuf::Frame(wf))
+                .map_err(|_| DeferError::ChannelClosed("local conn send")),
         }
     }
 
@@ -308,7 +349,7 @@ impl Conn {
                 writer.flush()?;
             }
             Conn::Local { tx, .. } => {
-                tx.send(wire)
+                tx.send(WireBuf::Raw(wire))
                     .map_err(|_| DeferError::ChannelClosed("local conn send"))?;
             }
         }
@@ -326,10 +367,27 @@ impl Conn {
         match self {
             Conn::Tcp { reader, .. } => crate::wire::read_message_pooled(reader, counter, pool),
             Conn::Local { rx, pending, frames, .. } => {
-                if pending.is_empty() {
-                    *pending = rx
+                let raw = loop {
+                    if !pending.is_empty() {
+                        break None;
+                    }
+                    match rx
                         .recv()
-                        .ok_or(DeferError::ChannelClosed("local conn recv"))?;
+                        .ok_or(DeferError::ChannelClosed("local conn recv"))?
+                    {
+                        // Structured frame: the payload buffer moves
+                        // straight out of the shared cell — no parse, no
+                        // CRC re-sweep (the bytes never left memory), no
+                        // copy when this is the last reference.
+                        WireBuf::Frame(wf) => {
+                            counter.add(wf.wire_size());
+                            return Ok(wf.into_message());
+                        }
+                        WireBuf::Raw(buf) => break Some(buf),
+                    }
+                };
+                if let Some(buf) = raw {
+                    *pending = buf;
                 }
                 let mut cursor = std::io::Cursor::new(pending.as_slice());
                 let msg = crate::wire::read_message_pooled(&mut cursor, counter, pool)?;
@@ -358,8 +416,8 @@ pub enum ReadHalf {
         residue: Vec<u8>,
     },
     Local {
-        rx: PipeReceiver<Vec<u8>>,
-        /// Partially consumed inbound buffer (same role as
+        rx: PipeReceiver<WireBuf>,
+        /// Partially consumed inbound raw buffer (same role as
         /// [`Conn::Local`]'s field).
         pending: Vec<u8>,
         frames: Arc<BufPool>,
@@ -371,7 +429,7 @@ pub enum ReadHalf {
 pub enum WriteHalf {
     Tcp { stream: TcpStream },
     Local {
-        tx: PipeSender<Vec<u8>>,
+        tx: PipeSender<WireBuf>,
         frames: Arc<BufPool>,
     },
 }
@@ -569,11 +627,51 @@ mod tests {
         let WriteHalf::Local { tx, .. } = &wh else {
             unreachable!()
         };
-        tx.send(vec![1, 2, 3]).unwrap();
+        tx.send(WireBuf::Raw(vec![1, 2, 3])).unwrap();
         let ReadHalf::Local { rx, .. } = &rh else {
             unreachable!()
         };
-        assert_eq!(rx.recv(), Some(vec![1, 2, 3]));
+        match rx.recv() {
+            Some(WireBuf::Raw(b)) => assert_eq!(b, vec![1, 2, 3]),
+            other => panic!("expected raw buffer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn send_frame_matches_send_on_both_transports() {
+        // The zero-copy frame path must deliver the same message and
+        // count the same bytes as the legacy Message path.
+        let msg = data_msg(11, 2048);
+        let wf = |m: &Message| {
+            WireFrame::new(
+                m.msg_type,
+                m.frame,
+                m.batch,
+                m.serialized_len,
+                m.count,
+                crate::wire::SharedPayload::from_vec(m.payload.clone(), None),
+            )
+            .unwrap()
+        };
+
+        let (mut a, mut b) = Conn::local_pair(2);
+        let c_local = ByteCounter::new();
+        a.send_frame(wf(&msg), &Link::ideal(), &c_local).unwrap();
+        let got = b.recv(&ByteCounter::new()).unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(c_local.total(), msg.wire_size());
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let mut server = Conn::tcp_accept(&listener).unwrap();
+            server.recv(&ByteCounter::new()).unwrap()
+        });
+        let mut client = Conn::tcp_connect(&addr, "frame peer").unwrap();
+        let c_tcp = ByteCounter::new();
+        client.send_frame(wf(&msg), &Link::ideal(), &c_tcp).unwrap();
+        assert_eq!(h.join().unwrap(), msg);
+        assert_eq!(c_tcp.total(), msg.wire_size());
     }
 
     #[test]

@@ -207,6 +207,16 @@ fn print_report(r: &RunReport) {
             .collect();
         println!("  io shards (wakeups/dispatches): {}", shards.join(", "));
     }
+    if r.zerocopy != defer::metrics::zerocopy::Snapshot::default() {
+        println!(
+            "  zero-copy: {} payload copies, {} egress syscalls, \
+             pool {} hit(s) / {} miss(es)",
+            r.zerocopy.payload_copies,
+            r.zerocopy.egress_syscalls,
+            r.zerocopy.pool_hits,
+            r.zerocopy.pool_misses
+        );
+    }
     if r.replicas_lost > 0 || r.frames_redispatched > 0 || r.chunks_retried > 0 {
         println!(
             "  recovery: {} replica(s) lost, {} frame(s) re-dispatched, \

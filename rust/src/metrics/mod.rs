@@ -341,6 +341,27 @@ mod tests {
     }
 
     #[test]
+    fn zerocopy_snapshot_deltas_scope_the_global_counters() {
+        // Counters are process-global (other tests may bump them
+        // concurrently), so assert on deltas being at least our own
+        // contribution rather than on absolute values.
+        let before = zerocopy::snapshot();
+        zerocopy::count_payload_copy();
+        zerocopy::count_egress_syscall();
+        zerocopy::count_egress_syscall();
+        zerocopy::count_pool_hit();
+        zerocopy::count_pool_miss();
+        let delta = zerocopy::snapshot().since(&before);
+        assert!(delta.payload_copies >= 1, "{delta:?}");
+        assert!(delta.egress_syscalls >= 2, "{delta:?}");
+        assert!(delta.pool_hits >= 1, "{delta:?}");
+        assert!(delta.pool_misses >= 1, "{delta:?}");
+        // A snapshot subtracted from itself is zero movement.
+        let now = zerocopy::snapshot();
+        assert_eq!(now.since(&now), zerocopy::Snapshot::default());
+    }
+
+    #[test]
     fn throughput_clock() {
         let t = ThroughputClock::new();
         for _ in 0..10 {
@@ -350,6 +371,87 @@ mod tests {
         assert_eq!(t.cycles(), 10);
         let tput = t.throughput();
         assert!(tput > 0.0 && tput < 500.0, "{tput}");
+    }
+}
+
+/// Zero-copy data-plane counters (process-global).
+///
+/// The §Perf zero-copy frame path makes two claims the run report must
+/// be able to prove: steady-state frame traffic performs **zero**
+/// serialize copies (the encoder's container is the buffer every
+/// consumer shares, refcounted), and each reactor-plane frame leaves in
+/// **one** `writev` syscall. These counters are bumped at the exact
+/// sites where the old plane paid — a payload memcpy, a wire write, a
+/// pool allocation — so a test or report can snapshot before a run and
+/// assert on the delta.
+pub mod zerocopy {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+    static EGRESS_SYSCALLS: AtomicU64 = AtomicU64::new(0);
+    static POOL_HITS: AtomicU64 = AtomicU64::new(0);
+    static POOL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+    /// A full payload was memcpy'd on the serialize/egress path (legacy
+    /// `Message` bridging, shared-frame materialization, …). Zero at
+    /// steady state on the zero-copy path.
+    #[inline]
+    pub fn count_payload_copy() {
+        PAYLOAD_COPIES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One wire-write syscall (`writev`/`write`) retired on an egress
+    /// connection.
+    #[inline]
+    pub fn count_egress_syscall() {
+        EGRESS_SYSCALLS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `BufPool::take*` was served from the free list.
+    #[inline]
+    pub fn count_pool_hit() {
+        POOL_HITS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `BufPool::take*` had to allocate fresh.
+    #[inline]
+    pub fn count_pool_miss() {
+        POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time reading of every counter. Subtract two snapshots to
+    /// scope the counters to one run (they are process-global and only
+    /// ever increase).
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct Snapshot {
+        pub payload_copies: u64,
+        pub egress_syscalls: u64,
+        pub pool_hits: u64,
+        pub pool_misses: u64,
+    }
+
+    pub fn snapshot() -> Snapshot {
+        Snapshot {
+            payload_copies: PAYLOAD_COPIES.load(Ordering::Relaxed),
+            egress_syscalls: EGRESS_SYSCALLS.load(Ordering::Relaxed),
+            pool_hits: POOL_HITS.load(Ordering::Relaxed),
+            pool_misses: POOL_MISSES.load(Ordering::Relaxed),
+        }
+    }
+
+    impl Snapshot {
+        /// Counter movement since `earlier` (saturating, so a stale
+        /// snapshot cannot underflow).
+        pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+            Snapshot {
+                payload_copies: self.payload_copies.saturating_sub(earlier.payload_copies),
+                egress_syscalls: self
+                    .egress_syscalls
+                    .saturating_sub(earlier.egress_syscalls),
+                pool_hits: self.pool_hits.saturating_sub(earlier.pool_hits),
+                pool_misses: self.pool_misses.saturating_sub(earlier.pool_misses),
+            }
+        }
     }
 }
 

@@ -45,7 +45,7 @@
 pub mod sys;
 
 use std::collections::{HashMap, HashSet};
-use std::io::{Read, Write};
+use std::io::Read;
 use std::net::TcpStream;
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -54,13 +54,15 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::transport::{ReadHalf, WriteHalf};
 use crate::error::{DeferError, Result};
-use crate::metrics::ByteCounter;
+use crate::metrics::{zerocopy, ByteCounter};
 use crate::netem::Link;
 use crate::runtime::recovery::{ChunkRetryClient, RecoverySupervisor, RetentionRing};
 use crate::threadpool::{pipe, PipeReceiver, PipeSender, TryRecv, TrySend};
 use crate::topology::wiring::{frame_context, DealSender, MergeReceiver};
 use crate::util::bufpool::BufPool;
-use crate::wire::{write_message, FrameAssembler, Message, MessageType};
+use crate::wire::{
+    write_message, FrameAssembler, Message, MessageType, SharedPayload, WireBuf, WireFrame,
+};
 
 /// `(is_data, frame, batch)` parsed off a serialized wire buffer's
 /// header — the egress machine reports routing per *delivered* buffer,
@@ -74,6 +76,11 @@ fn parse_buf_header(buf: &[u8]) -> Option<(bool, u64, u32)> {
     let batch = 1 + u32::from_le_bytes([buf[5], buf[6], buf[7], 0]);
     let frame = u64::from_le_bytes(buf[8..16].try_into().ok()?);
     Some((is_data, frame, batch))
+}
+
+/// [`parse_buf_header`] over either [`WireBuf`] shape.
+fn parse_wirebuf_header(buf: &WireBuf) -> Option<(bool, u64, u32)> {
+    parse_buf_header(buf.wire_header()?)
 }
 
 /// Shared slot a machine stashes its terminal error in; the attached
@@ -196,7 +203,7 @@ enum IngressIo {
         asm: FrameAssembler,
     },
     Local {
-        rx: PipeReceiver<Vec<u8>>,
+        rx: PipeReceiver<WireBuf>,
         pending: Vec<u8>,
         frames: Arc<BufPool>,
     },
@@ -484,7 +491,11 @@ impl IngressMachine {
             } => {
                 if pending.is_empty() {
                     match rx.try_recv() {
-                        TryRecv::Item(buf) => *pending = buf,
+                        // Zero-copy fast path: a shared frame delivers its
+                        // pooled payload straight into the message (the
+                        // sender already verified + counted the hop).
+                        TryRecv::Item(WireBuf::Frame(wf)) => return Ok(Some(wf.into_message())),
+                        TryRecv::Item(WireBuf::Raw(buf)) => *pending = buf,
                         // The permanent data waker re-steps us on arrival.
                         TryRecv::Empty => return Ok(None),
                         TryRecv::Closed => {
@@ -533,15 +544,15 @@ struct EgressConn {
 
 enum EgressIo {
     Tcp { stream: TcpStream },
-    Local { tx: PipeSender<Vec<u8>> },
+    Local { tx: PipeSender<WireBuf> },
 }
 
 enum WriteOut {
     Flushed,
-    Pending(Vec<u8>, usize),
+    Pending(WireBuf, usize),
     /// The buffer comes back with the error so a recovering machine can
     /// reroute it to a surviving successor.
-    Failed(Vec<u8>, DeferError),
+    Failed(WireBuf, DeferError),
 }
 
 /// Drains a FIFO queue of pre-serialized `(conn, bytes)` buffers onto
@@ -554,10 +565,11 @@ enum WriteOut {
 /// per-conn, not per-frame), and every delivered data buffer is
 /// reported to the supervisor as owed by its actual recipient.
 struct EgressMachine {
-    queue: PipeReceiver<(usize, Vec<u8>)>,
+    queue: PipeReceiver<(usize, WireBuf)>,
     conns: Vec<EgressConn>,
     /// A buffer mid-write: `(conn idx, bytes, bytes already written)`.
-    in_flight: Option<(usize, Vec<u8>, usize)>,
+    /// The offset is logical over `header ‖ payload`.
+    in_flight: Option<(usize, WireBuf, usize)>,
     err: ErrSlot,
     recovery: Option<Arc<RecoverySupervisor>>,
     /// Last global frame flushed (error context).
@@ -570,7 +582,7 @@ impl EgressMachine {
             if let Some((idx, buf, written)) = self.in_flight.take() {
                 // Parse before the write: a successful local send moves
                 // the buffer into the pipe.
-                let hdr = parse_buf_header(&buf);
+                let hdr = parse_wirebuf_header(&buf);
                 match write_step(&mut self.conns[idx], epfd, token, buf, written) {
                     WriteOut::Flushed => {
                         if let Some((true, frame, batch)) = hdr {
@@ -621,12 +633,12 @@ impl EgressMachine {
     /// one, the peer is marked dead and a data buffer moves to the next
     /// live successor (control buffers are dropped — already delivered
     /// per-conn to the survivors).
-    fn reroute(&mut self, idx: usize, buf: Vec<u8>, e: DeferError) -> std::result::Result<(), Step> {
+    fn reroute(&mut self, idx: usize, buf: WireBuf, e: DeferError) -> std::result::Result<(), Step> {
         let Some(sup) = self.recovery.clone() else {
             return Err(self.fail(idx, e));
         };
         sup.mark_dead(&self.conns[idx].label);
-        let is_data = matches!(parse_buf_header(&buf), Some((true, _, _)));
+        let is_data = matches!(parse_wirebuf_header(&buf), Some((true, _, _)));
         if !is_data {
             return Ok(());
         }
@@ -666,42 +678,72 @@ impl EgressMachine {
 
 /// Push as much of `buf` as the conn accepts. TCP would-block arms
 /// `EPOLLOUT` one-shot; a full local pipe relies on its space waker.
+///
+/// A [`WireBuf::Frame`] gather-writes header + payload in **one**
+/// `writev` syscall (no assemble copy); the logical `written` offset
+/// spans `header ‖ payload`, so a short write resumes mid-header,
+/// mid-payload, or exactly at the iovec boundary. Every `writev` issued
+/// bumps the `egress_syscalls` counter.
 fn write_step(
     conn: &mut EgressConn,
     epfd: RawFd,
     token: u64,
-    buf: Vec<u8>,
+    buf: WireBuf,
     mut written: usize,
 ) -> WriteOut {
+    enum TcpOut {
+        Flushed,
+        Blocked,
+        Err(DeferError),
+    }
     match &mut conn.io {
-        EgressIo::Tcp { stream } => loop {
-            if written == buf.len() {
-                return WriteOut::Flushed;
-            }
-            let mut s: &TcpStream = &*stream;
-            match s.write(&buf[written..]) {
-                Ok(0) => {
-                    return WriteOut::Failed(
-                        buf,
-                        DeferError::Io(std::io::ErrorKind::WriteZero.into()),
-                    )
-                }
-                Ok(n) => written += n,
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if let Err(e) = sys::epoll_mod(
-                        epfd,
-                        stream.as_raw_fd(),
-                        sys::EPOLLOUT | sys::EPOLLONESHOT,
-                        token,
-                    ) {
-                        return WriteOut::Failed(buf, e.into());
+        EgressIo::Tcp { stream } => {
+            let fd = stream.as_raw_fd();
+            let out = {
+                let (head, body): (&[u8], &[u8]) = match &buf {
+                    WireBuf::Frame(wf) => (wf.header_bytes(), wf.payload_bytes()),
+                    WireBuf::Raw(b) => (b.as_slice(), &[]),
+                };
+                let total = head.len() + body.len();
+                loop {
+                    if written == total {
+                        break TcpOut::Flushed;
                     }
-                    return WriteOut::Pending(buf, written);
+                    let res = if written < head.len() {
+                        sys::writev2(fd, &head[written..], body)
+                    } else {
+                        sys::writev2(fd, &body[written - head.len()..], &[])
+                    };
+                    zerocopy::count_egress_syscall();
+                    match res {
+                        Ok(0) => {
+                            break TcpOut::Err(DeferError::Io(
+                                std::io::ErrorKind::WriteZero.into(),
+                            ))
+                        }
+                        Ok(n) => written += n,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            break match sys::epoll_mod(
+                                epfd,
+                                fd,
+                                sys::EPOLLOUT | sys::EPOLLONESHOT,
+                                token,
+                            ) {
+                                Ok(()) => TcpOut::Blocked,
+                                Err(e) => TcpOut::Err(e.into()),
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(e) => break TcpOut::Err(e.into()),
+                    }
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => return WriteOut::Failed(buf, e.into()),
+            };
+            match out {
+                TcpOut::Flushed => WriteOut::Flushed,
+                TcpOut::Blocked => WriteOut::Pending(buf, written),
+                TcpOut::Err(e) => WriteOut::Failed(buf, e),
             }
-        },
+        }
         EgressIo::Local { tx } => match tx.try_send(buf) {
             TrySend::Ok => WriteOut::Flushed,
             TrySend::Full(b) => WriteOut::Pending(b, 0),
@@ -719,7 +761,7 @@ fn write_step(
 /// counts on *this* thread and enqueues the finished bytes for the
 /// shard to write. The bounded queue is the backpressure window.
 pub struct DealSink {
-    queue: PipeSender<(usize, Vec<u8>)>,
+    queue: PipeSender<(usize, WireBuf)>,
     labels: Vec<String>,
     next: usize,
     step: usize,
@@ -772,14 +814,62 @@ impl DealSink {
         };
         let mut buf = Vec::with_capacity(msg.wire_size() as usize);
         write_message(&mut buf, msg, link, counter)?;
-        if self.queue.send((idx, buf)).is_err() {
+        if !msg.payload.is_empty() {
+            zerocopy::count_payload_copy();
+        }
+        if self.queue.send((idx, WireBuf::Raw(buf))).is_err() {
             return Err(self.writer_error(idx));
         }
         if msg.msg_type == MessageType::Data {
             if let Some(ring) = &self.ring {
-                ring.push(msg.frame, msg.payload.clone());
+                zerocopy::count_payload_copy();
+                ring.push(msg.frame, SharedPayload::from_vec(msg.payload.clone(), None));
             }
             self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+        }
+        Ok(())
+    }
+
+    /// Zero-copy counterpart of [`DealSink::send_data`]: the encoder
+    /// already produced the frame's wire form once, so shaping sleeps
+    /// and byte accounting happen here (identical byte sequence to the
+    /// serialize path) and the *shared* buffer is enqueued for the shard
+    /// to gather-write — no serialize copy, and the retention ring holds
+    /// another reference to the same payload instead of a clone.
+    pub fn send_frame(&mut self, wf: WireFrame, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let scheduled = self.next;
+        self.next = (self.next + self.step) % self.labels.len();
+        let idx = match &self.recovery {
+            None => scheduled,
+            Some(sup) => {
+                let n = self.labels.len();
+                match (0..n)
+                    .map(|k| (scheduled + k) % n)
+                    .find(|&j| !sup.is_dead(&self.labels[j]))
+                {
+                    Some(j) => j,
+                    None => {
+                        return Err(DeferError::Coordinator(format!(
+                            "send to {}{}: all {n} successors dead",
+                            self.labels[scheduled],
+                            frame_context(self.last_frame)
+                        )))
+                    }
+                }
+            }
+        };
+        wf.charge(link, counter);
+        let routed = (wf.msg_type() == MessageType::Data).then(|| (wf.frame(), wf.batch()));
+        if routed.is_some() {
+            if let Some(ring) = &self.ring {
+                ring.push(wf.frame(), wf.shared_payload().clone());
+            }
+        }
+        if self.queue.send((idx, WireBuf::Frame(wf))).is_err() {
+            return Err(self.writer_error(idx));
+        }
+        if let Some((frame, batch)) = routed {
+            self.last_frame = Some(frame + u64::from(batch.saturating_sub(1)));
         }
         Ok(())
     }
@@ -803,7 +893,7 @@ impl DealSink {
             counted = true;
             let mut buf = Vec::with_capacity(msg.wire_size() as usize);
             write_message(&mut buf, &msg, l, c)?;
-            if self.queue.send((idx, buf)).is_err() {
+            if self.queue.send((idx, WireBuf::Raw(buf))).is_err() {
                 let e = self.writer_error(idx);
                 return Err(DeferError::Coordinator(format!(
                     "shutdown broadcast failed: {e}"
@@ -823,7 +913,7 @@ impl DealSink {
         let mut buf = Vec::with_capacity(msg.wire_size() as usize);
         write_message(&mut buf, msg, &Link::ideal(), &ByteCounter::new())?;
         buf.truncate(n.clamp(1, buf.len().saturating_sub(1)));
-        if self.queue.send((idx, buf)).is_err() {
+        if self.queue.send((idx, WireBuf::Raw(buf))).is_err() {
             return Err(self.writer_error(idx));
         }
         Ok(())
@@ -949,7 +1039,7 @@ impl Reactor {
         let (conns, labels, next, step) = source.into_parts();
         let mut iconns = Vec::with_capacity(conns.len());
         for (conn, label) in conns.into_iter().zip(labels) {
-            let io = match conn.into_read_half()? {
+            let io = match conn.into_read_half_pooled(pool.as_deref())? {
                 ReadHalf::Tcp { stream, residue } => IngressIo::Tcp {
                     stream,
                     residue,
@@ -1009,7 +1099,7 @@ impl Reactor {
             sup.register_waker(Arc::clone(&waker));
         }
         let (conns, labels, next, step) = sender.into_parts();
-        let (queue_tx, queue_rx) = pipe::<(usize, Vec<u8>)>(depth.max(1));
+        let (queue_tx, queue_rx) = pipe::<(usize, WireBuf)>(depth.max(1));
         queue_rx.set_data_waker(Arc::clone(&waker));
         let mut econns = Vec::with_capacity(conns.len());
         for (conn, label) in conns.into_iter().zip(labels.iter()) {

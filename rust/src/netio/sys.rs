@@ -41,6 +41,13 @@ pub struct EpollEvent {
     pub data: u64,
 }
 
+/// Mirrors the kernel's `struct iovec` for [`writev`].
+#[repr(C)]
+pub struct IoVec {
+    pub iov_base: *const u8,
+    pub iov_len: usize,
+}
+
 extern "C" {
     fn epoll_create1(flags: i32) -> i32;
     fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
@@ -48,6 +55,7 @@ extern "C" {
     fn eventfd(initval: u32, flags: i32) -> i32;
     fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
     fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn writev(fd: i32, iov: *const IoVec, iovcnt: i32) -> isize;
     fn close(fd: i32) -> i32;
 }
 
@@ -138,6 +146,43 @@ pub fn close_fd(fd: RawFd) {
     let _ = unsafe { close(fd) };
 }
 
+/// Gather-write up to two byte slices to `fd` in **one** syscall. Empty
+/// slices are skipped (the kernel accepts zero-length iovecs, but
+/// skipping keeps `iovcnt` honest). Returns the number of bytes written
+/// — like `write`, this may be short; the caller resumes across the
+/// iovec boundary ([`crate::wire::write_all_vectored`]-style).
+pub fn writev2(fd: RawFd, a: &[u8], b: &[u8]) -> io::Result<usize> {
+    let mut iov = [
+        IoVec {
+            iov_base: a.as_ptr(),
+            iov_len: a.len(),
+        },
+        IoVec {
+            iov_base: b.as_ptr(),
+            iov_len: b.len(),
+        },
+    ];
+    let mut cnt = 2;
+    if a.is_empty() {
+        iov[0] = IoVec {
+            iov_base: b.as_ptr(),
+            iov_len: b.len(),
+        };
+        cnt = 1;
+    }
+    if b.is_empty() {
+        cnt -= 1;
+    }
+    if cnt == 0 {
+        return Ok(0);
+    }
+    let rc = unsafe { writev(fd, iov.as_ptr(), cnt) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(rc as usize)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +210,20 @@ mod tests {
         epoll_del(ep, ev).unwrap();
         close_fd(ev);
         close_fd(ep);
+    }
+
+    #[test]
+    fn writev2_gathers_both_slices_and_skips_empty_ones() {
+        use std::io::Read;
+        use std::os::unix::io::AsRawFd;
+        let (mut rx, tx) = std::os::unix::net::UnixStream::pair().unwrap();
+        assert_eq!(writev2(tx.as_raw_fd(), &[1, 2, 3], &[4, 5]).unwrap(), 5);
+        assert_eq!(writev2(tx.as_raw_fd(), &[], &[6]).unwrap(), 1);
+        assert_eq!(writev2(tx.as_raw_fd(), &[7], &[]).unwrap(), 1);
+        assert_eq!(writev2(tx.as_raw_fd(), &[], &[]).unwrap(), 0);
+        let mut got = [0u8; 7];
+        rx.read_exact(&mut got).unwrap();
+        assert_eq!(got, [1, 2, 3, 4, 5, 6, 7]);
     }
 
     #[test]

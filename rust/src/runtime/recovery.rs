@@ -42,7 +42,7 @@ use crate::metrics::ByteCounter;
 use crate::netem::{FaultPlan, Link};
 use crate::serial::chunked::chunk_payload_span;
 use crate::threadpool::WorkerPool;
-use crate::wire::{chunk_nack, chunk_retry, parse_chunk_control, MessageType};
+use crate::wire::{chunk_nack, chunk_retry, parse_chunk_control, MessageType, SharedPayload};
 
 /// Re-decodes attempted per corrupt frame before escalating to frame
 /// re-dispatch.
@@ -315,7 +315,10 @@ impl RecoverySupervisor {
 /// node, keyed by first frame id. The NACK responders cut chunk spans
 /// out of these to answer retries.
 pub struct RetentionRing {
-    inner: Mutex<VecDeque<(u64, Vec<u8>)>>,
+    /// Payloads are [`SharedPayload`]s: the zero-copy send path retains
+    /// another reference to the encoder's pooled buffer instead of a
+    /// clone, so retention costs refcounts, not memcpys.
+    inner: Mutex<VecDeque<(u64, SharedPayload)>>,
     cap: usize,
 }
 
@@ -328,7 +331,7 @@ impl RetentionRing {
     }
 
     /// Retain a just-sent container (evicting the oldest beyond `cap`).
-    pub fn push(&self, frame: u64, payload: Vec<u8>) {
+    pub fn push(&self, frame: u64, payload: SharedPayload) {
         let mut q = self.inner.lock().unwrap();
         q.push_back((frame, payload));
         while q.len() > self.cap {
@@ -341,6 +344,7 @@ impl RetentionRing {
     pub fn chunk(&self, frame: u64, idx: u32) -> Option<Vec<u8>> {
         let q = self.inner.lock().unwrap();
         let (_, payload) = q.iter().rev().find(|(f, _)| *f == frame)?;
+        let payload = payload.as_slice();
         let span = chunk_payload_span(payload, idx as usize).ok()?;
         Some(payload[span].to_vec())
     }
@@ -437,7 +441,7 @@ impl ChunkRetryClient {
             DeferError::Coordinator(format!("no control conn to {label}"))
         })?;
         let counter = ByteCounter::new();
-        conn.send(&chunk_nack(frame, idx), &Link::ideal(), &counter)?;
+        conn.send_frame(chunk_nack(frame, idx), &Link::ideal(), &counter)?;
         let reply = conn.recv(&counter)?;
         if reply.msg_type != MessageType::ChunkRetry || reply.frame != frame {
             return Err(DeferError::Wire(format!(
@@ -607,13 +611,13 @@ mod tests {
         let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
         let (_, _, wire, _) = container(&data, 256);
         let ring = RetentionRing::new(2);
-        ring.push(10, wire.clone());
+        ring.push(10, SharedPayload::from_vec(wire.clone(), None));
         let span = chunk_payload_span(&wire, 1).unwrap();
         assert_eq!(ring.chunk(10, 1).unwrap(), wire[span].to_vec());
         assert!(ring.chunk(11, 0).is_none());
         // Eviction beyond capacity drops the oldest.
-        ring.push(11, wire.clone());
-        ring.push(12, wire);
+        ring.push(11, SharedPayload::from_vec(wire.clone(), None));
+        ring.push(12, SharedPayload::from_vec(wire, None));
         assert!(ring.chunk(10, 0).is_none());
         assert!(ring.chunk(12, 0).is_some());
     }
@@ -628,7 +632,7 @@ mod tests {
 
         let sup = RecoverySupervisor::new(8, FaultPlan::default());
         let ring = RetentionRing::new(4);
-        ring.push(3, wire.clone());
+        ring.push(3, SharedPayload::from_vec(wire.clone(), None));
         let (resp_conn, client_conn) = Conn::local_pair(4);
         let mut pool = WorkerPool::new();
         spawn_nack_responder(&mut pool, "nack-responder", resp_conn, Arc::clone(&ring));
@@ -669,7 +673,8 @@ mod tests {
 
         let sup = RecoverySupervisor::new(8, FaultPlan::default());
         let ring = RetentionRing::new(4);
-        ring.push(9, corrupted.clone()); // retains the *corrupt* bytes
+        // retains the *corrupt* bytes
+        ring.push(9, SharedPayload::from_vec(corrupted.clone(), None));
         let (resp_conn, client_conn) = Conn::local_pair(4);
         let mut pool = WorkerPool::new();
         spawn_nack_responder(&mut pool, "nack-responder", resp_conn, ring);

@@ -136,6 +136,13 @@ impl CodecRuntime {
         self.buffers.as_deref()
     }
 
+    /// The scratch pool as an owned handle — what a
+    /// [`crate::wire::WireFrame`] payload cell holds so the buffer
+    /// returns here when the last reference drops.
+    pub fn buffers_arc(&self) -> Option<Arc<BufPool>> {
+        self.buffers.clone()
+    }
+
     pub fn kernel(&self) -> CodecKernel {
         self.kernel
     }
@@ -346,6 +353,56 @@ pub fn decode_frame(
         Some(t) => t.time(work),
         None => work(),
     }
+}
+
+/// A structurally valid container layout, as probed by
+/// [`container_layout`]: the metadata prefix (container header + the
+/// per-chunk header block) and the chunk count.
+#[derive(Clone, Copy, Debug)]
+pub struct ContainerLayout {
+    /// Bytes before the first chunk body — the region *not* covered by
+    /// the stored per-chunk CRCs.
+    pub prefix_len: usize,
+    pub n_chunks: usize,
+}
+
+/// Probe `payload` for a structurally valid chunk container: magic, a
+/// chunk count that fits, and per-chunk wire lengths that exactly tile
+/// the rest of the buffer. `None` means "not a container" — the caller
+/// falls back to whole-buffer handling. This is the ingest fast path's
+/// gate: when it passes, the message CRC can be reconstituted from the
+/// stored per-chunk CRCs ([`crate::wire::crc32::combine`]) and the chunk
+/// bodies are only swept once, by [`decode_frame`]'s verified walk.
+pub fn container_layout(payload: &[u8]) -> Option<ContainerLayout> {
+    if payload.len() < CONTAINER_HEADER || read_u32(payload, 0) != CHUNK_MAGIC as usize {
+        return None;
+    }
+    let n_chunks = read_u32(payload, 4);
+    if n_chunks > (payload.len() - CONTAINER_HEADER) / PER_CHUNK_HEADER {
+        return None;
+    }
+    let prefix_len = CONTAINER_HEADER + n_chunks * PER_CHUNK_HEADER;
+    let mut off = prefix_len;
+    for i in 0..n_chunks {
+        off = off.checked_add(read_u32(payload, CONTAINER_HEADER + i * PER_CHUNK_HEADER))?;
+        if off > payload.len() {
+            return None;
+        }
+    }
+    if off != payload.len() {
+        return None;
+    }
+    Some(ContainerLayout { prefix_len, n_chunks })
+}
+
+/// Stored CRC and wire length of chunk `i`'s body. Caller guarantees the
+/// layout came from [`container_layout`] over the same buffer.
+pub fn chunk_crc_len(payload: &[u8], i: usize) -> (u32, u64) {
+    let hdr = CONTAINER_HEADER + i * PER_CHUNK_HEADER;
+    (
+        read_u32(payload, hdr + 8) as u32,
+        read_u32(payload, hdr) as u64,
+    )
 }
 
 /// Byte range of chunk `index`'s wire payload inside a container — the

@@ -70,7 +70,7 @@ use std::time::Duration;
 
 use crate::coordinator::transport::Conn;
 use crate::error::{DeferError, Result};
-use crate::metrics::ByteCounter;
+use crate::metrics::{zerocopy, ByteCounter};
 use crate::netem::Link;
 use crate::netio::DealSink;
 use crate::runtime::recovery::{
@@ -78,7 +78,7 @@ use crate::runtime::recovery::{
 };
 use crate::threadpool::{pipe, PipeReceiver, WorkerPool};
 use crate::topology::{StageView, Topology};
-use crate::wire::{Message, MessageType};
+use crate::wire::{Message, MessageType, SharedPayload, WireFrame};
 
 /// How to realize the topology's edges.
 pub struct TransportOptions {
@@ -247,7 +247,11 @@ impl DealSender {
                             if msg.msg_type == MessageType::Data {
                                 sup.note_routed(&self.labels[j], msg.frame, msg.batch);
                                 if let Some(ring) = &self.ring {
-                                    ring.push(msg.frame, msg.payload.clone());
+                                    zerocopy::count_payload_copy();
+                                    ring.push(
+                                        msg.frame,
+                                        SharedPayload::from_vec(msg.payload.clone(), None),
+                                    );
                                 }
                             }
                             break;
@@ -266,6 +270,72 @@ impl DealSender {
         }
         if msg.msg_type == MessageType::Data {
             self.last_frame = Some(msg.frame + u64::from(msg.batch.saturating_sub(1)));
+        }
+        Ok(())
+    }
+
+    /// Zero-copy counterpart of [`DealSender::send_data`]: the encoder
+    /// already produced the frame's wire form once, so the scheduled
+    /// conn gather-writes the shared buffer directly (shaping and byte
+    /// accounting charge the identical byte sequence). The retention
+    /// ring retains another reference to the same payload instead of a
+    /// clone; failover re-attempts bump the refcount only.
+    pub fn send_frame(&mut self, wf: WireFrame, link: &Link, counter: &ByteCounter) -> Result<()> {
+        let scheduled = self.next;
+        self.next = (self.next + self.step) % self.conns.len();
+        let is_data = wf.msg_type() == MessageType::Data;
+        let (frame, batch) = (wf.frame(), wf.batch());
+        match self.recovery.clone() {
+            None => {
+                self.conns[scheduled]
+                    .send_frame(wf, link, counter)
+                    .map_err(|e| {
+                        DeferError::Coordinator(format!(
+                            "send to {}{}: {e}",
+                            self.labels[scheduled],
+                            frame_context(self.last_frame)
+                        ))
+                    })?;
+            }
+            Some(sup) => {
+                let n = self.conns.len();
+                let mut at = scheduled;
+                let mut last_err: Option<DeferError> = None;
+                loop {
+                    let live = (0..n)
+                        .map(|k| (at + k) % n)
+                        .find(|&j| !sup.is_dead(&self.labels[j]));
+                    let Some(j) = live else {
+                        let detail = last_err
+                            .map(|e| format!(": {e}"))
+                            .unwrap_or_default();
+                        return Err(DeferError::Coordinator(format!(
+                            "send to {}{}: all {n} successors dead{detail}",
+                            self.labels[scheduled],
+                            frame_context(self.last_frame)
+                        )));
+                    };
+                    match self.conns[j].send_frame(wf.clone(), link, counter) {
+                        Ok(()) => {
+                            if is_data {
+                                sup.note_routed(&self.labels[j], frame, batch);
+                                if let Some(ring) = &self.ring {
+                                    ring.push(frame, wf.shared_payload().clone());
+                                }
+                            }
+                            break;
+                        }
+                        Err(e) => {
+                            sup.mark_dead(&self.labels[j]);
+                            last_err = Some(e);
+                            at = (j + 1) % n;
+                        }
+                    }
+                }
+            }
+        }
+        if is_data {
+            self.last_frame = Some(frame + u64::from(batch.saturating_sub(1)));
         }
         Ok(())
     }
@@ -658,6 +728,16 @@ impl FrameSink {
         match self {
             FrameSink::Direct(s) => s.send_data(msg, link, counter),
             FrameSink::Queued(s) => s.send_data(msg, link, counter),
+        }
+    }
+
+    /// Send one pre-encoded frame per the deal schedule with no
+    /// serialize copy (see [`DealSender::send_frame`] /
+    /// [`DealSink::send_frame`]).
+    pub fn send_frame(&mut self, wf: WireFrame, link: &Link, counter: &ByteCounter) -> Result<()> {
+        match self {
+            FrameSink::Direct(s) => s.send_frame(wf, link, counter),
+            FrameSink::Queued(s) => s.send_frame(wf, link, counter),
         }
     }
 

@@ -8,8 +8,16 @@
 //! intact, `put` returns one after the consumer is done with it. The
 //! pool is bounded so a burst cannot pin unbounded memory, and it is
 //! `Mutex`-guarded — contention is negligible at frame granularity.
+//!
+//! Every `take*` records a hit (served from the free list) or a miss
+//! (fresh allocation) — per pool and into the process-global
+//! [`crate::metrics::zerocopy`] counters — so the zero-copy data plane
+//! can prove steady-state traffic allocates nothing.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::metrics::zerocopy;
 
 /// A bounded pool of reusable `Vec<u8>` buffers.
 #[derive(Debug, Default)]
@@ -17,6 +25,8 @@ pub struct BufPool {
     free: Mutex<Vec<Vec<u8>>>,
     /// Max buffers retained; extra `put`s drop the buffer instead.
     max: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl BufPool {
@@ -25,13 +35,26 @@ impl BufPool {
         BufPool {
             free: Mutex::new(Vec::new()),
             max: max.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
 
     /// Take an empty buffer (capacity from a previous `put` when
     /// available, freshly allocated otherwise).
     pub fn take(&self) -> Vec<u8> {
-        self.free.lock().unwrap().pop().unwrap_or_default()
+        match self.free.lock().unwrap().pop() {
+            Some(buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                zerocopy::count_pool_hit();
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                zerocopy::count_pool_miss();
+                Vec::new()
+            }
+        }
     }
 
     /// Take a buffer resized to `len` (zero-filled where not overwritten
@@ -57,6 +80,16 @@ impl BufPool {
     /// Free buffers currently pooled (diagnostics).
     pub fn pooled(&self) -> usize {
         self.free.lock().unwrap().len()
+    }
+
+    /// `take*` calls served from the free list.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// `take*` calls that allocated fresh.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -100,5 +133,16 @@ mod tests {
         pool.put(a);
         let b = pool.take_len(16);
         assert_eq!(b, vec![0u8; 16]);
+    }
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let pool = BufPool::new(2);
+        assert_eq!((pool.hits(), pool.misses()), (0, 0));
+        let a = pool.take_len(32); // empty pool: miss
+        assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        pool.put(a);
+        let _b = pool.take(); // recycled: hit
+        assert_eq!((pool.hits(), pool.misses()), (1, 1));
     }
 }

@@ -70,6 +70,74 @@ pub fn finish(state: u32) -> u32 {
     state ^ 0xFFFF_FFFF
 }
 
+/// Multiply the GF(2) 32x32 matrix `mat` by the bit-vector `vec`.
+fn gf2_matrix_times(mat: &[u32; 32], mut vec: u32) -> u32 {
+    let mut sum = 0u32;
+    let mut i = 0;
+    while vec != 0 {
+        if vec & 1 != 0 {
+            sum ^= mat[i];
+        }
+        vec >>= 1;
+        i += 1;
+    }
+    sum
+}
+
+/// `square = mat * mat` over GF(2).
+fn gf2_matrix_square(square: &mut [u32; 32], mat: &[u32; 32]) {
+    for n in 0..32 {
+        square[n] = gf2_matrix_times(mat, mat[n]);
+    }
+}
+
+/// CRC of a concatenation from the parts' CRCs (zlib's `crc32_combine`):
+/// `combine(crc(A), crc(B), B.len()) == crc(A || B)`, both inputs and the
+/// result in the *finished* domain ([`crc32`] outputs). Appending `len2`
+/// zero bits is a linear operator over GF(2); it is applied to `crc1` by
+/// repeated matrix squaring, so the cost is `O(log len2)` 32x32 matrix
+/// ops — independent of the payload size. This is what lets the ingest
+/// path verify a message CRC from the container's stored per-chunk CRCs
+/// without a second pass over the payload bytes (§Perf).
+pub fn combine(crc1: u32, crc2: u32, len2: u64) -> u32 {
+    if len2 == 0 {
+        return crc1;
+    }
+    let mut even = [0u32; 32]; // operator for 2 zero bits
+    let mut odd = [0u32; 32]; // operator for 1 zero bit
+    odd[0] = 0xEDB8_8320; // the poly itself: shifting out a 1 bit
+    let mut row = 1u32;
+    for slot in odd.iter_mut().skip(1) {
+        *slot = row;
+        row <<= 1;
+    }
+    gf2_matrix_square(&mut even, &odd); // 2 bits
+    gf2_matrix_square(&mut odd, &even); // 4 bits
+    let mut crc1 = crc1;
+    let mut len2 = len2;
+    // Apply len2 zero *bytes*: square up through the bits of len2,
+    // alternating which matrix holds the current power of the operator.
+    loop {
+        gf2_matrix_square(&mut even, &odd);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&even, crc1);
+        }
+        len2 >>= 1;
+        if len2 == 0 {
+            break;
+        }
+        gf2_matrix_square(&mut odd, &even);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&odd, crc1);
+        }
+        len2 >>= 1;
+        if len2 == 0 {
+            break;
+        }
+    }
+    crc1 ^ crc2
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -32,11 +32,13 @@
 
 pub mod crc32;
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
+use std::sync::Arc;
 
 use crate::error::{DeferError, Result};
-use crate::metrics::ByteCounter;
+use crate::metrics::{zerocopy, ByteCounter};
 use crate::netem::Link;
+use crate::util::bufpool::BufPool;
 
 /// Paper's default chunk size: 512 kB.
 pub const CHUNK_SIZE: usize = 512 * 1024;
@@ -88,16 +90,18 @@ impl MessageType {
 
 /// Build a chunk NACK: "frame `frame`, chunk `chunk` failed its CRC —
 /// re-send it". The chunk index travels in the payload (4 bytes LE) so
-/// the header keeps its standard layout.
-pub fn chunk_nack(frame: u64, chunk: u32) -> Message {
-    Message {
-        msg_type: MessageType::ChunkNack,
+/// the header keeps its standard layout. The payload rides inline in the
+/// [`WireFrame`] — a NACK burst under corruption allocates nothing.
+pub fn chunk_nack(frame: u64, chunk: u32) -> WireFrame {
+    WireFrame::new(
+        MessageType::ChunkNack,
         frame,
-        serialized_len: 0,
-        count: 0,
-        batch: 1,
-        payload: chunk.to_le_bytes().to_vec(),
-    }
+        1,
+        0,
+        0,
+        SharedPayload::inline(&chunk.to_le_bytes()),
+    )
+    .expect("batch 1 is always valid")
 }
 
 /// Build the reply to a NACK: the retained wire bytes of exactly that
@@ -176,30 +180,95 @@ impl Message {
 
 pub const HEADER_SIZE: usize = 4 + 1 + 3 + 8 + 8 + 8 + 8 + 4;
 
-fn encode_header(msg: &Message) -> [u8; HEADER_SIZE] {
+#[allow(clippy::too_many_arguments)]
+fn encode_header_parts(
+    msg_type: MessageType,
+    frame: u64,
+    batch: u32,
+    serialized_len: u64,
+    count: u64,
+    payload: &[u8],
+) -> [u8; HEADER_SIZE] {
     let mut h = [0u8; HEADER_SIZE];
     h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
-    h[4] = msg.msg_type as u8;
+    h[4] = msg_type as u8;
     // Batch count, biased by one, in the former pad bytes: an unbatched
     // message writes zeros, keeping the legacy wire bytes exactly.
-    h[5..8].copy_from_slice(&(msg.batch - 1).to_le_bytes()[..3]);
-    h[8..16].copy_from_slice(&msg.frame.to_le_bytes());
-    h[16..24].copy_from_slice(&(msg.payload.len() as u64).to_le_bytes());
-    h[24..32].copy_from_slice(&msg.serialized_len.to_le_bytes());
-    h[32..40].copy_from_slice(&msg.count.to_le_bytes());
+    h[5..8].copy_from_slice(&(batch - 1).to_le_bytes()[..3]);
+    h[8..16].copy_from_slice(&frame.to_le_bytes());
+    h[16..24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&serialized_len.to_le_bytes());
+    h[32..40].copy_from_slice(&count.to_le_bytes());
     // CRC covers the header fields too — a flipped frame id or length must
     // not pass silently (frame ids order the FIFO results). Streamed, so
     // header + payload are never concatenated (§Perf).
     let crc = crc32::finish(crc32::update(
         crc32::update(crc32::init(), &h[0..40]),
-        &msg.payload,
+        payload,
     ));
     h[40..44].copy_from_slice(&crc.to_le_bytes());
     h
 }
 
-/// Write one message: header, then the payload in <=512 kB chunks, each
-/// chunk passing through the link shaper and byte counter.
+fn encode_header(msg: &Message) -> [u8; HEADER_SIZE] {
+    encode_header_parts(
+        msg.msg_type,
+        msg.frame,
+        msg.batch,
+        msg.serialized_len,
+        msg.count,
+        &msg.payload,
+    )
+}
+
+/// Charge the link shaper and byte counter for one message's wire bytes:
+/// the header, then the payload in <=512 kB chunk steps — the *same*
+/// sequence the pre-vectored writer charged, so shaped timing and
+/// `RunReport` byte totals are independent of how many syscalls the
+/// bytes actually leave in.
+fn charge_wire(link: &Link, counter: &ByteCounter, payload: &[u8]) {
+    link.shape(HEADER_SIZE);
+    counter.add(HEADER_SIZE as u64);
+    for chunk in payload.chunks(CHUNK_SIZE.max(1)) {
+        link.shape(chunk.len());
+        counter.add(chunk.len() as u64);
+    }
+}
+
+/// `write_all` for the logical buffer `head || body` without ever
+/// materializing the concatenation: vectored writes while the header has
+/// unwritten bytes, plain writes for the payload tail. Resumes correctly
+/// from a short write at any offset — mid-header, mid-payload, or exactly
+/// at the iovec boundary.
+pub fn write_all_vectored(
+    w: &mut impl Write,
+    head: &[u8],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let total = head.len() + body.len();
+    let mut written = 0usize;
+    while written < total {
+        let res = if written < head.len() {
+            let bufs = [IoSlice::new(&head[written..]), IoSlice::new(body)];
+            w.write_vectored(&bufs)
+        } else {
+            w.write(&body[written - head.len()..])
+        };
+        match res {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Write one message: header, then the payload, leaving the process in as
+/// few writes as the sink allows ([`Write::write_vectored`] — one syscall
+/// for an unbuffered socket). The link shaper and byte counters observe
+/// the header + <=512 kB chunk sequence exactly as before (§Perf:
+/// vectored egress changed syscall count, not accounting).
 pub fn write_message(
     w: &mut impl Write,
     msg: &Message,
@@ -213,16 +282,290 @@ pub fn write_message(
         )));
     }
     let header = encode_header(msg);
-    link.shape(header.len());
-    w.write_all(&header)?;
-    counter.add(header.len() as u64);
-    for chunk in msg.payload.chunks(CHUNK_SIZE.max(1)) {
-        link.shape(chunk.len());
-        w.write_all(chunk)?;
-        counter.add(chunk.len() as u64);
-    }
+    charge_wire(link, counter, &msg.payload);
+    write_all_vectored(w, &header, &msg.payload)?;
     w.flush()?;
     Ok(())
+}
+
+/// Payload bytes of a [`WireFrame`]: either a few inline control bytes
+/// (chunk NACKs, empty control frames — no heap traffic at all) or an
+/// `Arc`-shared pooled buffer. Cloning is O(1); the buffer returns to its
+/// [`BufPool`] when the last reference drops.
+#[derive(Clone, Debug)]
+pub enum SharedPayload {
+    /// Small control payloads stored in place (<= [`INLINE_PAYLOAD`]).
+    Inline { len: u8, buf: [u8; INLINE_PAYLOAD] },
+    /// Frame-scale payloads, shared by reference.
+    Shared(Arc<PayloadCell>),
+}
+
+/// Max payload bytes stored inline in a [`SharedPayload`].
+pub const INLINE_PAYLOAD: usize = 24;
+
+/// An owned payload buffer plus the pool it returns to on drop. This is
+/// the zero-copy contract: the encoder fills the buffer once, and egress
+/// queues, the retention ring, failover reroute and re-dispatch all hold
+/// `Arc`s to this cell — nobody memcpys the bytes again.
+#[derive(Debug, Default)]
+pub struct PayloadCell {
+    buf: Vec<u8>,
+    pool: Option<Arc<BufPool>>,
+}
+
+impl Drop for PayloadCell {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.pool {
+            pool.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl SharedPayload {
+    /// Inline payload (<= [`INLINE_PAYLOAD`] bytes; panics beyond — the
+    /// wire layer only inlines its own fixed-size control payloads).
+    pub fn inline(bytes: &[u8]) -> SharedPayload {
+        assert!(bytes.len() <= INLINE_PAYLOAD, "inline payload too large");
+        let mut buf = [0u8; INLINE_PAYLOAD];
+        buf[..bytes.len()].copy_from_slice(bytes);
+        SharedPayload::Inline {
+            len: bytes.len() as u8,
+            buf,
+        }
+    }
+
+    /// Wrap an owned buffer (typically fresh from the encoder). `pool`
+    /// receives the buffer back when the last clone drops.
+    pub fn from_vec(buf: Vec<u8>, pool: Option<Arc<BufPool>>) -> SharedPayload {
+        SharedPayload::Shared(Arc::new(PayloadCell { buf, pool }))
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            SharedPayload::Inline { len, buf } => &buf[..*len as usize],
+            SharedPayload::Shared(cell) => &cell.buf,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The bytes as an owned `Vec`. Zero-copy when this is the last
+    /// reference to a shared cell (the buffer migrates out, bypassing
+    /// the cell's pool return); a counted copy when other holders (e.g.
+    /// the retention ring) still share it.
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            SharedPayload::Inline { len, buf } => buf[..len as usize].to_vec(),
+            SharedPayload::Shared(cell) => match Arc::try_unwrap(cell) {
+                Ok(mut cell) => std::mem::take(&mut cell.buf),
+                Err(cell) => {
+                    if !cell.buf.is_empty() {
+                        zerocopy::count_payload_copy();
+                    }
+                    cell.buf.clone()
+                }
+            },
+        }
+    }
+}
+
+/// One encoded message in wire form: the fixed 44-byte header (CRC
+/// already computed) plus a [`SharedPayload`]. Built **once** by the
+/// encoder; every consumer — egress queue, deal fan-out and failover
+/// reroute, recovery retention ring, NACK responder, re-dispatch —
+/// clones the `WireFrame` (an `Arc` bump) instead of the bytes.
+#[derive(Clone, Debug)]
+pub struct WireFrame {
+    header: [u8; HEADER_SIZE],
+    payload: SharedPayload,
+}
+
+impl WireFrame {
+    pub fn new(
+        msg_type: MessageType,
+        frame: u64,
+        batch: u32,
+        serialized_len: u64,
+        count: u64,
+        payload: SharedPayload,
+    ) -> Result<WireFrame> {
+        if batch == 0 || batch > MAX_BATCH {
+            return Err(DeferError::Wire(format!(
+                "batch {batch} out of range 1..={MAX_BATCH}"
+            )));
+        }
+        let header = encode_header_parts(
+            msg_type,
+            frame,
+            batch,
+            serialized_len,
+            count,
+            payload.as_slice(),
+        );
+        Ok(WireFrame { header, payload })
+    }
+
+    /// Bridge from the legacy owned-payload [`Message`] (control and
+    /// config traffic). Small payloads inline; larger ones pay one
+    /// counted copy — the data path builds [`WireFrame`]s natively and
+    /// never comes through here.
+    pub fn from_message(msg: &Message) -> Result<WireFrame> {
+        let payload = if msg.payload.len() <= INLINE_PAYLOAD {
+            SharedPayload::inline(&msg.payload)
+        } else {
+            zerocopy::count_payload_copy();
+            SharedPayload::from_vec(msg.payload.clone(), None)
+        };
+        WireFrame::new(
+            msg.msg_type,
+            msg.frame,
+            msg.batch,
+            msg.serialized_len,
+            msg.count,
+            payload,
+        )
+    }
+
+    pub fn msg_type(&self) -> MessageType {
+        MessageType::from_u8(self.header[4]).expect("validated at construction")
+    }
+
+    pub fn frame(&self) -> u64 {
+        u64::from_le_bytes(self.header[8..16].try_into().unwrap())
+    }
+
+    pub fn batch(&self) -> u32 {
+        1 + u32::from_le_bytes([self.header[5], self.header[6], self.header[7], 0])
+    }
+
+    pub fn serialized_len(&self) -> u64 {
+        u64::from_le_bytes(self.header[24..32].try_into().unwrap())
+    }
+
+    pub fn count(&self) -> u64 {
+        u64::from_le_bytes(self.header[32..40].try_into().unwrap())
+    }
+
+    pub fn header_bytes(&self) -> &[u8; HEADER_SIZE] {
+        &self.header
+    }
+
+    pub fn payload_bytes(&self) -> &[u8] {
+        self.payload.as_slice()
+    }
+
+    pub fn shared_payload(&self) -> &SharedPayload {
+        &self.payload
+    }
+
+    /// Header + payload size on the wire (what nload would count).
+    pub fn wire_size(&self) -> u64 {
+        HEADER_SIZE as u64 + self.payload.len() as u64
+    }
+
+    /// Charge shaper + counter for this frame's bytes without writing —
+    /// callers pair this with [`WireFrame::write_to`] (TCP) or an
+    /// in-process handoff (local pipes). Sequence identical to
+    /// [`write_message`]'s.
+    pub fn charge(&self, link: &Link, counter: &ByteCounter) {
+        charge_wire(link, counter, self.payload.as_slice());
+    }
+
+    /// Write header + payload via vectored I/O (no flush — the caller
+    /// owns buffering policy).
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        write_all_vectored(w, &self.header, self.payload.as_slice())
+    }
+
+    /// The full wire image as one owned buffer (fault injection, tests).
+    pub fn to_wire_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_size() as usize);
+        out.extend_from_slice(&self.header);
+        out.extend_from_slice(self.payload.as_slice());
+        out
+    }
+
+    /// Materialize a legacy [`Message`] view (copies the payload; used
+    /// only off the hot path, e.g. fault injection).
+    pub fn to_message(&self) -> Message {
+        if !self.payload.is_empty() {
+            zerocopy::count_payload_copy();
+        }
+        Message {
+            msg_type: self.msg_type(),
+            frame: self.frame(),
+            serialized_len: self.serialized_len(),
+            count: self.count(),
+            batch: self.batch(),
+            payload: self.payload.as_slice().to_vec(),
+        }
+    }
+
+    /// Consume the frame into a [`Message`] — zero-copy when the payload
+    /// is uniquely held (the in-process delivery path). No CRC pass: the
+    /// bytes never left memory and the header was built validated.
+    pub fn into_message(self) -> Message {
+        Message {
+            msg_type: self.msg_type(),
+            frame: self.frame(),
+            serialized_len: self.serialized_len(),
+            count: self.count(),
+            batch: self.batch(),
+            payload: self.payload.into_vec(),
+        }
+    }
+}
+
+/// What travels through egress queues and local pipes: a structured
+/// frame (never flattened — the zero-copy path) or pre-serialized raw
+/// bytes (legacy control traffic, truncation fault injection).
+#[derive(Clone, Debug)]
+pub enum WireBuf {
+    Frame(WireFrame),
+    Raw(Vec<u8>),
+}
+
+impl WireBuf {
+    /// Total wire bytes this buffer represents.
+    pub fn len(&self) -> usize {
+        match self {
+            WireBuf::Frame(f) => f.wire_size() as usize,
+            WireBuf::Raw(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The leading [`HEADER_SIZE`] bytes when present (routing metadata:
+    /// type, frame id, batch). Raw buffers shorter than a header — e.g.
+    /// truncation faults — return `None`.
+    pub fn wire_header(&self) -> Option<&[u8]> {
+        match self {
+            WireBuf::Frame(f) => Some(&f.header[..]),
+            WireBuf::Raw(b) if b.len() >= HEADER_SIZE => Some(&b[..HEADER_SIZE]),
+            WireBuf::Raw(_) => None,
+        }
+    }
+}
+
+impl From<WireFrame> for WireBuf {
+    fn from(f: WireFrame) -> WireBuf {
+        WireBuf::Frame(f)
+    }
+}
+
+impl From<Vec<u8>> for WireBuf {
+    fn from(b: Vec<u8>) -> WireBuf {
+        WireBuf::Raw(b)
+    }
 }
 
 /// A parsed-and-validated message header whose payload has not been
@@ -276,11 +619,40 @@ impl Header {
     }
 
     /// Verify the CRC over header + payload and assemble the message.
+    ///
+    /// Single-pass ingest (§Perf): when the payload is a structurally
+    /// valid chunk container, the message CRC is reconstituted from the
+    /// container's *stored* per-chunk CRCs via [`crc32::combine`] — only
+    /// the header and the container's metadata prefix are actually
+    /// swept here. The chunk bodies are then CRC-verified exactly once,
+    /// by `serial::chunked::decode_frame`'s chunk walk (which reports
+    /// corruption by index, the NACKable form), instead of twice. A
+    /// corrupted metadata prefix or stored CRC still fails right here;
+    /// any other payload shape takes the classic full sweep.
     pub fn into_message(self, payload: Vec<u8>) -> Result<Message> {
-        let crc_actual = crc32::finish(crc32::update(
-            crc32::update(crc32::init(), &self.raw[0..40]),
-            &payload,
-        ));
+        let chunked_crc = if matches!(
+            self.msg_type,
+            MessageType::Data | MessageType::ResultMsg | MessageType::Weights
+        ) {
+            crate::serial::chunked::container_layout(&payload).map(|layout| {
+                let prefix = crc32::finish(crc32::update(
+                    crc32::update(crc32::init(), &self.raw[0..40]),
+                    &payload[..layout.prefix_len],
+                ));
+                (0..layout.n_chunks).fold(prefix, |acc, i| {
+                    let (crc, len) = crate::serial::chunked::chunk_crc_len(&payload, i);
+                    crc32::combine(acc, crc, len)
+                })
+            })
+        } else {
+            None
+        };
+        let crc_actual = chunked_crc.unwrap_or_else(|| {
+            crc32::finish(crc32::update(
+                crc32::update(crc32::init(), &self.raw[0..40]),
+                &payload,
+            ))
+        });
         if crc_actual != self.crc_expect {
             return Err(DeferError::Wire(format!(
                 "crc mismatch: {crc_actual:#x} != {:#x}",
@@ -556,9 +928,13 @@ mod tests {
 
     #[test]
     fn chunk_control_round_trip() {
+        // NACKs are inline WireFrames now; their wire image must parse
+        // back through the ordinary reader.
         let nack = chunk_nack(42, 7);
-        let got = round_trip(&nack);
-        assert_eq!(got, nack);
+        let bytes = nack.to_wire_bytes();
+        let got = read_message(&mut bytes.as_slice(), &ByteCounter::new()).unwrap();
+        assert_eq!(got.frame, 42);
+        assert_eq!(got.msg_type, MessageType::ChunkNack);
         let (idx, rest) = parse_chunk_control(&got).unwrap();
         assert_eq!((idx, rest.len()), (7, 0));
 
@@ -567,6 +943,136 @@ mod tests {
         let (idx, bytes) = parse_chunk_control(&got).unwrap();
         assert_eq!(idx, 7);
         assert_eq!(bytes, &[9, 8, 7, 6, 5]);
+    }
+
+    #[test]
+    fn crc_combine_matches_direct_concatenation() {
+        let mut rng = Rng::new(61);
+        for (la, lb) in [(0usize, 0usize), (1, 1), (9, 0), (0, 9), (100, 1000), (4096, 7)] {
+            let a = rng.bytes(la);
+            let b = rng.bytes(lb);
+            let mut joined = a.clone();
+            joined.extend_from_slice(&b);
+            assert_eq!(
+                crc32::combine(crc32::crc32(&a), crc32::crc32(&b), b.len() as u64),
+                crc32::crc32(&joined),
+                "la={la} lb={lb}"
+            );
+        }
+    }
+
+    #[test]
+    fn wireframe_bytes_identical_to_write_message() {
+        let mut rng = Rng::new(62);
+        for payload_len in [0usize, 4, 1000, CHUNK_SIZE + 5] {
+            let msg = Message {
+                msg_type: MessageType::Data,
+                frame: 17,
+                serialized_len: payload_len as u64,
+                count: (payload_len / 4) as u64,
+                batch: 3,
+                payload: rng.bytes(payload_len),
+            };
+            let mut legacy = Vec::new();
+            let tx = ByteCounter::new();
+            write_message(&mut legacy, &msg, &Link::ideal(), &tx).unwrap();
+            let wf = WireFrame::new(
+                msg.msg_type,
+                msg.frame,
+                msg.batch,
+                msg.serialized_len,
+                msg.count,
+                SharedPayload::from_vec(msg.payload.clone(), None),
+            )
+            .unwrap();
+            assert_eq!(wf.to_wire_bytes(), legacy, "payload_len={payload_len}");
+            // charge() must account the same byte total write_message did.
+            let charged = ByteCounter::new();
+            wf.charge(&Link::ideal(), &charged);
+            assert_eq!(charged.total(), tx.total());
+            // A clone shares, not copies; into_message on the last
+            // reference hands the buffer back untouched.
+            let clone = wf.clone();
+            drop(wf);
+            assert_eq!(clone.into_message().payload, msg.payload);
+        }
+    }
+
+    #[test]
+    fn wireframe_accessors_match_header_fields() {
+        let wf = WireFrame::new(
+            MessageType::ResultMsg,
+            99,
+            5,
+            1234,
+            300,
+            SharedPayload::inline(&[1, 2, 3]),
+        )
+        .unwrap();
+        assert_eq!(wf.msg_type(), MessageType::ResultMsg);
+        assert_eq!(wf.frame(), 99);
+        assert_eq!(wf.batch(), 5);
+        assert_eq!(wf.serialized_len(), 1234);
+        assert_eq!(wf.count(), 300);
+        assert_eq!(wf.payload_bytes(), &[1, 2, 3]);
+        assert_eq!(wf.wire_size(), HEADER_SIZE as u64 + 3);
+        assert!(WireFrame::new(
+            MessageType::Data,
+            0,
+            0,
+            0,
+            0,
+            SharedPayload::inline(&[])
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn single_pass_ingest_accepts_containers_and_rejects_bad_prefixes() {
+        use crate::serial::chunked::{CONTAINER_HEADER, PER_CHUNK_HEADER};
+        // A hand-built 2-chunk container with correct stored CRCs.
+        let bodies: [&[u8]; 2] = [&[10, 20, 30], &[40, 50]];
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&crate::serial::chunked::CHUNK_MAGIC.to_le_bytes());
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&4u32.to_le_bytes());
+        for b in bodies {
+            payload.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&crc32::crc32(b).to_le_bytes());
+        }
+        for b in bodies {
+            payload.extend_from_slice(b);
+        }
+        let msg = Message {
+            msg_type: MessageType::Data,
+            frame: 5,
+            serialized_len: 5,
+            count: 5,
+            batch: 1,
+            payload,
+        };
+        let mut buf = Vec::new();
+        write_message(&mut buf, &msg, &Link::ideal(), &ByteCounter::new()).unwrap();
+        // Clean container: the combine fast path must accept it.
+        let got = read_message(&mut buf.as_slice(), &ByteCounter::new()).unwrap();
+        assert_eq!(got, msg);
+        // Flip a byte in the metadata prefix (a stored chunk CRC): the
+        // fast path itself must reject at ingest.
+        let mut bad = buf.clone();
+        let crc_off = HEADER_SIZE + CONTAINER_HEADER + 8;
+        bad[crc_off] ^= 0xFF;
+        assert!(read_message(&mut bad.as_slice(), &ByteCounter::new()).is_err());
+        // Flip a chunk *body* byte: ingest defers to the decode walk,
+        // which reports it as a NACKable CorruptChunk — verify the walk
+        // still sees the stored-CRC mismatch.
+        let mut corrupt_body = buf.clone();
+        let body_off = HEADER_SIZE + CONTAINER_HEADER + 2 * PER_CHUNK_HEADER;
+        corrupt_body[body_off] ^= 0xFF;
+        let got = read_message(&mut corrupt_body.as_slice(), &ByteCounter::new()).unwrap();
+        let span = crate::serial::chunked::chunk_payload_span(&got.payload, 0).unwrap();
+        let (stored, _) = crate::serial::chunked::chunk_crc_len(&got.payload, 0);
+        assert_ne!(crc32::crc32(&got.payload[span]), stored);
     }
 
     #[test]
